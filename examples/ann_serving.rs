@@ -1,0 +1,58 @@
+//! End-to-end serving driver (DESIGN.md §5 "E2E driver"): loads the
+//! AOT-compiled quantized-ANN artifact (JAX/Pallas → HLO text), serves
+//! batched classification requests on the PJRT CPU client from Rust, and
+//! reports accuracy, latency and throughput. Python is not on this path.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example ann_serving [-- <batches>]`
+
+use std::time::Instant;
+
+fn bytes_of(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn main() -> anyhow::Result<()> {
+    let batches: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50);
+    let dir = simdive::runtime::default_artifacts_dir();
+    let eng = simdive::runtime::Engine::load(&dir)?;
+    println!(
+        "engine up: platform={} models={:?} weights={:?}",
+        eng.platform(),
+        eng.models(),
+        eng.weight_manifest().iter().map(|(n, d)| format!("{n}{d:?}")).collect::<Vec<_>>()
+    );
+
+    // Bundled labelled eval batch (32 images) — accuracy check.
+    let imgs = std::fs::read(dir.join("eval_batch.u8"))?;
+    let labels = std::fs::read(dir.join("eval_labels.u8"))?;
+    let vals: Vec<i32> = imgs.iter().map(|&v| v as i32).collect();
+    let lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[32, 784],
+        bytes_of(&vals),
+    )?;
+    let out = eng.run("ann_fwd", std::slice::from_ref(&lit))?;
+    let preds = out[1].to_vec::<i64>()?;
+    let correct = preds.iter().zip(&labels).filter(|(&p, &l)| p == l as i64).count();
+    println!("accuracy on bundled eval batch: {correct}/{} (SIMDive-8 multipliers)", labels.len());
+
+    // Serving loop: batched requests, latency/throughput stats.
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(batches);
+    let t0 = Instant::now();
+    for _ in 0..batches {
+        let t = Instant::now();
+        let out = eng.run("ann_fwd", std::slice::from_ref(&lit))?;
+        std::hint::black_box(&out);
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let mean = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+    let p99 = simdive::util::stats::percentile(&mut lat_ms, 0.99);
+    println!(
+        "served {batches} batches of 32: mean latency {mean:.2} ms, p99 {p99:.2} ms, \
+         throughput {:.0} images/s",
+        batches as f64 * 32.0 / total
+    );
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Quickstart: the paper's running example (43 × 10, 43 ÷ 10) across
+//! accurate / Mitchell / SIMDive, the tunable-accuracy knob, and a look at
+//! the gate-level unit's calibrated metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use simdive::arith::simdive as sd;
+use simdive::arith::{exact, mitchell};
+use simdive::fabric::{area, calibrate, timing};
+
+fn main() {
+    println!("== SIMDive quickstart ==\n");
+    println!("paper running example, 8-bit operands a=43 b=10:");
+    println!("  exact    : 43×10 = {:3}   43÷10 = {}", exact::mul(8, 43, 10), exact::div(8, 43, 10));
+    println!("  mitchell : 43×10 = {:3}   43÷10 = {}", mitchell::mul(8, 43, 10), mitchell::div(8, 43, 10));
+    println!("  simdive  : 43×10 = {:3}   43÷10 = {}", sd::simdive_mul(8, 43, 10), sd::simdive_div(8, 43, 10));
+
+    println!("\ntunable accuracy (w = number of coefficient LUTs):");
+    for w in [0u32, 2, 4, 8] {
+        let p = sd::simdive_mul_w(8, 43, 10, w);
+        println!("  w={w}: 43×10 = {p:3}  (exact 430)");
+    }
+
+    println!("\ngate-level 16-bit hybrid multiplier-divider (calibrated Virtex-7 model):");
+    let nl = simdive::circuits::simdive::hybrid(16, 8);
+    let cal = calibrate::fitted();
+    let a = area::report(&nl);
+    let t = timing::analyze(&nl, cal);
+    println!("  area  : {} LUT6 ({} CARRY4)", a.luts, a.carry4);
+    println!("  delay : {:.2} ns critical path ({} logic levels)", t.critical_ns, t.levels);
+    println!("\nNext: `cargo run --release --bin repro table2` regenerates paper Table 2.");
+}

@@ -1,0 +1,8 @@
+//! The accuracy knob (§3.3): sweep w = 0..=8 coefficient LUTs and print
+//! error vs area, demonstrating "one more LUT = one more coefficient bit".
+//!
+//! Run: `cargo run --release --example tunable_accuracy`
+
+fn main() {
+    println!("{}", simdive::report::tunable::render(150_000));
+}

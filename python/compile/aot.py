@@ -1,0 +1,98 @@
+"""AOT pipeline: train → quantize → lower the L2 graphs (with the L1
+Pallas kernels inlined, interpret mode) to **HLO text** artifacts the Rust
+runtime loads via the PJRT C API.
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model, train  # noqa: E402
+
+ANN_BATCH = 32
+BLEND_SIZE = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-n", type=int, default=4000)
+    ap.add_argument("--epochs", type=int, default=4)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # ---- train + quantize the ANN (build-time Python) ----
+    weights, act_max, float_acc = train.train_mlp(
+        hidden=(100,), train_n=args.train_n, epochs=args.epochs
+    )
+    print(f"trained MLP: float accuracy {float_acc:.3f}")
+    wq_in = [
+        (w, b, act_max[i], act_max[i + 1]) for i, (w, b) in enumerate(weights)
+    ]
+    qlayers = model.quantize_net(wq_in)
+
+    # ---- lower ann_forward (quantized weights baked as constants; the
+    # runtime feeds i32 pixels — the xla crate exposes no u8 literals) ----
+    def ann(x_i32):
+        return model.ann_forward(x_i32, qlayers)
+
+    spec = jax.ShapeDtypeStruct((ANN_BATCH, train.IMG * train.IMG), jnp.int32)
+    lowered = jax.jit(ann).lower(spec)
+    path = os.path.join(args.out, "ann_fwd.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # ---- lower the Fig.-3 blend graph ----
+    img_spec = jax.ShapeDtypeStruct((BLEND_SIZE, BLEND_SIZE), jnp.int32)
+    lowered = jax.jit(model.blend).lower(img_spec, img_spec)
+    path = os.path.join(args.out, "blend.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # ---- float weights bundle for the Rust runtime / examples ----
+    manifest_lines = []
+    blobs = []
+    for i, (w, b) in enumerate(weights):
+        manifest_lines.append(f"w{i} {w.shape[0]} {w.shape[1]}")
+        blobs.append(np.asarray(w, dtype=np.float32).ravel())
+        manifest_lines.append(f"b{i} {b.shape[0]}")
+        blobs.append(np.asarray(b, dtype=np.float32).ravel())
+    with open(os.path.join(args.out, "weights.manifest"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    np.concatenate(blobs).tofile(os.path.join(args.out, "weights.bin"))
+    print(f"wrote weights bundle ({len(weights)} layers)")
+
+    # ---- a small labelled eval batch for the serving example ----
+    imgs, labels = train.make_dataset(ANN_BATCH, seed=4242)
+    imgs.astype(np.uint8).tofile(os.path.join(args.out, "eval_batch.u8"))
+    labels.astype(np.uint8).tofile(os.path.join(args.out, "eval_labels.u8"))
+    print("wrote eval batch")
+
+
+if __name__ == "__main__":
+    main()

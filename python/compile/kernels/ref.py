@@ -1,0 +1,157 @@
+"""Pure-jnp oracle for the SIMDive arithmetic (build-time only).
+
+Independent transcription of DESIGN.md §4's bit-exact contract, used by
+pytest to validate the Pallas kernels, and itself pinned to the Rust
+behavioral models through the golden vectors exported by
+``repro export-golden``.
+
+All integer math runs in int64 (``jax_enable_x64`` is switched on by
+conftest / aot).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+TABLE_RESOLUTION_BITS = 12
+
+
+def artifacts_root() -> str:
+    return os.environ.get(
+        "SIMDIVE_ARTIFACTS",
+        os.path.normpath(
+            os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts")
+        ),
+    )
+
+
+def load_tables(path: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Load the w=8 correction tables exported by ``repro export-golden``.
+
+    Returns (mul, div) int32 arrays of shape (8, 8) in 2^-12 fixed point.
+    """
+    if path is None:
+        path = os.path.join(artifacts_root(), "golden", "tables_w8.txt")
+    mul = np.zeros((8, 8), dtype=np.int32)
+    div = np.zeros((8, 8), dtype=np.int32)
+    with open(path) as f:
+        for line in f:
+            if line.startswith("#") or not line.strip():
+                continue
+            op, i, j, v = line.split()
+            (mul if op == "mul" else div)[int(i), int(j)] = int(v)
+    return mul, div
+
+
+def _scale_to_f(c12: np.ndarray, bits: int) -> np.ndarray:
+    """Coefficient into F-bit units, truncating the magnitude (§4)."""
+    f = bits - 1
+    mag = np.abs(c12.astype(np.int64))
+    if f >= TABLE_RESOLUTION_BITS:
+        scaled = mag << (f - TABLE_RESOLUTION_BITS)
+    else:
+        scaled = mag >> (TABLE_RESOLUTION_BITS - f)
+    return np.where(c12 < 0, -scaled, scaled)
+
+
+def table_f_units(bits: int, tables=None) -> tuple[np.ndarray, np.ndarray]:
+    """(mul, div) tables pre-scaled to F-bit units for a given width."""
+    mul, div = tables if tables is not None else load_tables()
+    return _scale_to_f(mul, bits), _scale_to_f(div, bits)
+
+
+def _lod(x):
+    """Position of the leading one (x ≥ 1), via binary search."""
+    k = jnp.zeros_like(x, dtype=jnp.int64)
+    v = x.astype(jnp.int64)
+    for shift in (32, 16, 8, 4, 2, 1):
+        hit = v >= (jnp.int64(1) << shift)
+        k = jnp.where(hit, k + shift, k)
+        v = jnp.where(hit, v >> shift, v)
+    return k
+
+
+def _frac(x, k, bits: int):
+    f = bits - 1
+    return ((x.astype(jnp.int64) - (jnp.int64(1) << k)) << (f - k)).astype(jnp.int64)
+
+
+def _region(frac, bits: int):
+    return (frac >> (bits - 1 - 3)) & 0x7
+
+
+def _table_select(table_f, ri, rj):
+    """Correction lookup without `gather`: a select-sum over the 64 region
+    constants. Gather from jax ≥ 0.8's StableHLO mis-executes on the
+    xla_extension 0.5.1 runtime the Rust side embeds (silently wrong
+    results), so the AOT-shipped graphs — and, for bit-identity, the
+    oracle too — avoid it. The 64 constants fold into the kernel like the
+    paper's 64-entry LUT bank."""
+    t = np.asarray(table_f).reshape(8, 8)
+    idx = ri * 8 + rj
+    c = jnp.zeros_like(idx, dtype=jnp.int64)
+    for k in range(64):
+        c = c + jnp.where(idx == k, jnp.int64(int(t[k // 8, k % 8])), jnp.int64(0))
+    return c
+
+
+def simdive_mul(x, y, bits: int, mul_table_f) -> jnp.ndarray:
+    """SIMDive multiply, elementwise over integer arrays (w=8 tables)."""
+    f = bits - 1
+    x = jnp.asarray(x).astype(jnp.int64)
+    y = jnp.asarray(y).astype(jnp.int64)
+    safe_x = jnp.maximum(x, 1)
+    safe_y = jnp.maximum(y, 1)
+    k1 = _lod(safe_x)
+    k2 = _lod(safe_y)
+    f1 = _frac(safe_x, k1, bits)
+    f2 = _frac(safe_y, k2, bits)
+    c = _table_select(mul_table_f, _region(f1, bits), _region(f2, bits))
+    t = f1 + f2 + c
+    ovf = t >= (jnp.int64(1) << f)
+    mant = jnp.where(ovf, t, t + (jnp.int64(1) << f))
+    e = k1 + k2 + ovf.astype(jnp.int64)
+    p = jnp.where(
+        e >= f,
+        mant << jnp.clip(e - f, 0, 62),
+        mant >> jnp.clip(f - e, 0, 62),
+    )
+    if bits < 31:
+        p = jnp.minimum(p, (jnp.int64(1) << (2 * bits)) - 1)
+    return jnp.where((x == 0) | (y == 0), 0, p)
+
+
+def simdive_div(x, y, bits: int, div_table_f) -> jnp.ndarray:
+    """SIMDive divide, elementwise (w=8 tables)."""
+    f = bits - 1
+    x = jnp.asarray(x).astype(jnp.int64)
+    y = jnp.asarray(y).astype(jnp.int64)
+    safe_x = jnp.maximum(x, 1)
+    safe_y = jnp.maximum(y, 1)
+    k1 = _lod(safe_x)
+    k2 = _lod(safe_y)
+    f1 = _frac(safe_x, k1, bits)
+    f2 = _frac(safe_y, k2, bits)
+    c = _table_select(div_table_f, _region(f1, bits), _region(f2, bits))
+    t = f1 - f2 + c
+    neg = t < 0
+    mant = jnp.where(neg, (jnp.int64(2) << f) + t, (jnp.int64(1) << f) + t)
+    mant = jnp.maximum(mant, 0)
+    e = k1 - k2 - neg.astype(jnp.int64)
+    s = f - e
+    q = jnp.where(
+        s <= 0,
+        mant << jnp.clip(-s, 0, 62),
+        jnp.where(s >= 62, 0, mant >> jnp.clip(s, 0, 62)),
+    )
+    maxv = (jnp.int64(1) << bits) - 1
+    q = jnp.minimum(q, maxv)
+    q = jnp.where(x == 0, 0, q)
+    return jnp.where(y == 0, maxv, q)
+
+
+def exact_mul(x, y):
+    return jnp.asarray(x).astype(jnp.int64) * jnp.asarray(y).astype(jnp.int64)

@@ -1,0 +1,105 @@
+"""Layer-1 Pallas kernels: SIMDive approximate multiply / divide and the
+approximate-multiply GEMM used by the quantized ANN (paper §4.3).
+
+Always lowered with ``interpret=True`` — the CPU PJRT client cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md). Hardware adaptation
+(DESIGN.md §2): the paper's LUT/carry-chain bit-twiddling becomes VPU-style
+vectorized integer lanes; the 64 correction coefficients fold into the
+kernel as constants (a select-sum — the analogue of the 8×LUT6 bank, and
+gather-free because the embedded xla_extension 0.5.1 mis-executes jax 0.8
+StableHLO gathers); the GEMM tiles activations×weights into VMEM blocks via
+BlockSpec with the SIMDive product applied elementwise inside the tile
+before an exact reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile sizes for the GEMM kernel (VMEM-sized blocks; see DESIGN.md §7).
+TILE_M = 8
+TILE_N = 64
+
+
+def _mul_kernel(bits, table, x_ref, y_ref, o_ref):
+    # `table` is a host-side numpy constant; ref._table_select folds it
+    # into the kernel as 64 scalar constants at trace time.
+    o_ref[...] = ref.simdive_mul(x_ref[...], y_ref[...], bits, table)
+
+
+def _div_kernel(bits, table, x_ref, y_ref, o_ref):
+    o_ref[...] = ref.simdive_div(x_ref[...], y_ref[...], bits, table)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def simdive_mul(x, y, bits: int = 8):
+    """Elementwise SIMDive multiply via a Pallas kernel."""
+    mul_f, _ = ref.table_f_units(bits)
+    kern = functools.partial(_mul_kernel, bits, tuple(map(int, mul_f.ravel())))
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int64),
+        interpret=True,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def simdive_div(x, y, bits: int = 8):
+    """Elementwise SIMDive divide via a Pallas kernel."""
+    _, div_f = ref.table_f_units(bits)
+    kern = functools.partial(_div_kernel, bits, tuple(map(int, div_f.ravel())))
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int64),
+        interpret=True,
+    )(x, y)
+
+
+def _gemm_kernel(table, x_ref, wmag_ref, wsgn_ref, o_ref):
+    """Full approximate GEMM in one kernel invocation.
+
+    x: (M, K) activations; wmag: (K, N) |w|; wsgn: (K, N) ±1. Product per
+    element through SIMDive-8, exact accumulation (the paper's ANN
+    experiment: only multipliers are approximate). K is consumed in
+    trace-time chunks to bound the broadcast working set (the VMEM tile) —
+    and the kernel is deliberately grid-free: jax 0.8's grid lowering
+    (while + dynamic-update-slice) mis-executes on the embedded
+    xla_extension 0.5.1 runtime, like StableHLO gather (see module docs).
+    """
+    x = x_ref[...].astype(jnp.int64)  # (M, K)
+    wm = wmag_ref[...].astype(jnp.int64)  # (K, N)
+    ws = wsgn_ref[...].astype(jnp.int64)
+    k = x.shape[1]
+    acc = jnp.zeros((x.shape[0], wm.shape[1]), dtype=jnp.int64)
+    chunk = 128
+    for k0 in range(0, k, chunk):
+        k1 = min(k0 + chunk, k)
+        p = ref.simdive_mul(x[:, k0:k1, None], wm[None, k0:k1, :], 8, table)
+        acc = acc + jnp.sum(p * ws[None, k0:k1, :], axis=1)
+    o_ref[...] = acc
+
+
+@jax.jit
+def simdive_matmul_q8(x_u8, w_mag_u8, w_sgn):
+    """Quantized approximate GEMM: `(M,K) × (K,N) → (M,N) i64`.
+
+    Every scalar product routes through the SIMDive-8 multiplier, signs are
+    re-applied and accumulation is exact — bit-compatible with the Rust
+    `QuantMlp` inference path.
+    """
+    m, k = x_u8.shape
+    k2, n = w_mag_u8.shape
+    assert k == k2, (x_u8.shape, w_mag_u8.shape)
+    mul_f, _ = ref.table_f_units(8)
+    kern = functools.partial(_gemm_kernel, tuple(map(int, mul_f.ravel())))
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=True,
+    )(x_u8, w_mag_u8, w_sgn)

@@ -1,0 +1,68 @@
+"""Layer-2 JAX model graphs (build-time only; AOT-lowered by aot.py).
+
+* ``ann_forward`` — the paper's §4.3 quantized MLP inference with every
+  weight×activation product routed through the SIMDive-8 Pallas GEMM
+  kernel; mirrors the Rust `ann::QuantMlp` semantics so the PJRT-served
+  model and the Rust Table-4 evaluation agree.
+* ``blend`` — the Fig.-3 multiply-blend (elementwise SIMDive-8 products).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import simdive as kernels
+
+
+def quantize_net(weights: list[tuple]) -> list[dict]:
+    """Post-training 8-bit quantization, mirroring Rust `QuantMlp`.
+
+    `weights` is [(w, b, act_max_in, act_max_out), …] with float arrays
+    (w is [in, out]). Returns per-layer dicts of arrays ready to be baked
+    into the ann graph.
+    """
+    import numpy as np
+
+    layers = []
+    for w, b, amax_in, amax_out in weights:
+        wmax = max(float(np.abs(w).max()), 1e-6)
+        sw = 127.0 / wmax
+        sa = 255.0 / max(amax_in, 1e-6)
+        sa_next = 255.0 / max(amax_out, 1e-6)
+        wq = np.clip(np.round(w * sw), -127, 127).astype(np.int64)
+        layers.append(
+            dict(
+                w_mag=np.abs(wq),
+                w_sgn=np.sign(wq).astype(np.int64),
+                b_q=(b * sw * sa).astype(np.int64),
+                requant=np.float32(sa_next / (sw * sa)),
+            )
+        )
+    return layers
+
+
+def ann_forward(x_u8, qlayers: list[dict]):
+    """Quantized MLP forward: u8 pixels → logits (i64) + predicted class.
+
+    Every product goes through the SIMDive Pallas GEMM; accumulation,
+    bias-add and requantization are exact — the paper's "replace the
+    multipliers only" experiment.
+    """
+    act = x_u8.astype(jnp.int64)
+    n_layers = len(qlayers)
+    for li, layer in enumerate(qlayers):
+        acc = kernels.simdive_matmul_q8(act, layer["w_mag"], layer["w_sgn"])
+        acc = acc + layer["b_q"][None, :]
+        if li + 1 < n_layers:
+            v = jnp.maximum(acc, 0).astype(jnp.float32) * layer["requant"]
+            act = jnp.clip(jnp.round(v), 0, 255).astype(jnp.int64)
+        else:
+            return acc, jnp.argmax(acc, axis=-1)
+    raise AssertionError("empty network")
+
+
+def blend(a_img, b_img):
+    """Fig.-3 multiply-blend: `out = SIMDive8(a, b) >> 8` (8-bit range,
+    carried as i32 for the PJRT interface)."""
+    p = kernels.simdive_mul(a_img.astype(jnp.int64), b_img.astype(jnp.int64), bits=8)
+    return jnp.clip(p >> 8, 0, 255).astype(jnp.int32)

@@ -1,0 +1,125 @@
+"""Train the paper's MLP on the synthetic digits dataset (numpy SGD,
+build-time only) and return float weights + calibration ranges for
+quantization. Same dataset *spec* as `rust/src/datasets` (seven-segment
+glyphs + augmentation); implementations are independent, which is fine —
+Table 4 compares accuracies *between arithmetic variants*, not between
+frameworks."""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 28
+CLASSES = 10
+
+SEGMENTS = [
+    [1, 1, 1, 1, 1, 1, 0],
+    [0, 1, 1, 0, 0, 0, 0],
+    [1, 1, 0, 1, 1, 0, 1],
+    [1, 1, 1, 1, 0, 0, 1],
+    [0, 1, 1, 0, 0, 1, 1],
+    [1, 0, 1, 1, 0, 1, 1],
+    [1, 0, 1, 1, 1, 1, 1],
+    [1, 1, 1, 0, 0, 0, 0],
+    [1, 1, 1, 1, 1, 1, 1],
+    [1, 1, 1, 1, 0, 1, 1],
+]
+SEG_LINES = [
+    (True, 0.15, 0.28, 0.72),
+    (False, 0.72, 0.15, 0.5),
+    (False, 0.72, 0.5, 0.85),
+    (True, 0.85, 0.28, 0.72),
+    (False, 0.28, 0.5, 0.85),
+    (False, 0.28, 0.15, 0.5),
+    (True, 0.5, 0.28, 0.72),
+]
+
+
+def render_digit(label: int, rng: np.random.Generator) -> np.ndarray:
+    thick = 0.06 + rng.random() * 0.03
+    sx, sy = 0.8 + rng.random() * 0.4, 0.8 + rng.random() * 0.4
+    shear = (rng.random() - 0.5) * 0.3
+    dx, dy = (rng.random() - 0.5) * 0.18, (rng.random() - 0.5) * 0.18
+    ys, xs = np.mgrid[0:IMG, 0:IMG]
+    u0 = (xs + 0.5) / IMG
+    v0 = (ys + 0.5) / IMG
+    v = (v0 - 0.5 - dy) / sy + 0.5
+    u = (u0 - 0.5 - dx) / sx + 0.5 - shear * (v0 - 0.5)
+    img = np.zeros((IMG, IMG))
+    for si, (horiz, line, lo, hi) in enumerate(SEG_LINES):
+        if not SEGMENTS[label][si]:
+            continue
+        if horiz:
+            d_line = np.abs(v - line)
+            d_span = np.maximum(lo - u, u - hi).clip(min=0)
+        else:
+            d_line = np.abs(u - line)
+            d_span = np.maximum(lo - v, v - hi).clip(min=0)
+        d = np.maximum(d_line, d_span)
+        img = np.maximum(img, (1 - (d / thick) ** 2).clip(min=0) * (d < thick))
+    img = img * (200 + rng.random() * 55) + rng.normal(0, 40, img.shape)
+    return img.clip(0, 255).astype(np.uint8)
+
+
+def make_dataset(count: int, seed: int):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, CLASSES, count)
+    imgs = np.stack([render_digit(int(l), rng) for l in labels])
+    return imgs, labels
+
+
+def train_mlp(hidden=(100,), train_n=6000, epochs=5, lr0=0.1, seed=7):
+    """Train; returns (weights list [(w, b)], act_max per layer, test acc)."""
+    x, y = make_dataset(train_n, seed)
+    xt, yt = make_dataset(1000, seed + 1)
+    xf = x.reshape(train_n, -1) / 255.0
+    xtf = xt.reshape(len(xt), -1) / 255.0
+
+    dims = [IMG * IMG, *hidden, CLASSES]
+    rng = np.random.default_rng(seed + 2)
+    ws = [
+        rng.normal(0, np.sqrt(2.0 / dims[i]), (dims[i], dims[i + 1])).astype(np.float32)
+        for i in range(len(dims) - 1)
+    ]
+    bs = [np.zeros(d, dtype=np.float32) for d in dims[1:]]
+
+    def forward(xb):
+        acts = [xb]
+        for i, (w, b) in enumerate(zip(ws, bs)):
+            z = acts[-1] @ w + b
+            acts.append(np.maximum(z, 0) if i + 1 < len(ws) else z)
+        return acts
+
+    n = len(xf)
+    for epoch in range(epochs):
+        lr = lr0 / (1 + 0.5 * epoch)
+        order = rng.permutation(n)
+        for start in range(0, n, 32):
+            idx = order[start : start + 32]
+            xb, yb = xf[idx], y[idx]
+            acts = forward(xb)
+            logits = acts[-1]
+            p = np.exp(logits - logits.max(axis=1, keepdims=True))
+            p /= p.sum(axis=1, keepdims=True)
+            delta = p
+            delta[np.arange(len(idx)), yb] -= 1
+            delta /= len(idx)
+            for li in reversed(range(len(ws))):
+                grad_w = acts[li].T @ delta
+                grad_b = delta.sum(axis=0)
+                if li > 0:
+                    delta = (delta @ ws[li].T) * (acts[li] > 0)
+                ws[li] -= lr * grad_w
+                bs[li] -= lr * grad_b
+
+    acts_t = forward(xtf)
+    acc = float((acts_t[-1].argmax(axis=1) == yt).mean())
+    # Calibration: per-layer activation maxima over a training slice.
+    acts_c = forward(xf[:500])
+    act_max = [1.0] + [float(a.max()) for a in acts_c[1:]]
+    return list(zip(ws, bs)), act_max, acc
+
+
+if __name__ == "__main__":
+    _, _, acc = train_mlp(train_n=2000, epochs=3)
+    print(f"float test accuracy: {acc:.3f}")

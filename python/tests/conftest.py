@@ -1,0 +1,30 @@
+import os
+import sys
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.normpath(os.path.join(os.path.dirname(__file__), "..")))
+
+
+def golden_dir() -> str:
+    root = os.environ.get(
+        "SIMDIVE_ARTIFACTS",
+        os.path.normpath(
+            os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        ),
+    )
+    return os.path.join(root, "golden")
+
+
+@pytest.fixture(scope="session")
+def tables():
+    """The w=8 correction tables exported by the Rust side."""
+    from compile.kernels import ref
+
+    path = os.path.join(golden_dir(), "tables_w8.txt")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first (repro export-golden)")
+    return ref.load_tables(path)

@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernels vs the jnp oracle (hypothesis sweeps
+shapes/values) and both vs the Rust golden vectors."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref, simdive
+
+
+def golden_dir():
+    return os.path.join(ref.artifacts_root(), "golden")
+
+
+def _golden_cases(name):
+    path = os.path.join(golden_dir(), name)
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    rows = np.loadtxt(path, dtype=np.uint64).reshape(-1, 3)
+    return rows[:, 0], rows[:, 1], rows[:, 2]
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_mul_matches_rust_golden(tables, bits):
+    a, b, want = _golden_cases(f"mul_{bits}_w8.txt")
+    a, b, want = a.astype(np.int64), b.astype(np.int64), want.astype(np.int64)
+    mul_f, _ = ref.table_f_units(bits, tables)
+    got = np.asarray(ref.simdive_mul(a, b, bits, mul_f))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_div_matches_rust_golden(tables, bits):
+    a, b, want = _golden_cases(f"div_{bits}_w8.txt")
+    a, b, want = a.astype(np.int64), b.astype(np.int64), want.astype(np.int64)
+    _, div_f = ref.table_f_units(bits, tables)
+    got = np.asarray(ref.simdive_div(a, b, bits, div_f))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mul_32bit_golden_subset(tables):
+    # 32-bit cases, restricted to the int64-safe range (the jnp oracle
+    # works in int64; the Rust model covers the full u64 range).
+    a, b, want = _golden_cases("mul_32_w8.txt")
+    keep = (a.astype(object) * b.astype(object)) < 2**61
+    a = a[keep].astype(np.int64)
+    b = b[keep].astype(np.int64)
+    want = want[keep].astype(np.int64)
+    mul_f, _ = ref.table_f_units(32, tables)
+    got = np.asarray(ref.simdive_mul(a, b, 32, mul_f))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(1, 64),
+    st.integers(0, 2**32 - 1),
+)
+def test_pallas_kernel_matches_ref_random_shapes(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, n, dtype=np.int64)
+    b = rng.integers(0, 256, n, dtype=np.int64)
+    mul_f, div_f = ref.table_f_units(8)
+    kp = np.asarray(simdive.simdive_mul(jnp.asarray(a), jnp.asarray(b), bits=8))
+    rp = np.asarray(ref.simdive_mul(a, b, 8, mul_f))
+    np.testing.assert_array_equal(kp, rp)
+    kq = np.asarray(simdive.simdive_div(jnp.asarray(a), jnp.asarray(b), bits=8))
+    rq = np.asarray(ref.simdive_div(a, b, 8, div_f))
+    np.testing.assert_array_equal(kq, rq)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pallas_kernel_16bit(seed):
+    rng = np.random.default_rng(seed)
+    shape = (4, 17)
+    a = rng.integers(0, 65536, shape, dtype=np.int64)
+    b = rng.integers(0, 65536, shape, dtype=np.int64)
+    mul_f, _ = ref.table_f_units(16)
+    kp = np.asarray(simdive.simdive_mul(jnp.asarray(a), jnp.asarray(b), bits=16))
+    rp = np.asarray(ref.simdive_mul(a, b, 16, mul_f))
+    np.testing.assert_array_equal(kp, rp)
+
+
+def test_paper_running_example(tables):
+    mul_f, div_f = ref.table_f_units(8, tables)
+    # 43 × 10: Mitchell gives 408, accurate 430; SIMDive must be closer.
+    p = int(ref.simdive_mul(np.array([43]), np.array([10]), 8, mul_f)[0])
+    assert abs(430 - p) < abs(430 - 408)
+    q = int(ref.simdive_div(np.array([43]), np.array([10]), 8, div_f)[0])
+    assert q == 4
+
+
+def test_zero_conventions(tables):
+    mul_f, div_f = ref.table_f_units(8, tables)
+    assert int(ref.simdive_mul(np.array([0]), np.array([9]), 8, mul_f)[0]) == 0
+    assert int(ref.simdive_div(np.array([9]), np.array([0]), 8, div_f)[0]) == 255
+    assert int(ref.simdive_div(np.array([0]), np.array([9]), 8, div_f)[0]) == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_gemm_kernel_matches_scalar_products(seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = 5, 23, 9
+    x = rng.integers(0, 256, (m, k), dtype=np.int64)
+    wq = rng.integers(-127, 128, (k, n), dtype=np.int64)
+    got = np.asarray(
+        simdive.simdive_matmul_q8(
+            jnp.asarray(x), jnp.asarray(np.abs(wq)), jnp.asarray(np.sign(wq))
+        )
+    )
+    mul_f, _ = ref.table_f_units(8)
+    want = np.zeros((m, n), dtype=np.int64)
+    for i in range(m):
+        prods = np.asarray(ref.simdive_mul(x[i][:, None], np.abs(wq), 8, mul_f))
+        want[i] = (prods * np.sign(wq)).sum(axis=0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_error_statistics_match_paper_regime(tables):
+    """Mean relative error of the 8-bit kernel ≈ the paper's <1.2%."""
+    mul_f, _ = ref.table_f_units(8, tables)
+    a, b = np.meshgrid(np.arange(1, 256), np.arange(1, 256))
+    a, b = a.ravel(), b.ravel()
+    approx = np.asarray(ref.simdive_mul(a, b, 8, mul_f)).astype(float)
+    exact = (a * b).astype(float)
+    are = float(np.mean(np.abs(exact - approx) / exact)) * 100
+    assert are < 1.2, f"ARE {are:.3f}%"

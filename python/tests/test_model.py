@@ -1,0 +1,62 @@
+"""L2 tests: quantized ANN forward + blend graph shapes and semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train
+
+
+@pytest.fixture(scope="session")
+def tiny_net(tables):
+    weights, act_max, acc = train.train_mlp(hidden=(32,), train_n=1200, epochs=3)
+    assert acc > 0.55, f"float training accuracy {acc}"
+    wq_in = [(w, b, act_max[i], act_max[i + 1]) for i, (w, b) in enumerate(weights)]
+    return model.quantize_net(wq_in), acc
+
+
+def test_ann_forward_shapes(tiny_net):
+    qlayers, _ = tiny_net
+    x = jnp.zeros((4, train.IMG * train.IMG), dtype=jnp.uint8)
+    logits, pred = model.ann_forward(x, qlayers)
+    assert logits.shape == (4, train.CLASSES)
+    assert pred.shape == (4,)
+
+
+def test_ann_quantized_accuracy_tracks_float(tiny_net):
+    qlayers, float_acc = tiny_net
+    imgs, labels = train.make_dataset(200, seed=99)
+    x = jnp.asarray(imgs.reshape(200, -1), dtype=jnp.uint8)
+    _, pred = model.ann_forward(x, qlayers)
+    acc = float((np.asarray(pred) == labels).mean())
+    assert acc > float_acc - 0.15, f"quantized+simdive {acc} vs float {float_acc}"
+
+
+def test_blend_matches_reference(tables):
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 256, (16, 16), dtype=np.uint8)
+    b = rng.integers(0, 256, (16, 16), dtype=np.uint8)
+    out = np.asarray(model.blend(jnp.asarray(a), jnp.asarray(b)))
+    mul_f, _ = ref.table_f_units(8, tables)
+    want = np.clip(
+        np.asarray(ref.simdive_mul(a.astype(np.int64), b.astype(np.int64), 8, mul_f))
+        >> 8,
+        0,
+        255,
+    )
+    np.testing.assert_array_equal(out, want)
+
+
+def test_ann_graph_lowers_to_hlo(tiny_net):
+    """The full L2 graph (with inlined Pallas kernels) lowers to HLO text."""
+    qlayers, _ = tiny_net
+    from compile.aot import to_hlo_text
+
+    spec = jax.ShapeDtypeStruct((4, train.IMG * train.IMG), jnp.uint8)
+    lowered = jax.jit(lambda x: model.ann_forward(x, qlayers)).lower(spec)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 1000

@@ -1,0 +1,10 @@
+//! Regenerates Fig. 1 (Mitchell error heat maps → CSV) and times the
+//! exhaustive 8-bit error scan.
+mod harness;
+
+fn main() {
+    let msg = harness::timed("fig1 heat maps (exhaustive 8-bit ×2 ops)", || {
+        simdive::report::figs::fig1().expect("fig1")
+    });
+    println!("{msg}");
+}

@@ -1,0 +1,20 @@
+//! Regenerates Fig. 3 (image blending PSNR, SIMDive vs MBM).
+mod harness;
+
+fn main() {
+    let msg = harness::timed("fig3 blending (4 scenes × 3 variants)", || {
+        simdive::report::figs::fig3().expect("fig3")
+    });
+    println!("{msg}");
+    // Hot path: blended megapixels/s with the SIMDive multiplier.
+    use simdive::image::{blend, synth, ArithKind};
+    let a = synth::generate(synth::Scene::Portrait, 256, 1);
+    let b = synth::generate(synth::Scene::Texture, 256, 2);
+    let ns = harness::ns_per_op("blend 256×256 (SIMDive-8)", || {
+        std::hint::black_box(blend(&a, &b, ArithKind::Simdive(8)));
+    });
+    println!(
+        "[bench] blend throughput: {:.1} Mpx/s",
+        (256.0 * 256.0) / ns * 1e3
+    );
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig. 4 (Gaussian smoothing PSNR, div-only and hybrid).
+mod harness;
+
+fn main() {
+    let msg = harness::timed("fig4 gaussian (4 scenes × 4 variants)", || {
+        simdive::report::figs::fig4().expect("fig4")
+    });
+    println!("{msg}");
+}

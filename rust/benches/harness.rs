@@ -1,0 +1,33 @@
+//! Minimal bench harness shared by all `cargo bench` targets (criterion is
+//! unavailable in the offline registry — DESIGN.md §1). Each bench prints
+//! the paper table/figure it regenerates plus wall-clock timing of the
+//! regeneration and of the relevant hot paths.
+
+use std::time::Instant;
+
+/// Time a closure, printing `name: <ms> (result-lines…)`.
+pub fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("[bench] {name}: {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+    out
+}
+
+/// Measure mean ns/op of `f` over enough iterations to cover ~200 ms.
+pub fn ns_per_op(name: &str, mut f: impl FnMut()) -> f64 {
+    // Warm up + calibrate.
+    let t0 = Instant::now();
+    let mut n = 0u64;
+    while t0.elapsed().as_millis() < 30 {
+        f();
+        n += 1;
+    }
+    let iters = (n * 8).max(10);
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t1.elapsed().as_nanos() as f64 / iters as f64;
+    println!("[bench] {name}: {ns:.1} ns/op ({iters} iters)");
+    ns
+}

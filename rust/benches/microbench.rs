@@ -1,0 +1,89 @@
+//! Infrastructure microbenches: netlist simulation throughput, packer,
+//! coordinator round-trip, PJRT execution latency (if artifacts exist).
+mod harness;
+
+fn main() {
+    // Netlist bit-parallel simulation throughput.
+    let nl = simdive::circuits::simdive::mul(16, 8);
+    let sim = simdive::fabric::Simulator::new(&nl);
+    let mut rng = simdive::util::Rng::new(3);
+    let avals: Vec<u64> = (0..4096).map(|_| rng.below(65536)).collect();
+    let bvals: Vec<u64> = (0..4096).map(|_| rng.below(65536)).collect();
+    let ns = harness::ns_per_op("netlist sim 4096 vectors (simdive mul16)", || {
+        std::hint::black_box(sim.run_batch(&[("a", &avals), ("b", &bvals)]));
+    });
+    println!(
+        "[bench] netlist sim rate: {:.2} Mvec/s",
+        4096.0 / ns * 1e3
+    );
+
+    // Lane packer throughput.
+    use simdive::coordinator::{pack_requests, ReqOp, Request};
+    let reqs: Vec<Request> = (0..256u64)
+        .map(|i| {
+            let bits = [8, 16, 32][(i % 3) as usize];
+            Request {
+                id: i,
+                op: if i % 3 == 0 { ReqOp::Div } else { ReqOp::Mul },
+                bits,
+                a: 1 + (i % 200),
+                b: 3 + (i % 100),
+            }
+        })
+        .collect();
+    harness::ns_per_op("pack 256 requests", || {
+        std::hint::black_box(pack_requests(&reqs));
+    });
+
+    // Coordinator round-trip (batch of 1024).
+    use simdive::coordinator::{Coordinator, CoordinatorConfig};
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let t0 = std::time::Instant::now();
+    let n = 50_000u64;
+    let mut handles = Vec::with_capacity(1024);
+    for i in 0..n {
+        handles.push(coord.submit(Request {
+            id: i,
+            op: ReqOp::Mul,
+            bits: 8,
+            a: 1 + (i % 250),
+            b: 3,
+        }));
+        if handles.len() == 1024 {
+            for h in handles.drain(..) {
+                h.recv().unwrap();
+            }
+        }
+    }
+    for h in handles.drain(..) {
+        h.recv().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("[bench] coordinator: {:.1} kops/s", n as f64 / dt / 1e3);
+    coord.shutdown();
+
+    // PJRT execution latency (skipped when artifacts are absent).
+    let dir = simdive::runtime::default_artifacts_dir();
+    if dir.join("ann_fwd.hlo.txt").exists() {
+        let eng = simdive::runtime::Engine::load(&dir).expect("engine");
+        let vals = vec![0i32; 32 * 784];
+        let bytes = unsafe {
+            std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4)
+        };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[32, 784],
+            bytes,
+        )
+        .unwrap();
+        let ns = harness::ns_per_op("PJRT ann_fwd batch-32", || {
+            std::hint::black_box(eng.run("ann_fwd", std::slice::from_ref(&lit)).unwrap());
+        });
+        println!(
+            "[bench] served inference: {:.1} images/s",
+            32.0 / ns * 1e9
+        );
+    } else {
+        println!("[bench] PJRT latency skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,27 @@
+//! Regenerates paper Table 2 (SISD 16×16 multipliers, 16/8 dividers,
+//! integrated unit) and times the hot paths.
+mod harness;
+
+fn main() {
+    let samples = if std::env::var("BENCH_FAST").is_ok() { 100_000 } else { 1_000_000 };
+    let table = harness::timed("table2 full regeneration", || {
+        simdive::report::table2::render(samples)
+    });
+    println!("{table}");
+    // Behavioral hot paths (the serving-path arithmetic).
+    let mut rng = simdive::util::Rng::new(1);
+    let pairs: Vec<(u64, u64)> =
+        (0..4096).map(|_| (rng.operand(16), rng.operand(16))).collect();
+    let mut i = 0;
+    harness::ns_per_op("simdive_mul16 behavioral", || {
+        let (a, b) = pairs[i & 4095];
+        i += 1;
+        std::hint::black_box(simdive::arith::simdive::simdive_mul(16, a, b));
+    });
+    let mut j = 0;
+    harness::ns_per_op("simdive_div16 behavioral", || {
+        let (a, b) = pairs[j & 4095];
+        j += 1;
+        std::hint::black_box(simdive::arith::simdive::simdive_div(16, a, b));
+    });
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table 3 (32-bit SIMD designs) and times the SIMD
+//! behavioral word path.
+mod harness;
+
+fn main() {
+    let table = harness::timed("table3 full regeneration", || {
+        simdive::report::table3::render()
+    });
+    println!("{table}");
+    use simdive::arith::simd::{execute, LaneCfg, LaneMode, SimdOp, SimdWord};
+    let op = SimdOp::uniform(LaneCfg::Four8, LaneMode::Mul);
+    let mut x = 0x0102_0304u32;
+    harness::ns_per_op("simd word execute (4×8 mul)", || {
+        x = x.wrapping_mul(0x9E3779B9).wrapping_add(1);
+        std::hint::black_box(execute(op, SimdWord::new(x | 0x0101_0101, 0x0503_0907), 8));
+    });
+}

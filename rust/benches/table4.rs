@@ -1,0 +1,31 @@
+//! Regenerates paper Table 4 (ANN accuracy with accurate/approximate
+//! multipliers) and times quantized inference per image.
+mod harness;
+use simdive::report::table4::{render, Scale};
+
+fn main() {
+    let scale = if std::env::var("BENCH_FAST").is_ok() {
+        Scale { train: 1500, test: 300, epochs: 3, nodes: 48 }
+    } else {
+        Scale::default()
+    };
+    let table = harness::timed("table4 full regeneration (train + eval ×4 designs)", || {
+        render(scale)
+    });
+    println!("{table}");
+    // Per-image quantized inference timing.
+    use simdive::ann::{Mlp, QuantMlp};
+    use simdive::arith::MulDesign;
+    use simdive::datasets::{generate, Family};
+    let train = generate(Family::Digits, 1500, 11);
+    let mut net = Mlp::new(&[48], 7);
+    net.train(&train, 2, 0.1, 8);
+    let q = QuantMlp::from_float(&net, &train[..200]);
+    let test = generate(Family::Digits, 64, 12);
+    let mut i = 0;
+    harness::ns_per_op("quantized inference/image (SIMDive mul)", || {
+        let ex = &test[i & 63];
+        i += 1;
+        std::hint::black_box(q.predict(&ex.pixels, MulDesign::Simdive { w: 8 }));
+    });
+}

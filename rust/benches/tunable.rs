@@ -1,0 +1,10 @@
+//! §3.3 tunable-accuracy sweep: ARE/PRE/area vs w (0..=8 LUTs).
+mod harness;
+
+fn main() {
+    let samples = if std::env::var("BENCH_FAST").is_ok() { 60_000 } else { 300_000 };
+    let table = harness::timed("tunable sweep", || {
+        simdive::report::tunable::render(samples)
+    });
+    println!("{table}");
+}

@@ -1,0 +1,281 @@
+//! ANN substrate for Table 4: a fully-connected network (784 → 100 [→ 100]
+//! → 10, as in the paper's MNIST-CNN-derived MLP [1]) trained in floating
+//! point, then quantized to 8-bit fixed point for inference where every
+//! weight×activation product routes through a pluggable multiplier —
+//! accurate, SIMDive, or MBM.
+//!
+//! Training runs either here (self-contained, used by the Table-4 bench)
+//! or in `python/compile/train.py` (for the PJRT serving artifacts); both
+//! consume the same synthetic datasets ([`crate::datasets`]).
+
+use crate::arith::MulDesign;
+use crate::datasets::{Example, CLASSES, IMG};
+use crate::util::Rng;
+
+/// Float MLP: weights `w[l]` are `[out × in]` row-major.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    pub w: Vec<Vec<f32>>,
+    pub b: Vec<Vec<f32>>,
+}
+
+impl Mlp {
+    /// He-initialized network with the given hidden layout.
+    pub fn new(hidden: &[usize], seed: u64) -> Self {
+        let mut dims = vec![IMG * IMG];
+        dims.extend_from_slice(hidden);
+        dims.push(CLASSES);
+        let mut rng = Rng::new(seed);
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        for l in 0..dims.len() - 1 {
+            let (fan_in, fan_out) = (dims[l], dims[l + 1]);
+            let std = (2.0 / fan_in as f64).sqrt();
+            w.push((0..fan_in * fan_out).map(|_| (rng.normal() * std) as f32).collect());
+            b.push(vec![0f32; fan_out]);
+        }
+        Mlp { dims, w, b }
+    }
+
+    /// Forward pass in f32; returns all layer activations (post-ReLU for
+    /// hidden, raw logits for the last layer).
+    pub fn forward(&self, input: &[f32]) -> Vec<Vec<f32>> {
+        let mut acts = vec![input.to_vec()];
+        for l in 0..self.w.len() {
+            let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
+            let mut out = vec![0f32; fan_out];
+            let x = &acts[l];
+            for o in 0..fan_out {
+                let row = &self.w[l][o * fan_in..(o + 1) * fan_in];
+                let mut s = self.b[l][o];
+                for i in 0..fan_in {
+                    s += row[i] * x[i];
+                }
+                out[o] = if l + 1 < self.w.len() { s.max(0.0) } else { s };
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    pub fn predict(&self, input: &[f32]) -> usize {
+        let acts = self.forward(input);
+        argmax_f32(acts.last().unwrap())
+    }
+
+    /// Minibatch SGD with softmax cross-entropy and 1/(1+e/2) lr decay.
+    pub fn train(&mut self, data: &[Example], epochs: usize, lr0: f32, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        for epoch in 0..epochs {
+            let lr = lr0 / (1.0 + 0.5 * epoch as f32);
+            rng.shuffle(&mut order);
+            for &idx in &order {
+                let ex = &data[idx];
+                let input: Vec<f32> = ex.pixels.iter().map(|&p| p as f32 / 255.0).collect();
+                let acts = self.forward(&input);
+                // Softmax grad at output.
+                let logits = acts.last().unwrap();
+                let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = logits.iter().map(|&v| (v - maxl).exp()).collect();
+                let sum: f32 = exps.iter().sum();
+                let mut delta: Vec<f32> =
+                    exps.iter().map(|&e| e / sum).collect();
+                delta[ex.label as usize] -= 1.0;
+                // Backprop.
+                for l in (0..self.w.len()).rev() {
+                    let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
+                    let x = &acts[l];
+                    let mut prev_delta = vec![0f32; fan_in];
+                    for o in 0..fan_out {
+                        let d = delta[o];
+                        if d != 0.0 {
+                            let row = &mut self.w[l][o * fan_in..(o + 1) * fan_in];
+                            for i in 0..fan_in {
+                                prev_delta[i] += row[i] * d;
+                                row[i] -= lr * d * x[i];
+                            }
+                            self.b[l][o] -= lr * d;
+                        }
+                    }
+                    if l > 0 {
+                        // ReLU mask.
+                        for i in 0..fan_in {
+                            if acts[l][i] <= 0.0 {
+                                prev_delta[i] = 0.0;
+                            }
+                        }
+                    }
+                    delta = prev_delta;
+                }
+            }
+        }
+    }
+
+    /// Float accuracy over a test set.
+    pub fn accuracy(&self, data: &[Example]) -> f64 {
+        let correct = data
+            .iter()
+            .filter(|ex| {
+                let input: Vec<f32> = ex.pixels.iter().map(|&p| p as f32 / 255.0).collect();
+                self.predict(&input) == ex.label as usize
+            })
+            .count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+fn argmax_f32(v: &[f32]) -> usize {
+    v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+}
+
+/// 8-bit post-training-quantized network (paper §4.3: parameters and
+/// activations quantized to 8-bit fixed point for inference).
+#[derive(Clone, Debug)]
+pub struct QuantMlp {
+    pub dims: Vec<usize>,
+    /// Per-layer signed 8-bit weights.
+    pub w_q: Vec<Vec<i8>>,
+    /// Per-layer bias in accumulator units.
+    pub b_q: Vec<Vec<i64>>,
+    /// Per-layer requantization multiplier accumulator → u8 activation.
+    pub requant: Vec<f32>,
+}
+
+impl QuantMlp {
+    /// Quantize a trained float net, calibrating activation scales on
+    /// `calib` examples.
+    pub fn from_float(net: &Mlp, calib: &[Example]) -> Self {
+        let layers = net.w.len();
+        // Per-layer activation max from calibration (f32 forward).
+        let mut act_max = vec![0f32; layers + 1];
+        act_max[0] = 1.0; // inputs are /255
+        for ex in calib {
+            let input: Vec<f32> = ex.pixels.iter().map(|&p| p as f32 / 255.0).collect();
+            let acts = net.forward(&input);
+            for l in 1..=layers {
+                for &v in &acts[l] {
+                    if v > act_max[l] {
+                        act_max[l] = v;
+                    }
+                }
+            }
+        }
+        let mut w_q = Vec::new();
+        let mut b_q = Vec::new();
+        let mut requant = Vec::new();
+        for l in 0..layers {
+            let wmax = net.w[l].iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-6);
+            let sw = 127.0 / wmax;
+            let sa = 255.0 / act_max[l].max(1e-6); // activation scale into u8
+            w_q.push(net.w[l].iter().map(|&v| (v * sw).round().clamp(-127.0, 127.0) as i8).collect());
+            b_q.push(net.b[l].iter().map(|&v| (v * sw * sa) as i64).collect());
+            // acc units = value · sw · sa ; next activation u8 = value ·
+            // sa_next ⇒ requant = sa_next / (sw · sa).
+            let sa_next = 255.0 / act_max[l + 1].max(1e-6);
+            requant.push(sa_next / (sw * sa));
+        }
+        QuantMlp { dims: net.dims.clone(), w_q, b_q, requant }
+    }
+
+    /// Quantized forward pass with a pluggable 8-bit multiplier. Products
+    /// are `|w| × a` through `design` (both operands 8-bit unsigned, as in
+    /// the SIMDive lane), signs re-applied, accumulation exact.
+    pub fn predict(&self, pixels: &[u8], design: MulDesign) -> usize {
+        let layers = self.w_q.len();
+        let mut act: Vec<u8> = pixels.to_vec();
+        for l in 0..layers {
+            let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
+            let mut next = vec![0u8; fan_out];
+            let mut logits = vec![0i64; fan_out];
+            for o in 0..fan_out {
+                let row = &self.w_q[l][o * fan_in..(o + 1) * fan_in];
+                let mut acc = self.b_q[l][o];
+                for i in 0..fan_in {
+                    let a = act[i] as u64;
+                    if a == 0 || row[i] == 0 {
+                        continue;
+                    }
+                    let p = design.mul(8, row[i].unsigned_abs() as u64, a) as i64;
+                    acc += if row[i] < 0 { -p } else { p };
+                }
+                if l + 1 < layers {
+                    let v = (acc.max(0) as f32 * self.requant[l]).round();
+                    next[o] = v.clamp(0.0, 255.0) as u8;
+                } else {
+                    logits[o] = acc;
+                }
+            }
+            if l + 1 < layers {
+                act = next;
+            } else {
+                return logits
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, &v)| v)
+                    .unwrap()
+                    .0;
+            }
+        }
+        unreachable!()
+    }
+
+    /// Accuracy with the given multiplier.
+    pub fn accuracy(&self, data: &[Example], design: MulDesign) -> f64 {
+        let correct =
+            data.iter().filter(|ex| self.predict(&ex.pixels, design) == ex.label as usize).count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Family};
+
+    fn small_net(family: Family) -> (Mlp, Vec<Example>, Vec<Example>) {
+        let train = generate(family, 1200, 101);
+        let test = generate(family, 300, 102);
+        let mut net = Mlp::new(&[32], 7);
+        net.train(&train, 3, 0.05, 8);
+        (net, train, test)
+    }
+
+    #[test]
+    fn float_training_learns_digits() {
+        let (net, _, test) = small_net(Family::Digits);
+        let acc = net.accuracy(&test);
+        assert!(acc > 0.75, "float accuracy {acc}");
+    }
+
+    #[test]
+    fn quantized_accurate_close_to_float() {
+        let (net, train, test) = small_net(Family::Digits);
+        let q = QuantMlp::from_float(&net, &train[..200]);
+        let fa = net.accuracy(&test);
+        let qa = q.accuracy(&test, MulDesign::Accurate);
+        assert!(qa > fa - 0.08, "float {fa} vs quant {qa}");
+    }
+
+    #[test]
+    fn simdive_matches_accurate_quantized() {
+        // Table 4's key claim: SIMDive inference accuracy ≈ accurate 8-bit
+        // (± noise), thanks to ANN error resilience.
+        let (net, train, test) = small_net(Family::Digits);
+        let q = QuantMlp::from_float(&net, &train[..200]);
+        let qa = q.accuracy(&test, MulDesign::Accurate);
+        let qs = q.accuracy(&test, MulDesign::Simdive { w: 8 });
+        let qm = q.accuracy(&test, MulDesign::Mbm);
+        assert!((qa - qs).abs() < 0.05, "accurate {qa} vs simdive {qs}");
+        assert!((qa - qm).abs() < 0.08, "accurate {qa} vs mbm {qm}");
+    }
+
+    #[test]
+    fn fashion_trains_too() {
+        let (net, train, test) = small_net(Family::Fashion);
+        let q = QuantMlp::from_float(&net, &train[..200]);
+        let qa = q.accuracy(&test, MulDesign::Accurate);
+        assert!(qa > 0.6, "fashion quant accuracy {qa}");
+    }
+}

@@ -1,0 +1,52 @@
+//! Accurate reference arithmetic (stand-in for the Xilinx LogiCORE IPs).
+//!
+//! Semantics match the soft IPs the paper uses as baselines: full-width
+//! unsigned multiply, and truncating (floor) unsigned divide with the
+//! divide-by-zero convention of saturating to all-ones (the LogiCORE divider
+//! flags the case; a saturated quotient is the standard wrapper behaviour).
+
+use super::max_val;
+
+/// Exact `N x N -> 2N` unsigned multiply.
+#[inline]
+pub fn mul(bits: u32, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    a.wrapping_mul(b)
+}
+
+/// Exact floor division. `b == 0` saturates to the N-bit max.
+#[inline]
+pub fn div(bits: u32, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if b == 0 {
+        max_val(bits)
+    } else {
+        a / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_matches_native() {
+        assert_eq!(mul(8, 43, 10), 430);
+        assert_eq!(mul(16, 65535, 65535), 65535u64 * 65535);
+        assert_eq!(mul(32, 0xFFFF_FFFF, 0xFFFF_FFFF), 0xFFFF_FFFFu64 * 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn div_floor_semantics() {
+        assert_eq!(div(8, 43, 10), 4);
+        assert_eq!(div(16, 7, 9), 0);
+        assert_eq!(div(32, 1 << 31, 3), (1u64 << 31) / 3);
+    }
+
+    #[test]
+    fn div_by_zero_saturates() {
+        assert_eq!(div(8, 200, 0), 255);
+        assert_eq!(div(16, 1, 0), 65535);
+        assert_eq!(div(32, 0, 0), u32::MAX as u64);
+    }
+}

@@ -1,0 +1,264 @@
+//! Mitchell's logarithmic multiplication and division (the 1962 algorithm,
+//! paper §3.1) plus the shared leading-one / fraction-alignment helpers used
+//! by every Mitchell-derived design in this crate.
+//!
+//! Fixed-point layout: for an `N`-bit operand the aligned fraction has
+//! `F = N - 1` bits. With `k = ⌊log2 a⌋` and `f = (a - 2^k) << (F - k)`,
+//! the real fraction is `x = f / 2^F ∈ [0, 1)`.
+
+/// Position of the leading one (`⌊log2 a⌋`). `a` must be non-zero.
+#[inline]
+pub fn lod(a: u64) -> u32 {
+    debug_assert!(a != 0);
+    63 - a.leading_zeros()
+}
+
+/// Fraction bits of `a`, left-aligned to `F = bits - 1` fractional places.
+#[inline]
+pub fn frac_aligned(bits: u32, a: u64) -> (u32, u64) {
+    let f = bits - 1;
+    let k = lod(a);
+    let frac = (a - (1u64 << k)) << (f - k);
+    (k, frac)
+}
+
+/// Decode the Mitchell multiplier antilog: given the (possibly corrected)
+/// fraction sum `t` (which may exceed `2^F`, and may include a correction),
+/// produce `⌊mantissa · 2^(k1 + k2 − F)⌋` per Eq. 5, saturated to `2N` bits.
+///
+/// Shared by Mitchell, MBM and SIMDive so the overflow handling is identical
+/// across all Mitchell-family designs (this is exactly the paper's decode:
+/// carry-out of the fraction adder selects the `x1+x2 ≥ 1` case).
+#[inline]
+pub fn mul_decode(bits: u32, k1: u32, k2: u32, t: i64) -> u64 {
+    let f = bits - 1;
+    debug_assert!(t >= 0, "mul fraction sum cannot be negative");
+    let t = t as u128;
+    let ksum = k1 + k2;
+    let (mant, exp) = if t < (1u128 << f) {
+        ((1u128 << f) + t, ksum as i64 - f as i64)
+    } else {
+        // Carry out of the fraction adder: 2^(k1+k2+1) · t / 2^F.
+        (t, ksum as i64 + 1 - f as i64)
+    };
+    let v = if exp >= 0 { mant << exp } else { mant >> (-exp) };
+    let cap = if bits == 32 { u64::MAX as u128 } else { (1u128 << (2 * bits)) - 1 };
+    v.min(cap) as u64
+}
+
+/// Decode the Mitchell divider antilog per Eq. 6: `t` is the (possibly
+/// corrected) fraction difference, which may be negative. Quotient is
+/// `N`-bit, floor semantics; exponent underflow floors to 0.
+#[inline]
+pub fn div_decode(bits: u32, k1: u32, k2: u32, t: i64) -> u64 {
+    let f = bits - 1;
+    let kdiff = k1 as i64 - k2 as i64;
+    let (mant, exp) = if t >= 0 {
+        ((1i64 << f) + t, kdiff - f as i64)
+    } else {
+        // Borrow: 2^(k1-k2-1) · (2 + x1 - x2 [+ c]).
+        ((2i64 << f) + t, kdiff - 1 - f as i64)
+    };
+    if mant <= 0 {
+        // Only reachable with a (negative) correction large enough to cancel
+        // the implicit leading one; clamp to zero like the hardware would.
+        return 0;
+    }
+    let mant = mant as u128;
+    let v = if exp >= 0 {
+        mant << exp.min(63)
+    } else if -exp >= 128 {
+        0
+    } else {
+        mant >> (-exp)
+    };
+    v.min(super::max_val(bits) as u128) as u64
+}
+
+/// Real-valued multiplier decode (no floor): the algorithm's output as the
+/// paper's MATLAB/C++ behavioral models evaluate it for error analysis
+/// (§4.1 — ARE/PRE are computed on behavioral models, not bit-truncated
+/// hardware outputs; floor effects at tiny products would otherwise
+/// dominate the peak-error statistic).
+#[inline]
+pub fn mul_decode_real(bits: u32, k1: u32, k2: u32, t: i64) -> f64 {
+    let f = bits - 1;
+    let scale = (1u64 << f) as f64;
+    let t = t as f64;
+    if t < scale {
+        (scale + t) / scale * 2f64.powi((k1 + k2) as i32)
+    } else {
+        t / scale * 2f64.powi((k1 + k2 + 1) as i32)
+    }
+}
+
+/// Real-valued divider decode (no floor); see [`mul_decode_real`].
+#[inline]
+pub fn div_decode_real(bits: u32, k1: u32, k2: u32, t: i64) -> f64 {
+    let f = bits - 1;
+    let scale = (1u64 << f) as f64;
+    let kdiff = k1 as i32 - k2 as i32;
+    if t >= 0 {
+        (scale + t as f64) / scale * 2f64.powi(kdiff)
+    } else {
+        (2.0 * scale + t as f64) / scale * 2f64.powi(kdiff - 1)
+    }
+}
+
+/// Real-valued Mitchell multiply (error-analysis form).
+#[inline]
+pub fn mul_real(bits: u32, a: u64, b: u64) -> f64 {
+    if a == 0 || b == 0 {
+        return 0.0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    mul_decode_real(bits, k1, k2, (f1 + f2) as i64)
+}
+
+/// Real-valued Mitchell divide (error-analysis form).
+#[inline]
+pub fn div_real(bits: u32, a: u64, b: u64) -> f64 {
+    if b == 0 {
+        return super::max_val(bits) as f64;
+    }
+    if a == 0 {
+        return 0.0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    div_decode_real(bits, k1, k2, f1 as i64 - f2 as i64)
+}
+
+/// Mitchell multiplication (no correction). `a == 0 || b == 0` → 0.
+#[inline]
+pub fn mul(bits: u32, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    mul_decode(bits, k1, k2, (f1 + f2) as i64)
+}
+
+/// Mitchell division (no correction). `b == 0` saturates, `a == 0` → 0.
+#[inline]
+pub fn div(bits: u32, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if b == 0 {
+        return super::max_val(bits);
+    }
+    if a == 0 {
+        return 0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    div_decode(bits, k1, k2, f1 as i64 - f2 as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact;
+
+    #[test]
+    fn paper_running_example() {
+        // Paper §3.1: 43 × 10 → Mitchell 408 (accurate 430); 43 / 10 → 4.
+        assert_eq!(mul(8, 43, 10), 408);
+        assert_eq!(div(8, 43, 10), 4);
+    }
+
+    #[test]
+    fn lod_basics() {
+        assert_eq!(lod(1), 0);
+        assert_eq!(lod(2), 1);
+        assert_eq!(lod(3), 1);
+        assert_eq!(lod(255), 7);
+        assert_eq!(lod(1 << 31), 31);
+    }
+
+    #[test]
+    fn frac_alignment() {
+        // 43 = 2^5 (1 + 0.01011b): fraction 0b01011 aligned to 7 bits = 0b0101100.
+        let (k, f) = frac_aligned(8, 43);
+        assert_eq!(k, 5);
+        assert_eq!(f, 0b0101100);
+        // 10 = 2^3 (1 + 0.01b).
+        let (k, f) = frac_aligned(8, 10);
+        assert_eq!(k, 3);
+        assert_eq!(f, 0b0100000);
+    }
+
+    #[test]
+    fn powers_of_two_are_exact() {
+        // Mitchell is exact when both fractions are zero.
+        for i in 0..8 {
+            for j in 0..8 {
+                let (a, b) = (1u64 << i, 1u64 << j);
+                assert_eq!(mul(8, a, b), a * b);
+                assert_eq!(div(8, a, b), if i >= j { a / b } else { 0 });
+            }
+        }
+    }
+
+    #[test]
+    fn mul_never_overestimates() {
+        // Classical Mitchell property: P̃ ≤ P, error < 11.1%.
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let approx = mul(8, a, b);
+                let ex = exact::mul(8, a, b);
+                assert!(approx <= ex, "a={a} b={b}: {approx} > {ex}");
+                let rel = (ex - approx) as f64 / ex as f64;
+                assert!(rel < 0.1112, "a={a} b={b}: rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn div_error_bounded() {
+        // Mitchell division floor-truncated vs real quotient: check the
+        // relative error of the *real-valued* decode stays within the known
+        // analytic bound (≈ +12.5% over, never more than ~0 under in the
+        // integer floor sense beyond 1 ulp effects at tiny quotients).
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let approx = div(8, a, b) as f64;
+                let real = a as f64 / b as f64;
+                // floor() can lose up to 1.0; compare against real+1.
+                assert!(approx <= real * 1.1251 + 1.0, "a={a} b={b} approx={approx} real={real}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_conventions() {
+        assert_eq!(mul(16, 0, 1234), 0);
+        assert_eq!(mul(16, 1234, 0), 0);
+        assert_eq!(div(16, 0, 7), 0);
+        assert_eq!(div(16, 7, 0), 65535);
+    }
+
+    #[test]
+    fn wide_widths_consistent_with_narrow() {
+        // The same (a, b) evaluated at wider widths must give the same
+        // result: alignment is width-independent in value terms.
+        for a in [1u64, 3, 43, 100, 255] {
+            for b in [1u64, 7, 10, 200, 255] {
+                assert_eq!(mul(8, a, b), mul(16, a, b));
+                assert_eq!(mul(8, a, b), mul(32, a, b));
+                assert_eq!(div(8, a, b), div(16, a, b));
+                assert_eq!(div(8, a, b), div(32, a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn mul_32bit_saturation_paths() {
+        let m = u32::MAX as u64;
+        let v = mul(32, m, m);
+        assert!(v <= u64::MAX);
+        assert!(v as u128 <= (m as u128) * (m as u128));
+    }
+}

@@ -1,0 +1,43 @@
+//! Behavioral (bit-exact) arithmetic models.
+//!
+//! This module is the numeric ground truth of the reproduction: every
+//! multiplier/divider evaluated in the paper's Tables 2–3 has a fast
+//! behavioral model here, and the gate-level netlists in [`crate::circuits`]
+//! as well as the Pallas kernel / jnp oracle on the Python side are verified
+//! bit-exactly against these functions (see DESIGN.md §4 for the contract).
+//!
+//! Operand convention: unsigned `N`-bit integers (`N ∈ {8, 16, 32}`) carried
+//! in `u64`. Multiplication returns a `2N`-bit product, division an `N`-bit
+//! quotient, both in `u64`.
+
+pub mod aaxd;
+pub mod ca;
+pub mod exact;
+pub mod mitchell;
+pub mod models;
+pub mod saadat;
+pub mod simd;
+pub mod simdive;
+pub mod table;
+pub mod trunc;
+
+pub use mitchell::{frac_aligned, lod};
+pub use models::{DivDesign, MulDesign};
+pub use simd::{LaneCfg, LaneMode, SimdOp, SimdWord};
+pub use simdive::{simdive_div, simdive_mul, Simdive};
+pub use table::{CorrectionTables, TABLE_RESOLUTION_BITS, W_MAX};
+
+/// Supported operand widths.
+pub const WIDTHS: [u32; 3] = [8, 16, 32];
+
+/// Check an operand fits in `bits`.
+#[inline]
+pub fn fits(a: u64, bits: u32) -> bool {
+    bits == 64 || a < (1u64 << bits)
+}
+
+/// Maximum value of a `bits`-bit operand.
+#[inline]
+pub fn max_val(bits: u32) -> u64 {
+    if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 }
+}

@@ -1,0 +1,193 @@
+//! Design registry: every multiplier/divider row of the paper's Tables 2–3
+//! as a uniform enum, so the error evaluators, benches and application
+//! substrates can iterate over designs generically.
+
+use super::{aaxd, ca, exact, mitchell, saadat, simdive, trunc};
+
+/// Multiplier designs (Table 2 upper half + Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MulDesign {
+    /// Accurate soft IP (Xilinx LogiCORE stand-in).
+    Accurate,
+    /// CA: hierarchical from approximate 4×4 blocks [30].
+    Ca,
+    /// Truncated, 16×16 from four 7×7 instances.
+    TruncFour7x7,
+    /// Truncated, 16×16 from two 15×7 instances.
+    TruncTwo15x7,
+    /// Truncated, 32-bit from 31×7 instances (Table 3).
+    Trunc31x7,
+    /// Mitchell's logarithmic multiplier [22].
+    Mitchell,
+    /// MBM: minimally biased multiplier [28].
+    Mbm,
+    /// Proposed SIMDive multiplier at tuning `w`.
+    Simdive { w: u32 },
+}
+
+impl MulDesign {
+    /// Evaluate the design at operand width `bits`.
+    #[inline]
+    pub fn mul(&self, bits: u32, a: u64, b: u64) -> u64 {
+        match *self {
+            MulDesign::Accurate => exact::mul(bits, a, b),
+            MulDesign::Ca => ca::ca_mul(bits, a, b),
+            MulDesign::TruncFour7x7 => trunc::trunc_mul(bits, true, true, a, b),
+            MulDesign::TruncTwo15x7 => trunc::trunc_mul(bits, false, true, a, b),
+            MulDesign::Trunc31x7 => trunc::trunc_mul(bits, false, true, a, b),
+            MulDesign::Mitchell => mitchell::mul(bits, a, b),
+            MulDesign::Mbm => saadat::mbm_mul(bits, a, b),
+            MulDesign::Simdive { w } => simdive::simdive_mul_w(bits, a, b, w),
+        }
+    }
+
+    /// Real-valued output for error analysis (the paper's behavioral-model
+    /// form; integer designs return their integer result as a real).
+    #[inline]
+    pub fn mul_real(&self, bits: u32, a: u64, b: u64) -> f64 {
+        match *self {
+            MulDesign::Accurate
+            | MulDesign::Ca
+            | MulDesign::TruncFour7x7
+            | MulDesign::TruncTwo15x7
+            | MulDesign::Trunc31x7 => self.mul(bits, a, b) as f64,
+            MulDesign::Mitchell => mitchell::mul_real(bits, a, b),
+            MulDesign::Mbm => saadat::mbm_mul_real(bits, a, b),
+            MulDesign::Simdive { w } => simdive::simdive_mul_real_w(bits, a, b, w),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            MulDesign::Accurate => "Accurate IP [36]".into(),
+            MulDesign::Ca => "CA [30]".into(),
+            MulDesign::TruncFour7x7 => "Trunc (four 7x7)".into(),
+            MulDesign::TruncTwo15x7 => "Trunc (two 15x7)".into(),
+            MulDesign::Trunc31x7 => "Truncated (using 31x7)".into(),
+            MulDesign::Mitchell => "Mitchell [22]".into(),
+            MulDesign::Mbm => "MBM [28]".into(),
+            MulDesign::Simdive { w } => format!("Proposed (w={w})"),
+        }
+    }
+
+    /// The Table 2 multiplier rows, in paper order.
+    pub fn table2_rows() -> Vec<MulDesign> {
+        vec![
+            MulDesign::Accurate,
+            MulDesign::Ca,
+            MulDesign::TruncFour7x7,
+            MulDesign::TruncTwo15x7,
+            MulDesign::Mitchell,
+            MulDesign::Mbm,
+            MulDesign::Simdive { w: 8 },
+        ]
+    }
+}
+
+/// Divider designs (Table 2 lower half).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DivDesign {
+    /// Accurate soft IP (Xilinx LogiCORE stand-in, restoring array).
+    Accurate,
+    /// AAXD with m dividend / n divisor bits kept [13].
+    Aaxd { m: u32, n: u32 },
+    /// Mitchell's logarithmic divider [22].
+    Mitchell,
+    /// INZeD: near-zero-bias Mitchell divider [29].
+    Inzed,
+    /// Proposed SIMDive divider at tuning `w`.
+    Simdive { w: u32 },
+}
+
+impl DivDesign {
+    #[inline]
+    pub fn div(&self, bits: u32, a: u64, b: u64) -> u64 {
+        match *self {
+            DivDesign::Accurate => exact::div(bits, a, b),
+            DivDesign::Aaxd { m, n } => aaxd::aaxd_div(bits, m, n, a, b),
+            DivDesign::Mitchell => mitchell::div(bits, a, b),
+            DivDesign::Inzed => saadat::inzed_div(bits, a, b),
+            DivDesign::Simdive { w } => simdive::simdive_div_w(bits, a, b, w),
+        }
+    }
+
+    /// Real-valued output for error analysis (behavioral-model form).
+    #[inline]
+    pub fn div_real(&self, bits: u32, a: u64, b: u64) -> f64 {
+        match *self {
+            DivDesign::Accurate => {
+                if b == 0 {
+                    super::max_val(bits) as f64
+                } else {
+                    a as f64 / b as f64
+                }
+            }
+            DivDesign::Aaxd { m, n } => aaxd::aaxd_div_real(bits, m, n, a, b),
+            DivDesign::Mitchell => mitchell::div_real(bits, a, b),
+            DivDesign::Inzed => saadat::inzed_div_real(bits, a, b),
+            DivDesign::Simdive { w } => simdive::simdive_div_real_w(bits, a, b, w),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            DivDesign::Accurate => "Accurate IP [37]".into(),
+            DivDesign::Aaxd { m, n } => format!("AAXD ({m}/{n}) [13]"),
+            DivDesign::Mitchell => "Mitchell [22]".into(),
+            DivDesign::Inzed => "INZeD [29]".into(),
+            DivDesign::Simdive { w } => format!("Proposed (w={w})"),
+        }
+    }
+
+    /// The Table 2 divider rows, in paper order.
+    pub fn table2_rows() -> Vec<DivDesign> {
+        vec![
+            DivDesign::Accurate,
+            DivDesign::Aaxd { m: 12, n: 6 },
+            DivDesign::Aaxd { m: 8, n: 4 },
+            DivDesign::Mitchell,
+            DivDesign::Inzed,
+            DivDesign::Simdive { w: 8 },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_mul_designs_handle_zero_and_max() {
+        for d in MulDesign::table2_rows() {
+            assert_eq!(d.mul(16, 0, 1234), 0, "{}", d.name());
+            let p = d.mul(16, 65535, 65535);
+            assert!(p < (1u64 << 32), "{}: {p}", d.name());
+        }
+    }
+
+    #[test]
+    fn all_div_designs_handle_edge_cases() {
+        for d in DivDesign::table2_rows() {
+            assert_eq!(d.div(16, 0, 99), 0, "{}", d.name());
+            assert_eq!(d.div(16, 99, 0), 65535, "{} div-by-zero", d.name());
+            assert!(d.div(16, 65535, 1) <= 65535, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn accurate_is_identity() {
+        assert_eq!(MulDesign::Accurate.mul(16, 123, 456), 123 * 456);
+        assert_eq!(DivDesign::Accurate.div(16, 456, 123), 456 / 123);
+    }
+
+    #[test]
+    fn identity_one_behaviour() {
+        // All Mitchell-family designs are exact for power-of-two operands.
+        for d in [MulDesign::Mitchell, MulDesign::Simdive { w: 0 }] {
+            assert_eq!(d.mul(16, 1 << 5, 1 << 7), 1 << 12, "{}", d.name());
+        }
+        for d in [DivDesign::Mitchell, DivDesign::Simdive { w: 0 }] {
+            assert_eq!(d.div(16, 1 << 12, 1 << 5), 1 << 7, "{}", d.name());
+        }
+    }
+}

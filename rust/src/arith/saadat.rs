@@ -1,0 +1,190 @@
+//! State-of-the-art Mitchell-derived baselines from Saadat et al.:
+//!
+//! * **MBM** (Minimally Biased Multiplier, TCAD'18 [28]): Mitchell's
+//!   multiplier plus a single *input-independent* correction constant that
+//!   zeroes the mean error. Over uniform fractions the ideal corrections
+//!   integrate to `∫∫_{x+y<1} xy = 1/24` and `∫∫_{x+y≥1} (1-x)(1-y)/2 = 1/48`,
+//!   i.e. a total bias of exactly **1/16** — a single bit at position 2^-4,
+//!   which is what makes MBM nearly free in hardware.
+//! * **INZeD** (near-zero-error-bias divider, DAC'19 [29]): same idea for
+//!   Mitchell's divider; the constant is the mean of the (negative) ideal
+//!   divider correction, computed numerically once.
+//!
+//! Both share the overflow weakness the paper points out (§2): a single
+//! coefficient for the whole interval mis-corrects the region boundaries,
+//! which is exactly what SIMDive's 64-region table fixes.
+
+use super::mitchell::{div_decode, frac_aligned, mul_decode};
+use super::table::TABLE_RESOLUTION_BITS;
+use std::sync::OnceLock;
+
+/// MBM's correction constant: exactly 1/16 (see module docs).
+pub const MBM_COEFF: f64 = 1.0 / 16.0;
+
+/// INZeD's correction constant (mean ideal divider correction, negative).
+pub fn inzed_coeff() -> f64 {
+    static CACHE: OnceLock<f64> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        // Numeric mean of the ideal divider correction over the unit square.
+        let n = 512;
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let x1 = (i as f64 + 0.5) / n as f64;
+                let x2 = (j as f64 + 0.5) / n as f64;
+                s += if x1 >= x2 {
+                    x2 * (x2 - x1) / (1.0 + x2)
+                } else {
+                    (x1 - x2) * (1.0 - x2) / (1.0 + x2)
+                };
+            }
+        }
+        s / (n * n) as f64
+    })
+}
+
+/// INZeD's constant in `F = bits − 1` fraction-bit units (negative) —
+/// exposed for the gate-level netlist, which folds it into the ternary
+/// adder's constant operand.
+pub fn inzed_coeff_f_units(bits: u32) -> i64 {
+    to_f_units(inzed_coeff(), bits)
+}
+
+#[inline]
+fn to_f_units(c: f64, bits: u32) -> i64 {
+    let fixed = (c * (1i64 << TABLE_RESOLUTION_BITS) as f64).round() as i64;
+    let f = bits - 1;
+    if f >= TABLE_RESOLUTION_BITS {
+        fixed << (f - TABLE_RESOLUTION_BITS)
+    } else {
+        fixed >> (TABLE_RESOLUTION_BITS - f)
+    }
+}
+
+/// MBM approximate multiply.
+#[inline]
+pub fn mbm_mul(bits: u32, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = to_f_units(MBM_COEFF, bits);
+    mul_decode(bits, k1, k2, f1 as i64 + f2 as i64 + corr)
+}
+
+/// Real-valued MBM multiply (error-analysis form).
+#[inline]
+pub fn mbm_mul_real(bits: u32, a: u64, b: u64) -> f64 {
+    if a == 0 || b == 0 {
+        return 0.0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = to_f_units(MBM_COEFF, bits);
+    super::mitchell::mul_decode_real(bits, k1, k2, f1 as i64 + f2 as i64 + corr)
+}
+
+/// Real-valued INZeD divide (error-analysis form).
+#[inline]
+pub fn inzed_div_real(bits: u32, a: u64, b: u64) -> f64 {
+    if b == 0 {
+        return super::max_val(bits) as f64;
+    }
+    if a == 0 {
+        return 0.0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = to_f_units(inzed_coeff(), bits);
+    super::mitchell::div_decode_real(bits, k1, k2, f1 as i64 - f2 as i64 + corr)
+}
+
+/// INZeD approximate divide.
+#[inline]
+pub fn inzed_div(bits: u32, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if b == 0 {
+        return super::max_val(bits);
+    }
+    if a == 0 {
+        return 0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = to_f_units(inzed_coeff(), bits);
+    div_decode(bits, k1, k2, f1 as i64 - f2 as i64 + corr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{exact, mitchell};
+
+    #[test]
+    fn inzed_coeff_is_negative_and_small() {
+        let c = inzed_coeff();
+        assert!(c < 0.0 && c > -0.1, "inzed coeff {c}");
+    }
+
+    #[test]
+    fn mbm_reduces_mean_error_vs_mitchell() {
+        let (mut e_mbm, mut e_mit, mut n) = (0.0, 0.0, 0u64);
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let ex = exact::mul(8, a, b) as f64;
+                e_mbm += (ex - mbm_mul(8, a, b) as f64).abs() / ex;
+                e_mit += (ex - mitchell::mul(8, a, b) as f64).abs() / ex;
+                n += 1;
+            }
+        }
+        let (are_mbm, are_mit) = (e_mbm / n as f64, e_mit / n as f64);
+        assert!(are_mbm < are_mit, "MBM {are_mbm} !< Mitchell {are_mit}");
+        // Paper Table 2: MBM ARE ≈ 2.63% (16-bit). Same regime at 8-bit.
+        assert!(are_mbm < 0.04, "MBM ARE {are_mbm}");
+    }
+
+    #[test]
+    fn mbm_bias_is_near_zero() {
+        // "Minimally biased": signed mean error ≈ 0 (<< Mitchell's -3.8%).
+        let (mut bias, mut n) = (0.0, 0u64);
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let ex = exact::mul(8, a, b) as f64;
+                bias += (mbm_mul(8, a, b) as f64 - ex) / ex;
+                n += 1;
+            }
+        }
+        let bias = bias / n as f64;
+        assert!(bias.abs() < 0.01, "MBM bias {bias}");
+    }
+
+    #[test]
+    fn inzed_reduces_mean_error_vs_mitchell_div() {
+        // Paper's 16/8 divider scenario (quotients ≥ 1, floor negligible).
+        let (mut e_inz, mut e_mit, mut n) = (0.0, 0.0, 0u64);
+        for a in (1..65536u64).step_by(7) {
+            for b in 1..256u64 {
+                if a < b {
+                    continue;
+                }
+                let real = a as f64 / b as f64;
+                e_inz += (real - inzed_div_real(16, a, b)).abs() / real;
+                e_mit += (real - mitchell::div_real(16, a, b)).abs() / real;
+                n += 1;
+            }
+        }
+        let (are_inz, are_mit) = (e_inz / n as f64, e_mit / n as f64);
+        assert!(are_inz < are_mit, "INZeD {are_inz} !< Mitchell {are_mit}");
+        // Paper Table 2: INZeD 2.93% vs Mitchell 4.11%.
+        assert!(are_inz < 0.04, "INZeD ARE {are_inz}");
+    }
+
+    #[test]
+    fn zero_conventions() {
+        assert_eq!(mbm_mul(16, 0, 5), 0);
+        assert_eq!(inzed_div(16, 0, 5), 0);
+        assert_eq!(inzed_div(16, 5, 0), 65535);
+    }
+}

@@ -1,0 +1,228 @@
+//! SIMD (sub-word parallel) semantics of the 32-bit SIMDive unit (§3.2).
+//!
+//! One 32-bit unit decomposes — via the one-hot `precision` control — into
+//! `1×32`, `2×16`, `16+8+8`, or `4×8` lanes, and every lane independently
+//! selects multiply or divide (`Mul/Div mode` signal): the paper's
+//! *mixed-precision, mixed-functionality* feature. A lane of width `N`
+//! produces a `2N`-bit result field, so a packed result is 64 bits.
+
+use super::simdive::{simdive_div_with, simdive_mul_with};
+use super::table::{tables_for, CorrectionTables};
+
+/// Lane decomposition of the 32-bit unit (one-hot `precision` control).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LaneCfg {
+    /// One 32×32 lane.
+    One32,
+    /// Two 16×16 lanes.
+    Two16,
+    /// One 16×16 lane (high) and two 8×8 lanes (low).
+    One16Two8,
+    /// Four 8×8 lanes.
+    Four8,
+}
+
+impl LaneCfg {
+    /// `(bit offset, width)` of each lane, low lane first.
+    pub fn lanes(self) -> &'static [(u32, u32)] {
+        match self {
+            LaneCfg::One32 => &[(0, 32)],
+            LaneCfg::Two16 => &[(0, 16), (16, 16)],
+            LaneCfg::One16Two8 => &[(0, 8), (8, 8), (16, 16)],
+            LaneCfg::Four8 => &[(0, 8), (8, 8), (16, 8), (24, 8)],
+        }
+    }
+
+    pub fn lane_count(self) -> usize {
+        self.lanes().len()
+    }
+
+    pub const ALL: [LaneCfg; 4] =
+        [LaneCfg::One32, LaneCfg::Two16, LaneCfg::One16Two8, LaneCfg::Four8];
+}
+
+/// Per-lane functionality (the `Mul/Div mode` control signal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LaneMode {
+    Mul,
+    Div,
+}
+
+/// A packed SIMD operation: configuration + per-lane modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimdOp {
+    pub cfg: LaneCfg,
+    /// Modes for up to four lanes, indexed like `cfg.lanes()`.
+    pub modes: [LaneMode; 4],
+}
+
+impl SimdOp {
+    pub fn uniform(cfg: LaneCfg, mode: LaneMode) -> Self {
+        SimdOp { cfg, modes: [mode; 4] }
+    }
+}
+
+/// A packed pair of 32-bit operand words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimdWord {
+    pub a: u32,
+    pub b: u32,
+}
+
+impl SimdWord {
+    pub fn new(a: u32, b: u32) -> Self {
+        SimdWord { a, b }
+    }
+
+    /// Pack per-lane operands under `cfg`. Values must fit their lanes.
+    pub fn pack(cfg: LaneCfg, ops_a: &[u64], ops_b: &[u64]) -> Self {
+        let lanes = cfg.lanes();
+        assert_eq!(ops_a.len(), lanes.len());
+        assert_eq!(ops_b.len(), lanes.len());
+        let (mut a, mut b) = (0u32, 0u32);
+        for (i, &(off, w)) in lanes.iter().enumerate() {
+            assert!(super::fits(ops_a[i], w), "lane {i} operand A too wide");
+            assert!(super::fits(ops_b[i], w), "lane {i} operand B too wide");
+            a |= (ops_a[i] as u32) << off;
+            b |= (ops_b[i] as u32) << off;
+        }
+        SimdWord { a, b }
+    }
+
+    /// Extract the operands of lane `i` under `cfg`.
+    pub fn lane(self, cfg: LaneCfg, i: usize) -> (u64, u64) {
+        let (off, w) = cfg.lanes()[i];
+        let mask = super::max_val(w);
+        (((self.a >> off) as u64) & mask, ((self.b >> off) as u64) & mask)
+    }
+}
+
+/// Execute one packed op on a SIMDive unit with tables at tuning `w`.
+///
+/// The result is a 64-bit word: lane `i` of width `N` at operand offset
+/// `off` occupies result bits `[2·off, 2·off + 2N)` (a multiply fills the
+/// field; a divide's `N`-bit quotient is zero-extended into it).
+pub fn execute(op: SimdOp, word: SimdWord, w: u32) -> u64 {
+    execute_with(tables_for(w), op, word)
+}
+
+/// As [`execute`] with explicit tables.
+pub fn execute_with(t: &CorrectionTables, op: SimdOp, word: SimdWord) -> u64 {
+    let mut out = 0u64;
+    for (i, &(off, width)) in op.cfg.lanes().iter().enumerate() {
+        let (a, b) = word.lane(op.cfg, i);
+        let r = match op.modes[i] {
+            LaneMode::Mul => simdive_mul_with(t, width, a, b),
+            LaneMode::Div => simdive_div_with(t, width, a, b),
+        };
+        debug_assert!(width == 32 || r < (1u64 << (2 * width)));
+        out |= r << (2 * off);
+    }
+    out
+}
+
+/// Extract lane `i`'s result field from a packed 64-bit result.
+pub fn result_lane(op: SimdOp, result: u64, i: usize) -> u64 {
+    let (off, width) = op.cfg.lanes()[i];
+    if width == 32 {
+        result
+    } else {
+        (result >> (2 * off)) & super::max_val(2 * width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::simdive::{simdive_div, simdive_mul};
+
+    #[test]
+    fn lane_geometry_covers_32_bits() {
+        for cfg in LaneCfg::ALL {
+            let mut mask = 0u32;
+            for &(off, w) in cfg.lanes() {
+                let m = (super::super::max_val(w) as u32) << off;
+                assert_eq!(mask & m, 0, "{cfg:?}: overlapping lanes");
+                mask |= m;
+            }
+            assert_eq!(mask, u32::MAX, "{cfg:?}: lanes must tile 32 bits");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let ops_a = [0x12u64, 0x34, 0x56, 0x78];
+        let ops_b = [0x9Au64, 0xBC, 0xDE, 0xF0];
+        let w = SimdWord::pack(LaneCfg::Four8, &ops_a, &ops_b);
+        for i in 0..4 {
+            assert_eq!(w.lane(LaneCfg::Four8, i), (ops_a[i], ops_b[i]));
+        }
+    }
+
+    #[test]
+    fn simd_lanes_match_sisd() {
+        // Core SIMD property: each packed lane result equals the SISD
+        // result of the same operands — no cross-lane contamination.
+        let mut rng = crate::util::Rng::new(77);
+        for _ in 0..5_000 {
+            for cfg in LaneCfg::ALL {
+                let lanes = cfg.lanes();
+                let ops_a: Vec<u64> = lanes.iter().map(|&(_, w)| rng.operand(w)).collect();
+                let ops_b: Vec<u64> = lanes.iter().map(|&(_, w)| rng.operand(w)).collect();
+                let word = SimdWord::pack(cfg, &ops_a, &ops_b);
+                let mut modes = [LaneMode::Mul; 4];
+                for m in modes.iter_mut().take(lanes.len()) {
+                    if rng.below(2) == 1 {
+                        *m = LaneMode::Div;
+                    }
+                }
+                let op = SimdOp { cfg, modes };
+                let packed = execute(op, word, 8);
+                for i in 0..lanes.len() {
+                    let (a, b) = (ops_a[i], ops_b[i]);
+                    let wid = lanes[i].1;
+                    let want = match modes[i] {
+                        LaneMode::Mul => simdive_mul(wid, a, b),
+                        LaneMode::Div => simdive_div(wid, a, b),
+                    };
+                    assert_eq!(
+                        result_lane(op, packed, i),
+                        want,
+                        "{cfg:?} lane {i} ({a}, {b}) mode {:?}",
+                        modes[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_functionality_in_one_word() {
+        // The paper's flagship feature: mul and div lanes coexisting.
+        let word = SimdWord::pack(LaneCfg::Four8, &[43, 200, 7, 255], &[10, 13, 3, 2]);
+        let op = SimdOp {
+            cfg: LaneCfg::Four8,
+            modes: [LaneMode::Mul, LaneMode::Div, LaneMode::Mul, LaneMode::Div],
+        };
+        let r = execute(op, word, 8);
+        assert_eq!(result_lane(op, r, 0), simdive_mul(8, 43, 10));
+        assert_eq!(result_lane(op, r, 1), simdive_div(8, 200, 13));
+        assert_eq!(result_lane(op, r, 2), simdive_mul(8, 7, 3));
+        assert_eq!(result_lane(op, r, 3), simdive_div(8, 255, 2));
+    }
+
+    #[test]
+    fn one32_lane_passes_through() {
+        let word = SimdWord::new(123_456_789, 987);
+        let op = SimdOp::uniform(LaneCfg::One32, LaneMode::Mul);
+        assert_eq!(execute(op, word, 8), simdive_mul(32, 123_456_789, 987));
+        let op = SimdOp::uniform(LaneCfg::One32, LaneMode::Div);
+        assert_eq!(execute(op, word, 8), simdive_div(32, 123_456_789, 987));
+    }
+
+    #[test]
+    #[should_panic(expected = "too wide")]
+    fn pack_rejects_oversized_operand() {
+        SimdWord::pack(LaneCfg::Four8, &[256, 1, 1, 1], &[1, 1, 1, 1]);
+    }
+}

@@ -1,0 +1,278 @@
+//! The paper's §3.3 light-weight error-reduction scheme: 64 correction
+//! coefficients per operation, indexed by the 3 MSBs of each operand's
+//! aligned fraction (8 × 8 regions), each bit of the coefficient produced by
+//! one 6-LUT in hardware.
+//!
+//! Coefficients are the region-mean of the *analytically ideal* correction
+//! (DESIGN.md §4 derives the closed forms from the paper's Eq. 7–8):
+//!
+//! * mul, `x1 + x2 < 1`:  `c = x1·x2`
+//! * mul, `x1 + x2 ≥ 1`:  `c = (1 − x1)(1 − x2) / 2`
+//! * div, `x1 ≥ x2`:      `c = x2(x2 − x1)/(1 + x2)`   (≤ 0)
+//! * div, `x1 < x2`:      `c = (x1 − x2)(1 − x2)/(1 + x2)` (≤ 0)
+//!
+//! Tunable accuracy ("one more LUT = one more coefficient bit"): the stored
+//! high-resolution coefficients are quantized to `W ∈ 0..=8` bits, keeping
+//! bit positions `2^-3 .. 2^-(W+2)` with round-to-nearest at the kept LSB.
+//! `W = 0` degenerates to pure Mitchell; `W = 8` is the paper's 8-LUT,
+//! "99.2% accuracy" configuration.
+
+use std::sync::OnceLock;
+
+/// Fixed-point resolution (fractional bits) of the stored coefficients.
+pub const TABLE_RESOLUTION_BITS: u32 = 12;
+
+/// Maximum number of coefficient bits ("LUTs") supported.
+pub const W_MAX: u32 = 8;
+
+/// Samples per axis when averaging the ideal correction over a region.
+const GRID: usize = 32;
+
+/// Correction tables for one (mul, div) pair at a given tuning `w`.
+///
+/// Entries are signed fixed-point with [`TABLE_RESOLUTION_BITS`] fractional
+/// bits. Multiplier entries are ≥ 0, divider entries ≤ 0.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CorrectionTables {
+    pub w: u32,
+    pub mul: [[i32; 8]; 8],
+    pub div: [[i32; 8]; 8],
+}
+
+impl CorrectionTables {
+    /// Generate the tables for accuracy knob `w` (number of LUTs, 0..=8).
+    pub fn generate(w: u32) -> Self {
+        assert!(w <= W_MAX, "w must be 0..=8 (got {w})");
+        let full = full_resolution();
+        let mut mul = [[0i32; 8]; 8];
+        let mut div = [[0i32; 8]; 8];
+        for i in 0..8 {
+            for j in 0..8 {
+                mul[i][j] = quantize(full.0[i][j], w);
+                div[i][j] = quantize(full.1[i][j], w);
+            }
+        }
+        CorrectionTables { w, mul, div }
+    }
+
+    /// Scale a coefficient into `F = bits − 1` fraction-bit units for use
+    /// in the Mitchell decode. Truncation is toward zero (on the
+    /// *magnitude*), matching the hardware error-LUT bank, which produces
+    /// magnitude bits and drops any below the F-grid ulp.
+    #[inline]
+    pub fn scale_to_f(coeff: i32, bits: u32) -> i64 {
+        let f = bits - 1;
+        let mag = coeff.unsigned_abs() as i64;
+        let scaled = if f >= TABLE_RESOLUTION_BITS {
+            mag << (f - TABLE_RESOLUTION_BITS)
+        } else {
+            mag >> (TABLE_RESOLUTION_BITS - f)
+        };
+        if coeff < 0 { -scaled } else { scaled }
+    }
+
+    /// Region index of an aligned fraction: its 3 MSBs.
+    #[inline]
+    pub fn region(bits: u32, frac: u64) -> usize {
+        ((frac >> (bits - 1 - 3)) & 0x7) as usize
+    }
+}
+
+/// Ideal multiplier correction at a fraction point.
+fn ideal_mul(x1: f64, x2: f64) -> f64 {
+    if x1 + x2 < 1.0 {
+        x1 * x2
+    } else {
+        (1.0 - x1) * (1.0 - x2) / 2.0
+    }
+}
+
+/// Ideal divider correction at a fraction point.
+fn ideal_div(x1: f64, x2: f64) -> f64 {
+    if x1 >= x2 {
+        x2 * (x2 - x1) / (1.0 + x2)
+    } else {
+        (x1 - x2) * (1.0 - x2) / (1.0 + x2)
+    }
+}
+
+/// Region means at full resolution, as real numbers. Cached: generation is
+/// deterministic and cheap but called from many tests.
+fn full_resolution() -> &'static ([[f64; 8]; 8], [[f64; 8]; 8]) {
+    static CACHE: OnceLock<([[f64; 8]; 8], [[f64; 8]; 8])> = OnceLock::new();
+    CACHE.get_or_init(|| {
+        let mut mul = [[0.0f64; 8]; 8];
+        let mut div = [[0.0f64; 8]; 8];
+        for i in 0..8 {
+            for j in 0..8 {
+                let (mut sm, mut sd) = (0.0, 0.0);
+                for gi in 0..GRID {
+                    for gj in 0..GRID {
+                        // Sample at cell centres of the region.
+                        let x1 = (i as f64 + (gi as f64 + 0.5) / GRID as f64) / 8.0;
+                        let x2 = (j as f64 + (gj as f64 + 0.5) / GRID as f64) / 8.0;
+                        sm += ideal_mul(x1, x2);
+                        sd += ideal_div(x1, x2);
+                    }
+                }
+                let n = (GRID * GRID) as f64;
+                mul[i][j] = sm / n;
+                div[i][j] = sd / n;
+            }
+        }
+        (mul, div)
+    })
+}
+
+/// Quantize a real coefficient to `w` kept bits at positions
+/// `2^-3 .. 2^-(w+2)`, returning fixed-point at [`TABLE_RESOLUTION_BITS`].
+/// The magnitude is clamped to the representable range
+/// `[0, 2^-2 − 2^-(w+2)]` so every kept bit maps to exactly one hardware
+/// LUT output (the "one LUT per coefficient bit" property of §3.3).
+fn quantize(c: f64, w: u32) -> i32 {
+    if w == 0 {
+        return 0;
+    }
+    // Step of the least-significant kept bit.
+    let step = 2f64.powi(-((w + 2) as i32));
+    let max = 0.25 - step;
+    let q = ((c.abs() / step).round() * step).min(max) * c.signum();
+    (q * (1i64 << TABLE_RESOLUTION_BITS) as f64).round() as i32
+}
+
+/// Global default tables (w = 8, the paper's full 8-LUT configuration).
+pub fn default_tables() -> &'static CorrectionTables {
+    static CACHE: OnceLock<CorrectionTables> = OnceLock::new();
+    CACHE.get_or_init(|| CorrectionTables::generate(W_MAX))
+}
+
+/// Tables for every w, cached (used by the tunable-accuracy sweep).
+pub fn tables_for(w: u32) -> &'static CorrectionTables {
+    static CACHE: OnceLock<Vec<CorrectionTables>> = OnceLock::new();
+    let all = CACHE.get_or_init(|| (0..=W_MAX).map(CorrectionTables::generate).collect());
+    &all[w as usize]
+}
+
+/// Constant-coefficient tables modelling the MBM [28] + INZeD [29]
+/// pairing: every multiplier region gets MBM's 1/16 and every divider
+/// region INZeD's global constant. Running the SIMDive datapath with
+/// these tables *is* the "MBM-INZeD" SIMD baseline of Table 3 (their
+/// error-LUT bank folds to constants, which the netlist constant-folding
+/// removes — reproducing the area difference structurally).
+pub fn constant_tables() -> &'static CorrectionTables {
+    static CACHE: OnceLock<CorrectionTables> = OnceLock::new();
+    CACHE.get_or_init(|| {
+        let res = 1i64 << TABLE_RESOLUTION_BITS;
+        let mul_c = (res as f64 / 16.0).round() as i32;
+        let div_c = (crate::arith::saadat::inzed_coeff() * res as f64).round() as i32;
+        CorrectionTables { w: W_MAX, mul: [[mul_c; 8]; 8], div: [[div_c; 8]; 8] }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signs_match_theory() {
+        let t = CorrectionTables::generate(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!(t.mul[i][j] >= 0, "mul[{i}][{j}] = {}", t.mul[i][j]);
+                assert!(t.div[i][j] <= 0, "div[{i}][{j}] = {}", t.div[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn w0_is_pure_mitchell() {
+        let t = CorrectionTables::generate(0);
+        assert_eq!(t.mul, [[0; 8]; 8]);
+        assert_eq!(t.div, [[0; 8]; 8]);
+    }
+
+    #[test]
+    fn monotone_refinement() {
+        // Each extra LUT must not move a coefficient by more than the step
+        // it refines (|c_w − c_{w+1}| ≤ 2^-(w+3) in real units).
+        for w in 1..8u32 {
+            let a = CorrectionTables::generate(w);
+            let b = CorrectionTables::generate(w + 1);
+            let tol = (2f64.powi(-((w + 3) as i32)) * (1 << TABLE_RESOLUTION_BITS) as f64) as i32 + 1;
+            for i in 0..8 {
+                for j in 0..8 {
+                    assert!((a.mul[i][j] - b.mul[i][j]).abs() <= tol);
+                    assert!((a.div[i][j] - b.div[i][j]).abs() <= tol);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corner_regions_have_expected_magnitudes() {
+        let t = CorrectionTables::generate(8);
+        // Region (0,0): x1,x2 ∈ [0, 1/8) → ideal mul mean ≈ (1/16)^2.
+        let c00 = t.mul[0][0] as f64 / (1 << TABLE_RESOLUTION_BITS) as f64;
+        assert!((c00 - 1.0 / 256.0).abs() < 0.004, "c00 = {c00}");
+        // Region (7,7): x1,x2 ∈ [7/8, 1) → case x1+x2 ≥ 1, mean ≈ (1/16)^2 / 2.
+        let c77 = t.mul[7][7] as f64 / (1 << TABLE_RESOLUTION_BITS) as f64;
+        assert!(c77 < 0.01, "c77 = {c77}");
+        // Region (4,4) has x1+x2 ≥ 1 everywhere → c = mean (1−x1)(1−x2)/2
+        // ≈ 0.4375²/2 ≈ 0.0957.
+        let c44 = t.mul[4][4] as f64 / (1 << TABLE_RESOLUTION_BITS) as f64;
+        assert!((c44 - 0.0957).abs() < 0.01, "c44 = {c44}");
+        // The largest mul corrections sit just below the x1+x2 = 1 diagonal
+        // (e.g. region (3,3): all case-1, mean x1x2 ≈ 0.4375² ≈ 0.1914).
+        let c33 = t.mul[3][3] as f64 / (1 << TABLE_RESOLUTION_BITS) as f64;
+        assert!(c33 > 0.15, "c33 = {c33}");
+    }
+
+    #[test]
+    fn quantized_values_fit_lut_bit_positions() {
+        // Every coefficient must be representable as w bits at positions
+        // 2^-3 .. 2^-(w+2): |c12| < 1024 (bit 2^-2 clear) and a multiple of
+        // the kept LSB.
+        for w in 1..=8u32 {
+            let t = CorrectionTables::generate(w);
+            let lsb = 1i32 << (TABLE_RESOLUTION_BITS - 2 - w);
+            for i in 0..8 {
+                for j in 0..8 {
+                    for v in [t.mul[i][j], t.div[i][j]] {
+                        assert!(v.abs() < 1024, "w={w} [{i}][{j}]: {v} needs bit 2^-2");
+                        assert_eq!(v % lsb, 0, "w={w} [{i}][{j}]: {v} not multiple of {lsb}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_indexing() {
+        // 8-bit: F = 7, top 3 bits of the 7-bit fraction.
+        assert_eq!(CorrectionTables::region(8, 0b0000000), 0);
+        assert_eq!(CorrectionTables::region(8, 0b1111111), 7);
+        assert_eq!(CorrectionTables::region(8, 0b1010000), 5);
+        // 32-bit: F = 31.
+        assert_eq!(CorrectionTables::region(32, 0x7FFF_FFFF), 7);
+        assert_eq!(CorrectionTables::region(32, 0x1000_0000), 1);
+    }
+
+    #[test]
+    fn scale_to_f_truncates_magnitude() {
+        assert!(CorrectionTables::scale_to_f(-100, 32) < 0);
+        assert!(CorrectionTables::scale_to_f(100, 32) > 0);
+        // F = 7 < 12: magnitude shift right by 5, sign restored.
+        assert_eq!(CorrectionTables::scale_to_f(-32, 8), -1);
+        assert_eq!(CorrectionTables::scale_to_f(32, 8), 1);
+        // Sub-ulp magnitudes truncate to zero for either sign (the
+        // hardware bank drops bits below the F grid).
+        assert_eq!(CorrectionTables::scale_to_f(-16, 8), 0);
+        assert_eq!(CorrectionTables::scale_to_f(16, 8), 0);
+    }
+
+    #[test]
+    fn cached_generation_consistent() {
+        assert_eq!(tables_for(8), default_tables());
+        assert_eq!(tables_for(3), &CorrectionTables::generate(3));
+    }
+}

@@ -1,0 +1,153 @@
+//! Truncated multipliers — the "Trunc" baselines of Table 2 and the
+//! `31x7` SIMD baseline of Table 3.
+//!
+//! A 16×16 multiplier composed of `p×q`-bit elementary instances cannot
+//! carry all operand bits: building it from four 7×7 instances means each
+//! 8-bit operand half is truncated to its top 7 bits (the LSB of every
+//! 8-bit segment is dropped); from two 15×7 instances, operand A keeps 15
+//! of 16 bits while B's segments are truncated to 7. Truncation is static
+//! (no leading-one alignment), which is exactly why the peak relative error
+//! is 100% — tiny operands truncate to zero (Table 2 PRE column).
+
+/// Mask that keeps the top 7 bits of every 8-bit operand segment.
+#[inline]
+fn seg7_mask(bits: u32) -> u64 {
+    debug_assert!(bits % 8 == 0);
+    let mut m = 0u64;
+    for s in 0..(bits / 8) {
+        m |= 0xFEu64 << (8 * s);
+    }
+    m
+}
+
+/// Truncated multiply from `p×7`-style instances: `a` keeps `pa` ∈
+/// {bits−1, seg7} pattern encoded by masks below.
+#[inline]
+pub fn masked_mul(a: u64, am: u64, b: u64, bm: u64) -> u64 {
+    (a & am).wrapping_mul(b & bm)
+}
+
+/// Table 2 baseline: 16×16 built from four 7×7 instances — both operands
+/// lose the LSB of each 8-bit segment.
+#[inline]
+pub fn trunc_four_7x7(a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, 16) && super::fits(b, 16));
+    masked_mul(a, seg7_mask(16), b, seg7_mask(16))
+}
+
+/// Table 2 baseline: 16×16 built from two 15×7 instances — A keeps its top
+/// 15 bits, B loses the LSB of each 8-bit segment.
+#[inline]
+pub fn trunc_two_15x7(a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, 16) && super::fits(b, 16));
+    masked_mul(a, 0xFFFE, b, seg7_mask(16))
+}
+
+/// Table 3 SIMD baseline: 32×32 using 31×7 instances (same pattern at 32
+/// bits: A keeps 31 bits, B's four segments keep 7 each).
+#[inline]
+pub fn trunc_31x7(a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, 32) && super::fits(b, 32));
+    masked_mul(a, 0xFFFF_FFFE, b, seg7_mask(32))
+}
+
+/// Generic form used by the design registry: `seven_a`/`seven_b` selects
+/// segment-truncation for that operand, otherwise only the LSB is dropped.
+#[inline]
+pub fn trunc_mul(bits: u32, seven_a: bool, seven_b: bool, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    let am = if seven_a { seg7_mask(bits) } else { super::max_val(bits) & !1 };
+    let bm = if seven_b { seg7_mask(bits) } else { super::max_val(bits) & !1 };
+    masked_mul(a, am, b, bm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact;
+
+    #[test]
+    fn masks_drop_expected_bits() {
+        assert_eq!(seg7_mask(16), 0xFEFE);
+        assert_eq!(seg7_mask(32), 0xFEFE_FEFE);
+        // 0x0101 has only segment LSBs set → truncates to zero entirely.
+        assert_eq!(trunc_four_7x7(0x0101, 0x0101), 0);
+        // Bits above the segment LSBs survive.
+        assert_eq!(trunc_four_7x7(0x0202, 0x0202), 0x0202 * 0x0202);
+    }
+
+    #[test]
+    fn truncation_never_overestimates() {
+        crate::util::prop::check_operand_pairs(8, 50_000, 16, |a, b| {
+            let e = exact::mul(16, a, b);
+            for p in [trunc_four_7x7(a, b), trunc_two_15x7(a, b)] {
+                if p > e {
+                    return Err(format!("{a}*{b}: {p} > {e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn peak_error_is_100_percent() {
+        // Static truncation zeroes tiny operands → 100% relative error.
+        assert_eq!(trunc_four_7x7(1, 1), 0);
+        assert_eq!(trunc_two_15x7(3, 1), 0); // b=1 segment-truncates to 0
+        assert_eq!(trunc_31x7(1, 1), 0);
+    }
+
+    #[test]
+    fn error_ordering_matches_table2() {
+        // Paper: ARE(four 7x7) = 2.35% vs ARE(two 15x7) = 1.19% — the
+        // one-sided truncation must be roughly 2x more accurate.
+        let mut rng = crate::util::Rng::new(5);
+        let (mut e77, mut e157, mut n) = (0.0, 0.0, 0u64);
+        for _ in 0..300_000 {
+            let a = rng.operand(16);
+            let b = rng.operand(16);
+            let ex = exact::mul(16, a, b) as f64;
+            e77 += (ex - trunc_four_7x7(a, b) as f64).abs() / ex;
+            e157 += (ex - trunc_two_15x7(a, b) as f64).abs() / ex;
+            n += 1;
+        }
+        let (are77, are157) = (e77 / n as f64 * 100.0, e157 / n as f64 * 100.0);
+        assert!(are157 < are77, "15x7 {are157}% must beat 7x7 {are77}%");
+        assert!(are77 > 2.0 * are157 * 0.5 && are77 < 4.0 * are157, "ratio off: {are77} vs {are157}");
+        assert!(are77 < 6.0, "7x7 ARE {are77}%");
+        assert!(are157 < 3.0, "15x7 ARE {are157}%");
+    }
+
+    #[test]
+    fn full_lsb_only_is_nearly_exact() {
+        // Dropping only the LSBs (no seven-segment truncation) is the most
+        // accurate configuration of the family.
+        let mut rng = crate::util::Rng::new(6);
+        let (mut e, mut n) = (0.0, 0u64);
+        for _ in 0..100_000 {
+            let a = rng.operand(16);
+            let b = rng.operand(16);
+            let ex = exact::mul(16, a, b) as f64;
+            e += (ex - trunc_mul(16, false, false, a, b) as f64).abs() / ex;
+            n += 1;
+        }
+        let are = e / n as f64;
+        assert!(are < 0.005, "lsb-only ARE {are}");
+    }
+
+    #[test]
+    fn product_fits_2n() {
+        crate::util::prop::check_operand_pairs(9, 20_000, 16, |a, b| {
+            let p = trunc_four_7x7(a, b);
+            if p < (1u64 << 32) { Ok(()) } else { Err(format!("{a}*{b} -> {p}")) }
+        });
+    }
+
+    #[test]
+    fn simd_31x7_consistent_with_16bit_pattern() {
+        // The 32-bit variant applies the same per-segment rule.
+        let a = 0x0001_0101u64;
+        let b = 0x0101_0101u64;
+        assert_eq!(trunc_31x7(a, b), (a & 0xFFFF_FFFE) * (b & 0xFEFE_FEFE));
+    }
+}

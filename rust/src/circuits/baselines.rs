@@ -1,0 +1,688 @@
+//! Gate-level baseline designs of Tables 2–3: the accurate soft IPs
+//! (array multiplier, restoring divider), the truncated multipliers, CA,
+//! MBM and INZeD (Mitchell + constant correction), and AAXD.
+
+use super::components::{align_fraction, barrel_left, barrel_right, lod};
+use super::mitchell::{div_backend, mul_backend};
+use crate::fabric::netlist::{Net, Netlist, NET0, NET1};
+
+// ---------------------------------------------------------------- helpers
+
+/// First-level partial-product pair adder: `(a & bj) + ((a & bk) << 1)`.
+/// One fractured LUT per bit (O6 = the propagate XOR of the two product
+/// bits, O5 = the DI generate), the canonical Vivado mapping that absorbs
+/// PP generation into the adder LUTs. `kill_low` kills the carries
+/// generated below bit 2 (the CA approximation); 0 for exact.
+fn pp_pair(nl: &mut Netlist, a: &[Net], bj: Net, bk: Net, kill_low: usize) -> Vec<Net> {
+    let n = a.len();
+    // Bit i: X_i = a_i & bj (i < n), Y_i = a_{i-1} & bk (1 <= i <= n).
+    let mut s = Vec::with_capacity(n + 1);
+    let mut di = Vec::with_capacity(n + 1);
+    for i in 0..=n {
+        match (i < n, i > 0) {
+            (true, true) => {
+                let ins = [a[i], bj, a[i - 1], bk];
+                let (d, x) = nl.lut52(
+                    &ins,
+                    |m| m & 3 == 3,
+                    |m| (m & 3 == 3) ^ ((m >> 2) & 3 == 3),
+                );
+                s.push(x);
+                di.push(d);
+            }
+            (true, false) => {
+                let x = nl.and2(a[0], bj);
+                s.push(x);
+                di.push(x);
+            }
+            (false, true) => {
+                let y = nl.and2(a[n - 1], bk);
+                s.push(y);
+                di.push(NET0);
+            }
+            (false, false) => unreachable!(),
+        }
+    }
+    if kill_low == 0 {
+        let (sum, co) = nl.carry_chain(&s, &di, NET0);
+        let mut out = sum;
+        out.push(co);
+        out
+    } else {
+        // Low bits: plain sums, no carry chain (generated carries killed).
+        let mut out: Vec<Net> = s[..kill_low].to_vec();
+        let (sum, co) = nl.carry_chain(&s[kill_low..], &di[kill_low..], NET0);
+        out.extend(sum);
+        out.push(co);
+        out
+    }
+}
+
+/// Add two buses at bit offsets: result covers `[min_off, …)`.
+fn add_aligned(
+    nl: &mut Netlist,
+    x: (&[Net], usize),
+    y: (&[Net], usize),
+) -> (Vec<Net>, usize) {
+    let (xb, xo) = x;
+    let (yb, yo) = y;
+    let (lo, hi) = if xo <= yo { (x, y) } else { (y, x) };
+    let shift = hi.1 - lo.1;
+    let mut out: Vec<Net> = lo.0[..shift.min(lo.0.len())].to_vec();
+    let lo_hi = if lo.0.len() > shift { &lo.0[shift..] } else { &[][..] };
+    let (sum, co) = nl.adder(lo_hi, hi.0, NET0);
+    out.extend(sum);
+    out.push(co);
+    let _ = (xb, yb);
+    (out, lo.1)
+}
+
+/// Reduce a list of (bus, offset) partial sums with a balanced adder tree.
+fn adder_tree(nl: &mut Netlist, mut items: Vec<(Vec<Net>, usize)>) -> (Vec<Net>, usize) {
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let (Some(a), b) = (it.next(), it.next()) {
+            match b {
+                Some(b) => {
+                    let (bus, off) = add_aligned(nl, (&a.0, a.1), (&b.0, b.1));
+                    next.push((bus, off));
+                }
+                None => next.push(a),
+            }
+        }
+        items = next;
+    }
+    items.pop().unwrap()
+}
+
+/// Core array-multiplier structure over (optionally masked) operands.
+/// `kill_low` > 0 selects the CA approximation at the first level.
+fn array_mul_core(bits: u32, am: u64, bm: u64, kill_low: usize) -> Netlist {
+    let mut nl = Netlist::new();
+    let a_in = nl.input("a", bits);
+    let b_in = nl.input("b", bits);
+    // Masked operand views: dropped bits become constant 0 (their LUTs
+    // disappear — truncation's area saving).
+    let a: Vec<Net> = a_in
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| if (am >> i) & 1 == 1 { n } else { NET0 })
+        .collect();
+    let b: Vec<Net> = b_in
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| if (bm >> i) & 1 == 1 { n } else { NET0 })
+        .collect();
+    // Trim constant-zero tails of `a` (masked-away high bits).
+    let a_eff: Vec<Net> = {
+        let hi = (0..bits as usize).rev().find(|&i| a[i] != NET0).map_or(0, |i| i + 1);
+        a[..hi].to_vec()
+    };
+    let mut partials: Vec<(Vec<Net>, usize)> = Vec::new();
+    for j in 0..(bits as usize / 2) {
+        let bj = b[2 * j];
+        let bk = b[2 * j + 1];
+        if bj == NET0 && bk == NET0 {
+            continue;
+        }
+        let bus = pp_pair(&mut nl, &a_eff, bj, bk, kill_low);
+        partials.push((bus, 2 * j));
+    }
+    let out = if partials.is_empty() {
+        (vec![NET0; 2 * bits as usize], 0)
+    } else {
+        adder_tree(&mut nl, partials)
+    };
+    // Assemble the 2N-bit product bus.
+    let mut p = vec![NET0; 2 * bits as usize];
+    for (i, &n) in out.0.iter().enumerate() {
+        let pos = out.1 + i;
+        if pos < p.len() {
+            p[pos] = n;
+        }
+    }
+    nl.output("p", &p);
+    nl
+}
+
+/// Accurate array multiplier (Xilinx LogiCORE multiplier stand-in).
+pub fn array_mul(bits: u32) -> Netlist {
+    array_mul_core(bits, u64::MAX, u64::MAX, 0)
+}
+
+/// Truncated multiplier (Table 2/3 "Trunc" rows): per-8-bit-segment
+/// 7-bit truncation per `crate::arith::trunc`.
+pub fn trunc_mul(bits: u32, seven_a: bool, seven_b: bool) -> Netlist {
+    let seg7 = {
+        let mut m = 0u64;
+        for s in 0..(bits / 8) {
+            m |= 0xFEu64 << (8 * s);
+        }
+        m
+    };
+    let am = if seven_a { seg7 } else { crate::arith::max_val(bits) & !1 };
+    let bm = if seven_b { seg7 } else { crate::arith::max_val(bits) & !1 };
+    array_mul_core(bits, am, bm, 0)
+}
+
+/// CA approximate multiplier [30]: truncated-carry first level.
+pub fn ca_mul(bits: u32) -> Netlist {
+    array_mul_core(bits, u64::MAX, u64::MAX, 2)
+}
+
+/// Shared restoring-division array: `a` (dividend nets, LSB first) divided
+/// by `b` (divisor nets), quotient has `a.len()` bits. One fractured LUT
+/// per remainder bit per stage — the restore mux of stage *i* is fused
+/// into stage *i+1*'s subtract-propagate LUT (O5 = muxed remainder bit for
+/// the chain DI, O6 = that bit ⊕ !divisor), the canonical Vivado mapping.
+pub(crate) fn restoring_core(nl: &mut Netlist, a: &[Net], b: &[Net]) -> Vec<Net> {
+    let n = a.len();
+    let dr = b.len(); // remainder needs dr+1 bits
+    // State carried between stages: for each remainder bit, the *pair*
+    // (r_keep, r_sub) plus the stage's no-borrow select — the mux is
+    // evaluated lazily inside the next stage's LUT.
+    let mut pend: Option<(Vec<Net>, Vec<Net>, Net)> = None; // (rp, sub, nb)
+    let mut q = vec![NET0; n];
+    for i in (0..n).rev() {
+        // Build this stage's R' bits as lazy muxes: R'_0 = a_i,
+        // R'_j = mux(nb, rp_{j-1}, sub_{j-1}).
+        let w = dr + 1;
+        let mut s_nets = Vec::with_capacity(w);
+        let mut d_nets = Vec::with_capacity(w);
+        for j in 0..w {
+            let bj = if j < dr { b[j] } else { NET0 };
+            match (&pend, j) {
+                (_, 0) => {
+                    // propagate = a_i ⊕ !b_0 ; DI = a_i.
+                    let s = nl.lut(&[a[i], bj], |m| (m & 1) ^ (((m >> 1) & 1) ^ 1) == 1);
+                    s_nets.push(s);
+                    d_nets.push(a[i]);
+                }
+                (None, _) => {
+                    // First stage: upper R' bits are 0 → propagate = !b_j.
+                    let s = nl.lut(&[bj], |m| m & 1 == 0);
+                    s_nets.push(s);
+                    d_nets.push(NET0);
+                }
+                (Some((rp, sub, nb)), _) => {
+                    let rj = rp[j - 1];
+                    let sj = sub[j - 1];
+                    // O5 = nb ? sub : rp ; O6 = O5 ⊕ !b_j.
+                    let ins = [sj, rj, *nb, bj];
+                    let (d, s) = nl.lut52(
+                        &ins,
+                        |m| if (m >> 2) & 1 == 1 { m & 1 == 1 } else { (m >> 1) & 1 == 1 },
+                        |m| {
+                            let muxed = if (m >> 2) & 1 == 1 { m & 1 } else { (m >> 1) & 1 };
+                            muxed ^ ((m >> 3) & 1) ^ 1 == 1
+                        },
+                    );
+                    s_nets.push(s);
+                    d_nets.push(d);
+                }
+            }
+        }
+        let (sub, no_borrow) = nl.carry_chain(&s_nets, &d_nets, NET1);
+        q[i] = no_borrow;
+        // The DI nets are exactly this stage's R' bits (DI_j = R'_j), so
+        // the next stage's fused muxes take (R', sub, nb) directly.
+        pend = Some((d_nets, sub, no_borrow));
+    }
+    q
+}
+
+/// Restoring array divider (Xilinx LogiCORE divider stand-in):
+/// `bits`-wide dividend, `divisor_bits`-wide divisor, `bits`-wide quotient.
+pub fn restoring_div(bits: u32, divisor_bits: u32) -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", divisor_bits);
+    let q = restoring_core(&mut nl, &a, &b);
+    nl.output("q", &q);
+    nl
+}
+
+/// MBM multiplier [28]: Mitchell + the constant 1/16 compensation, riding
+/// in a ternary-adder pass like SIMDive's correction.
+pub fn mbm_mul(bits: u32) -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", bits);
+    let (k1, nz1) = lod(&mut nl, &a);
+    let (k2, nz2) = lod(&mut nl, &b);
+    let f1 = align_fraction(&mut nl, &a, &k1);
+    let f2 = align_fraction(&mut nl, &b, &k2);
+    let f = f1.len();
+    // Constant 1/16 in F-bit units = 2^(F-4).
+    let cbus = nl.constant(f as u32, 1u64 << (f - 4));
+    let mut t = nl.ternary_adder(&f1, &f2, &cbus);
+    t.truncate(f + 2);
+    while t.len() < f + 2 {
+        t.push(NET0);
+    }
+    let zero = nl.lut(&[nz1, nz2], |m| m != 3);
+    let p = mul_backend(&mut nl, bits, &k1, &k2, &t, zero);
+    nl.output("p", &p);
+    nl
+}
+
+/// INZeD divider [29]: Mitchell divider + constant negative compensation.
+pub fn inzed_div(bits: u32, divisor_bits: u32) -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", divisor_bits);
+    let (k1, nz1) = lod(&mut nl, &a);
+    let (k2, nz2) = lod(&mut nl, &b);
+    let f1 = align_fraction(&mut nl, &a, &k1);
+    let f2full = align_fraction(&mut nl, &b, &k2);
+    let f = (bits - 1) as usize;
+    let fd = (divisor_bits - 1) as usize;
+    let mut f2 = vec![NET0; f];
+    f2[f - fd..f].copy_from_slice(&f2full[..fd]);
+
+    // r = f1 - f2 + c  (c < 0): r = f1 + ~f2 + const where
+    // const = (1 + c) mod 2^(F+2) — both two's-complement +1 and the
+    // negative constant folded together.
+    let width = f + 2;
+    let c = crate::arith::saadat::inzed_coeff_f_units(bits);
+    let konst = ((1i64 + c) as i128).rem_euclid(1i128 << width) as u64;
+    let f1x: Vec<Net> = (0..width).map(|i| f1.get(i).copied().unwrap_or(NET0)).collect();
+    let nf2: Vec<Net> = (0..width)
+        .map(|i| f2.get(i).map(|&x| nl.not(x)).unwrap_or(NET1))
+        .collect();
+    let kbus = nl.constant(width as u32, konst);
+    let mut r = nl.ternary_adder(&f1x, &nf2, &kbus);
+    r.truncate(width);
+
+    let zero_a = nl.not(nz1);
+    let zero_b = nl.not(nz2);
+    let q = div_backend(&mut nl, bits, divisor_bits, &k1, &k2, &r, zero_a, zero_b);
+    nl.output("q", &q);
+    nl
+}
+
+/// AAXD divider [13]: dynamic truncation around the leading ones — keep
+/// `m` dividend / `n` divisor bits, divide exactly with a small restoring
+/// array, shift the quotient back.
+pub fn aaxd_div(bits: u32, divisor_bits: u32, m: u32, n: u32) -> Netlist {
+    let kw = (31 - bits.leading_zeros()) as usize; // k bits for dividend
+    let kwb = (31 - divisor_bits.leading_zeros()) as usize;
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", divisor_bits);
+    let (ka, nza) = lod(&mut nl, &a);
+    let (kb, nzb) = lod(&mut nl, &b);
+
+    // sa = max(0, ka + 1 - m): subtract in kw+1-bit two's complement, then
+    // AND with !sign to clamp at 0.
+    let clamp_shift = |nl: &mut Netlist, k: &[Net], keep: u32, w: usize| -> Vec<Net> {
+        // s = k + (1 - keep) ; sign bit = borrow.
+        let konst = ((1i64 - keep as i64) as i128).rem_euclid(1i128 << (w + 1)) as u64;
+        let kb = nl.constant(w as u32 + 1, konst);
+        let kx: Vec<Net> = (0..=w).map(|i| k.get(i).copied().unwrap_or(NET0)).collect();
+        let (s, _) = nl.adder(&kx, &kb, NET0);
+        let sign = s[w];
+        let nsign = nl.not(sign);
+        (0..w).map(|i| nl.and2(s[i], nsign)).collect()
+    };
+    let sa = clamp_shift(&mut nl, &ka, m, kw);
+    let sb = clamp_shift(&mut nl, &kb, n, kwb);
+
+    // at = a >> sa (m significant bits), bt = b >> sb (n significant bits).
+    let at = barrel_right(&mut nl, &a, &sa, m as usize);
+    let bt = barrel_right(&mut nl, &b, &sb, n as usize);
+
+    // Small exact restoring divider at / bt (m-bit quotient).
+    let qsmall = restoring_core(&mut nl, &at, &bt);
+
+    // Quotient scale-back: q = qsmall << (sa - sb). Bias by (divisor_bits -
+    // n) so the amount is non-negative: d = sa - sb + bias; q = (qsmall
+    // << d) >> bias.
+    let bias = (divisor_bits - n) as usize;
+    let dw = kw + 2;
+    let sax: Vec<Net> = (0..dw).map(|i| sa.get(i).copied().unwrap_or(NET0)).collect();
+    let nsb: Vec<Net> = (0..dw)
+        .map(|i| sb.get(i).map(|&x| nl.not(x)).unwrap_or(NET1))
+        .collect();
+    let konst = ((bias as i64 + 1) as u64) & ((1u64 << dw) - 1);
+    let kbus = nl.constant(dw as u32, konst);
+    let mut d = nl.ternary_adder(&sax, &nsb, &kbus);
+    d.truncate(dw);
+    let shifted = barrel_left(&mut nl, &qsmall, &d, bias + bits as usize);
+    let q = &shifted[bias..bias + bits as usize];
+
+    // Gating: a == 0 → 0, b == 0 → all ones.
+    let zero_a = nl.not(nza);
+    let zero_b = nl.not(nzb);
+    let out: Vec<Net> = q
+        .iter()
+        .map(|&qb| {
+            nl.lut(&[qb, zero_a, zero_b], |m| {
+                (m >> 2) & 1 == 1 || ((m >> 1) & 1 == 0 && m & 1 == 1)
+            })
+        })
+        .collect();
+    nl.output("q", &out);
+    nl
+}
+
+/// Accurate variable-precision SIMD multiplier (Perri et al. [24, 25],
+/// the Table-3 "Accurate Multiplier" baseline): a 32-bit partial-product
+/// array whose cross-lane products are gated by the one-hot `precision`
+/// control. Lane products occupy disjoint 2N-bit fields of the 64-bit
+/// output, so the ordinary adder tree composes them without cross-lane
+/// carries.
+pub fn simd_accurate_mul() -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", 32);
+    let b = nl.input("b", 32);
+    let precision = nl.input("precision", 4);
+    // same-lane gate per (a-byte-block, b-byte-block): OR of precision
+    // configs in which blocks i and j belong to one lane.
+    let lane_of = |cfg: usize, blk: usize| -> usize {
+        match cfg {
+            0 => 0,
+            1 => blk / 2,
+            2 => {
+                if blk >= 2 { 2 } else { blk }
+            }
+            _ => blk,
+        }
+    };
+    let mut gate = [[NET0; 4]; 4];
+    for bi in 0..4 {
+        for bj in 0..4 {
+            let cfgs: Vec<Net> = (0..4)
+                .filter(|&c| lane_of(c, bi) == lane_of(c, bj))
+                .map(|c| precision[c])
+                .collect();
+            gate[bi][bj] = nl.or_tree(&cfgs);
+        }
+    }
+    let mut partials: Vec<(Vec<Net>, usize)> = Vec::new();
+    for j in 0..16 {
+        let (bjn, bkn) = (b[2 * j], b[2 * j + 1]);
+        let jblk = (2 * j) / 8;
+        // Gated pp-pair: one Lut52 per bit with the lane gate folded in.
+        let mut s = Vec::with_capacity(33);
+        let mut di = Vec::with_capacity(33);
+        for i in 0..=32usize {
+            let x_ins = if i < 32 { Some((a[i], gate[i / 8][jblk])) } else { None };
+            let y_ins = if i > 0 { Some((a[i - 1], gate[(i - 1) / 8][jblk])) } else { None };
+            match (x_ins, y_ins) {
+                (Some((ai, gi)), Some((ap, gp))) => {
+                    let ins = [ai, bjn, gi, ap, bkn, gp];
+                    let (d, sx) = nl.lut52(
+                        &ins,
+                        |m| m & 7 == 7,
+                        |m| (m & 7 == 7) ^ ((m >> 3) & 7 == 7),
+                    );
+                    s.push(sx);
+                    di.push(d);
+                }
+                (Some((ai, gi)), None) => {
+                    let x = nl.lut(&[ai, bjn, gi], |m| m == 7);
+                    s.push(x);
+                    di.push(x);
+                }
+                (None, Some((ap, gp))) => {
+                    let y = nl.lut(&[ap, bkn, gp], |m| m == 7);
+                    s.push(y);
+                    di.push(NET0);
+                }
+                (None, None) => unreachable!(),
+            }
+        }
+        let (sum, co) = nl.carry_chain(&s, &di, NET0);
+        let mut bus = sum;
+        bus.push(co);
+        partials.push((bus, 2 * j));
+    }
+    // Output field placement: row-pair j of lane starting at byte L
+    // contributes at output offset 2·(8L) + (2j − 8L) = 2j + 8L… which
+    // depends on the lane config. In all configs a product bit of weight
+    // 2^(i+2j) within lane [off..) lands at output bit 2·off + (i+2j−2·off)
+    // = i + 2j + (off)… wait — lane result field starts at 2·off and the
+    // in-lane product has weight i′+j′ with i′ = i−off, j′ = 2j−off:
+    // output bit = 2·off + (i−off) + (2j−off) = i + 2j. Offsets therefore
+    // coincide across configs and the plain tree is config-independent.
+    let out = adder_tree(&mut nl, partials);
+    let mut p = vec![NET0; 64];
+    for (i, &n) in out.0.iter().enumerate() {
+        let pos = out.1 + i;
+        if pos < 64 {
+            p[pos] = n;
+        }
+    }
+    nl.output("p", &p);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith;
+    use crate::fabric::{area, timing, Calibration, Simulator};
+
+    #[test]
+    fn array_mul_8bit_exhaustive() {
+        let nl = array_mul(8);
+        let sim = Simulator::new(&nl);
+        let mut avals = Vec::new();
+        let mut bvals = Vec::new();
+        for a in (0..256u64).step_by(3) {
+            for b in 0..256u64 {
+                avals.push(a);
+                bvals.push(b);
+            }
+        }
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            assert_eq!(outs[0].1[i], avals[i] * bvals[i], "{}x{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn array_mul_16bit_sampled() {
+        let nl = array_mul(16);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(41);
+        let avals: Vec<u64> = (0..20_000).map(|_| rng.below(65536)).collect();
+        let bvals: Vec<u64> = (0..20_000).map(|_| rng.below(65536)).collect();
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            assert_eq!(outs[0].1[i], avals[i] * bvals[i]);
+        }
+    }
+
+    #[test]
+    fn array_mul_16_area_matches_vivado_ip() {
+        // Paper Table 2: accurate multiplier IP = 287 LUTs. Our structural
+        // mapping must land in the same neighbourhood (±20%).
+        let r = area::report(&array_mul(16));
+        assert!(r.luts >= 230 && r.luts <= 345, "array mul LUTs {}", r.luts);
+    }
+
+    #[test]
+    fn restoring_div_16_8_exhaustive_slice() {
+        let nl = restoring_div(16, 8);
+        let sim = Simulator::new(&nl);
+        let mut avals = Vec::new();
+        let mut bvals = Vec::new();
+        let mut rng = crate::util::Rng::new(42);
+        for _ in 0..30_000 {
+            avals.push(rng.below(65536));
+            bvals.push(rng.range(1, 255));
+        }
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            assert_eq!(
+                outs[0].1[i],
+                avals[i] / bvals[i],
+                "{}/{}",
+                avals[i],
+                bvals[i]
+            );
+        }
+    }
+
+    #[test]
+    fn restoring_div_area_and_delay_match_ip() {
+        // Paper Table 2: divider IP 168 LUTs, 21.4 ns — the long iterative
+        // carry-chain cascade is the defining feature.
+        let nl = restoring_div(16, 8);
+        let r = area::report(&nl);
+        assert!(r.luts >= 120 && r.luts <= 220, "restoring div LUTs {}", r.luts);
+        let t = timing::analyze(&nl, &Calibration::default());
+        let tm = timing::analyze(&array_mul(16), &Calibration::default());
+        assert!(
+            t.critical_ns > 2.5 * tm.critical_ns,
+            "divider ({} ns) must be several times slower than multiplier ({} ns)",
+            t.critical_ns,
+            tm.critical_ns
+        );
+    }
+
+    #[test]
+    fn trunc_mul_matches_behavioral() {
+        for (sa, sb) in [(true, true), (false, true)] {
+            let nl = trunc_mul(16, sa, sb);
+            let sim = Simulator::new(&nl);
+            let mut rng = crate::util::Rng::new(43);
+            let avals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+            let bvals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+            let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+            for i in 0..avals.len() {
+                let want = arith::trunc::trunc_mul(16, sa, sb, avals[i], bvals[i]);
+                assert_eq!(outs[0].1[i], want, "({sa},{sb}) {}x{}", avals[i], bvals[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn trunc_area_below_accurate() {
+        let acc = area::report(&array_mul(16)).luts;
+        let t77 = area::report(&trunc_mul(16, true, true)).luts;
+        let t157 = area::report(&trunc_mul(16, false, true)).luts;
+        assert!(t77 < acc, "7x7 {t77} !< accurate {acc}");
+        assert!(t157 < acc, "15x7 {t157} !< accurate {acc}");
+    }
+
+    #[test]
+    fn ca_mul_matches_behavioral() {
+        let nl = ca_mul(16);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(44);
+        let avals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+        let bvals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = arith::ca::ca_mul(16, avals[i], bvals[i]);
+            assert_eq!(outs[0].1[i], want, "{}x{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn ca_mul_8bit_exhaustive() {
+        let nl = ca_mul(8);
+        let sim = Simulator::new(&nl);
+        let mut avals = Vec::new();
+        let mut bvals = Vec::new();
+        for a in (0..256u64).step_by(5) {
+            for b in 0..256u64 {
+                avals.push(a);
+                bvals.push(b);
+            }
+        }
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            assert_eq!(outs[0].1[i], arith::ca::ca_mul(8, avals[i], bvals[i]));
+        }
+    }
+
+    #[test]
+    fn mbm_mul_matches_behavioral() {
+        let nl = mbm_mul(16);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(45);
+        let avals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+        let bvals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = arith::saadat::mbm_mul(16, avals[i], bvals[i]);
+            assert_eq!(outs[0].1[i], want, "{}x{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn inzed_div_matches_behavioral() {
+        let nl = inzed_div(16, 8);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(46);
+        let avals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+        let bvals: Vec<u64> = (0..10_000).map(|_| rng.below(256)).collect();
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = arith::saadat::inzed_div(16, avals[i], bvals[i]) & 0xFFFF;
+            assert_eq!(outs[0].1[i], want, "{}/{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn aaxd_div_matches_behavioral() {
+        for (m, n) in [(8u32, 4u32), (12, 6)] {
+            let nl = aaxd_div(16, 8, m, n);
+            let sim = Simulator::new(&nl);
+            let mut rng = crate::util::Rng::new(47 + m as u64);
+            let avals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+            let bvals: Vec<u64> = (0..10_000).map(|_| rng.below(256)).collect();
+            let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+            for i in 0..avals.len() {
+                let want = arith::aaxd::aaxd_div(16, m, n, avals[i], bvals[i]) & 0xFFFF;
+                assert_eq!(outs[0].1[i], want, "({m}/{n}) {}/{}", avals[i], bvals[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_accurate_mul_matches_lane_products() {
+        let nl = simd_accurate_mul();
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(48);
+        for _ in 0..400 {
+            for (pi, cfg) in arith::simd::LaneCfg::ALL.iter().enumerate() {
+                let lanes = cfg.lanes();
+                let ops_a: Vec<u64> = lanes.iter().map(|&(_, w)| rng.operand(w)).collect();
+                let ops_b: Vec<u64> = lanes.iter().map(|&(_, w)| rng.operand(w)).collect();
+                let word = arith::simd::SimdWord::pack(*cfg, &ops_a, &ops_b);
+                let got = sim.run_single(&[
+                    ("a", word.a as u64),
+                    ("b", word.b as u64),
+                    ("precision", 1 << pi),
+                ])[0]
+                    .1;
+                let mut want = 0u64;
+                for (l, &(off, _w)) in lanes.iter().enumerate() {
+                    want |= (ops_a[l] * ops_b[l]) << (2 * off);
+                }
+                assert_eq!(got, want, "{cfg:?} a={:#x} b={:#x}", word.a, word.b);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_accurate_mul_area_near_paper() {
+        // Paper Table 3: accurate SIMD multiplier [25] = 1125 LUTs.
+        let r = area::report(&simd_accurate_mul());
+        assert!(r.luts >= 900 && r.luts <= 1500, "SIMD accurate mul LUTs {}", r.luts);
+    }
+
+    #[test]
+    fn aaxd_faster_than_full_divider() {
+        let cal = Calibration::default();
+        let full = timing::analyze(&restoring_div(16, 8), &cal).critical_ns;
+        let axd = timing::analyze(&aaxd_div(16, 8, 8, 4), &cal).critical_ns;
+        assert!(axd < full, "AAXD {axd} !< accurate {full}");
+    }
+}

@@ -1,0 +1,461 @@
+//! Shared gate-level building blocks (paper §3.2–3.3).
+
+use crate::arith::table::CorrectionTables;
+use crate::fabric::netlist::{Net, Netlist, NET0, NET1};
+
+/// 4:1 mux in a single LUT6 (4 data + 2 select inputs).
+pub fn mux4(nl: &mut Netlist, sel: [Net; 2], d: [Net; 4]) -> Net {
+    nl.lut(&[d[0], d[1], d[2], d[3], sel[0], sel[1]], |m| {
+        let s = (m >> 4) & 3;
+        (m >> s) & 1 == 1
+    })
+}
+
+/// Leading-one detector over `bits` (multiple of 4) using the paper's
+/// 4-bit segmentation: per segment one zero-flag LUT plus one LUT6_2
+/// (fractured into two 5-LUTs) revealing the in-segment position — two
+/// 6-LUTs per segment, detected in parallel (§3.2).
+///
+/// Returns `(k, nonzero)` where `k` is the ⌈log2(bits)⌉-bit position of the
+/// leading one (undefined when `nonzero = 0`).
+pub fn lod(nl: &mut Netlist, a: &[Net]) -> (Vec<Net>, Net) {
+    let bits = a.len() as u32;
+    assert!(bits % 4 == 0, "LOD needs a multiple of 4 bits");
+    let segs = (bits / 4) as usize;
+
+    // Per-segment: zero flag + 2-bit in-segment position.
+    let mut zero = Vec::with_capacity(segs);
+    let mut pos0 = Vec::with_capacity(segs);
+    let mut pos1 = Vec::with_capacity(segs);
+    for s in 0..segs {
+        let seg = &a[4 * s..4 * s + 4];
+        let z = nl.lut(seg, |m| m == 0);
+        // pos within segment: 3 if b3 else 2 if b2 else 1 if b1 else 0.
+        let (p0, p1) = nl.lut52(
+            seg,
+            |m| (m >> 3) & 1 == 1 || ((m >> 2) & 1 == 0 && (m >> 1) & 1 == 1),
+            |m| (m >> 3) & 1 == 1 || (m >> 2) & 1 == 1,
+        );
+        zero.push(z);
+        pos0.push(p0);
+        pos1.push(p1);
+    }
+
+    // Priority select: the most-significant non-zero segment wins.
+    // sel_s = !z_s & z_{s+1} & … & z_{segs-1}   (one LUT each, ≤ 6 wide;
+    // for 8 segments the tail AND is folded via an extra level).
+    let mut sel = vec![NET0; segs];
+    for s in 0..segs {
+        let above: Vec<Net> = zero[s + 1..].to_vec();
+        if above.len() <= 5 {
+            let mut ins = vec![zero[s]];
+            ins.extend(&above);
+            let n_above = above.len() as u32;
+            sel[s] = nl.lut(&ins, move |m| m & 1 == 0 && (m >> 1) == (1 << n_above) - 1);
+        } else {
+            // Fold the tail: all-zero-above flag first.
+            let n_tail = (above.len() - 4) as u32;
+            let tail = nl.lut(&above[4..], move |m| m == (1 << n_tail) - 1);
+            let ins = [zero[s], above[0], above[1], above[2], above[3], tail];
+            sel[s] = nl.lut(&ins, |m| m & 1 == 0 && (m >> 1) == 0b11111);
+        }
+    }
+
+    // k = seg_index*4 + pos[selected]: OR-combine masked contributions.
+    let kbits = (31 - bits.leading_zeros()) as usize; // log2(bits), e.g. 4 for 16
+    let mut k = Vec::with_capacity(kbits);
+    // k bit 0/1 from in-segment position; bits ≥ 2 from the segment index.
+    for bit in 0..kbits {
+        let mut terms = Vec::new();
+        for s in 0..segs {
+            let contrib = match bit {
+                0 => Some(pos0[s]),
+                1 => Some(pos1[s]),
+                _ => {
+                    if (s >> (bit - 2)) & 1 == 1 {
+                        Some(NET1)
+                    } else {
+                        None
+                    }
+                }
+            };
+            if let Some(c) = contrib {
+                if c == NET1 {
+                    terms.push(sel[s]);
+                } else {
+                    terms.push(nl.and2(sel[s], c));
+                }
+            }
+        }
+        k.push(nl.or_tree(&terms));
+    }
+    let nz: Vec<Net> = zero.clone();
+    let all_zero = nl.lut(&nz[..nz.len().min(6)], |m| m == (1 << nz.len().min(6)) - 1);
+    let nonzero = if segs <= 6 {
+        nl.not(all_zero)
+    } else {
+        let rest = nl.lut(&nz[6..], |m| m != (1 << (nz.len() - 6)) - 1);
+        let head = nl.not(all_zero);
+        nl.or2(head, rest)
+    };
+    (k, nonzero)
+}
+
+/// Left barrel shifter: `out[i] = in[i - shift]` over `out_width` bits,
+/// `shift` given as a little-endian bit bus. Amount bits are consumed in
+/// pairs so each level is a 4:1 mux (one LUT6 per output bit per pair).
+pub fn barrel_left(nl: &mut Netlist, input: &[Net], shift: &[Net], out_width: usize) -> Vec<Net> {
+    let mut cur: Vec<Net> = input.to_vec();
+    cur.resize(out_width.max(input.len()), NET0);
+    let mut j = 0;
+    while j < shift.len() {
+        if j + 1 < shift.len() {
+            let step = 1usize << j;
+            let next: Vec<Net> = (0..cur.len())
+                .map(|i| {
+                    let d0 = cur[i];
+                    let d1 = if i >= step { cur[i - step] } else { NET0 };
+                    let d2 = if i >= 2 * step { cur[i - 2 * step] } else { NET0 };
+                    let d3 = if i >= 3 * step { cur[i - 3 * step] } else { NET0 };
+                    if d0 == d1 && d1 == d2 && d2 == d3 {
+                        d0
+                    } else {
+                        mux4(nl, [shift[j], shift[j + 1]], [d0, d1, d2, d3])
+                    }
+                })
+                .collect();
+            cur = next;
+            j += 2;
+        } else {
+            let step = 1usize << j;
+            let next: Vec<Net> = (0..cur.len())
+                .map(|i| {
+                    let lo = cur[i];
+                    let hi = if i >= step { cur[i - step] } else { NET0 };
+                    if lo == hi { lo } else { nl.mux2(shift[j], lo, hi) }
+                })
+                .collect();
+            cur = next;
+            j += 1;
+        }
+    }
+    cur.truncate(out_width);
+    cur
+}
+
+/// Right barrel shifter: `out[i] = in[i + shift]`; shifts past the input
+/// width produce 0.
+pub fn barrel_right(nl: &mut Netlist, input: &[Net], shift: &[Net], out_width: usize) -> Vec<Net> {
+    let mut cur: Vec<Net> = input.to_vec();
+    let mut j = 0;
+    while j < shift.len() {
+        let take = |cur: &Vec<Net>, i: usize| cur.get(i).copied().unwrap_or(NET0);
+        if j + 1 < shift.len() {
+            let step = 1usize << j;
+            let next: Vec<Net> = (0..cur.len())
+                .map(|i| {
+                    let d = [
+                        take(&cur, i),
+                        take(&cur, i + step),
+                        take(&cur, i + 2 * step),
+                        take(&cur, i + 3 * step),
+                    ];
+                    if d[0] == d[1] && d[1] == d[2] && d[2] == d[3] {
+                        d[0]
+                    } else {
+                        mux4(nl, [shift[j], shift[j + 1]], d)
+                    }
+                })
+                .collect();
+            cur = next;
+            j += 2;
+        } else {
+            let step = 1usize << j;
+            let next: Vec<Net> = (0..cur.len())
+                .map(|i| {
+                    let lo = take(&cur, i);
+                    let hi = take(&cur, i + step);
+                    if lo == hi { lo } else { nl.mux2(shift[j], lo, hi) }
+                })
+                .collect();
+            cur = next;
+            j += 1;
+        }
+    }
+    cur.truncate(out_width);
+    cur
+}
+
+/// Fraction aligner (§3.2): given operand `a` and its leading-one position
+/// `k`, produce the `F = bits−1`-bit fraction `(a − 2^k) << (F − k)`.
+///
+/// `F − k` = bitwise-NOT of `k` for `k` in `0..bits` when `bits` is a power
+/// of two, so the shift amount is free (folded into the mux LUTs).
+pub fn align_fraction(nl: &mut Netlist, a: &[Net], k: &[Net]) -> Vec<Net> {
+    let bits = a.len();
+    let f = bits - 1;
+    // shift = F - k = !k (bitwise), since F = 2^log2(bits) - 1.
+    let nshift: Vec<Net> = k.iter().map(|&kb| nl.not(kb)).collect();
+    // Shift the low F bits of a (the leading one at bit k lands on bit F
+    // and is dropped).
+    let shifted = barrel_left(nl, &a[..f], &nshift, f);
+    shifted
+}
+
+/// The paper's §3.3 error-LUT bank: `w` LUT6s, each fed the 3 MSBs of both
+/// fractions, producing coefficient bit `2^-(3+i)` (i = 0..w−1). Returns
+/// the coefficient magnitude bus in F-bit fraction units, MSB-first list
+/// converted to an LSB-first bus of width F (sign handled by the caller —
+/// multiplier coefficients are positive, divider ones negative).
+pub fn error_lut_bank(
+    nl: &mut Netlist,
+    table: &CorrectionTables,
+    is_div: bool,
+    frac1: &[Net],
+    frac2: &[Net],
+) -> Vec<Net> {
+    let f = frac1.len();
+    assert_eq!(frac2.len(), f);
+    let w = table.w;
+    let ins = [
+        frac1[f - 3], frac1[f - 2], frac1[f - 1],
+        frac2[f - 3], frac2[f - 2], frac2[f - 1],
+    ];
+    // Coefficient magnitude at resolution 2^-12, per region. Input m:
+    // bits 0..2 = frac1[F−3..F−1] (region index i LSB-first), bits 3..5
+    // likewise for frac2.
+    let tbl = if is_div { table.div } else { table.mul };
+    let entry = move |m: u32| {
+        let i = (m & 7) as usize;
+        let j = ((m >> 3) & 7) as usize;
+        tbl[i][j].unsigned_abs()
+    };
+    // Bit 2^-(3+i) of |c| is bit (12-3-i) of the fixed-point value.
+    let mut coeff_bits = Vec::with_capacity(w as usize);
+    for i in 0..w {
+        let bitpos = 12 - 3 - i; // 9 down to 2 for w = 8
+        coeff_bits.push(nl.lut(&ins, move |m| (entry(m) >> bitpos) & 1 == 1));
+    }
+    // Assemble the F-bit bus: coefficient bit i sits at F-3-i… positions
+    // below 0 are dropped (sub-ulp at small widths).
+    let mut bus = vec![NET0; f];
+    for (i, &cb) in coeff_bits.iter().enumerate() {
+        let pos = f as i32 - 3 - i as i32;
+        if pos >= 0 {
+            bus[pos as usize] = cb;
+        }
+    }
+    bus
+}
+
+/// Negated divider-coefficient bank: emits the two's complement
+/// `(-|c|) mod 2^(F+2)` of the region's correction directly — each output
+/// bit is still one region-indexed LUT (the negation is constant per
+/// region, so it folds into the LUT INIT). Feeding this bus into the
+/// single [`crate::fabric::Netlist::ternary_subtract`] pass applies the
+/// negative correction with **no** extra carry chain (paper §3.3's
+/// "delay nearly untouched" argument).
+pub fn error_lut_bank_neg(
+    nl: &mut Netlist,
+    table: &CorrectionTables,
+    frac1: &[Net],
+    frac2: &[Net],
+) -> Vec<Net> {
+    let f = frac1.len();
+    assert_eq!(frac2.len(), f);
+    let bits = f as u32 + 1;
+    let width = f + 2;
+    let ins = [
+        frac1[f - 3], frac1[f - 2], frac1[f - 1],
+        frac2[f - 3], frac2[f - 2], frac2[f - 1],
+    ];
+    // Per-region constant: (-scale_to_f(c)) mod 2^(F+2). Note div table
+    // entries are ≤ 0, so the negation is a non-negative magnitude…
+    // scale_to_f returns the signed value; -that is ≥ 0, then the mod
+    // wraps nothing. To apply the *negative* correction we need
+    // (+scale_to_f) two's complement: scale_to_f ≤ 0 already, so the
+    // addend is scale_to_f mod 2^(F+2).
+    let konst = move |m: u32| -> u64 {
+        let i = (m & 7) as usize;
+        let j = ((m >> 3) & 7) as usize;
+        let c = CorrectionTables::scale_to_f(table.div[i][j], bits);
+        (c as i128).rem_euclid(1i128 << width) as u64
+    };
+    (0..width)
+        .map(|p| {
+            // Constant-fold bit positions where all regions agree.
+            let mut any0 = false;
+            let mut any1 = false;
+            for m in 0..64u32 {
+                if (konst(m) >> p) & 1 == 1 {
+                    any1 = true;
+                } else {
+                    any0 = true;
+                }
+            }
+            match (any0, any1) {
+                (true, false) => NET0,
+                (false, true) => NET1,
+                _ => nl.lut(&ins, move |m| (konst(m) >> p) & 1 == 1),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Simulator;
+
+    #[test]
+    fn mux4_selects() {
+        let mut nl = Netlist::new();
+        let d = nl.input("d", 4);
+        let s = nl.input("s", 2);
+        let m = mux4(&mut nl, [s[0], s[1]], [d[0], d[1], d[2], d[3]]);
+        nl.output("m", &[m]);
+        let sim = Simulator::new(&nl);
+        for sel in 0..4u64 {
+            for dv in 0..16u64 {
+                let got = sim.run_single(&[("d", dv), ("s", sel)])[0].1;
+                assert_eq!(got, (dv >> sel) & 1, "d={dv:04b} s={sel}");
+            }
+        }
+    }
+
+    #[test]
+    fn lod_16bit_exhaustive() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 16);
+        let (k, nz) = lod(&mut nl, &a);
+        let mut out = k;
+        out.push(nz);
+        nl.output("k", &out);
+        let sim = Simulator::new(&nl);
+        let vals: Vec<u64> = (0..65536u64).collect();
+        let outs = sim.run_batch(&[("a", &vals)]);
+        for (i, &v) in vals.iter().enumerate() {
+            let got = outs[0].1[i];
+            if v == 0 {
+                assert_eq!(got >> 4, 0, "nonzero flag for 0");
+            } else {
+                let want_k = 63 - v.leading_zeros() as u64;
+                assert_eq!(got & 0xF, want_k, "v={v:#x}");
+                assert_eq!(got >> 4, 1, "v={v:#x} nz");
+            }
+        }
+    }
+
+    #[test]
+    fn lod_32bit_sampled() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 32);
+        let (k, nz) = lod(&mut nl, &a);
+        let mut out = k;
+        out.push(nz);
+        nl.output("k", &out);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..20_000 {
+            let v = rng.operand(32);
+            let got = sim.run_single(&[("a", v)])[0].1;
+            assert_eq!(got & 0x1F, 63 - v.leading_zeros() as u64, "v={v:#x}");
+            assert_eq!(got >> 5, 1);
+        }
+    }
+
+    #[test]
+    fn lod_area_is_two_luts_per_segment_plus_combine() {
+        // Paper: two 6-LUTs per 4-bit segment for detection; the priority
+        // combine adds a small constant overhead.
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 16);
+        let _ = lod(&mut nl, &a);
+        let r = crate::fabric::area::report(&nl);
+        assert!(r.luts >= 8, "4 segments × 2 LUTs minimum, got {}", r.luts);
+        assert!(r.luts <= 26, "combine overhead too large: {}", r.luts);
+    }
+
+    #[test]
+    fn barrel_left_matches_shift() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 8);
+        let s = nl.input("s", 3);
+        let out = barrel_left(&mut nl, &a, &s, 16);
+        nl.output("o", &out);
+        let sim = Simulator::new(&nl);
+        for v in [0u64, 1, 0x5A, 0xFF] {
+            for sh in 0..8u64 {
+                let got = sim.run_single(&[("a", v), ("s", sh)])[0].1;
+                assert_eq!(got, (v << sh) & 0xFFFF, "v={v:#x} sh={sh}");
+            }
+        }
+    }
+
+    #[test]
+    fn barrel_right_matches_shift() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 16);
+        let s = nl.input("s", 5);
+        let out = barrel_right(&mut nl, &a, &s, 16);
+        nl.output("o", &out);
+        let sim = Simulator::new(&nl);
+        for v in [1u64, 0xABCD, 0xFFFF] {
+            for sh in 0..32u64 {
+                let got = sim.run_single(&[("a", v), ("s", sh)])[0].1;
+                assert_eq!(got, if sh >= 64 { 0 } else { v >> sh }, "v={v:#x} sh={sh}");
+            }
+        }
+    }
+
+    #[test]
+    fn align_fraction_matches_behavioral() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 16);
+        let (k, _nz) = lod(&mut nl, &a);
+        let frac = align_fraction(&mut nl, &a, &k);
+        nl.output("f", &frac);
+        let sim = Simulator::new(&nl);
+        let vals: Vec<u64> = (1..65536u64).step_by(17).collect();
+        let outs = sim.run_batch(&[("a", &vals)]);
+        for (i, &v) in vals.iter().enumerate() {
+            let (_, want) = crate::arith::frac_aligned(16, v);
+            assert_eq!(outs[0].1[i], want, "v={v}");
+        }
+    }
+
+    #[test]
+    fn error_lut_bank_area_is_w_luts() {
+        use crate::arith::table::tables_for;
+        for w in [1u32, 4, 8] {
+            let mut nl = Netlist::new();
+            let f1 = nl.input("f1", 15);
+            let f2 = nl.input("f2", 15);
+            let before = crate::fabric::area::report(&nl).luts;
+            let _ = error_lut_bank(&mut nl, tables_for(w), false, &f1, &f2);
+            let after = crate::fabric::area::report(&nl).luts;
+            assert_eq!(after - before, w, "w={w}");
+        }
+    }
+
+    #[test]
+    fn error_lut_bank_values_match_table() {
+        use crate::arith::table::{tables_for, CorrectionTables};
+        let t = tables_for(8);
+        let mut nl = Netlist::new();
+        let f1 = nl.input("f1", 15);
+        let f2 = nl.input("f2", 15);
+        let bus = error_lut_bank(&mut nl, t, false, &f1, &f2);
+        nl.output("c", &bus);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(4);
+        for _ in 0..2_000 {
+            let f1v = rng.below(1 << 15);
+            let f2v = rng.below(1 << 15);
+            let got = sim.run_single(&[("f1", f1v), ("f2", f2v)])[0].1;
+            let c = t.mul[CorrectionTables::region(16, f1v)][CorrectionTables::region(16, f2v)];
+            let want = CorrectionTables::scale_to_f(c, 16) as u64;
+            assert_eq!(got, want, "f1={f1v:#x} f2={f2v:#x}");
+        }
+    }
+}

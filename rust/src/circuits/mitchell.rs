@@ -1,0 +1,277 @@
+//! Gate-level Mitchell multiplier and divider [22] (paper §3.1), shared by
+//! the MBM / INZeD / SIMDive netlists — those differ only in the correction
+//! operand added alongside the fractions.
+//!
+//! Multiplier datapath: LOD → fraction align (×2) → exponent adder
+//! `K = k1 + k2` → fraction add `T = f1 + f2 (+ c)` → antilog left-shift of
+//! the unified mantissa `{T[F+1], ovf ? T[F] : 1, T[F−1:0]}` by `K` (+1 on
+//! fraction carry).
+//!
+//! Divider datapath: same front end; `K = k1 − k2`; `T = f1 − f2 (+ c)` in
+//! two's complement; mantissa `{1, T[F−1:0]}` (or `T[F:0]` on borrow) is
+//! right-shifted by `F − e` with `e = K − borrow`.
+
+use super::components::{align_fraction, barrel_left, barrel_right, lod};
+use crate::fabric::netlist::{Net, Netlist, NET0, NET1};
+
+/// Shared front end: LOD + fraction alignment for both operands.
+/// Returns `(k1, f1, nz1, k2, f2, nz2)`.
+pub fn frontend(
+    nl: &mut Netlist,
+    a: &[Net],
+    b: &[Net],
+) -> (Vec<Net>, Vec<Net>, Net, Vec<Net>, Vec<Net>, Net) {
+    let (k1, nz1) = lod(nl, a);
+    let (k2, nz2) = lod(nl, b);
+    let f1 = align_fraction(nl, a, &k1);
+    let f2 = align_fraction(nl, b, &k2);
+    (k1, f1, nz1, k2, f2, nz2)
+}
+
+/// Multiplier back end: from `(k1, k2)` and the fraction sum `t`
+/// (`F+2`-bit bus: f1 + f2 + optional correction), produce the `2N`-bit
+/// product. `zero` forces the output to 0 (an all-zero operand).
+pub fn mul_backend(
+    nl: &mut Netlist,
+    bits: u32,
+    k1: &[Net],
+    k2: &[Net],
+    t: &[Net],
+    zero: Net,
+) -> Vec<Net> {
+    let f = (bits - 1) as usize;
+    assert_eq!(t.len(), f + 2);
+    let ovf = nl.or2(t[f], t[f + 1]);
+    // K = k1 + k2 + ovf  (exponent of the mantissa MSB position).
+    let kw = k1.len();
+    let (ksum, kco) = {
+        let (s, co) = nl.adder(k1, k2, ovf);
+        (s, co)
+    };
+    let mut kbus = ksum;
+    kbus.push(kco); // kw+1 bits: K in 0 .. 2^(kw+1)-1
+    debug_assert_eq!(kbus.len(), kw + 1);
+
+    // Mantissa (F+2 bits): bits F-1..0 = t, bit F = ovf ? t[F] : 1,
+    // bit F+1 = t[F+1].
+    let mut mant: Vec<Net> = t[..f].to_vec();
+    let bit_f = nl.mux2(ovf, NET1, t[f]);
+    mant.push(bit_f);
+    mant.push(t[f + 1]);
+
+    // Product = mant << K >> F: left barrel shift into 2N+F+1 bits, then
+    // drop the low F (static). Output bits are [F .. F+2N-1]; bit F+2N can
+    // only be set on corrected near-max operands — saturate to all-ones
+    // then (the behavioral model's 2^2N−1 cap).
+    let shifted = barrel_left(nl, &mant, &kbus, f + 2 * bits as usize + 1);
+    let sat = shifted[f + 2 * bits as usize];
+    let mut out: Vec<Net> = shifted[f..f + 2 * bits as usize].to_vec();
+    // Zero-operand gating + saturation in one LUT level per bit:
+    // out = !zero & (bit | sat).
+    for o in out.iter_mut() {
+        *o = nl.lut(&[*o, sat, zero], |m| (m >> 2) & 1 == 0 && (m & 3) != 0);
+    }
+    out
+}
+
+/// Divider back end: from exponents and the two's-complement fraction
+/// difference `r` (`F+2` bits, bit `F+1` = sign), produce the `N`-bit
+/// quotient. `zero_a` → 0, `zero_b` → saturate to all-ones.
+pub fn div_backend(
+    nl: &mut Netlist,
+    bits: u32,
+    divisor_bits: u32,
+    k1: &[Net],
+    k2: &[Net],
+    r: &[Net],
+    zero_a: Net,
+    zero_b: Net,
+) -> Vec<Net> {
+    let f = (bits - 1) as usize;
+    assert_eq!(r.len(), f + 2);
+    let sign = r[f + 1];
+    // Mantissa F+1 bits: positive → {1, r[F-1:0]}; negative → r[F:0].
+    let mut mant: Vec<Net> = r[..f].to_vec();
+    let bit_f = nl.mux2(sign, NET1, r[f]);
+    mant.push(bit_f);
+
+    // Shift amount: s = F - e, e = (k1 - k2) - sign.
+    // s = F - k1 + k2 + sign. Compute in (kw+2)-bit two's complement:
+    // s = F + k2 + sign - k1 = (F + sign) + k2 + ~k1 + 1.
+    let kw = k1.len().max(k2.len());
+    let width = kw + 2;
+    let not_k1: Vec<Net> = (0..width)
+        .map(|i| {
+            if i < k1.len() {
+                nl.not(k1[i])
+            } else {
+                NET1 // sign-extend ~k1 (k1 is non-negative)
+            }
+        })
+        .collect();
+    let k2x: Vec<Net> = (0..width).map(|i| k2.get(i).copied().unwrap_or(NET0)).collect();
+    // s = (F + 1 + sign) + k2 + ~k1 in one ternary-adder pass. F + 1 is a
+    // power of two (bits = 8/16/32 → F+1 = 8/16/32) so its low bit is 0 and
+    // the `sign` bit can ride in bit 0 of the constant operand; the "+1" of
+    // the two's complement ~k1 is folded into the constant.
+    let mut third = nl.constant(width as u32, (f + 1) as u64);
+    third[0] = sign;
+    let mut s_bus = nl.ternary_adder(&k2x, &not_k1, &third);
+    // Negative s (e > F) cannot happen for quotients < 2^N when the
+    // divisor is ≥ 1: s ∈ [0, F + max_k2 + 1]; drop the wrap-around carry.
+    s_bus.truncate(width);
+
+    // Quotient = mant >> s, clipped to N bits. Max shift value covers the
+    // full bus width so oversized shifts naturally produce 0.
+    let q = barrel_right(nl, &mant, &s_bus, bits as usize);
+
+    // Gating in one LUT level: a == 0 → 0; b == 0 → all ones.
+    // out = zero_b | (!zero_a & q).
+    let _ = divisor_bits;
+    q.iter()
+        .map(|&qb| {
+            nl.lut(&[qb, zero_a, zero_b], |m| {
+                (m >> 2) & 1 == 1 || ((m >> 1) & 1 == 0 && m & 1 == 1)
+            })
+        })
+        .collect()
+}
+
+/// Complete Mitchell multiplier netlist (`a`, `b` → `p`).
+pub fn mul(bits: u32) -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", bits);
+    let (k1, f1, nz1, k2, f2, nz2) = frontend(&mut nl, &a, &b);
+    // T = f1 + f2 over F+2 bits.
+    let (sum, co) = nl.adder(&f1, &f2, NET0);
+    let mut t = sum;
+    t.push(co);
+    t.push(NET0);
+    let zero = nl.lut(&[nz1, nz2], |m| m != 3);
+    let p = mul_backend(&mut nl, bits, &k1, &k2, &t, zero);
+    nl.output("p", &p);
+    nl
+}
+
+/// Complete Mitchell divider netlist (`a` is `bits` wide, `b` is
+/// `divisor_bits` wide → `q` is `bits` wide).
+pub fn div(bits: u32, divisor_bits: u32) -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", divisor_bits);
+    let (k1, nz1) = lod(&mut nl, &a);
+    let (k2, nz2) = lod(&mut nl, &b);
+    let f1 = align_fraction(&mut nl, &a, &k1);
+    let f2full = align_fraction(&mut nl, &b, &k2);
+    // Align divisor fraction to the dividend's F grid (divisor fraction has
+    // divisor_bits-1 significant top bits; pad the low side with zeros).
+    let f = (bits - 1) as usize;
+    let fd = (divisor_bits - 1) as usize;
+    let mut f2 = vec![NET0; f];
+    for i in 0..fd {
+        f2[f - fd + i] = f2full[i];
+    }
+    // r = f1 - f2 in two's complement over F+2 bits.
+    let f1x: Vec<Net> = f1.iter().copied().chain([NET0, NET0]).collect();
+    let f2x: Vec<Net> = f2.iter().copied().chain([NET0, NET0]).collect();
+    let (r, _) = nl.subtractor(&f1x, &f2x, NET1);
+    let zero_a = nl.not(nz1);
+    let zero_b = nl.not(nz2);
+    let q = div_backend(&mut nl, bits, divisor_bits, &k1, &k2, &r, zero_a, zero_b);
+    nl.output("q", &q);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith;
+    use crate::fabric::Simulator;
+
+    #[test]
+    fn mul_8bit_exhaustive_matches_behavioral() {
+        let nl = mul(8);
+        let sim = Simulator::new(&nl);
+        let mut avals = Vec::new();
+        let mut bvals = Vec::new();
+        for a in 0..256u64 {
+            for b in (0..256u64).step_by(5) {
+                avals.push(a);
+                bvals.push(b);
+            }
+        }
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = arith::mitchell::mul(8, avals[i], bvals[i]);
+            assert_eq!(outs[0].1[i], want, "{}x{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn mul_16bit_sampled_matches_behavioral() {
+        let nl = mul(16);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(21);
+        let avals: Vec<u64> = (0..20_000).map(|_| rng.below(65536)).collect();
+        let bvals: Vec<u64> = (0..20_000).map(|_| rng.below(65536)).collect();
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = arith::mitchell::mul(16, avals[i], bvals[i]);
+            assert_eq!(outs[0].1[i], want, "{}x{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn div_16_8_sampled_matches_behavioral() {
+        let nl = div(16, 8);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(22);
+        let avals: Vec<u64> = (0..20_000).map(|_| rng.below(65536)).collect();
+        let bvals: Vec<u64> = (0..20_000).map(|_| rng.below(256)).collect();
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = arith::mitchell::div(16, avals[i], bvals[i]) & 0xFFFF;
+            assert_eq!(outs[0].1[i], want, "{}/{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn div_8bit_exhaustive_matches_behavioral() {
+        let nl = div(8, 8);
+        let sim = Simulator::new(&nl);
+        let mut avals = Vec::new();
+        let mut bvals = Vec::new();
+        for a in (0..256u64).step_by(3) {
+            for b in 0..256u64 {
+                avals.push(a);
+                bvals.push(b);
+            }
+        }
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = arith::mitchell::div(8, avals[i], bvals[i]);
+            assert_eq!(outs[0].1[i], want, "{}/{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn area_and_delay_in_paper_regime() {
+        // Paper Table 2 (16-bit): Mitchell mul 174 LUT / 4.7 ns;
+        // Mitchell div 119 LUT / 5.3 ns. Structural mapping differs from
+        // Vivado's optimizer, so allow a generous band — the *ordering*
+        // (both far below the accurate IPs) is what must hold.
+        let cal = crate::fabric::Calibration::default();
+        let m = mul(16);
+        let am = crate::fabric::area::report(&m);
+        let tm = crate::fabric::timing::analyze(&m, &cal);
+        assert!(am.luts >= 100 && am.luts <= 320, "mitchell mul area {}", am.luts);
+        assert!(tm.critical_ns < 11.0, "mitchell mul delay {}", tm.critical_ns);
+
+        let d = div(16, 8);
+        let ad = crate::fabric::area::report(&d);
+        let td = crate::fabric::timing::analyze(&d, &cal);
+        assert!(ad.luts >= 70 && ad.luts <= 260, "mitchell div area {}", ad.luts);
+        assert!(td.critical_ns < 10.5, "mitchell div delay {}", td.critical_ns);
+    }
+}

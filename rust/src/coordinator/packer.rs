@@ -1,0 +1,253 @@
+//! Lane packer: greedy bin-packing of scalar requests into 32-bit SIMD
+//! word-ops.
+//!
+//! Policy (highest lane utilization first):
+//! 1. any 32-bit request → `One32`;
+//! 2. two 16-bit requests → `Two16`;
+//! 3. one 16-bit + up to two 8-bit → `One16Two8`;
+//! 4. up to four 8-bit → `Four8`.
+//! Partial words are padded with power-gated idle lanes (operands 0,
+//! which the hardware's per-lane data-size gating switches off — §3.2).
+
+use crate::arith::simd::{LaneCfg, LaneMode, SimdOp, SimdWord};
+
+/// Request operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqOp {
+    Mul,
+    Div,
+}
+
+/// A scalar arithmetic request.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub op: ReqOp,
+    pub bits: u32,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// A packed word-op: the SIMD op, operand word, and per-lane request ids
+/// (None = idle, power-gated lane).
+#[derive(Clone, Debug)]
+pub struct PackedWord {
+    pub op: SimdOp,
+    pub word: SimdWord,
+    pub lane_req: [Option<u64>; 4],
+    /// Active lanes (for the power-gating model).
+    pub active_lanes: u32,
+}
+
+impl PackedWord {
+    pub fn lane_count(&self) -> usize {
+        self.op.cfg.lane_count()
+    }
+}
+
+fn mode_of(op: ReqOp) -> LaneMode {
+    match op {
+        ReqOp::Mul => LaneMode::Mul,
+        ReqOp::Div => LaneMode::Div,
+    }
+}
+
+/// Pack a batch of requests into word-ops. Every request appears in
+/// exactly one lane of exactly one word.
+pub fn pack_requests(reqs: &[Request]) -> Vec<PackedWord> {
+    let mut q8: Vec<&Request> = Vec::new();
+    let mut q16: Vec<&Request> = Vec::new();
+    let mut q32: Vec<&Request> = Vec::new();
+    for r in reqs {
+        match r.bits {
+            8 => q8.push(r),
+            16 => q16.push(r),
+            32 => q32.push(r),
+            other => panic!("unsupported precision {other}"),
+        }
+    }
+    let mut out = Vec::new();
+
+    // 1: 32-bit words.
+    for r in q32 {
+        out.push(PackedWord {
+            op: SimdOp { cfg: LaneCfg::One32, modes: [mode_of(r.op); 4] },
+            word: SimdWord::new(r.a as u32, r.b as u32),
+            lane_req: [Some(r.id), None, None, None],
+            active_lanes: 1,
+        });
+    }
+
+    // 2: pair up 16-bit requests.
+    let mut i16 = 0;
+    while i16 + 1 < q16.len() {
+        let (r0, r1) = (q16[i16], q16[i16 + 1]);
+        let word = SimdWord::pack(LaneCfg::Two16, &[r0.a, r1.a], &[r0.b, r1.b]);
+        let mut modes = [LaneMode::Mul; 4];
+        modes[0] = mode_of(r0.op); // SimdOp.modes is lane-indexed
+        modes[1] = mode_of(r1.op);
+        out.push(PackedWord {
+            op: SimdOp { cfg: LaneCfg::Two16, modes },
+            word,
+            lane_req: [Some(r0.id), Some(r1.id), None, None],
+            active_lanes: 2,
+        });
+        i16 += 2;
+    }
+
+    // 3: leftover 16-bit + up to two 8-bit → One16Two8.
+    if i16 < q16.len() {
+        let r16 = q16[i16];
+        let e0 = q8.pop();
+        let e1 = q8.pop();
+        let word = SimdWord::pack(
+            LaneCfg::One16Two8,
+            &[e0.map_or(0, |r| r.a), e1.map_or(0, |r| r.a), r16.a],
+            &[e0.map_or(0, |r| r.b), e1.map_or(0, |r| r.b), r16.b],
+        );
+        let mut modes = [LaneMode::Mul; 4];
+        if let Some(r) = e0 {
+            modes[0] = mode_of(r.op);
+        }
+        if let Some(r) = e1 {
+            modes[1] = mode_of(r.op);
+        }
+        modes[2] = mode_of(r16.op);
+        out.push(PackedWord {
+            op: SimdOp { cfg: LaneCfg::One16Two8, modes },
+            word,
+            lane_req: [e0.map(|r| r.id), e1.map(|r| r.id), Some(r16.id), None],
+            active_lanes: 1 + e0.is_some() as u32 + e1.is_some() as u32,
+        });
+    }
+
+    // 4: quads of 8-bit.
+    for chunk in q8.chunks(4) {
+        let mut a = [0u64; 4];
+        let mut b = [0u64; 4];
+        let mut modes = [LaneMode::Mul; 4];
+        let mut ids = [None; 4];
+        for (l, r) in chunk.iter().enumerate() {
+            a[l] = r.a;
+            b[l] = r.b;
+            modes[l] = mode_of(r.op);
+            ids[l] = Some(r.id);
+        }
+        out.push(PackedWord {
+            op: SimdOp { cfg: LaneCfg::Four8, modes },
+            word: SimdWord::pack(LaneCfg::Four8, &a, &b),
+            lane_req: ids,
+            active_lanes: chunk.len() as u32,
+        });
+    }
+    out
+}
+
+/// Unpack per-lane results: `(request id, value)` for active lanes.
+pub fn unpack_results(pw: &PackedWord, packed_result: u64) -> Vec<(u64, u64)> {
+    let mut out = Vec::with_capacity(pw.lane_count());
+    for (l, id) in pw.lane_req.iter().enumerate().take(pw.lane_count()) {
+        if let Some(id) = id {
+            let raw = crate::arith::simd::result_lane(pw.op, packed_result, l);
+            // Divide results occupy the low N bits of the 2N field.
+            let width = pw.op.cfg.lanes()[l].1;
+            let value = match pw.op.modes[l] {
+                LaneMode::Div if width < 32 => raw & crate::arith::max_val(width),
+                _ => raw,
+            };
+            out.push((*id, value));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::simd;
+
+    fn req(id: u64, op: ReqOp, bits: u32, a: u64, b: u64) -> Request {
+        Request { id, op, bits, a, b }
+    }
+
+    #[test]
+    fn every_request_packed_exactly_once() {
+        let mut rng = crate::util::Rng::new(1);
+        let reqs: Vec<Request> = (0..200)
+            .map(|i| {
+                let bits = [8u32, 16, 32][rng.below(3) as usize];
+                req(
+                    i,
+                    if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
+                    bits,
+                    rng.operand(bits),
+                    rng.operand(bits),
+                )
+            })
+            .collect();
+        let words = pack_requests(&reqs);
+        let mut seen = std::collections::HashSet::new();
+        for w in &words {
+            for id in w.lane_req.iter().flatten() {
+                assert!(seen.insert(*id), "id {id} packed twice");
+            }
+        }
+        assert_eq!(seen.len(), reqs.len());
+    }
+
+    #[test]
+    fn packing_prefers_full_words() {
+        let reqs: Vec<Request> =
+            (0..8).map(|i| req(i, ReqOp::Mul, 8, 10 + i, 3)).collect();
+        let words = pack_requests(&reqs);
+        assert_eq!(words.len(), 2, "8 byte-ops must pack into 2 words");
+        assert!(words.iter().all(|w| w.active_lanes == 4));
+    }
+
+    #[test]
+    fn mixed_precision_uses_one16two8() {
+        let reqs = vec![
+            req(0, ReqOp::Mul, 16, 1000, 3),
+            req(1, ReqOp::Div, 8, 200, 7),
+            req(2, ReqOp::Mul, 8, 11, 13),
+        ];
+        let words = pack_requests(&reqs);
+        assert_eq!(words.len(), 1);
+        assert_eq!(words[0].op.cfg, simd::LaneCfg::One16Two8);
+        assert_eq!(words[0].active_lanes, 3);
+    }
+
+    #[test]
+    fn results_roundtrip_through_simd_unit() {
+        let reqs = vec![
+            req(0, ReqOp::Mul, 16, 300, 21),
+            req(1, ReqOp::Div, 16, 5000, 40),
+            req(2, ReqOp::Mul, 8, 43, 10),
+            req(3, ReqOp::Div, 8, 200, 9),
+            req(4, ReqOp::Mul, 32, 1 << 20, 3),
+        ];
+        let words = pack_requests(&reqs);
+        let mut results = std::collections::HashMap::new();
+        for w in &words {
+            let packed = simd::execute(w.op, w.word, 8);
+            for (id, v) in unpack_results(w, packed) {
+                results.insert(id, v);
+            }
+        }
+        use crate::arith::simdive::{simdive_div, simdive_mul};
+        assert_eq!(results[&0], simdive_mul(16, 300, 21));
+        assert_eq!(results[&1], simdive_div(16, 5000, 40));
+        assert_eq!(results[&2], simdive_mul(8, 43, 10));
+        assert_eq!(results[&3], simdive_div(8, 200, 9));
+        assert_eq!(results[&4], simdive_mul(32, 1 << 20, 3));
+    }
+
+    #[test]
+    fn idle_lanes_are_marked() {
+        let reqs = vec![req(0, ReqOp::Mul, 8, 5, 6)];
+        let words = pack_requests(&reqs);
+        assert_eq!(words.len(), 1);
+        assert_eq!(words[0].active_lanes, 1);
+        assert_eq!(words[0].lane_req[1], None);
+    }
+}

@@ -1,0 +1,294 @@
+//! Threaded coordinator: bounded request queue (backpressure), a batcher
+//! that drains the queue into the lane packer, a worker pool executing
+//! packed words on the SIMDive behavioral unit, and accounting (latency,
+//! energy from the calibrated fabric model, lane utilization, power-gated
+//! idle lanes). std::thread + mpsc — tokio is unavailable offline
+//! (DESIGN.md §1).
+
+use super::packer::{pack_requests, unpack_results, PackedWord, Request};
+use crate::arith::simd;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A completed request.
+#[derive(Clone, Copy, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub value: u64,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// SIMDive accuracy knob for the executing units.
+    pub w: u32,
+    /// Bounded queue depth (backpressure: submit blocks when full).
+    pub queue_depth: usize,
+    /// Max requests drained into one packing batch.
+    pub batch: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 4, w: 8, queue_depth: 1024, batch: 64 }
+    }
+}
+
+/// Aggregate statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub requests: u64,
+    pub words: u64,
+    pub active_lanes: u64,
+    pub total_lanes: u64,
+    /// Estimated energy (pJ) from the calibrated per-word figure, with
+    /// idle lanes power-gated to ~10% of their share.
+    pub energy_pj: f64,
+}
+
+impl Stats {
+    pub fn lane_utilization(&self) -> f64 {
+        if self.total_lanes == 0 {
+            0.0
+        } else {
+            self.active_lanes as f64 / self.total_lanes as f64
+        }
+    }
+}
+
+struct Shared {
+    requests: AtomicU64,
+    words: AtomicU64,
+    active_lanes: AtomicU64,
+    total_lanes: AtomicU64,
+    energy_mpj: AtomicU64, // milli-pJ, to keep atomic integer math
+}
+
+enum Msg {
+    Req(Request, Sender<Response>),
+    Flush,
+    Stop,
+}
+
+/// The coordinator front end.
+pub struct Coordinator {
+    tx: SyncSender<Msg>,
+    batcher: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+/// Per-word energy estimate (pJ) with power gating: idle lanes of a word
+/// consume `IDLE_FRACTION` of their proportional share.
+pub const IDLE_FRACTION: f64 = 0.1;
+
+fn word_energy_pj(per_word_pj: f64, active: u32, lanes: u32) -> f64 {
+    let share = per_word_pj / lanes as f64;
+    share * active as f64 + share * (lanes - active) as f64 * IDLE_FRACTION
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Self {
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+        let shared = Arc::new(Shared {
+            requests: AtomicU64::new(0),
+            words: AtomicU64::new(0),
+            active_lanes: AtomicU64::new(0),
+            total_lanes: AtomicU64::new(0),
+            energy_mpj: AtomicU64::new(0),
+        });
+
+        // Calibrated per-word energy of the 32-bit SIMD unit (computed
+        // once; the gate-level characterization is cached globally).
+        let per_word_pj = simd_word_energy_pj();
+
+        // Worker pool fed by the batcher.
+        let (work_tx, work_rx) = sync_channel::<(PackedWord, Vec<(u64, Sender<Response>)>)>(
+            cfg.queue_depth.max(16),
+        );
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let work_rx = Arc::clone(&work_rx);
+            let shared = Arc::clone(&shared);
+            let w = cfg.w;
+            workers.push(std::thread::spawn(move || loop {
+                let item = {
+                    let guard = work_rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok((pw, pending)) = item else { break };
+                let packed = simd::execute(pw.op, pw.word, w);
+                let results = unpack_results(&pw, packed);
+                shared.words.fetch_add(1, Ordering::Relaxed);
+                shared.active_lanes.fetch_add(pw.active_lanes as u64, Ordering::Relaxed);
+                shared
+                    .total_lanes
+                    .fetch_add(pw.lane_count() as u64, Ordering::Relaxed);
+                let e = word_energy_pj(per_word_pj, pw.active_lanes, pw.lane_count() as u32);
+                shared
+                    .energy_mpj
+                    .fetch_add((e * 1000.0) as u64, Ordering::Relaxed);
+                for (id, value) in results {
+                    if let Some((_, tx)) = pending.iter().find(|(pid, _)| *pid == id) {
+                        let _ = tx.send(Response { id, value });
+                    }
+                }
+            }));
+        }
+
+        // Batcher thread: drain up to `batch` requests, pack, dispatch.
+        let shared_b = Arc::clone(&shared);
+        let batch_size = cfg.batch.max(1);
+        let batcher = std::thread::spawn(move || {
+            let mut stop = false;
+            while !stop {
+                let mut reqs: Vec<Request> = Vec::new();
+                let mut senders: Vec<(u64, Sender<Response>)> = Vec::new();
+                // Block for the first message, then drain greedily.
+                match rx.recv() {
+                    Ok(Msg::Req(r, s)) => {
+                        senders.push((r.id, s));
+                        reqs.push(r);
+                    }
+                    Ok(Msg::Flush) => {}
+                    Ok(Msg::Stop) | Err(_) => break,
+                }
+                while reqs.len() < batch_size {
+                    match rx.try_recv() {
+                        Ok(Msg::Req(r, s)) => {
+                            senders.push((r.id, s));
+                            reqs.push(r);
+                        }
+                        Ok(Msg::Flush) => break,
+                        Ok(Msg::Stop) => {
+                            stop = true;
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                if reqs.is_empty() {
+                    continue;
+                }
+                shared_b.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                for pw in pack_requests(&reqs) {
+                    let pending: Vec<(u64, Sender<Response>)> = pw
+                        .lane_req
+                        .iter()
+                        .flatten()
+                        .filter_map(|id| senders.iter().find(|(sid, _)| sid == id).cloned())
+                        .collect();
+                    if work_tx.send((pw, pending)).is_err() {
+                        return;
+                    }
+                }
+            }
+            drop(work_tx);
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+
+        Coordinator { tx, batcher: Some(batcher), shared }
+    }
+
+    /// Submit a request; returns the response channel. Blocks when the
+    /// queue is full (backpressure).
+    pub fn submit(&self, req: Request) -> Receiver<Response> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.tx.send(Msg::Req(req, tx)).expect("coordinator stopped");
+        rx
+    }
+
+    /// Force the batcher to close the current batch.
+    pub fn flush(&self) {
+        let _ = self.tx.send(Msg::Flush);
+    }
+
+    /// Current statistics snapshot.
+    pub fn stats(&self) -> Stats {
+        Stats {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            words: self.shared.words.load(Ordering::Relaxed),
+            active_lanes: self.shared.active_lanes.load(Ordering::Relaxed),
+            total_lanes: self.shared.total_lanes.load(Ordering::Relaxed),
+            energy_pj: self.shared.energy_mpj.load(Ordering::Relaxed) as f64 / 1000.0,
+        }
+    }
+
+    /// Stop the coordinator and return final statistics.
+    pub fn shutdown(mut self) -> Stats {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+    }
+}
+
+/// Calibrated energy per packed word (pJ), cached.
+pub fn simd_word_energy_pj() -> f64 {
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<f64> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        let nl = crate::circuits::simdive::simd32(8);
+        let cal = crate::fabric::calibrate::fitted();
+        let t = crate::fabric::timing::analyze(&nl, cal);
+        let p = crate::fabric::power::estimate_at(&nl, cal, 0x51D, 2048, t.critical_ns);
+        p.total_mw * t.critical_ns
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::packer::ReqOp;
+
+    #[test]
+    fn stats_account_all_requests() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let mut handles = Vec::new();
+        for i in 0..100 {
+            handles.push(coord.submit(Request {
+                id: i,
+                op: ReqOp::Mul,
+                bits: 8,
+                a: 1 + i % 200,
+                b: 3,
+            }));
+        }
+        for h in handles {
+            h.recv().unwrap();
+        }
+        let s = coord.shutdown();
+        assert_eq!(s.requests, 100);
+        assert!(s.energy_pj > 0.0);
+        assert!(s.words <= 100);
+    }
+
+    #[test]
+    fn power_gating_reduces_energy_of_partial_words() {
+        let full = word_energy_pj(100.0, 4, 4);
+        let one = word_energy_pj(100.0, 1, 4);
+        assert!((full - 100.0).abs() < 1e-9);
+        assert!(one < 0.4 * full, "gated {one} vs full {full}");
+    }
+
+    #[test]
+    fn word_energy_is_positive_and_sane() {
+        let e = simd_word_energy_pj();
+        assert!(e > 1.0 && e < 100_000.0, "per-word energy {e} pJ");
+    }
+}

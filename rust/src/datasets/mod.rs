@@ -1,0 +1,269 @@
+//! Synthetic 28×28 classification datasets — the offline stand-in for
+//! MNIST digits and Fashion-MNIST (DESIGN.md §1). Both are procedural and
+//! seed-deterministic; the *same spec* is implemented in
+//! `python/compile/datagen.py` (shared constants, same glyphs) so the JAX
+//! training pipeline and the Rust inference substrate agree on the data.
+//!
+//! * `digits`: seven-segment-style digit glyphs rendered with random
+//!   shift/scale/shear + pixel noise — 10 classes.
+//! * `fashion`: 10 parametric texture/silhouette classes (stripes, checks,
+//!   blobs, frames, …) with the same augmentation.
+
+use crate::util::Rng;
+
+pub const IMG: usize = 28;
+pub const CLASSES: usize = 10;
+
+/// Which dataset family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Digits,
+    Fashion,
+}
+
+/// A labelled example: 28×28 grayscale, row-major.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub pixels: [u8; IMG * IMG],
+    pub label: u8,
+}
+
+/// Seven-segment truth table: segments (a,b,c,d,e,f,g) per digit.
+const SEGMENTS: [[bool; 7]; 10] = [
+    [true, true, true, true, true, true, false],    // 0
+    [false, true, true, false, false, false, false],// 1
+    [true, true, false, true, true, false, true],   // 2
+    [true, true, true, true, false, false, true],   // 3
+    [false, true, true, false, false, true, true],  // 4
+    [true, false, true, true, false, true, true],   // 5
+    [true, false, true, true, true, true, true],    // 6
+    [true, true, true, false, false, false, false], // 7
+    [true, true, true, true, true, true, true],     // 8
+    [true, true, true, true, false, true, true],    // 9
+];
+
+fn render_digit(label: u8, rng: &mut Rng) -> [u8; IMG * IMG] {
+    let mut img = [0f64; IMG * IMG];
+    let segs = SEGMENTS[label as usize];
+    // Base glyph box in unit coords.
+    let (x0, x1) = (0.28, 0.72);
+    let (y0, ym, y1) = (0.15, 0.5, 0.85);
+    let thick = 0.06 + rng.f64() * 0.03;
+    // Augmentation: shift, scale, shear.
+    let sx = 0.8 + rng.f64() * 0.4;
+    let sy = 0.8 + rng.f64() * 0.4;
+    let shear = (rng.f64() - 0.5) * 0.3;
+    let dx = (rng.f64() - 0.5) * 0.18;
+    let dy = (rng.f64() - 0.5) * 0.18;
+    // Segment geometry: (is_horizontal, cx/cy line endpoints).
+    let seg_lines: [(bool, f64, f64, f64); 7] = [
+        (true, y0, x0, x1),  // a: top
+        (false, x1, y0, ym), // b: top-right
+        (false, x1, ym, y1), // c: bottom-right
+        (true, y1, x0, x1),  // d: bottom
+        (false, x0, ym, y1), // e: bottom-left
+        (false, x0, y0, ym), // f: top-left
+        (true, ym, x0, x1),  // g: middle
+    ];
+    for py in 0..IMG {
+        for px in 0..IMG {
+            // Inverse-transform pixel to glyph space.
+            let u0 = (px as f64 + 0.5) / IMG as f64;
+            let v0 = (py as f64 + 0.5) / IMG as f64;
+            let u = (u0 - 0.5 - dx) / sx + 0.5 - shear * (v0 - 0.5);
+            let v = (v0 - 0.5 - dy) / sy + 0.5;
+            let mut intensity = 0.0f64;
+            for (si, &(horiz, line, lo, hi)) in seg_lines.iter().enumerate() {
+                if !segs[si] {
+                    continue;
+                }
+                let (d_line, d_span) = if horiz {
+                    ((v - line).abs(), if u < lo { lo - u } else if u > hi { u - hi } else { 0.0 })
+                } else {
+                    ((u - line).abs(), if v < lo { lo - v } else if v > hi { v - hi } else { 0.0 })
+                };
+                let d = d_line.max(d_span);
+                if d < thick {
+                    intensity = intensity.max(1.0 - (d / thick).powi(2));
+                }
+            }
+            img[py * IMG + px] = intensity * (200.0 + rng.f64() * 55.0);
+        }
+    }
+    finish(img, rng)
+}
+
+fn render_fashion(label: u8, rng: &mut Rng) -> [u8; IMG * IMG] {
+    let mut img = [0f64; IMG * IMG];
+    let p1 = 0.2 + rng.f64() * 0.12; // silhouette inset
+    let freq = 2.0 + rng.f64() * 2.0;
+    let phase = rng.f64() * std::f64::consts::TAU;
+    for py in 0..IMG {
+        for px in 0..IMG {
+            let u = (px as f64 + 0.5) / IMG as f64;
+            let v = (py as f64 + 0.5) / IMG as f64;
+            let inside: f64 = match label {
+                // 0: solid block ("tshirt"), 1: tall rect ("trouser"),
+                // 2: horizontal stripes, 3: vertical stripes, 4: checks,
+                // 5: centre blob ("bag"), 6: frame ("coat"), 7: diagonal,
+                // 8: two blobs ("sneaker"), 9: ring ("ankle boot").
+                0 => f64::from(u > p1 && u < 1.0 - p1 && v > p1 && v < 1.0 - p1),
+                1 => f64::from(u > 0.35 && u < 0.65 && v > 0.1 && v < 0.9),
+                2 => ((freq * 2.0 * v * std::f64::consts::TAU + phase).sin() > 0.0) as u8 as f64,
+                3 => ((freq * 2.0 * u * std::f64::consts::TAU + phase).sin() > 0.0) as u8 as f64,
+                4 => {
+                    (((freq * u * std::f64::consts::TAU).sin() > 0.0)
+                        ^ ((freq * v * std::f64::consts::TAU).sin() > 0.0)) as u8 as f64
+                }
+                5 => {
+                    let d = ((u - 0.5).powi(2) + (v - 0.5).powi(2)).sqrt();
+                    f64::from(d < 0.3)
+                }
+                6 => {
+                    let inner = u > 0.3 && u < 0.7 && v > 0.3 && v < 0.7;
+                    let outer = u > 0.12 && u < 0.88 && v > 0.12 && v < 0.88;
+                    f64::from(outer && !inner)
+                }
+                7 => (((u + v) * freq * std::f64::consts::TAU).sin() > 0.0) as u8 as f64,
+                8 => {
+                    let d1 = ((u - 0.32).powi(2) + (v - 0.6).powi(2)).sqrt();
+                    let d2 = ((u - 0.68).powi(2) + (v - 0.45).powi(2)).sqrt();
+                    f64::from(d1 < 0.18 || d2 < 0.18)
+                }
+                _ => {
+                    let d = ((u - 0.5).powi(2) + (v - 0.5).powi(2)).sqrt();
+                    f64::from(d > 0.2 && d < 0.36)
+                }
+            };
+            img[py * IMG + px] = inside * (160.0 + rng.f64() * 70.0);
+        }
+    }
+    finish(img, rng)
+}
+
+/// Shared post-processing: additive noise + clamp. The noise level is
+/// chosen so a well-trained float MLP sits in the mid/high-90s — like the
+/// paper's MNIST setting — leaving visible headroom for quantization and
+/// approximate-multiplier deltas (Table 4).
+fn finish(mut img: [f64; IMG * IMG], rng: &mut Rng) -> [u8; IMG * IMG] {
+    let mut out = [0u8; IMG * IMG];
+    for (o, v) in out.iter_mut().zip(img.iter_mut()) {
+        let n = rng.normal() * 40.0;
+        *o = (*v + n).clamp(0.0, 255.0) as u8;
+    }
+    out
+}
+
+/// Generate `count` examples of a family, deterministic in `seed`.
+pub fn generate(family: Family, count: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ family as u64);
+    (0..count)
+        .map(|_| {
+            let label = rng.below(CLASSES as u64) as u8;
+            let pixels = match family {
+                Family::Digits => render_digit(label, &mut rng),
+                Family::Fashion => render_fashion(label, &mut rng),
+            };
+            Example { pixels, label }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(Family::Digits, 10, 7);
+        let b = generate(Family::Digits, 10, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.pixels, y.pixels);
+        }
+    }
+
+    #[test]
+    fn all_classes_appear() {
+        for fam in [Family::Digits, Family::Fashion] {
+            let ex = generate(fam, 500, 3);
+            let mut seen = [false; CLASSES];
+            for e in &ex {
+                seen[e.label as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{fam:?}: missing class");
+        }
+    }
+
+    #[test]
+    fn digits_are_distinguishable_by_template() {
+        // Nearest-mean-template classification on clean renders must beat
+        // chance by a wide margin — sanity that classes carry signal.
+        let train = generate(Family::Digits, 1500, 11);
+        let test = generate(Family::Digits, 300, 12);
+        let mut means = vec![[0f64; IMG * IMG]; CLASSES];
+        let mut counts = [0usize; CLASSES];
+        for e in &train {
+            counts[e.label as usize] += 1;
+            for (m, &p) in means[e.label as usize].iter_mut().zip(&e.pixels) {
+                *m += p as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for e in &test {
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, m) in means.iter().enumerate() {
+                let d: f64 =
+                    m.iter().zip(&e.pixels).map(|(&mv, &p)| (mv - p as f64).powi(2)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == e.label as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.6, "template accuracy {acc}");
+    }
+
+    #[test]
+    fn fashion_classes_distinguishable() {
+        let train = generate(Family::Fashion, 1000, 13);
+        let test = generate(Family::Fashion, 200, 14);
+        let mut means = vec![[0f64; IMG * IMG]; CLASSES];
+        let mut counts = [0usize; CLASSES];
+        for e in &train {
+            counts[e.label as usize] += 1;
+            for (m, &p) in means[e.label as usize].iter_mut().zip(&e.pixels) {
+                *m += p as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for e in &test {
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, m) in means.iter().enumerate() {
+                let d: f64 =
+                    m.iter().zip(&e.pixels).map(|(&mv, &p)| (mv - p as f64).powi(2)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == e.label as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.6, "fashion template accuracy {acc}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Area model: LUT / carry / slice counting.
+//!
+//! The paper's "Area (6-LUT)" column counts LUT6 equivalents; a fractured
+//! LUT6_2 is one LUT, and CARRY4 blocks are free (dedicated silicon next to
+//! the LUTs) but are tracked for slice estimation — a 7-series slice holds
+//! four LUT6 and one CARRY4.
+
+use super::netlist::{Cell, Netlist};
+
+/// Area figures for one design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AreaReport {
+    /// LUT6-equivalent count (the paper's area unit).
+    pub luts: u32,
+    /// CARRY4 block count.
+    pub carry4: u32,
+    /// Slice estimate: max(luts/4, carry4) rounded up.
+    pub slices: u32,
+}
+
+/// Count primitives.
+pub fn report(nl: &Netlist) -> AreaReport {
+    let mut luts = 0u32;
+    let mut carry4 = 0u32;
+    for c in &nl.cells {
+        match c {
+            Cell::Lut { .. } | Cell::Lut52 { .. } => luts += 1,
+            Cell::Carry4 { .. } => carry4 += 1,
+        }
+    }
+    let slices = (luts.div_ceil(4)).max(carry4);
+    AreaReport { luts, carry4, slices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::netlist::{Netlist, NET0};
+
+    #[test]
+    fn adder_area_is_one_lut_per_bit() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 16);
+        let b = nl.input("b", 16);
+        let _ = nl.adder(&a, &b, NET0);
+        let r = report(&nl);
+        assert_eq!(r.luts, 16, "one propagate LUT per bit");
+        assert_eq!(r.carry4, 4, "16 bits = 4 CARRY4");
+        assert_eq!(r.slices, 4);
+    }
+
+    #[test]
+    fn lut52_counts_once() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 4);
+        let _ = nl.lut52(&a, |m| m == 0, |m| m == 1);
+        assert_eq!(report(&nl).luts, 1);
+    }
+
+    #[test]
+    fn ternary_adder_costs_one_extra_lut() {
+        // Paper §3.3: ternary addition needs one more LUT than binary.
+        let mut nl2 = Netlist::new();
+        let a = nl2.input("a", 8);
+        let b = nl2.input("b", 8);
+        let _ = nl2.adder(&a, &b, NET0);
+        let binary = report(&nl2).luts;
+
+        let mut nl3 = Netlist::new();
+        let a = nl3.input("a", 8);
+        let b = nl3.input("b", 8);
+        let c = nl3.input("c", 8);
+        let _ = nl3.ternary_adder(&a, &b, &c);
+        let ternary = report(&nl3).luts;
+        assert_eq!(ternary, binary + 1, "paper §3.3: ternary = binary + 1 LUT");
+    }
+}

@@ -1,0 +1,58 @@
+//! Simulated Xilinx Virtex-7 fabric — the substrate that replaces Vivado
+//! 17.4 + the VC707 board in the paper's evaluation (DESIGN.md §1).
+//!
+//! A design is a structural [`netlist::Netlist`] of Virtex-7 primitives:
+//! 6-input LUTs (optionally fractured into two 5-LUTs, as the paper's LOD
+//! uses), CARRY4 carry-chain blocks, and constant/IO nets. On top of the
+//! netlist the fabric provides:
+//!
+//! * [`sim`] — bit-parallel functional simulation (64 test vectors per
+//!   pass), used to verify every gate-level design against its behavioral
+//!   model and to drive the power model;
+//! * [`area`] — LUT / carry / slice counting (the paper's "Area (6-LUT)"
+//!   column);
+//! * [`timing`] — static timing analysis with calibrated primitive delays
+//!   (the "Delay (ns)" column);
+//! * [`power`] — toggle-based dynamic power + per-LUT static leakage
+//!   (the "Power (mW)" column), with energy = power × delay per op.
+//!
+//! Calibration: the four timing/power constants are fitted once against
+//! the paper's two accurate-IP baselines (Table 2); all approximate-design
+//! rows are then *predictions* of this model. See `timing::Calibration`.
+
+pub mod area;
+pub mod calibrate;
+pub mod netlist;
+pub mod power;
+pub mod sim;
+pub mod timing;
+
+pub use area::AreaReport;
+pub use netlist::{Net, Netlist};
+pub use power::PowerReport;
+pub use sim::Simulator;
+pub use timing::{Calibration, TimingReport};
+
+/// Full design metrics for one circuit, as reported in Tables 2–3.
+#[derive(Clone, Debug)]
+pub struct DesignMetrics {
+    pub name: String,
+    pub area: AreaReport,
+    pub timing: TimingReport,
+    pub power: PowerReport,
+}
+
+impl DesignMetrics {
+    /// Energy per operation in picojoules: P(mW) × delay(ns) = pJ.
+    pub fn energy_pj(&self) -> f64 {
+        self.power.total_mw * self.timing.critical_ns
+    }
+
+    /// Characterize a netlist: area + timing + power in one pass.
+    pub fn characterize(name: &str, nl: &Netlist, cal: &Calibration, seed: u64) -> Self {
+        let area = area::report(nl);
+        let timing = timing::analyze(nl, cal);
+        let power = power::estimate(nl, cal, seed, power::DEFAULT_VECTORS);
+        DesignMetrics { name: name.to_string(), area, timing, power }
+    }
+}

@@ -1,0 +1,537 @@
+//! Structural netlist of Virtex-7 primitives + a builder API.
+//!
+//! Primitives modeled (7-series CLB, per the paper's Fig. 2(c) and the
+//! Xilinx UNISIM library [35]):
+//!
+//! * `LUT6` — any boolean function of ≤ 6 inputs (truth table in a `u64`);
+//! * `LUT6_2` — a LUT6 fractured into two functions of the same ≤ 5
+//!   inputs (O5/O6 outputs), used by the paper's 4-bit LOD;
+//! * `CARRY4` — four bits of the dedicated fast carry chain: per bit,
+//!   `O_i = S_i ⊕ C_i` and `C_{i+1} = S_i ? C_i : DI_i`.
+//!
+//! Nets are dense `u32` ids; net 0 is constant-0, net 1 is constant-1.
+//! Cells must be created in topological order (the builder API guarantees
+//! this naturally), which keeps simulation and timing a single linear pass.
+
+/// A net (wire) id.
+pub type Net = u32;
+
+/// Constant-zero net.
+pub const NET0: Net = 0;
+/// Constant-one net.
+pub const NET1: Net = 1;
+
+/// A fabric primitive.
+#[derive(Clone, Debug)]
+pub enum Cell {
+    /// LUT6: `out = truth[ inputs as index ]` (input 0 is the LSB).
+    Lut { inputs: Vec<Net>, truth: u64, out: Net },
+    /// LUT6_2 fractured: `out6` over all ≤ 6 inputs, `out5` over the low 5.
+    Lut52 { inputs: Vec<Net>, truth5: u32, truth6: u64, out5: Net, out6: Net },
+    /// CARRY4: `s`/`di` per bit, `cin`; outputs `o` (sum) and `co` (carry).
+    Carry4 { s: [Net; 4], di: [Net; 4], cin: Net, o: [Net; 4], co: [Net; 4] },
+}
+
+/// A named bus of nets (LSB first).
+#[derive(Clone, Debug)]
+pub struct Bus {
+    pub name: String,
+    pub nets: Vec<Net>,
+}
+
+/// A structural netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    next_net: Net,
+    pub cells: Vec<Cell>,
+    pub inputs: Vec<Bus>,
+    pub outputs: Vec<Bus>,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        // Reserve nets 0/1 for constants.
+        Netlist { next_net: 2, cells: Vec::new(), inputs: Vec::new(), outputs: Vec::new() }
+    }
+
+    pub fn net_count(&self) -> usize {
+        self.next_net as usize
+    }
+
+    fn fresh(&mut self) -> Net {
+        let n = self.next_net;
+        self.next_net += 1;
+        n
+    }
+
+    /// Declare a primary input bus of `width` nets (LSB first).
+    pub fn input(&mut self, name: &str, width: u32) -> Vec<Net> {
+        let nets: Vec<Net> = (0..width).map(|_| self.fresh()).collect();
+        self.inputs.push(Bus { name: name.into(), nets: nets.clone() });
+        nets
+    }
+
+    /// Declare a primary output bus.
+    pub fn output(&mut self, name: &str, nets: &[Net]) {
+        self.outputs.push(Bus { name: name.into(), nets: nets.to_vec() });
+    }
+
+    /// Generic LUT over `inputs` with a function on the input bits.
+    /// The function receives the input assignment as a bit-mask (input `i`
+    /// at bit `i`). Constant inputs are folded away (as any technology
+    /// mapper would); an all-constant function returns a constant net.
+    pub fn lut<F: Fn(u32) -> bool>(&mut self, inputs: &[Net], f: F) -> Net {
+        assert!(!inputs.is_empty() && inputs.len() <= 6, "LUT arity {}", inputs.len());
+        let mut truth = 0u64;
+        for m in 0..(1u32 << inputs.len()) {
+            if f(m) {
+                truth |= 1 << m;
+            }
+        }
+        self.lut_raw(inputs, truth)
+    }
+
+    /// LUT from a raw truth table (constant inputs folded).
+    pub fn lut_raw(&mut self, inputs: &[Net], truth: u64) -> Net {
+        let (inputs, truth) = fold_constants(inputs, truth);
+        if inputs.is_empty() {
+            return if truth & 1 == 1 { NET1 } else { NET0 };
+        }
+        // Wire-equivalent LUT (identity of one input) needs no cell.
+        if inputs.len() == 1 {
+            if truth == 0b10 {
+                return inputs[0];
+            }
+            if truth == 0b00 {
+                return NET0;
+            }
+            if truth == 0b11 {
+                return NET1;
+            }
+        }
+        let out = self.fresh();
+        self.cells.push(Cell::Lut { inputs, truth, out });
+        out
+    }
+
+    /// Fractured LUT6_2: one physical LUT producing two outputs — `O6` may
+    /// use all ≤ 6 inputs, `O5` only the low ≤ 5 (7-series fracturing
+    /// rule). Returns `(out5, out6)`.
+    pub fn lut52<F5, F6>(&mut self, inputs: &[Net], f5: F5, f6: F6) -> (Net, Net)
+    where
+        F5: Fn(u32) -> bool,
+        F6: Fn(u32) -> bool,
+    {
+        assert!(!inputs.is_empty() && inputs.len() <= 6, "LUT6_2 arity {}", inputs.len());
+        let arity5 = inputs.len().min(5);
+        let mut t5 = 0u32;
+        for m in 0..(1u32 << arity5) {
+            if f5(m) {
+                t5 |= 1 << m;
+            }
+        }
+        let mut t6 = 0u64;
+        for m in 0..(1u32 << inputs.len()) {
+            if f6(m) {
+                t6 |= 1 << m;
+            }
+        }
+        // If either half degenerates to a constant/wire after folding, emit
+        // the other half as a plain LUT (one physical LUT either way).
+        let (in5, t5f) = fold_constants(&inputs[..inputs.len().min(5)], t5 as u64);
+        let (in6, t6f) = fold_constants(inputs, t6);
+        let trivial5 = in5.is_empty() || (in5.len() == 1 && matches!(t5f, 0 | 0b10 | 0b11));
+        let trivial6 = in6.is_empty() || (in6.len() == 1 && matches!(t6f, 0 | 0b10 | 0b11));
+        if trivial5 || trivial6 {
+            let o5 = self.lut_raw(&inputs[..inputs.len().min(5)], t5 as u64);
+            let o6 = self.lut_raw(inputs, t6);
+            return (o5, o6);
+        }
+        let out5 = self.fresh();
+        let out6 = self.fresh();
+        self.cells.push(Cell::Lut52 { inputs: inputs.to_vec(), truth5: t5, truth6: t6, out5, out6 });
+        (out5, out6)
+    }
+
+    /// One CARRY4 block. `s`/`di` are the per-bit select/data inputs.
+    /// Returns `(o, co)`.
+    pub fn carry4(&mut self, s: [Net; 4], di: [Net; 4], cin: Net) -> ([Net; 4], [Net; 4]) {
+        let o = [self.fresh(), self.fresh(), self.fresh(), self.fresh()];
+        let co = [self.fresh(), self.fresh(), self.fresh(), self.fresh()];
+        self.cells.push(Cell::Carry4 { s, di, cin, o, co });
+        (o, co)
+    }
+
+    // ---------- derived combinational helpers ----------
+
+    pub fn not(&mut self, a: Net) -> Net {
+        self.lut(&[a], |m| m & 1 == 0)
+    }
+
+    pub fn and2(&mut self, a: Net, b: Net) -> Net {
+        self.lut(&[a, b], |m| m & 3 == 3)
+    }
+
+    pub fn or2(&mut self, a: Net, b: Net) -> Net {
+        self.lut(&[a, b], |m| m & 3 != 0)
+    }
+
+    pub fn xor2(&mut self, a: Net, b: Net) -> Net {
+        self.lut(&[a, b], |m| (m & 1) ^ ((m >> 1) & 1) == 1)
+    }
+
+    /// 2:1 mux: `sel ? hi : lo`.
+    pub fn mux2(&mut self, sel: Net, lo: Net, hi: Net) -> Net {
+        self.lut(&[lo, hi, sel], |m| {
+            if m & 0b100 != 0 { m & 0b010 != 0 } else { m & 0b001 != 0 }
+        })
+    }
+
+    /// Bus-wide 2:1 mux (pads the shorter bus with constant 0).
+    pub fn mux2_bus(&mut self, sel: Net, lo: &[Net], hi: &[Net]) -> Vec<Net> {
+        let w = lo.len().max(hi.len());
+        (0..w)
+            .map(|i| {
+                let l = lo.get(i).copied().unwrap_or(NET0);
+                let h = hi.get(i).copied().unwrap_or(NET0);
+                self.mux2(sel, l, h)
+            })
+            .collect()
+    }
+
+    /// N-input OR tree (LUT6-packed).
+    pub fn or_tree(&mut self, nets: &[Net]) -> Net {
+        match nets.len() {
+            0 => NET0,
+            1 => nets[0],
+            n if n <= 6 => self.lut(nets, |m| m != 0),
+            _ => {
+                let mid: Vec<Net> = nets.chunks(6).map(|c| self.lut(c, |m| m != 0)).collect();
+                self.or_tree(&mid)
+            }
+        }
+    }
+
+    /// Ripple adder over the dedicated carry chain: `a + b + cin`.
+    /// One LUT per bit computes the propagate `a⊕b` feeding CARRY4 `S`,
+    /// with `DI = a` — the canonical 7-series adder mapping.
+    /// Returns `(sum, carry_out)`.
+    pub fn adder(&mut self, a: &[Net], b: &[Net], cin: Net) -> (Vec<Net>, Net) {
+        let w = a.len().max(b.len());
+        let mut s_nets = Vec::with_capacity(w);
+        let mut d_nets = Vec::with_capacity(w);
+        for i in 0..w {
+            let ai = a.get(i).copied().unwrap_or(NET0);
+            let bi = b.get(i).copied().unwrap_or(NET0);
+            s_nets.push(self.xor2(ai, bi));
+            d_nets.push(ai);
+        }
+        let (sum, co) = self.carry_chain(&s_nets, &d_nets, cin);
+        (sum, co)
+    }
+
+    /// Subtractor `a - b + (cin ? 0 : -1)`… standard two's complement:
+    /// computes `a + !b + cin` (pass `cin = NET1` for plain `a - b`).
+    /// Returns `(diff, carry_out)`; `carry_out == 1` means no borrow.
+    pub fn subtractor(&mut self, a: &[Net], b: &[Net], cin: Net) -> (Vec<Net>, Net) {
+        let w = a.len().max(b.len());
+        let mut s_nets = Vec::with_capacity(w);
+        let mut d_nets = Vec::with_capacity(w);
+        for i in 0..w {
+            let ai = a.get(i).copied().unwrap_or(NET0);
+            let bi = b.get(i).copied().unwrap_or(NET0);
+            // propagate = a ⊕ !b
+            s_nets.push(self.lut(&[ai, bi], |m| (m & 1) ^ (((m >> 1) & 1) ^ 1) == 1));
+            d_nets.push(ai);
+        }
+        self.carry_chain(&s_nets, &d_nets, cin)
+    }
+
+    /// Raw carry chain over CARRY4 blocks from per-bit `S`/`DI`.
+    pub fn carry_chain(&mut self, s: &[Net], di: &[Net], cin: Net) -> (Vec<Net>, Net) {
+        assert_eq!(s.len(), di.len());
+        let mut out = Vec::with_capacity(s.len());
+        let mut carry = cin;
+        for chunk in 0..s.len().div_ceil(4) {
+            let base = chunk * 4;
+            let mut s4 = [NET0; 4];
+            let mut d4 = [NET0; 4];
+            for k in 0..4 {
+                if base + k < s.len() {
+                    s4[k] = s[base + k];
+                    d4[k] = di[base + k];
+                } else {
+                    // Pad: S=0 selects DI=0 → carry is killed beyond width…
+                    // use S=0, DI=carry-preserving? Padding with S=1 keeps
+                    // propagating the carry so `co[3]` of the last block is
+                    // the true carry-out.
+                    s4[k] = NET1;
+                    d4[k] = NET0;
+                }
+            }
+            let (o, co) = self.carry4(s4, d4, carry);
+            for k in 0..4 {
+                if base + k < s.len() {
+                    out.push(o[k]);
+                }
+            }
+            carry = co[3];
+        }
+        (out, carry)
+    }
+
+    /// Ternary adder `a + b + c` (see [`Netlist::ternary_adder_cin`]).
+    pub fn ternary_adder(&mut self, a: &[Net], b: &[Net], c: &[Net]) -> Vec<Net> {
+        self.ternary_adder_cin(a, b, c, NET0)
+    }
+
+    /// Ternary adder `a + b + c + cin` using the 7-series LUT6 +
+    /// carry-chain mapping (paper §3.3): bit `i`'s LUT consumes
+    /// `(a_i, b_i, c_i)` and the previous bit's triple to form the chain
+    /// `S` input, with `DI` the previous majority — one LUT per bit plus
+    /// one extra MSB LUT, exactly the "+1 LUT" cost the paper describes.
+    /// The carry-in feeds the chain directly (free), which lets the
+    /// subtract-form `a + ~b + c + 1` run in a single chain pass.
+    pub fn ternary_adder_cin(&mut self, a: &[Net], b: &[Net], c: &[Net], cin: Net) -> Vec<Net> {
+        self.ternary_core(a, b, c, cin, false)
+    }
+
+    /// Ternary subtract-form adder `a + ~b + c + cin` — operand `b` is
+    /// complemented *inside* the compressor LUTs (free on the fabric, as
+    /// any input inversion is absorbed by the LUT INIT). With `cin = 1`
+    /// this computes `a - b + c` in a single carry-chain pass, which is
+    /// how SIMDive's divider applies its (negative) correction with no
+    /// extra delay (§3.3).
+    pub fn ternary_subtract(&mut self, a: &[Net], b: &[Net], c: &[Net], cin: Net) -> Vec<Net> {
+        self.ternary_core(a, b, c, cin, true)
+    }
+
+    fn ternary_core(
+        &mut self,
+        a: &[Net],
+        b: &[Net],
+        c: &[Net],
+        cin: Net,
+        invert_b: bool,
+    ) -> Vec<Net> {
+        let w = a.len().max(b.len()).max(c.len());
+        let get = |v: &[Net], i: usize| v.get(i).copied().unwrap_or(NET0);
+        // Carry-save compress: s_i = a⊕b⊕c, t_i = maj(a,b,c); then add
+        // s + (t << 1) on the chain. One fractured LUT6_2 per bit:
+        // O6 = s_i ⊕ t_{i-1} (all 6 inputs), O5 = t_{i-1} (low 3 inputs) —
+        // the canonical 7-series ternary-adder mapping, N+1 LUTs total.
+        let mut s_in = Vec::with_capacity(w + 1);
+        let mut di = Vec::with_capacity(w + 1);
+        for i in 0..=w {
+            let cur = [get(a, i), get(b, i), get(c, i)];
+            let prev = if i == 0 {
+                [NET0, NET0, NET0]
+            } else {
+                [get(a, i - 1), get(b, i - 1), get(c, i - 1)]
+            };
+            // prev triple on the low inputs so O5 (maj of prev) is legal.
+            // Input order per triple: (a, b, c); bit 1 of each triple is
+            // the (possibly inverted) b operand.
+            let ins = [prev[0], prev[1], prev[2], cur[0], cur[1], cur[2]];
+            let inv = invert_b;
+            let maj3 = move |m: u32| {
+                let b = ((m >> 1) & 1) ^ u32::from(inv);
+                (m & 1) + b + ((m >> 2) & 1) >= 2
+            };
+            let (d, s) = self.lut52(
+                &ins,
+                move |m| maj3(m),
+                move |m| {
+                    let pb = maj3(m);
+                    let bb = ((m >> 4) & 1) ^ u32::from(inv);
+                    let cb = ((m >> 3) & 1) + bb + ((m >> 5) & 1);
+                    ((cb & 1) == 1) ^ pb
+                },
+            );
+            s_in.push(s);
+            di.push(d);
+        }
+        let (sum, co) = self.carry_chain(&s_in, &di, cin);
+        let mut out = sum;
+        out.push(co);
+        out
+    }
+
+    /// Constant bus of `width` bits holding `value`.
+    pub fn constant(&mut self, width: u32, value: u64) -> Vec<Net> {
+        (0..width).map(|i| if (value >> i) & 1 == 1 { NET1 } else { NET0 }).collect()
+    }
+}
+
+/// Specialize a truth table over constant inputs (NET0/NET1), returning
+/// the surviving inputs and the reduced table.
+fn fold_constants(inputs: &[Net], truth: u64) -> (Vec<Net>, u64) {
+    let mut ins: Vec<Net> = inputs.to_vec();
+    let mut t = truth;
+    let mut i = 0;
+    while i < ins.len() {
+        let n = ins[i];
+        if n == NET0 || n == NET1 {
+            let bit = u32::from(n == NET1);
+            // Collapse input i: keep entries where input i == bit.
+            let k = ins.len();
+            let mut nt = 0u64;
+            for m in 0..(1u32 << (k - 1)) {
+                let low = m & ((1 << i) - 1);
+                let high = (m >> i) << (i + 1);
+                let full = high | (bit << i) | low;
+                if (t >> full) & 1 == 1 {
+                    nt |= 1 << m;
+                }
+            }
+            t = nt;
+            ins.remove(i);
+        } else {
+            i += 1;
+        }
+    }
+    // Drop don't-care inputs (function independent of them).
+    let mut i = 0;
+    while i < ins.len() {
+        let k = ins.len();
+        let mut independent = true;
+        for m in 0..(1u32 << k) {
+            if (t >> m) & 1 != (t >> (m ^ (1 << i))) & 1 {
+                independent = false;
+                break;
+            }
+        }
+        if independent {
+            let mut nt = 0u64;
+            for m in 0..(1u32 << (k - 1)) {
+                let low = m & ((1 << i) - 1);
+                let high = (m >> i) << (i + 1);
+                if (t >> (high | low)) & 1 == 1 {
+                    nt |= 1 << m;
+                }
+            }
+            t = nt;
+            ins.remove(i);
+        } else {
+            i += 1;
+        }
+    }
+    (ins, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::sim::Simulator;
+
+    fn eval1(nl: &Netlist, ins: &[(&str, u64)]) -> u64 {
+        let sim = Simulator::new(nl);
+        let out = sim.run_single(ins);
+        out[0].1
+    }
+
+    #[test]
+    fn lut_truth_table() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 2);
+        let x = nl.xor2(a[0], a[1]);
+        nl.output("x", &[x]);
+        for v in 0..4u64 {
+            let want = (v & 1) ^ ((v >> 1) & 1);
+            assert_eq!(eval1(&nl, &[("a", v)]), want);
+        }
+    }
+
+    #[test]
+    fn adder_exhaustive_8bit() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 8);
+        let b = nl.input("b", 8);
+        let (sum, co) = nl.adder(&a, &b, NET0);
+        let mut out = sum;
+        out.push(co);
+        nl.output("s", &out);
+        let sim = Simulator::new(&nl);
+        for a in (0..256u64).step_by(7) {
+            for b in 0..256u64 {
+                let got = sim.run_single(&[("a", a), ("b", b)])[0].1;
+                assert_eq!(got, a + b, "{a}+{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn subtractor_exhaustive() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 8);
+        let b = nl.input("b", 8);
+        let (d, bor) = nl.subtractor(&a, &b, NET1);
+        let mut out = d;
+        out.push(bor);
+        nl.output("d", &out);
+        let sim = Simulator::new(&nl);
+        for a in (0..256u64).step_by(11) {
+            for b in 0..256u64 {
+                let got = sim.run_single(&[("a", a), ("b", b)])[0].1;
+                let want = (a.wrapping_sub(b) & 0xFF) | (u64::from(a >= b) << 8);
+                assert_eq!(got, want, "{a}-{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_adder_matches_sum() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 8);
+        let b = nl.input("b", 8);
+        let c = nl.input("c", 8);
+        let s = nl.ternary_adder(&a, &b, &c);
+        nl.output("s", &s);
+        let sim = Simulator::new(&nl);
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..2_000 {
+            let (a, b, c) = (rng.below(256), rng.below(256), rng.below(256));
+            let got = sim.run_single(&[("a", a), ("b", b), ("c", c)])[0].1;
+            assert_eq!(got, a + b + c, "{a}+{b}+{c}");
+        }
+    }
+
+    #[test]
+    fn mux_and_or_tree() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 6);
+        let sel = nl.input("sel", 1);
+        let any = nl.or_tree(&a);
+        let m = nl.mux2(sel[0], a[0], any);
+        nl.output("m", &[m]);
+        assert_eq!(eval1(&nl, &[("a", 0b100), ("sel", 1)]), 1);
+        assert_eq!(eval1(&nl, &[("a", 0b100), ("sel", 0)]), 0);
+        assert_eq!(eval1(&nl, &[("a", 0b101), ("sel", 0)]), 1);
+    }
+
+    #[test]
+    fn wide_or_tree() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 32);
+        let any = nl.or_tree(&a);
+        nl.output("o", &[any]);
+        assert_eq!(eval1(&nl, &[("a", 0)]), 0);
+        assert_eq!(eval1(&nl, &[("a", 1 << 31)]), 1);
+        assert_eq!(eval1(&nl, &[("a", 0x0001_0000)]), 1);
+    }
+
+    #[test]
+    fn lut52_dual_outputs() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 4);
+        // O5 = zero flag (NOR), O6 = parity.
+        let (z, p) = nl.lut52(&a, |m| m == 0, |m| (m.count_ones() & 1) == 1);
+        nl.output("zp", &[z, p]);
+        let sim = Simulator::new(&nl);
+        for v in 0..16u64 {
+            let got = sim.run_single(&[("a", v)])[0].1;
+            let want = u64::from(v == 0) | (u64::from((v.count_ones() & 1) == 1) << 1);
+            assert_eq!(got, want, "v={v}");
+        }
+    }
+}

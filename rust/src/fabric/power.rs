@@ -1,0 +1,161 @@
+//! Toggle-based dynamic power estimation.
+//!
+//! The simulator packs 64 consecutive random input vectors into each net's
+//! word, so `popcount(v ^ (v << 1))` counts that net's transitions over the
+//! vector stream — the switching-activity measure Vivado's Power Analyzer
+//! derives from simulation traces (§4.1 of the paper: power is reported
+//! from Power Analyzer simulations over uniform random inputs).
+//!
+//! `P_total = p_dyn_coeff · (toggles per vector across all nets)
+//!          + p_static_lut · LUTs`.
+
+use super::netlist::{Cell, Netlist};
+use super::sim::Simulator;
+use super::timing::Calibration;
+use crate::util::Rng;
+
+/// Default number of random vectors for power estimation.
+pub const DEFAULT_VECTORS: u32 = 4096;
+
+/// Power figures for one design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PowerReport {
+    /// Dynamic power (mW) at the calibrated activity coefficient.
+    pub dynamic_mw: f64,
+    /// Static + clock-tree power (mW).
+    pub static_mw: f64,
+    /// Total (mW).
+    pub total_mw: f64,
+    /// Mean toggles per input vector across all cell-output nets.
+    pub toggles_per_vector: f64,
+}
+
+/// Estimate power over `vectors` uniform random input vectors.
+/// `delay_ns` is the design's cycle time: dynamic power is switching
+/// energy per operation divided by the operation period (a long-latency
+/// design amortizes its toggles over more time), so
+/// `P_dyn = p_dyn_coeff · toggles/vector / delay_ns`.
+pub fn estimate_at(
+    nl: &Netlist,
+    cal: &Calibration,
+    seed: u64,
+    vectors: u32,
+    delay_ns: f64,
+) -> PowerReport {
+    let sim = Simulator::new(nl);
+    let mut rng = Rng::new(seed);
+    let words = (vectors as usize).div_ceil(64);
+    let mut toggles = 0u64;
+
+    // Which nets are cell outputs (they carry the capacitive load that
+    // matters; input nets toggle for free from the testbench).
+    let mut is_out = vec![false; nl.net_count()];
+    for c in &nl.cells {
+        match c {
+            Cell::Lut { out, .. } => is_out[*out as usize] = true,
+            Cell::Lut52 { out5, out6, .. } => {
+                is_out[*out5 as usize] = true;
+                is_out[*out6 as usize] = true;
+            }
+            Cell::Carry4 { o, co, .. } => {
+                for k in 0..4 {
+                    is_out[o[k] as usize] = true;
+                    is_out[co[k] as usize] = true;
+                }
+            }
+        }
+    }
+
+    for _ in 0..words {
+        // 64 random vectors: each input bit gets an independent random word
+        // (bit t of the word = value at time-step t).
+        let set: Vec<(&str, Vec<u64>)> = nl
+            .inputs
+            .iter()
+            .map(|bus| {
+                let words: Vec<u64> = bus.nets.iter().map(|_| rng.next_u64()).collect();
+                (bus.name.as_str(), words)
+            })
+            .collect();
+        let v = sim.eval_word(&set);
+        for (n, &val) in v.iter().enumerate() {
+            if is_out[n] {
+                toggles += (val ^ (val << 1)).count_ones() as u64;
+            }
+        }
+    }
+
+    let per_vec = toggles as f64 / (words as f64 * 64.0);
+    let luts = super::area::report(nl).luts as f64;
+    let dynamic = cal.p_dyn_coeff * per_vec / delay_ns.max(1e-9);
+    let stat = cal.p_static_lut * luts;
+    PowerReport {
+        dynamic_mw: dynamic,
+        static_mw: stat,
+        total_mw: dynamic + stat,
+        toggles_per_vector: per_vec,
+    }
+}
+
+/// Convenience: estimate with the design's own critical-path delay.
+pub fn estimate(nl: &Netlist, cal: &Calibration, seed: u64, vectors: u32) -> PowerReport {
+    let delay = super::timing::analyze(nl, cal).critical_ns;
+    estimate_at(nl, cal, seed, vectors, delay)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::netlist::{Netlist, NET0};
+
+    #[test]
+    fn bigger_circuit_draws_more_power() {
+        let power = |w: u32| {
+            let mut nl = Netlist::new();
+            let a = nl.input("a", w);
+            let b = nl.input("b", w);
+            let (s, _) = nl.adder(&a, &b, NET0);
+            nl.output("s", &s);
+            estimate(&nl, &Calibration::default(), 1, 2048).total_mw
+        };
+        assert!(power(8) < power(16));
+        assert!(power(16) < power(32));
+    }
+
+    #[test]
+    fn constant_circuit_has_no_dynamic_power() {
+        let mut nl = Netlist::new();
+        let _a = nl.input("a", 4);
+        let c = nl.constant(4, 0b1010);
+        nl.output("c", &c);
+        let r = estimate(&nl, &Calibration::default(), 2, 1024);
+        assert_eq!(r.toggles_per_vector, 0.0);
+        assert_eq!(r.dynamic_mw, 0.0);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 8);
+        let b = nl.input("b", 8);
+        let (s, _) = nl.adder(&a, &b, NET0);
+        nl.output("s", &s);
+        let r1 = estimate(&nl, &Calibration::default(), 7, 1024);
+        let r2 = estimate(&nl, &Calibration::default(), 7, 1024);
+        assert_eq!(r1.total_mw, r2.total_mw);
+    }
+
+    #[test]
+    fn toggle_rate_is_plausible() {
+        // An 8-bit adder's outputs toggle roughly half the time each.
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 8);
+        let b = nl.input("b", 8);
+        let (s, _) = nl.adder(&a, &b, NET0);
+        nl.output("s", &s);
+        let r = estimate(&nl, &Calibration::default(), 3, 4096);
+        // 8 sum outs + 8 propagate luts + carries ≈ 24 nets, ~0.5 each.
+        assert!(r.toggles_per_vector > 5.0 && r.toggles_per_vector < 20.0,
+            "toggles/vec {}", r.toggles_per_vector);
+    }
+}

@@ -1,0 +1,183 @@
+//! Static timing analysis with calibrated Virtex-7 primitive delays.
+//!
+//! Arrival times propagate through the netlist in one topological pass:
+//!
+//! * LUT output    = max(input arrivals) + `t_lut` + `t_net`
+//!   (`t_net` is the average general-routing hop that follows a LUT);
+//! * CARRY4 `O_i`  = max(S_i arrival, chain carry arrival) + `t_carry_out`;
+//! * CARRY4 `CO_i` = max(S_i/DI_i, carry in) + `t_carry_bit`
+//!   (dedicated CO→CIN routing has no `t_net`).
+//!
+//! Critical path = max arrival over primary-output nets.
+//!
+//! ## Calibration
+//! The constants are fitted once against the two *accurate baselines* the
+//! paper reports from Vivado on the VC707 (Table 2): the soft multiplier IP
+//! (287 LUT, 6.4 ns) and divider IP (168 LUT, 21.4 ns). Everything else the
+//! model produces is a prediction. Defaults below are standard Virtex-7
+//! data-sheet magnitudes (LUT ≈ 0.12 ns, net ≈ 0.6 ns, carry ≈ 30 ps/bit).
+
+use super::netlist::{Cell, Netlist};
+
+/// Calibrated primitive delays (ns) and power coefficients.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// LUT logic delay (ns).
+    pub t_lut: f64,
+    /// Average general-routing delay after a LUT output (ns).
+    pub t_net: f64,
+    /// Carry propagation per bit inside/between CARRY4 (ns).
+    pub t_carry_bit: f64,
+    /// S/DI entry into the chain and O exit mux (ns).
+    pub t_carry_out: f64,
+    /// Dynamic power coefficient: mW per (toggle/vector · net).
+    pub p_dyn_coeff: f64,
+    /// Static + clocking power per LUT (mW).
+    pub p_static_lut: f64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            t_lut: 0.12,
+            t_net: 0.55,
+            t_carry_bit: 0.035,
+            t_carry_out: 0.10,
+            p_dyn_coeff: 0.040,
+            p_static_lut: 0.045,
+        }
+    }
+}
+
+/// Timing result for one design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimingReport {
+    /// Critical-path delay (ns).
+    pub critical_ns: f64,
+    /// Logic levels (LUT hops) on the critical path.
+    pub levels: u32,
+}
+
+/// Propagate arrival times and return the critical path.
+pub fn analyze(nl: &Netlist, cal: &Calibration) -> TimingReport {
+    let mut t = vec![0.0f64; nl.net_count()];
+    let mut lvl = vec![0u32; nl.net_count()];
+    for cell in &nl.cells {
+        match cell {
+            Cell::Lut { inputs, out, .. } => {
+                let (mut a, mut l) = (0.0f64, 0u32);
+                for &i in inputs {
+                    a = a.max(t[i as usize]);
+                    l = l.max(lvl[i as usize]);
+                }
+                t[*out as usize] = a + cal.t_lut + cal.t_net;
+                lvl[*out as usize] = l + 1;
+            }
+            Cell::Lut52 { inputs, out5, out6, .. } => {
+                let (mut a, mut l) = (0.0f64, 0u32);
+                for &i in inputs {
+                    a = a.max(t[i as usize]);
+                    l = l.max(lvl[i as usize]);
+                }
+                for o in [*out5, *out6] {
+                    t[o as usize] = a + cal.t_lut + cal.t_net;
+                    lvl[o as usize] = l + 1;
+                }
+            }
+            Cell::Carry4 { s, di, cin, o, co } => {
+                let mut carry_t = t[*cin as usize];
+                let mut carry_l = lvl[*cin as usize];
+                for k in 0..4 {
+                    let sd = t[s[k] as usize].max(t[di[k] as usize]);
+                    let sl = lvl[s[k] as usize].max(lvl[di[k] as usize]);
+                    // CO_k: worst of incoming carry and this bit's S/DI.
+                    carry_t = carry_t.max(sd) + cal.t_carry_bit;
+                    carry_l = carry_l.max(sl);
+                    t[co[k] as usize] = carry_t;
+                    lvl[co[k] as usize] = carry_l;
+                    // O_k = S_k ⊕ C_k through the XOR mux.
+                    t[o[k] as usize] =
+                        t[s[k] as usize].max(carry_t - cal.t_carry_bit) + cal.t_carry_out;
+                    lvl[o[k] as usize] = carry_l;
+                }
+            }
+        }
+    }
+    let mut rep = TimingReport::default();
+    for bus in &nl.outputs {
+        for &n in &bus.nets {
+            if t[n as usize] > rep.critical_ns {
+                rep.critical_ns = t[n as usize];
+                rep.levels = lvl[n as usize];
+            }
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::netlist::{Netlist, NET0};
+
+    fn cal() -> Calibration {
+        Calibration::default()
+    }
+
+    #[test]
+    fn single_lut_delay() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 2);
+        let x = nl.xor2(a[0], a[1]);
+        nl.output("x", &[x]);
+        let r = analyze(&nl, &cal());
+        assert!((r.critical_ns - (cal().t_lut + cal().t_net)).abs() < 1e-12);
+        assert_eq!(r.levels, 1);
+    }
+
+    #[test]
+    fn chain_depth_accumulates() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 1);
+        let mut x = a[0];
+        for _ in 0..5 {
+            x = nl.not(x);
+        }
+        nl.output("x", &[x]);
+        let r = analyze(&nl, &cal());
+        assert_eq!(r.levels, 5);
+        assert!((r.critical_ns - 5.0 * (cal().t_lut + cal().t_net)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adder_carry_is_fast() {
+        // A 32-bit adder must be far faster than 32 LUT levels: the carry
+        // chain contributes ~t_carry_bit per bit, not t_lut + t_net.
+        let mut nl = Netlist::new();
+        let a = nl.input("a", 32);
+        let b = nl.input("b", 32);
+        let (s, co) = nl.adder(&a, &b, NET0);
+        let mut out = s;
+        out.push(co);
+        nl.output("s", &out);
+        let r = analyze(&nl, &cal());
+        let lut_level = cal().t_lut + cal().t_net;
+        assert!(r.critical_ns < lut_level + 33.0 * cal().t_carry_bit + cal().t_carry_out + 0.01,
+            "32-bit add too slow: {} ns", r.critical_ns);
+        assert!(r.critical_ns > lut_level, "must include the propagate LUT");
+    }
+
+    #[test]
+    fn wider_adder_is_slower() {
+        let delay = |w: u32| {
+            let mut nl = Netlist::new();
+            let a = nl.input("a", w);
+            let b = nl.input("b", w);
+            let (s, _) = nl.adder(&a, &b, NET0);
+            nl.output("s", &s);
+            analyze(&nl, &cal()).critical_ns
+        };
+        assert!(delay(8) < delay(16));
+        assert!(delay(16) < delay(32));
+    }
+}

@@ -1,0 +1,59 @@
+//! Image-processing substrate for the paper's §4.3 applications (Figs.
+//! 3–4): multiply-based image blending and Gaussian smoothing, each with a
+//! pluggable multiplier/divider so accurate, SIMDive, MBM and INZeD
+//! variants run the *same* code path.
+//!
+//! USC-SIPI is not reachable offline; [`synth`] generates deterministic
+//! photographic-statistics test images instead (DESIGN.md §1).
+
+pub mod ops;
+pub mod pgm;
+pub mod synth;
+
+pub use ops::{blend, gaussian_smooth, ArithKind};
+
+/// An 8-bit grayscale image.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Self {
+        Image { width, height, data: vec![0; width * height] }
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> u8 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Clamped accessor (edge replication) for convolution borders.
+    #[inline]
+    pub fn at_clamped(&self, x: isize, y: isize) -> u8 {
+        let xc = x.clamp(0, self.width as isize - 1) as usize;
+        let yc = y.clamp(0, self.height as isize - 1) as usize;
+        self.at(xc, yc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamped_access_replicates_edges() {
+        let mut img = Image::new(4, 4);
+        img.set(0, 0, 9);
+        img.set(3, 3, 7);
+        assert_eq!(img.at_clamped(-2, -2), 9);
+        assert_eq!(img.at_clamped(5, 5), 7);
+    }
+}

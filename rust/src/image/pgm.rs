@@ -1,0 +1,73 @@
+//! Minimal binary PGM (P5) reader/writer so experiment outputs can be
+//! inspected with standard tools.
+
+use super::Image;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Write an image as binary PGM.
+pub fn write_pgm(img: &Image, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write!(f, "P5\n{} {}\n255\n", img.width, img.height)?;
+    f.write_all(&img.data)?;
+    Ok(())
+}
+
+/// Read a binary PGM.
+pub fn read_pgm(path: &Path) -> Result<Image> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    // Parse header: magic, width, height, maxval, single whitespace, data.
+    let mut pos = 0usize;
+    let mut token = || -> Result<String> {
+        while pos < buf.len() && buf[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if pos < buf.len() && buf[pos] == b'#' {
+            while pos < buf.len() && buf[pos] != b'\n' {
+                pos += 1;
+            }
+            while pos < buf.len() && buf[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+        }
+        let start = pos;
+        while pos < buf.len() && !buf[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        Ok(String::from_utf8_lossy(&buf[start..pos]).into_owned())
+    };
+    if token()? != "P5" {
+        bail!("not a binary PGM");
+    }
+    let width: usize = token()?.parse()?;
+    let height: usize = token()?.parse()?;
+    let maxval: usize = token()?.parse()?;
+    if maxval != 255 {
+        bail!("only 8-bit PGM supported");
+    }
+    pos += 1; // single whitespace after maxval
+    let data = buf[pos..pos + width * height].to_vec();
+    Ok(Image { width, height, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{generate, Scene};
+
+    #[test]
+    fn roundtrip() {
+        let img = generate(Scene::Shapes, 32, 9);
+        let dir = std::env::temp_dir().join("simdive_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        write_pgm(&img, &path).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert_eq!(img, back);
+    }
+}

@@ -1,0 +1,32 @@
+//! # SIMDive — full-system reproduction
+//!
+//! Approximate SIMD soft multiplier-divider for FPGAs with tunable accuracy
+//! (Ebrahimi, Ullah, Kumar — GLSVLSI 2020), rebuilt as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * [`arith`] — bit-exact behavioral models of SIMDive and every baseline.
+//! * [`fabric`] — simulated Virtex-7 fabric (LUT6/CARRY4 netlists, area,
+//!   timing, power) standing in for Vivado + the VC707 board.
+//! * [`circuits`] — gate-level netlists of all designs, verified against
+//!   [`arith`].
+//! * [`metrics`] — ARE/PRE/NED/CF/PSNR evaluators for the paper's tables.
+//! * [`image`], [`ann`], [`datasets`] — the application substrates of the
+//!   paper's §4.3 (image blending, Gaussian smoothing, quantized MLP).
+//! * [`coordinator`] — the L3 SIMD dispatch engine (lane packing, batching,
+//!   power gating).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (Python never runs on the request path).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod arith;
+pub mod ann;
+pub mod circuits;
+pub mod datasets;
+pub mod fabric;
+pub mod image;
+pub mod coordinator;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,151 @@
+//! `repro` — CLI entry point for the SIMDive reproduction.
+//!
+//! Subcommands regenerate each paper table/figure (DESIGN.md §5), export
+//! golden vectors for the Python layer, and run the serving demo.
+
+use simdive::report;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [args]\n\
+         commands:\n\
+         \ttable2 [--samples N]   SISD multiplier/divider metrics (Table 2)\n\
+         \ttable3                 32-bit SIMD metrics (Table 3)\n\
+         \ttable4 [--fast]        ANN accuracy (Table 4)\n\
+         \tfig1                   Mitchell error heat maps (Fig. 1)\n\
+         \tfig3                   image blending PSNR (Fig. 3)\n\
+         \tfig4                   Gaussian smoothing PSNR (Fig. 4)\n\
+         \ttunable [--samples N]  accuracy-vs-w sweep (§3.3)\n\
+         \texport-golden          golden vectors for python tests\n\
+         \tdemo                   quick SIMD coordinator demo\n\
+         \tserve [--requests N]   batched serving demo through the coordinator\n\
+         \tall                    every table + figure in sequence"
+    );
+    std::process::exit(2)
+}
+
+fn arg_u64(args: &[String], name: &str, default: u64) -> u64 {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "table2" => {
+            let samples = arg_u64(&args, "--samples", report::table2::ERROR_SAMPLES);
+            println!("{}", report::table2::render(samples));
+        }
+        "table3" => println!("{}", report::table3::render()),
+        "table4" => {
+            let scale = if args.iter().any(|a| a == "--fast") {
+                report::table4::Scale { train: 1500, test: 300, epochs: 3, nodes: 48 }
+            } else {
+                report::table4::Scale::default()
+            };
+            println!("{}", report::table4::render(scale));
+        }
+        "fig1" => println!("{}", report::figs::fig1()?),
+        "fig3" => println!("{}", report::figs::fig3()?),
+        "fig4" => println!("{}", report::figs::fig4()?),
+        "tunable" => {
+            let samples = arg_u64(&args, "--samples", 300_000);
+            println!("{}", report::tunable::render(samples));
+        }
+        "export-golden" => println!("{}", report::golden::export()?),
+        "demo" => demo(),
+        "serve" => serve(arg_u64(&args, "--requests", 100_000)),
+        "all" => {
+            let samples = arg_u64(&args, "--samples", report::table2::ERROR_SAMPLES);
+            println!("{}", report::table2::render(samples));
+            println!("{}", report::table3::render());
+            println!("{}", report::table4::render(report::table4::Scale::default()));
+            println!("{}", report::figs::fig1()?);
+            println!("{}", report::figs::fig3()?);
+            println!("{}", report::figs::fig4()?);
+            println!("{}", report::tunable::render(300_000));
+            println!("{}", report::golden::export()?);
+        }
+        _ => usage(),
+    }
+    Ok(())
+}
+
+/// Quick demonstration of the paper's running example + SIMD packing.
+fn demo() {
+    use simdive::arith::{exact, mitchell, simdive as sd};
+    println!("SIMDive demo — paper running example (43 × 10, 43 ÷ 10):");
+    println!("  exact    : {} , {}", exact::mul(8, 43, 10), exact::div(8, 43, 10));
+    println!("  mitchell : {} , {}", mitchell::mul(8, 43, 10), mitchell::div(8, 43, 10));
+    println!("  simdive  : {} , {}", sd::simdive_mul(8, 43, 10), sd::simdive_div(8, 43, 10));
+    use simdive::coordinator::{Coordinator, CoordinatorConfig, ReqOp, Request};
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let mut handles = Vec::new();
+    for i in 0..16u64 {
+        handles.push(coord.submit(Request {
+            id: i,
+            op: if i % 3 == 0 { ReqOp::Div } else { ReqOp::Mul },
+            bits: [8, 16, 32][(i % 3) as usize],
+            a: 40 + i,
+            b: 3 + i,
+        }));
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.recv().unwrap();
+        println!("  req {i}: {}", r.value);
+    }
+    let s = coord.shutdown();
+    println!(
+        "coordinator: {} reqs in {} words, lane utilization {:.0}%, energy {:.1} nJ",
+        s.requests,
+        s.words,
+        s.lane_utilization() * 100.0,
+        s.energy_pj / 1000.0
+    );
+}
+
+/// Serving benchmark through the coordinator.
+fn serve(n: u64) {
+    use simdive::coordinator::{Coordinator, CoordinatorConfig, ReqOp, Request};
+    use simdive::util::Rng;
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let mut rng = Rng::new(0xD15C0);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(1024);
+    let mut done = 0u64;
+    for i in 0..n {
+        let bits = [8u32, 8, 8, 16, 16, 32][rng.below(6) as usize];
+        handles.push(coord.submit(Request {
+            id: i,
+            op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
+            bits,
+            a: rng.operand(bits),
+            b: rng.operand(bits),
+        }));
+        if handles.len() >= 1024 {
+            for h in handles.drain(..) {
+                h.recv().unwrap();
+                done += 1;
+            }
+        }
+    }
+    for h in handles.drain(..) {
+        h.recv().unwrap();
+        done += 1;
+    }
+    let dt = t0.elapsed();
+    let s = coord.shutdown();
+    println!(
+        "served {done} requests in {:.3}s ({:.1} kops/s) — {} words, lane util {:.0}%, \
+         model energy {:.2} µJ",
+        dt.as_secs_f64(),
+        done as f64 / dt.as_secs_f64() / 1e3,
+        s.words,
+        s.lane_utilization() * 100.0,
+        s.energy_pj / 1e6
+    );
+}

@@ -1,0 +1,152 @@
+//! ARE / PRE / NED evaluators over the design registry.
+//!
+//! Error convention (paper §4.1): behavioral models are compared in the
+//! reals — `|accurate − approx| / accurate` — over uniformly distributed
+//! random operands (10^6 for SISD). NED is the mean error distance divided
+//! by the maximum error distance observed.
+
+use crate::arith::{DivDesign, MulDesign};
+use crate::util::Rng;
+
+/// Error statistics for one design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorReport {
+    /// Average absolute relative error, percent.
+    pub are_pct: f64,
+    /// Peak absolute relative error, percent.
+    pub pre_pct: f64,
+    /// Normalized error distance (mean |ED| / max |ED| over the sample).
+    pub ned: f64,
+}
+
+/// Evaluate a multiplier over `samples` uniform non-zero pairs at `bits`.
+pub fn mul_error(design: MulDesign, bits: u32, samples: u64, seed: u64) -> ErrorReport {
+    let mut rng = Rng::new(seed);
+    let (mut sum_rel, mut peak_rel) = (0.0f64, 0.0f64);
+    let (mut sum_ed, mut max_ed) = (0.0f64, 0.0f64);
+    for _ in 0..samples {
+        let a = rng.operand(bits);
+        let b = rng.operand(bits);
+        let exact = (a as f64) * (b as f64);
+        let approx = design.mul_real(bits, a, b);
+        let ed = (exact - approx).abs();
+        let rel = ed / exact;
+        sum_rel += rel;
+        peak_rel = peak_rel.max(rel);
+        sum_ed += ed;
+        max_ed = max_ed.max(ed);
+    }
+    ErrorReport {
+        are_pct: sum_rel / samples as f64 * 100.0,
+        pre_pct: peak_rel * 100.0,
+        ned: if max_ed == 0.0 { 0.0 } else { sum_ed / samples as f64 / max_ed },
+    }
+}
+
+/// Evaluate a divider over the paper's 16/8-style scenario: `bits`-wide
+/// dividend, `divisor_bits`-wide divisor, quotient ≥ 1 (a ≥ b).
+pub fn div_error(
+    design: DivDesign,
+    bits: u32,
+    divisor_bits: u32,
+    samples: u64,
+    seed: u64,
+) -> ErrorReport {
+    let mut rng = Rng::new(seed);
+    let (mut sum_rel, mut peak_rel) = (0.0f64, 0.0f64);
+    let (mut sum_ed, mut max_ed) = (0.0f64, 0.0f64);
+    let mut n = 0u64;
+    while n < samples {
+        let a = rng.operand(bits);
+        let b = rng.operand(divisor_bits);
+        if a < b {
+            continue;
+        }
+        let exact = a as f64 / b as f64;
+        let approx = design.div_real(bits, a, b);
+        let ed = (exact - approx).abs();
+        let rel = ed / exact;
+        sum_rel += rel;
+        peak_rel = peak_rel.max(rel);
+        sum_ed += ed;
+        max_ed = max_ed.max(ed);
+        n += 1;
+    }
+    ErrorReport {
+        are_pct: sum_rel / samples as f64 * 100.0,
+        pre_pct: peak_rel * 100.0,
+        ned: if max_ed == 0.0 { 0.0 } else { sum_ed / samples as f64 / max_ed },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accurate_designs_have_zero_error() {
+        let m = mul_error(MulDesign::Accurate, 16, 50_000, 1);
+        assert_eq!(m.are_pct, 0.0);
+        assert_eq!(m.pre_pct, 0.0);
+        assert_eq!(m.ned, 0.0);
+        let d = div_error(DivDesign::Accurate, 16, 8, 50_000, 1);
+        assert_eq!(d.are_pct, 0.0);
+    }
+
+    #[test]
+    fn table2_mul_error_ordering() {
+        // Paper Table 2 ordering: Proposed (0.82) < Trunc15x7 (1.19) <
+        // Trunc7x7 (2.35) < MBM (2.63) < Mitchell (3.85); CA lowest (0.3).
+        let n = 300_000;
+        let are = |d: MulDesign| mul_error(d, 16, n, 7).are_pct;
+        let proposed = are(MulDesign::Simdive { w: 8 });
+        let mbm = are(MulDesign::Mbm);
+        let mitchell = are(MulDesign::Mitchell);
+        let ca = are(MulDesign::Ca);
+        assert!(proposed < mbm, "proposed {proposed} !< mbm {mbm}");
+        assert!(mbm < mitchell, "mbm {mbm} !< mitchell {mitchell}");
+        assert!(ca < proposed, "ca {ca} !< proposed {proposed}");
+        assert!(proposed < 1.1, "proposed ARE {proposed}");
+        assert!(mitchell > 3.0 && mitchell < 4.6, "mitchell ARE {mitchell}");
+    }
+
+    #[test]
+    fn table2_div_error_ordering() {
+        // Paper: Proposed (0.77) < INZeD (2.93) < Mitchell (4.11);
+        // AAXD(12/6) = 0.74, AAXD(8/4) = 2.99.
+        let n = 300_000;
+        let are = |d: DivDesign| div_error(d, 16, 8, n, 7).are_pct;
+        let proposed = are(DivDesign::Simdive { w: 8 });
+        let inzed = are(DivDesign::Inzed);
+        let mitchell = are(DivDesign::Mitchell);
+        let aaxd126 = are(DivDesign::Aaxd { m: 12, n: 6 });
+        let aaxd84 = are(DivDesign::Aaxd { m: 8, n: 4 });
+        assert!(proposed < inzed, "proposed {proposed} !< inzed {inzed}");
+        assert!(inzed < mitchell, "inzed {inzed} !< mitchell {mitchell}");
+        assert!(aaxd126 < aaxd84, "aaxd 12/6 {aaxd126} !< 8/4 {aaxd84}");
+        assert!(proposed < 1.3, "proposed div ARE {proposed}");
+        assert!(mitchell > 3.0 && mitchell < 5.0, "mitchell div ARE {mitchell}");
+    }
+
+    #[test]
+    fn simdive_peak_error_is_lowest_among_log_designs() {
+        // "lowest peak error among approximate designs (up to 20×)".
+        let n = 300_000;
+        let pre = |d: MulDesign| mul_error(d, 16, n, 9).pre_pct;
+        let proposed = pre(MulDesign::Simdive { w: 8 });
+        let mitchell = pre(MulDesign::Mitchell);
+        let mbm = pre(MulDesign::Mbm);
+        assert!(proposed < mitchell && proposed < mbm,
+            "proposed {proposed} vs mitchell {mitchell}, mbm {mbm}");
+        // Paper: 4.9 vs 11.11 (Mitchell) and 8.81 (MBM).
+        assert!(proposed < 6.5, "proposed PRE {proposed}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = mul_error(MulDesign::Mitchell, 16, 10_000, 3);
+        let b = mul_error(MulDesign::Mitchell, 16, 10_000, 3);
+        assert_eq!(a.are_pct, b.are_pct);
+        assert_eq!(a.ned, b.ned);
+    }
+}

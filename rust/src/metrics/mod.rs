@@ -1,0 +1,36 @@
+//! Quality metrics and evaluators for the paper's tables and figures:
+//! ARE / PRE (average / peak absolute relative error), NED (normalized
+//! error distance), the cost function CF = Area·Energy·Delay/(1−NED) [3],
+//! and PSNR for the image applications.
+
+pub mod error;
+pub mod psnr;
+
+pub use error::{div_error, mul_error, ErrorReport};
+pub use psnr::psnr;
+
+/// The paper's cost function [3]: `Area × Energy × Delay / (1 − NED)`,
+/// normalized by the caller against the accurate design's value.
+pub fn cost_function(area_luts: f64, energy_pj: f64, delay_ns: f64, ned: f64) -> f64 {
+    area_luts * energy_pj * delay_ns / (1.0 - ned).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cf_monotone_in_each_factor() {
+        let base = cost_function(100.0, 200.0, 5.0, 0.1);
+        assert!(cost_function(110.0, 200.0, 5.0, 0.1) > base);
+        assert!(cost_function(100.0, 220.0, 5.0, 0.1) > base);
+        assert!(cost_function(100.0, 200.0, 5.5, 0.1) > base);
+        assert!(cost_function(100.0, 200.0, 5.0, 0.2) > base);
+    }
+
+    #[test]
+    fn cf_accurate_design_has_zero_ned() {
+        let acc = cost_function(287.0, 306.0, 6.4, 0.0);
+        assert!((acc - 287.0 * 306.0 * 6.4).abs() < 1e-9);
+    }
+}

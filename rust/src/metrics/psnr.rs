@@ -1,0 +1,49 @@
+//! PSNR for the image-processing experiments (Figs. 3–4).
+
+/// Peak signal-to-noise ratio between two same-sized 8-bit images, dB.
+/// Identical images return +inf.
+pub fn psnr(reference: &[u8], test: &[u8]) -> f64 {
+    assert_eq!(reference.len(), test.len());
+    assert!(!reference.is_empty());
+    let mse: f64 = reference
+        .iter()
+        .zip(test)
+        .map(|(&r, &t)| {
+            let d = r as f64 - t as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / reference.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (255.0f64 * 255.0 / mse).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_infinite() {
+        let img = vec![42u8; 100];
+        assert!(psnr(&img, &img).is_infinite());
+    }
+
+    #[test]
+    fn one_lsb_error_everywhere_is_48db() {
+        let a = vec![100u8; 1000];
+        let b = vec![101u8; 1000];
+        let p = psnr(&a, &b);
+        assert!((p - 48.13).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn larger_error_lower_psnr() {
+        let a = vec![100u8; 1000];
+        let b = vec![110u8; 1000];
+        let c = vec![150u8; 1000];
+        assert!(psnr(&a, &b) > psnr(&a, &c));
+    }
+}

@@ -1,0 +1,72 @@
+//! Golden-vector export: pins the Python layers (Pallas kernel and jnp
+//! oracle) to the Rust behavioral models. Format: one line per case,
+//! `a b result`, plus a JSON-ish manifest of the correction tables.
+
+use crate::arith::{simdive, table};
+use crate::util::Rng;
+use std::fmt::Write as _;
+
+/// Write golden vectors + tables into `artifacts/golden/`.
+pub fn export() -> anyhow::Result<String> {
+    let dir = super::artifacts_dir().join("golden");
+    let mut count = 0usize;
+
+    for bits in [8u32, 16, 32] {
+        for w in [0u32, 8] {
+            let mut rng = Rng::new(0x601D + bits as u64 + w as u64);
+            let mut mul_txt = String::new();
+            let mut div_txt = String::new();
+            // Edge cases + random.
+            let mut cases: Vec<(u64, u64)> = vec![
+                (0, 0),
+                (0, 1),
+                (1, 0),
+                (1, 1),
+                (crate::arith::max_val(bits), crate::arith::max_val(bits)),
+                (crate::arith::max_val(bits), 1),
+                (1, crate::arith::max_val(bits)),
+                (43.min(crate::arith::max_val(bits)), 10),
+            ];
+            for _ in 0..2000 {
+                cases.push((rng.below(1 << bits.min(63)), rng.below(1 << bits.min(63))));
+            }
+            for &(a, b) in &cases {
+                writeln!(mul_txt, "{a} {b} {}", simdive::simdive_mul_w(bits, a, b, w)).ok();
+                writeln!(div_txt, "{a} {b} {}", simdive::simdive_div_w(bits, a, b, w)).ok();
+                count += 2;
+            }
+            std::fs::write(dir.join(format!("mul_{bits}_w{w}.txt")), mul_txt)?;
+            std::fs::write(dir.join(format!("div_{bits}_w{w}.txt")), div_txt)?;
+        }
+    }
+
+    // Correction tables at full resolution (signed fixed-point 2^-12).
+    let t = table::tables_for(8);
+    let mut tbl = String::from("# op i j coeff_fixed12\n");
+    for i in 0..8 {
+        for j in 0..8 {
+            writeln!(tbl, "mul {i} {j} {}", t.mul[i][j]).ok();
+        }
+    }
+    for i in 0..8 {
+        for j in 0..8 {
+            writeln!(tbl, "div {i} {j} {}", t.div[i][j]).ok();
+        }
+    }
+    std::fs::write(dir.join("tables_w8.txt"), tbl)?;
+    Ok(format!("exported {count} golden cases + tables to {}", dir.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn export_writes_files() {
+        std::env::set_var("SIMDIVE_ARTIFACTS", std::env::temp_dir().join("simdive_golden"));
+        let msg = super::export().unwrap();
+        assert!(msg.contains("exported"));
+        let dir = std::env::temp_dir().join("simdive_golden/golden");
+        assert!(dir.join("mul_8_w8.txt").exists());
+        assert!(dir.join("tables_w8.txt").exists());
+        std::env::remove_var("SIMDIVE_ARTIFACTS");
+    }
+}

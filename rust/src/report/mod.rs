@@ -1,0 +1,61 @@
+//! Experiment harness: one module per paper table/figure, each producing
+//! the same rows the paper reports. Shared by the CLI (`repro <exp>`) and
+//! the benches (`cargo bench`). See DESIGN.md §5 for the experiment index.
+
+pub mod figs;
+pub mod golden;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod tunable;
+
+/// Render a list of rows as an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    line(
+        &mut out,
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Output directory for experiment artifacts (CSV, images).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(
+        std::env::var("SIMDIVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let _ = std::fs::create_dir_all(dir.join("figures"));
+    let _ = std::fs::create_dir_all(dir.join("golden"));
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn render_alignment() {
+        let t = super::render_table(
+            &["name", "v"],
+            &[vec!["a".into(), "1".into()], vec!["long-name".into(), "22".into()]],
+        );
+        assert!(t.contains("long-name"));
+        assert!(t.lines().count() == 4);
+    }
+}

@@ -1,0 +1,249 @@
+//! Table 2: design metrics of SISD 16×16 multipliers and 16/8 dividers —
+//! Area (6-LUT), Delay (ns), Power (mW), Energy (µJ for 10^6 ops), ARE,
+//! PRE, and CF = A·E·D/(1−NED) normalized to the accurate design.
+
+use crate::arith::{DivDesign, MulDesign};
+use crate::circuits::{baselines, mitchell, simdive};
+use crate::fabric::{calibrate, power, timing, Netlist};
+use crate::metrics::{self, div_error, mul_error, ErrorReport};
+
+/// One row of Table 2.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: String,
+    pub area_luts: u32,
+    pub delay_ns: f64,
+    pub power_mw: f64,
+    pub energy_uj: f64,
+    pub err: ErrorReport,
+    pub cf: f64,
+}
+
+fn characterize(name: &str, nl: &Netlist, err: ErrorReport, seed: u64) -> Row {
+    let cal = calibrate::fitted();
+    let area = crate::fabric::area::report(nl);
+    let t = timing::analyze(nl, cal);
+    let p = power::estimate_at(nl, cal, seed, 4096, t.critical_ns);
+    // Energy for 10^6 operations: mW × ns = pJ/op → µJ per 10^6 ops.
+    let energy_uj = p.total_mw * t.critical_ns;
+    Row {
+        name: name.into(),
+        area_luts: area.luts,
+        delay_ns: t.critical_ns,
+        power_mw: p.total_mw,
+        energy_uj,
+        err,
+        cf: 0.0, // filled after normalization
+    }
+}
+
+/// Error-evaluation sample count (paper: 10^6 uniform inputs).
+pub const ERROR_SAMPLES: u64 = 1_000_000;
+
+/// Compute all Table-2 rows (multipliers, dividers, integrated unit).
+pub fn rows(samples: u64) -> (Vec<Row>, Vec<Row>, Row) {
+    let seed = 0xF00D;
+    // --- multipliers (16×16) ---
+    let mut muls = vec![
+        characterize(
+            "Accurate IP [36]",
+            &baselines::array_mul(16),
+            ErrorReport::default(),
+            seed,
+        ),
+        characterize(
+            "CA [30]",
+            &baselines::ca_mul(16),
+            mul_error(MulDesign::Ca, 16, samples, 1),
+            seed,
+        ),
+        characterize(
+            "Trunc (four 7x7)",
+            &baselines::trunc_mul(16, true, true),
+            mul_error(MulDesign::TruncFour7x7, 16, samples, 2),
+            seed,
+        ),
+        characterize(
+            "Trunc (two 15x7)",
+            &baselines::trunc_mul(16, false, true),
+            mul_error(MulDesign::TruncTwo15x7, 16, samples, 3),
+            seed,
+        ),
+        characterize(
+            "Mitchell [22]",
+            &mitchell::mul(16),
+            mul_error(MulDesign::Mitchell, 16, samples, 4),
+            seed,
+        ),
+        characterize(
+            "MBM [28]",
+            &baselines::mbm_mul(16),
+            mul_error(MulDesign::Mbm, 16, samples, 5),
+            seed,
+        ),
+        characterize(
+            "Proposed",
+            &simdive::mul(16, 8),
+            mul_error(MulDesign::Simdive { w: 8 }, 16, samples, 6),
+            seed,
+        ),
+    ];
+    // --- dividers (16/8) ---
+    let mut divs = vec![
+        characterize(
+            "Accurate IP [37]",
+            &baselines::restoring_div(16, 8),
+            ErrorReport::default(),
+            seed,
+        ),
+        characterize(
+            "AAXD (12/6) [13]",
+            &baselines::aaxd_div(16, 8, 12, 6),
+            div_error(DivDesign::Aaxd { m: 12, n: 6 }, 16, 8, samples, 7),
+            seed,
+        ),
+        characterize(
+            "AAXD (8/4) [13]",
+            &baselines::aaxd_div(16, 8, 8, 4),
+            div_error(DivDesign::Aaxd { m: 8, n: 4 }, 16, 8, samples, 8),
+            seed,
+        ),
+        characterize(
+            "Mitchell [22]",
+            &mitchell::div(16, 8),
+            div_error(DivDesign::Mitchell, 16, 8, samples, 9),
+            seed,
+        ),
+        characterize(
+            "INZeD [29]",
+            &baselines::inzed_div(16, 8),
+            div_error(DivDesign::Inzed, 16, 8, samples, 10),
+            seed,
+        ),
+        characterize(
+            "Proposed",
+            &simdive::div(16, 8, 8),
+            div_error(DivDesign::Simdive { w: 8 }, 16, 8, samples, 11),
+            seed,
+        ),
+    ];
+    // --- integrated hybrid mul-div ---
+    let hybrid = characterize(
+        "Proposed Integrated Mul-Div",
+        &simdive::hybrid(16, 8),
+        mul_error(MulDesign::Simdive { w: 8 }, 16, samples, 12),
+        seed,
+    );
+
+    // CF normalization against each group's accurate row.
+    let norm = |rows: &mut [Row]| {
+        let acc = metrics::cost_function(
+            rows[0].area_luts as f64,
+            rows[0].energy_uj,
+            rows[0].delay_ns,
+            0.0,
+        );
+        for r in rows.iter_mut() {
+            r.cf = metrics::cost_function(
+                r.area_luts as f64,
+                r.energy_uj,
+                r.delay_ns,
+                r.err.ned,
+            ) / acc;
+        }
+    };
+    norm(&mut muls);
+    norm(&mut divs);
+    let mut hybrid = hybrid;
+    hybrid.cf = metrics::cost_function(
+        hybrid.area_luts as f64,
+        hybrid.energy_uj,
+        hybrid.delay_ns,
+        hybrid.err.ned,
+    ) / metrics::cost_function(
+        muls[0].area_luts as f64,
+        muls[0].energy_uj,
+        muls[0].delay_ns,
+        0.0,
+    );
+    (muls, divs, hybrid)
+}
+
+/// Render Table 2 as text.
+pub fn render(samples: u64) -> String {
+    let (muls, divs, hybrid) = rows(samples);
+    let to_cells = |r: &Row| {
+        vec![
+            r.name.clone(),
+            r.area_luts.to_string(),
+            format!("{:.1}", r.delay_ns),
+            format!("{:.1}", r.power_mw),
+            format!("{:.0}", r.energy_uj),
+            if r.err.are_pct == 0.0 && r.name.contains("Accurate") {
+                "-".into()
+            } else {
+                format!("{:.2}", r.err.are_pct)
+            },
+            if r.err.pre_pct == 0.0 && r.name.contains("Accurate") {
+                "-".into()
+            } else {
+                format!("{:.2}", r.err.pre_pct)
+            },
+            format!("{:.2}", r.cf),
+        ]
+    };
+    let headers =
+        ["SISD Circuit", "Area(6-LUT)", "Delay(ns)", "Power(mW)", "Energy(uJ)", "ARE(%)", "PRE(%)", "CF"];
+    let mut out = String::from("== Table 2 — SISD multipliers (16x16) ==\n");
+    out += &super::render_table(&headers, &muls.iter().map(to_cells).collect::<Vec<_>>());
+    out += "\n== Table 2 — SISD dividers (16/8) ==\n";
+    out += &super::render_table(&headers, &divs.iter().map(to_cells).collect::<Vec<_>>());
+    out += "\n== Table 2 — integrated unit ==\n";
+    out += &super::render_table(&headers, &[to_cells(&hybrid)]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        // Small sample count for test speed; orderings are robust.
+        let (muls, divs, hybrid) = rows(60_000);
+        let find = |rows: &[Row], n: &str| -> Row {
+            rows.iter().find(|r| r.name.starts_with(n)).unwrap().clone()
+        };
+        let acc_m = find(&muls, "Accurate");
+        let mit_m = find(&muls, "Mitchell");
+        let prop_m = find(&muls, "Proposed");
+        // Mitchell-family faster than accurate; area parity within ~10%
+        // (the paper's 174-vs-287 LUT gap needs Vivado-level mux packing
+        // our structural mapper does not perform — EXPERIMENTS.md).
+        assert!((mit_m.area_luts as f64) < acc_m.area_luts as f64 * 1.15,
+            "mitchell {} vs accurate {}", mit_m.area_luts, acc_m.area_luts);
+        assert!(prop_m.delay_ns < acc_m.delay_ns);
+        // Proposed: best ARE of the Mitchell family; CF < 1.
+        assert!(prop_m.err.are_pct < mit_m.err.are_pct);
+        assert!(prop_m.cf < 1.0, "CF {}", prop_m.cf);
+
+        let acc_d = find(&divs, "Accurate");
+        let prop_d = find(&divs, "Proposed");
+        // Headline: proposed divider ≈4× faster, big energy gain.
+        let speedup = acc_d.delay_ns / prop_d.delay_ns;
+        assert!(speedup > 2.0, "div speedup {speedup}");
+        let egain = acc_d.energy_uj / prop_d.energy_uj;
+        assert!(egain > 2.0, "div energy gain {egain}");
+        // Integrated unit ≈ the two separate accurate IPs combined (the
+        // paper's stronger 268-vs-455 margin needs Vivado-level packing of
+        // the dual decoders; ours lands within ~10% of the combined IPs,
+        // still far below two separate SIMDive-class units).
+        assert!(
+            (hybrid.area_luts as f64)
+                < (acc_m.area_luts + acc_d.area_luts) as f64 * 1.15,
+            "hybrid {} vs {}",
+            hybrid.area_luts,
+            acc_m.area_luts + acc_d.area_luts
+        );
+    }
+}

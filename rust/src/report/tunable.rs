@@ -1,0 +1,76 @@
+//! §3.3/§3.4 tunable-accuracy sweep: ARE/PRE and area as a function of the
+//! number of coefficient LUTs `w` (0 = pure Mitchell … 8 = full SIMDive).
+
+use crate::arith::{DivDesign, MulDesign};
+use crate::circuits::simdive;
+use crate::metrics::{div_error, mul_error};
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub w: u32,
+    pub mul_are: f64,
+    pub mul_pre: f64,
+    pub div_are: f64,
+    pub div_pre: f64,
+    pub mul_area_luts: u32,
+}
+
+pub fn sweep(samples: u64) -> Vec<Point> {
+    (0..=8u32)
+        .map(|w| {
+            let m = mul_error(MulDesign::Simdive { w }, 16, samples, 100 + w as u64);
+            let d = div_error(DivDesign::Simdive { w }, 16, 8, samples, 200 + w as u64);
+            let area = crate::fabric::area::report(&simdive::mul(16, w)).luts;
+            Point {
+                w,
+                mul_are: m.are_pct,
+                mul_pre: m.pre_pct,
+                div_are: d.are_pct,
+                div_pre: d.pre_pct,
+                mul_area_luts: area,
+            }
+        })
+        .collect()
+}
+
+pub fn render(samples: u64) -> String {
+    let pts = sweep(samples);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                p.w.to_string(),
+                format!("{:.3}", p.mul_are),
+                format!("{:.2}", p.mul_pre),
+                format!("{:.3}", p.div_are),
+                format!("{:.2}", p.div_pre),
+                p.mul_area_luts.to_string(),
+            ]
+        })
+        .collect();
+    format!(
+        "== Tunable accuracy sweep (w = coefficient LUTs) ==\n{}\n\
+         Paper §3.3: one more LUT = one more coefficient bit; 8 LUTs → >99.2% accuracy.\n",
+        super::render_table(
+            &["w", "mul ARE%", "mul PRE%", "div ARE%", "div PRE%", "mul LUTs"],
+            &rows
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sweep_monotone_in_w() {
+        let pts = super::sweep(60_000);
+        assert_eq!(pts.len(), 9);
+        // w=0 is Mitchell (~3.9% mul ARE); w=8 under 1.1%; area grows.
+        assert!(pts[0].mul_are > 3.0);
+        assert!(pts[8].mul_are < 1.1);
+        assert!(pts[8].mul_area_luts > pts[0].mul_area_luts);
+        // 8-LUT configuration approaches the paper's >99.2%-accuracy
+        // claim (mean relative accuracy = 100 − ARE; ours lands ≈98.9
+        // with region-mean coefficients vs the paper's optimized ones).
+        assert!(100.0 - pts[8].mul_are > 98.7, "accuracy {}", 100.0 - pts[8].mul_are);
+    }
+}

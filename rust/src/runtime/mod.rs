@@ -1,0 +1,151 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO **text**,
+//! per the 64-bit-proto-id workaround — see /opt/xla-example/README.md and
+//! DESIGN.md §2) and executes them on the CPU PJRT client from the request
+//! path. Python never runs at serve time.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded model artifact bundle.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: HashMap<String, Vec<f32>>,
+    manifest: Vec<(String, Vec<usize>)>,
+}
+
+impl Engine {
+    /// Create a CPU engine and load every `*.hlo.txt` in `dir`, plus any
+    /// `weights.bin` + `weights.manifest` pair (flat f32 tensors).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifacts dir {}", dir.display()))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().unwrap().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {name}"))?;
+                executables.insert(stem.to_string(), exe);
+            }
+        }
+        let (weights, manifest) = load_weights(dir)?;
+        Ok(Engine { client, executables, weights, manifest })
+    }
+
+    /// Artifact names available.
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.executables.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute a model on literal inputs; returns the tuple elements (the
+    /// AOT pipeline lowers everything with `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown model {name}; have {:?}", self.models()))?;
+        let mut result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+
+    /// A named weight tensor (flat) from the artifact bundle.
+    pub fn weight(&self, name: &str) -> Option<&[f32]> {
+        self.weights.get(name).map(|v| v.as_slice())
+    }
+
+    /// Weight manifest (name, shape) in file order.
+    pub fn weight_manifest(&self) -> &[(String, Vec<usize>)] {
+        &self.manifest
+    }
+}
+
+/// Load `weights.manifest` ("name dim0 dim1 …" per line) + `weights.bin`
+/// (concatenated little-endian f32).
+fn load_weights(dir: &Path) -> Result<(HashMap<String, Vec<f32>>, Vec<(String, Vec<usize>)>)> {
+    let manifest_path = dir.join("weights.manifest");
+    let bin_path = dir.join("weights.bin");
+    let mut map = HashMap::new();
+    let mut manifest = Vec::new();
+    if !manifest_path.exists() || !bin_path.exists() {
+        return Ok((map, manifest));
+    }
+    let text = std::fs::read_to_string(&manifest_path)?;
+    let raw = std::fs::read(&bin_path)?;
+    let mut offset = 0usize;
+    for line in text.lines() {
+        let mut parts = line.split_whitespace();
+        let Some(name) = parts.next() else { continue };
+        let dims: Vec<usize> = parts.map(|p| p.parse().unwrap_or(0)).collect();
+        let count: usize = dims.iter().product();
+        anyhow::ensure!(offset + 4 * count <= raw.len(), "weights.bin too short at {name}");
+        let bytes = &raw[offset..offset + 4 * count];
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        offset += 4 * count;
+        manifest.push((name.to_string(), dims));
+        map.insert(name.to_string(), vals);
+    }
+    Ok((map, manifest))
+}
+
+/// Default artifacts directory (`artifacts/` beside the workspace, or
+/// `$SIMDIVE_ARTIFACTS`).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SIMDIVE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_errors_cleanly() {
+        let err = match Engine::load(Path::new("/nonexistent/simdive")) {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail on a missing dir"),
+        };
+        assert!(format!("{err:#}").contains("artifacts dir"));
+    }
+
+    #[test]
+    fn weights_loader_handles_absent_files() {
+        let dir = std::env::temp_dir().join("simdive_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (w, m) = load_weights(&dir).unwrap();
+        assert!(w.is_empty() && m.is_empty());
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let dir = std::env::temp_dir().join("simdive_rt_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("weights.manifest"), "w1 2 3\nb1 3\n").unwrap();
+        let vals: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), bytes).unwrap();
+        let (w, m) = load_weights(&dir).unwrap();
+        assert_eq!(w["w1"], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w["b1"], vec![6.0, 7.0, 8.0]);
+        assert_eq!(m[0].1, vec![2, 3]);
+    }
+}

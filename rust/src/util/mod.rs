@@ -1,0 +1,10 @@
+//! Small self-contained infrastructure: PRNG, statistics, property-test
+//! helper. These replace `rand`, `statrs` and `proptest`, which are not
+//! available in the offline vendored registry (see DESIGN.md §1).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,98 @@
+//! Minimal property-testing helper (offline substitute for `proptest`).
+//!
+//! `check` runs a property over `cases` random inputs drawn by a generator
+//! closure; on failure it performs a simple halving shrink over the raw seed
+//! stream to report a small counterexample. This covers the invariant-style
+//! properties this repo needs (coordinator routing/batching/state, arithmetic
+//! bounds) without the full proptest dependency.
+
+use super::rng::Rng;
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropFailure<T: std::fmt::Debug> {
+    pub case: T,
+    pub message: String,
+    pub seed: u64,
+}
+
+/// Run `property` over `cases` inputs produced by `gen`.
+///
+/// Panics with the (shrunk) counterexample on failure, mirroring proptest's
+/// ergonomics for use inside `#[test]` functions.
+pub fn check<T, G, P>(seed: u64, cases: u32, mut gen: G, mut property: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = rng.next_u64();
+        let case = gen(&mut Rng::new(case_seed));
+        if let Err(msg) = property(&case) {
+            // Shrink: try a few derived seeds, keep the lexicographically
+            // smallest failing debug representation (cheap but effective for
+            // integer-heavy cases).
+            let mut best = (format!("{case:?}"), case.clone(), msg.clone());
+            for k in 0..64u64 {
+                let s = case_seed.wrapping_shr((k % 63) as u32) ^ k;
+                let cand = gen(&mut Rng::new(s));
+                if let Err(m) = property(&cand) {
+                    let d = format!("{cand:?}");
+                    if d.len() < best.0.len() || (d.len() == best.0.len() && d < best.0) {
+                        best = (d, cand, m);
+                    }
+                }
+            }
+            panic!(
+                "property failed at case {i}/{cases} (seed {seed}): {}\ncounterexample: {}",
+                best.2, best.0
+            );
+        }
+    }
+}
+
+/// Convenience: property over pairs of N-bit operands (both non-zero).
+pub fn check_operand_pairs<P>(seed: u64, cases: u32, bits: u32, mut property: P)
+where
+    P: FnMut(u64, u64) -> Result<(), String>,
+{
+    check(
+        seed,
+        cases,
+        |r| (r.operand(bits), r.operand(bits)),
+        |&(a, b)| property(a, b),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |r| r.below(100), |&x| {
+            if x < 100 { Ok(()) } else { Err(format!("{x} out of range")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        check(2, 200, |r| r.below(100), |&x| {
+            if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) }
+        });
+    }
+
+    #[test]
+    fn operand_pairs_nonzero() {
+        check_operand_pairs(3, 500, 16, |a, b| {
+            if a == 0 || b == 0 {
+                Err("zero operand".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

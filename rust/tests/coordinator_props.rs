@@ -1,0 +1,125 @@
+//! Property tests on coordinator invariants (routing, batching, state),
+//! via the in-repo prop helper (proptest substitute — DESIGN.md §1).
+
+use simdive::arith::simdive::{simdive_div, simdive_mul};
+use simdive::coordinator::{
+    pack_requests, unpack_results, Coordinator, CoordinatorConfig, ReqOp, Request,
+};
+use simdive::util::prop;
+use simdive::util::Rng;
+
+fn random_requests(r: &mut Rng, n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|i| {
+            let bits = [8u32, 16, 32][r.below(3) as usize];
+            Request {
+                id: i,
+                op: if r.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
+                bits,
+                a: r.operand(bits),
+                b: r.operand(bits),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_every_request_routed_once() {
+    prop::check(
+        11,
+        200,
+        |r| { let n = 1 + r.below(60) as usize; random_requests(r, n) },
+        |reqs| {
+            let words = pack_requests(reqs);
+            let mut seen = std::collections::HashSet::new();
+            for w in &words {
+                for id in w.lane_req.iter().flatten() {
+                    if !seen.insert(*id) {
+                        return Err(format!("id {id} routed twice"));
+                    }
+                }
+                if w.active_lanes as usize > w.lane_count() {
+                    return Err("active_lanes exceeds lane count".into());
+                }
+            }
+            if seen.len() != reqs.len() {
+                return Err(format!("routed {} of {}", seen.len(), reqs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_results_equal_sisd() {
+    prop::check(
+        12,
+        100,
+        |r| { let n = 1 + r.below(40) as usize; random_requests(r, n) },
+        |reqs| {
+            for w in pack_requests(reqs) {
+                let packed = simdive::arith::simd::execute(w.op, w.word, 8);
+                for (id, got) in unpack_results(&w, packed) {
+                    let req = &reqs[id as usize];
+                    let want = match req.op {
+                        ReqOp::Mul => simdive_mul(req.bits, req.a, req.b),
+                        ReqOp::Div => simdive_div(req.bits, req.a, req.b),
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "req {id} ({}x{} {:?}@{}): {got} != {want}",
+                            req.a, req.b, req.op, req.bits
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packing_efficiency() {
+    // No packing may use more words than the trivial one-per-request, and
+    // uniform 8-bit loads must reach ≥ 4× compaction.
+    prop::check(
+        13,
+        100,
+        |r| { let n = 1 + r.below(80) as usize; random_requests(r, n) },
+        |reqs| {
+            let words = pack_requests(reqs);
+            if words.len() > reqs.len() {
+                return Err(format!("{} words for {} reqs", words.len(), reqs.len()));
+            }
+            Ok(())
+        },
+    );
+    let reqs: Vec<Request> = (0..64)
+        .map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, a: 1 + i, b: 3 })
+        .collect();
+    assert_eq!(pack_requests(&reqs).len(), 16);
+}
+
+#[test]
+fn coordinator_under_concurrent_load() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        w: 8,
+        queue_depth: 256,
+        batch: 32,
+    });
+    let mut rng = Rng::new(21);
+    let reqs = random_requests(&mut rng, 2000);
+    let handles: Vec<_> = reqs.iter().map(|r| coord.submit(*r)).collect();
+    for (h, req) in handles.into_iter().zip(&reqs) {
+        let resp = h.recv().unwrap();
+        let want = match req.op {
+            ReqOp::Mul => simdive_mul(req.bits, req.a, req.b),
+            ReqOp::Div => simdive_div(req.bits, req.a, req.b),
+        };
+        assert_eq!(resp.value, want, "req {}", req.id);
+    }
+    let s = coord.shutdown();
+    assert_eq!(s.requests, 2000);
+    assert!(s.lane_utilization() > 0.25);
+}

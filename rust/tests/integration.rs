@@ -1,0 +1,72 @@
+//! Cross-layer integration: behavioral arithmetic → metrics → image/ANN
+//! substrates → report harness, exercised together.
+
+use simdive::arith::{DivDesign, MulDesign};
+use simdive::image::{blend, synth, ArithKind};
+use simdive::metrics::{div_error, mul_error, psnr};
+
+#[test]
+fn full_error_pipeline_matches_paper_shape() {
+    // Table-2 orderings at evaluation scale (robust at 200k samples).
+    let n = 200_000;
+    let prop = mul_error(MulDesign::Simdive { w: 8 }, 16, n, 1).are_pct;
+    let mbm = mul_error(MulDesign::Mbm, 16, n, 1).are_pct;
+    let mit = mul_error(MulDesign::Mitchell, 16, n, 1).are_pct;
+    assert!(prop < mbm && mbm < mit, "{prop} {mbm} {mit}");
+    let dprop = div_error(DivDesign::Simdive { w: 8 }, 16, 8, n, 2).are_pct;
+    let dinz = div_error(DivDesign::Inzed, 16, 8, n, 2).are_pct;
+    assert!(dprop < dinz, "{dprop} {dinz}");
+}
+
+#[test]
+fn image_pipeline_end_to_end() {
+    let a = synth::generate(synth::Scene::Texture, 96, 1);
+    let b = synth::generate(synth::Scene::Shapes, 96, 2);
+    let acc = blend(&a, &b, ArithKind::Accurate);
+    let sd = blend(&a, &b, ArithKind::Simdive(8));
+    assert!(psnr(&acc.data, &sd.data) > 35.0);
+}
+
+#[test]
+fn ann_pipeline_end_to_end() {
+    use simdive::ann::{Mlp, QuantMlp};
+    use simdive::datasets::{generate, Family};
+    let train = generate(Family::Digits, 1500, 3);
+    let test = generate(Family::Digits, 300, 4);
+    let mut net = Mlp::new(&[32], 5);
+    net.train(&train, 4, 0.1, 6);
+    let q = QuantMlp::from_float(&net, &train[..200]);
+    let qa = q.accuracy(&test, MulDesign::Accurate);
+    let qs = q.accuracy(&test, MulDesign::Simdive { w: 8 });
+    assert!(qa > 0.6, "accurate quantized {qa}");
+    assert!((qa - qs).abs() < 0.06, "simdive {qs} vs accurate {qa}");
+}
+
+#[test]
+fn headline_divider_claim() {
+    // §4.2: proposed divider ≈4× faster / 4.6× less energy than accurate
+    // IP — check the calibrated-model prediction reproduces the direction
+    // with at least a 2.5× margin on both axes.
+    use simdive::circuits::{baselines, simdive as sdc};
+    use simdive::fabric::{calibrate, power, timing};
+    let cal = calibrate::fitted();
+    let acc = baselines::restoring_div(16, 8);
+    let prop = sdc::div(16, 8, 8);
+    let t_acc = timing::analyze(&acc, cal).critical_ns;
+    let t_prop = timing::analyze(&prop, cal).critical_ns;
+    assert!(t_acc / t_prop > 2.5, "speedup {}", t_acc / t_prop);
+    let e_acc = power::estimate_at(&acc, cal, 1, 2048, t_acc).total_mw * t_acc;
+    let e_prop = power::estimate_at(&prop, cal, 1, 2048, t_prop).total_mw * t_prop;
+    assert!(e_acc / e_prop > 2.0, "energy gain {}", e_acc / e_prop);
+}
+
+#[test]
+fn golden_export_runs() {
+    std::env::set_var(
+        "SIMDIVE_ARTIFACTS",
+        std::env::temp_dir().join("simdive_it_golden"),
+    );
+    let msg = simdive::report::golden::export().unwrap();
+    assert!(msg.contains("exported"));
+    std::env::remove_var("SIMDIVE_ARTIFACTS");
+}

@@ -1,0 +1,71 @@
+//! PJRT end-to-end: load the AOT artifacts and verify the served graphs
+//! bit-match the Rust behavioral models. Skips (cleanly) when artifacts
+//! have not been built (`make artifacts`).
+
+use std::path::Path;
+
+fn bytes_of(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn engine() -> Option<simdive::runtime::Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("blend.hlo.txt").exists() {
+        eprintln!("skipping runtime e2e: run `make artifacts` first");
+        return None;
+    }
+    Some(simdive::runtime::Engine::load(dir).expect("engine"))
+}
+
+#[test]
+fn served_blend_bit_matches_behavioral() {
+    let Some(eng) = engine() else { return };
+    let mut rng = simdive::util::Rng::new(5);
+    let a: Vec<i32> = (0..256 * 256).map(|_| rng.below(256) as i32).collect();
+    let b: Vec<i32> = (0..256 * 256).map(|_| rng.below(256) as i32).collect();
+    let la = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[256, 256],
+        bytes_of(&a),
+    )
+    .unwrap();
+    let lb = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[256, 256],
+        bytes_of(&b),
+    )
+    .unwrap();
+    let out = eng.run("blend", &[la, lb]).unwrap();
+    let got = out[0].to_vec::<i32>().unwrap();
+    for i in 0..a.len() {
+        let want =
+            (simdive::arith::simdive::simdive_mul(8, a[i] as u64, b[i] as u64) >> 8).min(255);
+        assert_eq!(got[i] as u64, want, "px {i}: {}x{}", a[i], b[i]);
+    }
+}
+
+#[test]
+fn served_ann_is_accurate_on_eval_batch() {
+    let Some(eng) = engine() else { return };
+    let imgs = std::fs::read("artifacts/eval_batch.u8").unwrap();
+    let labels = std::fs::read("artifacts/eval_labels.u8").unwrap();
+    let vals: Vec<i32> = imgs.iter().map(|&v| v as i32).collect();
+    let lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[32, 784],
+        bytes_of(&vals),
+    )
+    .unwrap();
+    let out = eng.run("ann_fwd", std::slice::from_ref(&lit)).unwrap();
+    let preds = out[1].to_vec::<i64>().unwrap();
+    let correct = preds.iter().zip(&labels).filter(|(&p, &l)| p == l as i64).count();
+    // The quantized SIMDive model classifies its own eval batch well.
+    assert!(correct >= 28, "served accuracy {correct}/32");
+}
+
+#[test]
+fn engine_reports_weights() {
+    let Some(eng) = engine() else { return };
+    assert!(eng.weight("w0").is_some());
+    assert!(eng.weight_manifest().len() >= 4);
+}

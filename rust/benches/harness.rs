@@ -3,6 +3,10 @@
 //! the paper table/figure it regenerates plus wall-clock timing of the
 //! regeneration and of the relevant hot paths.
 
+// Each bench target compiles this module separately and uses a subset of
+// the helpers, so unused-function lints are expected.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time a closure, printing `name: <ms> (result-lines…)`.

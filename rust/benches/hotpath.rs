@@ -1,0 +1,235 @@
+//! Hot-path throughput: scalar-call vs batched kernels for mul/div at
+//! 8/16/32 bits, plus coordinator round-trip throughput under per-request
+//! and per-batch submission.
+//!
+//! Results go to stdout and to `BENCH_hotpath.json` at the repository
+//! root, so the performance trajectory is tracked PR-over-PR (the JSON
+//! format is documented in CHANGES.md).
+//!
+//! "Scalar" is the pre-batching hot path exactly as the substrates used
+//! it: one `MulDesign`/`DivDesign` dispatch per element, which resolves
+//! the correction tables and rescales the coefficient per call. "Batched"
+//! is one `arith::batch` kernel call per slice. Both compute bit-identical
+//! results (asserted here before timing).
+
+use simdive::arith::{batch, table, DivDesign, MulDesign};
+use simdive::util::Rng;
+use std::fmt::Write as _;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Elements per timed pass.
+const N: usize = 1 << 16;
+
+/// Requests per coordinator round-trip measurement.
+const COORD_REQUESTS: u64 = 40_000;
+
+/// Measure mean seconds per invocation of `f`, running ~0.3 s after a
+/// warm-up pass.
+fn time_secs(mut f: impl FnMut()) -> f64 {
+    f(); // warm up
+    let t0 = Instant::now();
+    let mut passes = 0u32;
+    while t0.elapsed().as_millis() < 300 {
+        f();
+        passes += 1;
+    }
+    t0.elapsed().as_secs_f64() / passes as f64
+}
+
+struct OpResult {
+    bits: u32,
+    scalar_mops: f64,
+    batched_mops: f64,
+}
+
+impl OpResult {
+    fn speedup(&self) -> f64 {
+        self.batched_mops / self.scalar_mops
+    }
+}
+
+fn bench_op(bits: u32, is_div: bool, rng: &mut Rng) -> OpResult {
+    let a: Vec<u64> = (0..N).map(|_| rng.below(1u64 << bits)).collect();
+    let b: Vec<u64> = (0..N).map(|_| rng.below(1u64 << bits)).collect();
+    let tables = table::tables_for(8);
+    let mut out = vec![0u64; N];
+
+    // Bit-exactness gate before timing anything.
+    if is_div {
+        batch::div_batch_into(tables, bits, &a, &b, &mut out);
+        for i in 0..N {
+            assert_eq!(out[i], DivDesign::Simdive { w: 8 }.div(bits, a[i], b[i]));
+        }
+    } else {
+        batch::mul_batch_into(tables, bits, &a, &b, &mut out);
+        for i in 0..N {
+            assert_eq!(out[i], MulDesign::Simdive { w: 8 }.mul(bits, a[i], b[i]));
+        }
+    }
+
+    // `black_box` on the design mirrors the pre-batching substrates, where
+    // the design is a runtime parameter (e.g. `QuantMlp::predict(…, design)`)
+    // — the dispatch and table resolution cannot be hoisted out of the loop.
+    let scalar_secs = if is_div {
+        time_secs(|| {
+            let d = black_box(DivDesign::Simdive { w: 8 });
+            let mut acc = 0u64;
+            for i in 0..N {
+                acc = acc.wrapping_add(d.div(bits, black_box(a[i]), black_box(b[i])));
+            }
+            black_box(acc);
+        })
+    } else {
+        time_secs(|| {
+            let d = black_box(MulDesign::Simdive { w: 8 });
+            let mut acc = 0u64;
+            for i in 0..N {
+                acc = acc.wrapping_add(d.mul(bits, black_box(a[i]), black_box(b[i])));
+            }
+            black_box(acc);
+        })
+    };
+
+    let batched_secs = if is_div {
+        time_secs(|| {
+            batch::div_batch_into(tables, bits, black_box(&a), black_box(&b), &mut out);
+            black_box(&out);
+        })
+    } else {
+        time_secs(|| {
+            batch::mul_batch_into(tables, bits, black_box(&a), black_box(&b), &mut out);
+            black_box(&out);
+        })
+    };
+
+    let r = OpResult {
+        bits,
+        scalar_mops: N as f64 / scalar_secs / 1e6,
+        batched_mops: N as f64 / batched_secs / 1e6,
+    };
+    println!(
+        "[bench] {}{:<2}: scalar {:.1} Mops/s, batched {:.1} Mops/s ({:.2}x)",
+        if is_div { "div" } else { "mul" },
+        bits,
+        r.scalar_mops,
+        r.batched_mops,
+        r.speedup()
+    );
+    r
+}
+
+fn bench_coordinator() -> (f64, f64) {
+    use simdive::coordinator::{Coordinator, CoordinatorConfig, ReqOp, Request};
+    let make = |i: u64| {
+        let bits = [8u32, 8, 16, 32][(i % 4) as usize];
+        Request {
+            id: i,
+            op: if i % 4 == 0 { ReqOp::Div } else { ReqOp::Mul },
+            bits,
+            a: 1 + (i % ((1u64 << bits) - 1)),
+            b: 1 + ((i * 7) % ((1u64 << bits) - 1)),
+        }
+    };
+    let n = COORD_REQUESTS;
+
+    // Per-request submission (one channel per request).
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(1024);
+    for i in 0..n {
+        handles.push(coord.submit(make(i)));
+        if handles.len() == 1024 {
+            for h in handles.drain(..) {
+                h.recv().unwrap();
+            }
+        }
+    }
+    for h in handles.drain(..) {
+        h.recv().unwrap();
+    }
+    let scalar_rps = n as f64 / t0.elapsed().as_secs_f64();
+    coord.shutdown();
+
+    // Batched submission (one channel + index slots per 1024 requests).
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let t0 = Instant::now();
+    let mut submitted = 0u64;
+    while submitted < n {
+        let window = (n - submitted).min(1024);
+        let reqs: Vec<Request> = (submitted..submitted + window).map(make).collect();
+        coord.submit_batch(reqs).wait();
+        submitted += window;
+    }
+    let batched_rps = n as f64 / t0.elapsed().as_secs_f64();
+    coord.shutdown();
+
+    println!(
+        "[bench] coordinator: per-request {:.1} kreq/s, batched {:.1} kreq/s ({:.2}x)",
+        scalar_rps / 1e3,
+        batched_rps / 1e3,
+        batched_rps / scalar_rps
+    );
+    (scalar_rps, batched_rps)
+}
+
+/// Repository root: nearest ancestor holding `.git` (or `ROADMAP.md`),
+/// falling back to the current directory.
+fn repo_root() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join(".git").exists() || dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return cwd;
+        }
+    }
+}
+
+fn json_op_section(results: &[&OpResult]) -> String {
+    let mut s = String::from("{");
+    for (k, r) in results.iter().enumerate() {
+        if k > 0 {
+            s.push_str(", ");
+        }
+        write!(
+            s,
+            "\"{}\": {{\"scalar_mops\": {:.2}, \"batched_mops\": {:.2}, \"speedup\": {:.3}}}",
+            r.bits,
+            r.scalar_mops,
+            r.batched_mops,
+            r.speedup()
+        )
+        .unwrap();
+    }
+    s.push('}');
+    s
+}
+
+fn main() {
+    let mut rng = Rng::new(0x407_BA7C);
+    let mut muls = Vec::new();
+    let mut divs = Vec::new();
+    for &bits in &simdive::arith::WIDTHS {
+        muls.push(bench_op(bits, false, &mut rng));
+        divs.push(bench_op(bits, true, &mut rng));
+    }
+    let (coord_scalar_rps, coord_batched_rps) = bench_coordinator();
+
+    let json = format!(
+        "{{\n  \"schema\": \"simdive-hotpath-v1\",\n  \"elements_per_pass\": {N},\n  \
+         \"mul\": {},\n  \"div\": {},\n  \"coordinator\": {{\"requests\": {COORD_REQUESTS}, \
+         \"per_request_rps\": {:.1}, \"batched_rps\": {:.1}}}\n}}\n",
+        json_op_section(&muls.iter().collect::<Vec<_>>()),
+        json_op_section(&divs.iter().collect::<Vec<_>>()),
+        coord_scalar_rps,
+        coord_batched_rps,
+    );
+    let path = repo_root().join("BENCH_hotpath.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[bench] wrote {}", path.display()),
+        Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+    }
+}

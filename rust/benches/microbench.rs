@@ -35,34 +35,31 @@ fn main() {
         std::hint::black_box(pack_requests(&reqs));
     });
 
-    // Coordinator round-trip (batch of 1024).
+    // Coordinator round-trip (windowed batch submission, 1024 per window).
     use simdive::coordinator::{Coordinator, CoordinatorConfig};
     let coord = Coordinator::start(CoordinatorConfig::default());
     let t0 = std::time::Instant::now();
     let n = 50_000u64;
-    let mut handles = Vec::with_capacity(1024);
-    for i in 0..n {
-        handles.push(coord.submit(Request {
-            id: i,
-            op: ReqOp::Mul,
-            bits: 8,
-            a: 1 + (i % 250),
-            b: 3,
-        }));
-        if handles.len() == 1024 {
-            for h in handles.drain(..) {
-                h.recv().unwrap();
-            }
-        }
-    }
-    for h in handles.drain(..) {
-        h.recv().unwrap();
+    let mut submitted = 0u64;
+    while submitted < n {
+        let window = (n - submitted).min(1024);
+        let batch: Vec<Request> = (submitted..submitted + window)
+            .map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, a: 1 + (i % 250), b: 3 })
+            .collect();
+        coord.submit_batch(batch).wait();
+        submitted += window;
     }
     let dt = t0.elapsed().as_secs_f64();
     println!("[bench] coordinator: {:.1} kops/s", n as f64 / dt / 1e3);
     coord.shutdown();
 
-    // PJRT execution latency (skipped when artifacts are absent).
+    // PJRT execution latency (skipped when artifacts are absent or the
+    // pjrt feature is off — DESIGN.md §2).
+    pjrt_latency();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_latency() {
     let dir = simdive::runtime::default_artifacts_dir();
     if dir.join("ann_fwd.hlo.txt").exists() {
         let eng = simdive::runtime::Engine::load(&dir).expect("engine");
@@ -86,4 +83,9 @@ fn main() {
     } else {
         println!("[bench] PJRT latency skipped (run `make artifacts`)");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_latency() {
+    println!("[bench] PJRT latency skipped (built without the pjrt feature)");
 }

@@ -182,24 +182,53 @@ impl QuantMlp {
     /// Quantized forward pass with a pluggable 8-bit multiplier. Products
     /// are `|w| × a` through `design` (both operands 8-bit unsigned, as in
     /// the SIMDive lane), signs re-applied, accumulation exact.
+    ///
+    /// The weight×activation products of a whole layer are gathered into
+    /// operand slices and evaluated through one
+    /// [`MulDesign::mul_batch_into`] call (the batched SIMDive kernel,
+    /// DESIGN.md §6) instead of one scalar dispatch per weight — the
+    /// per-neuron skip of zero operands and the accumulation order are
+    /// unchanged, so results are bit-identical to the scalar path.
     pub fn predict(&self, pixels: &[u8], design: MulDesign) -> usize {
         let layers = self.w_q.len();
         let mut act: Vec<u8> = pixels.to_vec();
+        // Reusable per-layer gather buffers (operands, signs, row bounds).
+        let mut ops_w: Vec<u64> = Vec::new();
+        let mut ops_a: Vec<u64> = Vec::new();
+        let mut neg: Vec<bool> = Vec::new();
+        let mut row_end: Vec<usize> = Vec::new();
+        let mut prods: Vec<u64> = Vec::new();
         for l in 0..layers {
             let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
-            let mut next = vec![0u8; fan_out];
-            let mut logits = vec![0i64; fan_out];
+            ops_w.clear();
+            ops_a.clear();
+            neg.clear();
+            row_end.clear();
             for o in 0..fan_out {
                 let row = &self.w_q[l][o * fan_in..(o + 1) * fan_in];
-                let mut acc = self.b_q[l][o];
                 for i in 0..fan_in {
                     let a = act[i] as u64;
                     if a == 0 || row[i] == 0 {
                         continue;
                     }
-                    let p = design.mul(8, row[i].unsigned_abs() as u64, a) as i64;
-                    acc += if row[i] < 0 { -p } else { p };
+                    ops_w.push(row[i].unsigned_abs() as u64);
+                    ops_a.push(a);
+                    neg.push(row[i] < 0);
                 }
+                row_end.push(ops_w.len());
+            }
+            design.mul_batch_into(8, &ops_w, &ops_a, &mut prods);
+            let mut next = vec![0u8; fan_out];
+            let mut logits = vec![0i64; fan_out];
+            let mut start = 0usize;
+            for o in 0..fan_out {
+                let end = row_end[o];
+                let mut acc = self.b_q[l][o];
+                for k in start..end {
+                    let p = prods[k] as i64;
+                    acc += if neg[k] { -p } else { p };
+                }
+                start = end;
                 if l + 1 < layers {
                     let v = (acc.max(0) as f32 * self.requant[l]).round();
                     next[o] = v.clamp(0.0, 255.0) as u8;
@@ -269,6 +298,58 @@ mod tests {
         let qm = q.accuracy(&test, MulDesign::Mbm);
         assert!((qa - qs).abs() < 0.05, "accurate {qa} vs simdive {qs}");
         assert!((qa - qm).abs() < 0.08, "accurate {qa} vs mbm {qm}");
+    }
+
+    /// Reference scalar forward pass (one `design.mul` dispatch per
+    /// weight) — the pre-batching hot path, kept as the equivalence oracle.
+    fn scalar_predict(q: &QuantMlp, pixels: &[u8], design: MulDesign) -> usize {
+        let layers = q.w_q.len();
+        let mut act: Vec<u8> = pixels.to_vec();
+        for l in 0..layers {
+            let (fan_in, fan_out) = (q.dims[l], q.dims[l + 1]);
+            let mut next = vec![0u8; fan_out];
+            let mut logits = vec![0i64; fan_out];
+            for o in 0..fan_out {
+                let row = &q.w_q[l][o * fan_in..(o + 1) * fan_in];
+                let mut acc = q.b_q[l][o];
+                for i in 0..fan_in {
+                    let a = act[i] as u64;
+                    if a == 0 || row[i] == 0 {
+                        continue;
+                    }
+                    let p = design.mul(8, row[i].unsigned_abs() as u64, a) as i64;
+                    acc += if row[i] < 0 { -p } else { p };
+                }
+                if l + 1 < layers {
+                    let v = (acc.max(0) as f32 * q.requant[l]).round();
+                    next[o] = v.clamp(0.0, 255.0) as u8;
+                } else {
+                    logits[o] = acc;
+                }
+            }
+            if l + 1 < layers {
+                act = next;
+            } else {
+                return logits.iter().enumerate().max_by_key(|&(_, &v)| v).unwrap().0;
+            }
+        }
+        unreachable!()
+    }
+
+    #[test]
+    fn batched_inference_matches_scalar_reference() {
+        let (net, train, test) = small_net(Family::Digits);
+        let q = QuantMlp::from_float(&net, &train[..200]);
+        for design in [MulDesign::Simdive { w: 8 }, MulDesign::Accurate, MulDesign::Mbm] {
+            for ex in &test[..60] {
+                assert_eq!(
+                    q.predict(&ex.pixels, design),
+                    scalar_predict(&q, &ex.pixels, design),
+                    "design {}",
+                    design.name()
+                );
+            }
+        }
     }
 
     #[test]

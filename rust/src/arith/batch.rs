@@ -1,0 +1,330 @@
+//! Batched (slice-based) SIMDive kernels — the software hot path.
+//!
+//! The scalar entry points in [`simdive`](super::simdive) resolve the
+//! correction tables (`OnceLock` + `Vec` indexing), the operand width, and
+//! the fixed-point rescale of the coefficient *per call*. Fine for the
+//! error-analysis sweeps; wasteful for the substrates that evaluate
+//! millions of products per request (quantized ANN inference, image
+//! tiles, the coordinator's packed words).
+//!
+//! These kernels take whole operand slices plus one [`CorrectionTables`]
+//! reference and hoist everything loop-invariant out of the inner loop:
+//!
+//! * the 8×8 coefficient grid is read through its flattened 64-entry form
+//!   ([`CorrectionTables::mul_flat`]), indexed by
+//!   `(region(a) << 3) | region(b)` — one load, no nested indexing;
+//! * the per-region [`CorrectionTables::scale_to_f`] rescale is
+//!   precomputed into a 64-entry `i64` array per call (it depends only on
+//!   the coefficient and the width, not the operands);
+//! * the inner loop carries no `assert!`, no `Vec` indexing and no table
+//!   resolution — only `debug_assert!` — leaving a short dependency chain
+//!   of `lzcnt`/shift/add per element that LLVM can unroll and schedule
+//!   (and partially vectorize) freely.
+//!
+//! Every kernel is **bit-identical** to the scalar path: the per-element
+//! arithmetic is the same [`frac_aligned`] → correction → decode pipeline,
+//! verified by the property tests below and in `tests/batch_props.rs`.
+
+use super::mitchell::{div_decode, frac_aligned, mul_decode};
+use super::simd::{LaneMode, SimdOp, SimdWord};
+use super::table::CorrectionTables;
+
+/// Per-call context for one operation kind at one width: the flat
+/// coefficient grid rescaled to `F = bits - 1` fraction-bit units.
+#[derive(Clone, Copy)]
+struct Rescaled {
+    corr: [i64; 64],
+}
+
+impl Rescaled {
+    #[inline]
+    fn new(flat: &[i32; 64], bits: u32) -> Self {
+        let mut corr = [0i64; 64];
+        for (k, &c) in flat.iter().enumerate() {
+            corr[k] = CorrectionTables::scale_to_f(c, bits);
+        }
+        Rescaled { corr }
+    }
+}
+
+/// Region-pair index of two aligned fractions: `(region(f1) << 3) |
+/// region(f2)`, matching [`CorrectionTables::flat_index`].
+#[inline(always)]
+fn pair_index(region_shift: u32, f1: u64, f2: u64) -> usize {
+    ((((f1 >> region_shift) & 0x7) << 3) | ((f2 >> region_shift) & 0x7)) as usize
+}
+
+/// One batched multiply element. Identical arithmetic to
+/// [`simdive_mul_with`](super::simdive::simdive_mul_with).
+#[inline(always)]
+fn mul_one(rc: &Rescaled, bits: u32, region_shift: u32, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = rc.corr[pair_index(region_shift, f1, f2)];
+    mul_decode(bits, k1, k2, f1 as i64 + f2 as i64 + corr)
+}
+
+/// One batched divide element. Identical arithmetic to
+/// [`simdive_div_with`](super::simdive::simdive_div_with).
+#[inline(always)]
+fn div_one(rc: &Rescaled, bits: u32, region_shift: u32, max: u64, a: u64, b: u64) -> u64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if b == 0 {
+        return max;
+    }
+    if a == 0 {
+        return 0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = rc.corr[pair_index(region_shift, f1, f2)];
+    div_decode(bits, k1, k2, f1 as i64 - f2 as i64 + corr)
+}
+
+/// Batched SIMDive multiply: `out[i] = simdive_mul_with(t, bits, a[i],
+/// b[i])`, bit-exactly, with all table/width resolution hoisted out of the
+/// loop. Slices must have equal length.
+pub fn mul_batch_into(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let rc = Rescaled::new(&t.mul_flat, bits);
+    let region_shift = bits - 4;
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = mul_one(&rc, bits, region_shift, x, y);
+    }
+}
+
+/// Allocating form of [`mul_batch_into`].
+pub fn mul_batch(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64]) -> Vec<u64> {
+    let mut out = vec![0u64; a.len()];
+    mul_batch_into(t, bits, a, b, &mut out);
+    out
+}
+
+/// Batched SIMDive divide: `out[i] = simdive_div_with(t, bits, a[i],
+/// b[i])`, bit-exactly (`b == 0 → max_val(bits)`, `a == 0 → 0`). Slices
+/// must have equal length.
+pub fn div_batch_into(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let rc = Rescaled::new(&t.div_flat, bits);
+    let region_shift = bits - 4;
+    let max = super::max_val(bits);
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = div_one(&rc, bits, region_shift, max, x, y);
+    }
+}
+
+/// Allocating form of [`div_batch_into`].
+pub fn div_batch(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64]) -> Vec<u64> {
+    let mut out = vec![0u64; a.len()];
+    div_batch_into(t, bits, a, b, &mut out);
+    out
+}
+
+/// Rescaled mul+div coefficient grids for every lane width, computed once
+/// per batch (widths are 8/16/32 → index `log2(width) - 3`).
+struct WordContext {
+    mul: [Rescaled; 3],
+    div: [Rescaled; 3],
+}
+
+impl WordContext {
+    fn new(t: &CorrectionTables) -> Self {
+        WordContext {
+            mul: [
+                Rescaled::new(&t.mul_flat, 8),
+                Rescaled::new(&t.mul_flat, 16),
+                Rescaled::new(&t.mul_flat, 32),
+            ],
+            div: [
+                Rescaled::new(&t.div_flat, 8),
+                Rescaled::new(&t.div_flat, 16),
+                Rescaled::new(&t.div_flat, 32),
+            ],
+        }
+    }
+
+    /// Execute one packed word; bit-identical to
+    /// [`simd::execute_with`](super::simd::execute_with).
+    #[inline]
+    fn execute(&self, op: SimdOp, word: SimdWord) -> u64 {
+        let mut out = 0u64;
+        for (i, &(off, width)) in op.cfg.lanes().iter().enumerate() {
+            let (a, b) = word.lane(op.cfg, i);
+            let widx = (width.trailing_zeros() - 3) as usize;
+            let region_shift = width - 4;
+            let r = match op.modes[i] {
+                LaneMode::Mul => mul_one(&self.mul[widx], width, region_shift, a, b),
+                LaneMode::Div => {
+                    div_one(&self.div[widx], width, region_shift, super::max_val(width), a, b)
+                }
+            };
+            debug_assert!(width == 32 || r < (1u64 << (2 * width)));
+            out |= r << (2 * off);
+        }
+        out
+    }
+}
+
+/// Reusable packed-word kernel: the six per-width coefficient rescales of
+/// a [`CorrectionTables`] hoisted once at construction, so long-lived
+/// executors (the coordinator workers) pay the setup once per thread
+/// rather than once per dispatched chunk.
+pub struct WordKernel {
+    ctx: WordContext,
+}
+
+impl WordKernel {
+    pub fn new(t: &CorrectionTables) -> Self {
+        WordKernel { ctx: WordContext::new(t) }
+    }
+
+    /// Execute one packed word; bit-identical to
+    /// [`simd::execute_with`](super::simd::execute_with).
+    #[inline]
+    pub fn execute(&self, op: SimdOp, word: SimdWord) -> u64 {
+        self.ctx.execute(op, word)
+    }
+
+    /// Execute a chunk of packed words into `out` (equal lengths).
+    pub fn execute_into(&self, ops: &[SimdOp], words: &[SimdWord], out: &mut [u64]) {
+        debug_assert_eq!(ops.len(), words.len());
+        debug_assert_eq!(ops.len(), out.len());
+        for ((o, &op), &word) in out.iter_mut().zip(ops).zip(words) {
+            *o = self.ctx.execute(op, word);
+        }
+    }
+}
+
+/// Batched packed-word execution: `out[i] = simd::execute_with(t, ops[i],
+/// words[i])`, bit-exactly, with the six per-width coefficient rescales
+/// hoisted out of the loop. One-shot form of [`WordKernel`].
+pub fn execute_words_into(
+    t: &CorrectionTables,
+    ops: &[SimdOp],
+    words: &[SimdWord],
+    out: &mut [u64],
+) {
+    WordKernel::new(t).execute_into(ops, words, out);
+}
+
+/// Allocating form of [`execute_words_into`].
+pub fn execute_words(t: &CorrectionTables, ops: &[SimdOp], words: &[SimdWord]) -> Vec<u64> {
+    let mut out = vec![0u64; ops.len()];
+    execute_words_into(t, ops, words, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::simd::{self, LaneCfg};
+    use crate::arith::simdive::{simdive_div_with, simdive_mul_with};
+    use crate::arith::table::tables_for;
+    use crate::util::Rng;
+
+    #[test]
+    fn mul_batch_matches_scalar_exhaustive_8bit() {
+        let t = tables_for(8);
+        let a: Vec<u64> = (0..256u64).collect();
+        for bv in 0..256u64 {
+            let b = vec![bv; 256];
+            let got = mul_batch(t, 8, &a, &b);
+            for (i, &g) in got.iter().enumerate() {
+                assert_eq!(g, simdive_mul_with(t, 8, a[i], bv), "{}*{bv}", a[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn div_batch_matches_scalar_exhaustive_8bit() {
+        let t = tables_for(8);
+        let a: Vec<u64> = (0..256u64).collect();
+        for bv in 0..256u64 {
+            let b = vec![bv; 256];
+            let got = div_batch(t, 8, &a, &b);
+            for (i, &g) in got.iter().enumerate() {
+                assert_eq!(g, simdive_div_with(t, 8, a[i], bv), "{}/{bv}", a[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar_all_widths_and_w() {
+        let mut rng = Rng::new(0xBA7C);
+        for &bits in &crate::arith::WIDTHS {
+            for w in 0..=crate::arith::W_MAX {
+                let t = tables_for(w);
+                let a: Vec<u64> = (0..512).map(|_| rng.below(1u64 << bits)).collect();
+                let b: Vec<u64> = (0..512).map(|_| rng.below(1u64 << bits)).collect();
+                let m = mul_batch(t, bits, &a, &b);
+                let d = div_batch(t, bits, &a, &b);
+                for i in 0..a.len() {
+                    assert_eq!(m[i], simdive_mul_with(t, bits, a[i], b[i]), "mul w={w} bits={bits}");
+                    assert_eq!(d[i], simdive_div_with(t, bits, a[i], b[i]), "div w={w} bits={bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_conventions_survive_batching() {
+        let t = tables_for(8);
+        for &bits in &crate::arith::WIDTHS {
+            let a = [0u64, 99, 0, crate::arith::max_val(bits)];
+            let b = [99u64, 0, 0, 0];
+            let m = mul_batch(t, bits, &a, &b);
+            assert_eq!(m, vec![0, 0, 0, 0]);
+            let d = div_batch(t, bits, &a, &b);
+            assert_eq!(d[0], 0, "0/x must be 0");
+            assert_eq!(d[1], crate::arith::max_val(bits), "x/0 must saturate");
+            assert_eq!(d[2], crate::arith::max_val(bits), "0/0 follows b==0 first");
+            assert_eq!(d[3], crate::arith::max_val(bits));
+        }
+    }
+
+    #[test]
+    fn empty_batches_are_fine() {
+        let t = tables_for(8);
+        assert!(mul_batch(t, 16, &[], &[]).is_empty());
+        assert!(div_batch(t, 16, &[], &[]).is_empty());
+        assert!(execute_words(t, &[], &[]).is_empty());
+    }
+
+    #[test]
+    fn execute_words_matches_simd_execute() {
+        let mut rng = Rng::new(0x51D);
+        for w in [0u32, 4, 8] {
+            let t = tables_for(w);
+            let mut ops = Vec::new();
+            let mut words = Vec::new();
+            for _ in 0..400 {
+                let cfg = LaneCfg::ALL[rng.below(4) as usize];
+                let lanes = cfg.lanes();
+                let ops_a: Vec<u64> = lanes.iter().map(|&(_, wd)| rng.below(1u64 << wd)).collect();
+                let ops_b: Vec<u64> = lanes.iter().map(|&(_, wd)| rng.below(1u64 << wd)).collect();
+                let mut modes = [LaneMode::Mul; 4];
+                for m in modes.iter_mut() {
+                    if rng.below(2) == 1 {
+                        *m = LaneMode::Div;
+                    }
+                }
+                ops.push(SimdOp { cfg, modes });
+                words.push(SimdWord::pack(cfg, &ops_a, &ops_b));
+            }
+            let got = execute_words(t, &ops, &words);
+            for i in 0..ops.len() {
+                assert_eq!(
+                    got[i],
+                    simd::execute_with(t, ops[i], words[i]),
+                    "word {i} at w={w}"
+                );
+            }
+        }
+    }
+}

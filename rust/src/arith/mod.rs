@@ -9,8 +9,13 @@
 //! Operand convention: unsigned `N`-bit integers (`N ∈ {8, 16, 32}`) carried
 //! in `u64`. Multiplication returns a `2N`-bit product, division an `N`-bit
 //! quotient, both in `u64`.
+//!
+//! Hot paths go through [`batch`]: slice kernels bit-identical to the
+//! scalar entry points with the table/width resolution hoisted out of the
+//! inner loop (DESIGN.md §6).
 
 pub mod aaxd;
+pub mod batch;
 pub mod ca;
 pub mod exact;
 pub mod mitchell;
@@ -21,6 +26,10 @@ pub mod simdive;
 pub mod table;
 pub mod trunc;
 
+pub use batch::{
+    div_batch, div_batch_into, execute_words, execute_words_into, mul_batch, mul_batch_into,
+    WordKernel,
+};
 pub use mitchell::{frac_aligned, lod};
 pub use models::{DivDesign, MulDesign};
 pub use simd::{LaneCfg, LaneMode, SimdOp, SimdWord};

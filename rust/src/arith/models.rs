@@ -2,7 +2,7 @@
 //! as a uniform enum, so the error evaluators, benches and application
 //! substrates can iterate over designs generically.
 
-use super::{aaxd, ca, exact, mitchell, saadat, simdive, trunc};
+use super::{aaxd, batch, ca, exact, mitchell, saadat, simdive, table, trunc};
 
 /// Multiplier designs (Table 2 upper half + Table 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +38,26 @@ impl MulDesign {
             MulDesign::Mitchell => mitchell::mul(bits, a, b),
             MulDesign::Mbm => saadat::mbm_mul(bits, a, b),
             MulDesign::Simdive { w } => simdive::simdive_mul_w(bits, a, b, w),
+        }
+    }
+
+    /// Batched evaluation into a reusable buffer: `out[i] = self.mul(bits,
+    /// a[i], b[i])`, bit-exactly. SIMDive routes through the
+    /// [`batch`](super::batch) slice kernel (tables and width resolved
+    /// once per call); the other designs fall back to per-element calls.
+    pub fn mul_batch_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.resize(a.len(), 0);
+        match *self {
+            MulDesign::Simdive { w } => {
+                batch::mul_batch_into(table::tables_for(w), bits, a, b, out)
+            }
+            _ => {
+                for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                    *o = self.mul(bits, x, y);
+                }
+            }
         }
     }
 
@@ -111,6 +131,26 @@ impl DivDesign {
         }
     }
 
+    /// Batched evaluation into a reusable buffer: `out[i] = self.div(bits,
+    /// a[i], b[i])`, bit-exactly. SIMDive routes through the
+    /// [`batch`](super::batch) slice kernel; the other designs fall back
+    /// to per-element calls.
+    pub fn div_batch_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.resize(a.len(), 0);
+        match *self {
+            DivDesign::Simdive { w } => {
+                batch::div_batch_into(table::tables_for(w), bits, a, b, out)
+            }
+            _ => {
+                for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                    *o = self.div(bits, x, y);
+                }
+            }
+        }
+    }
+
     /// Real-valued output for error analysis (behavioral-model form).
     #[inline]
     pub fn div_real(&self, bits: u32, a: u64, b: u64) -> f64 {
@@ -178,6 +218,26 @@ mod tests {
     fn accurate_is_identity() {
         assert_eq!(MulDesign::Accurate.mul(16, 123, 456), 123 * 456);
         assert_eq!(DivDesign::Accurate.div(16, 456, 123), 456 / 123);
+    }
+
+    #[test]
+    fn batched_dispatch_matches_scalar_for_every_design() {
+        let mut rng = crate::util::Rng::new(42);
+        let a: Vec<u64> = (0..200).map(|_| rng.below(1 << 16)).collect();
+        let b: Vec<u64> = (0..200).map(|_| rng.below(1 << 16)).collect();
+        let mut out = Vec::new();
+        for d in MulDesign::table2_rows() {
+            d.mul_batch_into(16, &a, &b, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i], d.mul(16, a[i], b[i]), "{} at {i}", d.name());
+            }
+        }
+        for d in DivDesign::table2_rows() {
+            d.div_batch_into(16, &a, &b, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i], d.div(16, a[i], b[i]), "{} at {i}", d.name());
+            }
+        }
     }
 
     #[test]

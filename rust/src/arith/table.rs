@@ -32,11 +32,21 @@ const GRID: usize = 32;
 ///
 /// Entries are signed fixed-point with [`TABLE_RESOLUTION_BITS`] fractional
 /// bits. Multiplier entries are ≥ 0, divider entries ≤ 0.
+///
+/// Each table is stored twice: as the 8×8 grid the paper describes (and
+/// the netlist generator consumes), and flattened to a single 64-entry
+/// array indexed by [`Self::flat_index`] — one load with no nested bounds
+/// arithmetic, which is what the batched kernels in
+/// [`batch`](super::batch) index in their inner loops.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CorrectionTables {
     pub w: u32,
     pub mul: [[i32; 8]; 8],
     pub div: [[i32; 8]; 8],
+    /// `mul` flattened: `mul_flat[flat_index(i, j)] == mul[i][j]`.
+    pub mul_flat: [i32; 64],
+    /// `div` flattened: `div_flat[flat_index(i, j)] == div[i][j]`.
+    pub div_flat: [i32; 64],
 }
 
 impl CorrectionTables {
@@ -52,7 +62,26 @@ impl CorrectionTables {
                 div[i][j] = quantize(full.1[i][j], w);
             }
         }
-        CorrectionTables { w, mul, div }
+        CorrectionTables::from_grids(w, mul, div)
+    }
+
+    /// Build tables from 8×8 coefficient grids, deriving the flat forms.
+    pub fn from_grids(w: u32, mul: [[i32; 8]; 8], div: [[i32; 8]; 8]) -> Self {
+        let mut mul_flat = [0i32; 64];
+        let mut div_flat = [0i32; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                mul_flat[Self::flat_index(i, j)] = mul[i][j];
+                div_flat[Self::flat_index(i, j)] = div[i][j];
+            }
+        }
+        CorrectionTables { w, mul, div, mul_flat, div_flat }
+    }
+
+    /// Index into the flat tables: `(region(a) << 3) | region(b)`.
+    #[inline]
+    pub fn flat_index(ra: usize, rb: usize) -> usize {
+        (ra << 3) | rb
     }
 
     /// Scale a coefficient into `F = bits − 1` fraction-bit units for use
@@ -165,7 +194,7 @@ pub fn constant_tables() -> &'static CorrectionTables {
         let res = 1i64 << TABLE_RESOLUTION_BITS;
         let mul_c = (res as f64 / 16.0).round() as i32;
         let div_c = (crate::arith::saadat::inzed_coeff() * res as f64).round() as i32;
-        CorrectionTables { w: W_MAX, mul: [[mul_c; 8]; 8], div: [[div_c; 8]; 8] }
+        CorrectionTables::from_grids(W_MAX, [[mul_c; 8]; 8], [[div_c; 8]; 8])
     })
 }
 
@@ -274,5 +303,22 @@ mod tests {
     fn cached_generation_consistent() {
         assert_eq!(tables_for(8), default_tables());
         assert_eq!(tables_for(3), &CorrectionTables::generate(3));
+    }
+
+    #[test]
+    fn flat_tables_mirror_grids() {
+        for w in 0..=W_MAX {
+            let t = tables_for(w);
+            for i in 0..8 {
+                for j in 0..8 {
+                    let k = CorrectionTables::flat_index(i, j);
+                    assert_eq!(t.mul_flat[k], t.mul[i][j], "w={w} mul[{i}][{j}]");
+                    assert_eq!(t.div_flat[k], t.div[i][j], "w={w} div[{i}][{j}]");
+                }
+            }
+        }
+        let c = constant_tables();
+        assert!(c.mul_flat.iter().all(|&v| v == c.mul[0][0]));
+        assert!(c.div_flat.iter().all(|&v| v == c.div[0][0]));
     }
 }

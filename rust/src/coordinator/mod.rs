@@ -12,8 +12,8 @@
 pub mod packer;
 pub mod server;
 
-pub use packer::{pack_requests, unpack_results, PackedWord, ReqOp, Request};
-pub use server::{Coordinator, CoordinatorConfig, Stats};
+pub use packer::{lane_value, pack_requests, unpack_results, PackedWord, ReqOp, Request};
+pub use server::{BatchHandle, Coordinator, CoordinatorConfig, Stats};
 
 #[cfg(test)]
 mod tests {

@@ -143,19 +143,24 @@ pub fn pack_requests(reqs: &[Request]) -> Vec<PackedWord> {
     out
 }
 
+/// Extract lane `lane`'s scalar result from a packed 64-bit result word.
+/// Divide results occupy the low N bits of the 2N field.
+#[inline]
+pub fn lane_value(pw: &PackedWord, packed_result: u64, lane: usize) -> u64 {
+    let raw = crate::arith::simd::result_lane(pw.op, packed_result, lane);
+    let width = pw.op.cfg.lanes()[lane].1;
+    match pw.op.modes[lane] {
+        LaneMode::Div if width < 32 => raw & crate::arith::max_val(width),
+        _ => raw,
+    }
+}
+
 /// Unpack per-lane results: `(request id, value)` for active lanes.
 pub fn unpack_results(pw: &PackedWord, packed_result: u64) -> Vec<(u64, u64)> {
     let mut out = Vec::with_capacity(pw.lane_count());
     for (l, id) in pw.lane_req.iter().enumerate().take(pw.lane_count()) {
         if let Some(id) = id {
-            let raw = crate::arith::simd::result_lane(pw.op, packed_result, l);
-            // Divide results occupy the low N bits of the 2N field.
-            let width = pw.op.cfg.lanes()[l].1;
-            let value = match pw.op.modes[l] {
-                LaneMode::Div if width < 32 => raw & crate::arith::max_val(width),
-                _ => raw,
-            };
-            out.push((*id, value));
+            out.push((*id, lane_value(pw, packed_result, l)));
         }
     }
     out

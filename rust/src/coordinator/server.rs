@@ -1,15 +1,32 @@
 //! Threaded coordinator: bounded request queue (backpressure), a batcher
 //! that drains the queue into the lane packer, a worker pool executing
-//! packed words on the SIMDive behavioral unit, and accounting (latency,
+//! packed words on the batched SIMDive kernel, and accounting (latency,
 //! energy from the calibrated fabric model, lane utilization, power-gated
 //! idle lanes). std::thread + mpsc — tokio is unavailable offline
 //! (DESIGN.md §1).
+//!
+//! Hot-path structure (DESIGN.md §6):
+//!
+//! * **O(1) response routing.** The batcher renumbers each drained request
+//!   to its index in the drain, so a packed word carries its routes in a
+//!   lane-aligned array and every route lookup is a direct index — there
+//!   are no linear `find` scans anywhere on the request path.
+//! * **Per-batch response channels.** [`Coordinator::submit_batch`] sends
+//!   a whole request batch with *one* response channel; workers tag each
+//!   response with its request-index slot and [`BatchHandle::wait`]
+//!   reassembles in submission order. The per-request channel of
+//!   [`Coordinator::submit`] remains for single-shot callers.
+//! * **Per-worker feeds.** Each worker owns its own channel, fed
+//!   round-robin with contiguous chunks of packed words, so workers never
+//!   contend on a shared `Mutex<Receiver>`; chunks execute through a
+//!   [`batch::WordKernel`](crate::arith::batch::WordKernel) whose
+//!   correction-table rescales are resolved once per worker thread.
 
-use super::packer::{pack_requests, unpack_results, PackedWord, Request};
-use crate::arith::simd;
+use super::packer::{lane_value, pack_requests, PackedWord, Request};
+use crate::arith::{batch, table};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// A completed request.
@@ -67,9 +84,56 @@ struct Shared {
     energy_mpj: AtomicU64, // milli-pJ, to keep atomic integer math
 }
 
+/// Where a completed request's response goes.
+#[derive(Clone)]
+enum Route {
+    /// Dedicated per-request channel ([`Coordinator::submit`]).
+    Single(Sender<Response>),
+    /// Shared per-batch channel + request-index slot
+    /// ([`Coordinator::submit_batch`]).
+    Slot(Sender<(u32, Response)>, u32),
+}
+
+impl Route {
+    #[inline]
+    fn send(&self, resp: Response) {
+        match self {
+            Route::Single(tx) => {
+                let _ = tx.send(resp);
+            }
+            Route::Slot(tx, slot) => {
+                let _ = tx.send((*slot, resp));
+            }
+        }
+    }
+}
+
+/// One packed word plus its lane-aligned response routes: `routes[l]` is
+/// `(original request id, route)` for the request in lane `l`. Routing a
+/// result is a direct index — no scan.
+struct Job {
+    pw: PackedWord,
+    routes: [Option<(u64, Route)>; 4],
+}
+
 enum Msg {
-    Req(Request, Sender<Response>),
+    Req(Request, Route),
+    /// A chunk of a batch submission: requests, the slot index of the
+    /// first one, and the batch's shared response channel. Large batches
+    /// are split into `cfg.batch`-sized chunks so the bounded queue's
+    /// backpressure still applies to batch submitters.
+    Batch(Vec<Request>, u32, Sender<(u32, Response)>),
     Flush,
+    Stop,
+}
+
+/// Batcher control flow after folding in one queue message.
+enum Flow {
+    /// Keep draining into the current batch.
+    Drain,
+    /// Close the current batch now (flush).
+    CloseBatch,
+    /// Shut the coordinator down.
     Stop,
 }
 
@@ -78,6 +142,41 @@ pub struct Coordinator {
     tx: SyncSender<Msg>,
     batcher: Option<JoinHandle<()>>,
     shared: Arc<Shared>,
+    /// Chunk size for splitting batch submissions (`cfg.batch`).
+    batch_chunk: usize,
+}
+
+/// In-flight batch submitted via [`Coordinator::submit_batch`]: one
+/// response channel for the whole batch, responses tagged with their
+/// request-index slot.
+pub struct BatchHandle {
+    rx: Receiver<(u32, Response)>,
+    n: usize,
+}
+
+impl BatchHandle {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Block until every response arrives; returns them in submission
+    /// order.
+    pub fn wait(self) -> Vec<Response> {
+        let mut out: Vec<Option<Response>> = vec![None; self.n];
+        let mut got = 0usize;
+        while got < self.n {
+            let (slot, resp) = self.rx.recv().expect("coordinator stopped");
+            if out[slot as usize].replace(resp).is_none() {
+                got += 1;
+            }
+        }
+        out.into_iter().map(|r| r.unwrap()).collect()
+    }
 }
 
 /// Per-word energy estimate (pJ) with power gating: idle lanes of a word
@@ -87,6 +186,15 @@ pub const IDLE_FRACTION: f64 = 0.1;
 fn word_energy_pj(per_word_pj: f64, active: u32, lanes: u32) -> f64 {
     let share = per_word_pj / lanes as f64;
     share * active as f64 + share * (lanes - active) as f64 * IDLE_FRACTION
+}
+
+/// Milli-pJ increment added to the shared energy counter for a chunk's
+/// energy. Rounds to nearest — truncation would floor every chunk's
+/// fractional milli-pJ and drift `Stats::energy_pj` low over millions of
+/// words.
+#[inline]
+fn energy_increment_mpj(energy_pj: f64) -> u64 {
+    (energy_pj * 1000.0).round() as u64
 }
 
 impl Coordinator {
@@ -104,37 +212,53 @@ impl Coordinator {
         // once; the gate-level characterization is cached globally).
         let per_word_pj = simd_word_energy_pj();
 
-        // Worker pool fed by the batcher.
-        let (work_tx, work_rx) = sync_channel::<(PackedWord, Vec<(u64, Sender<Response>)>)>(
-            cfg.queue_depth.max(16),
-        );
-        let work_rx = Arc::new(Mutex::new(work_rx));
-        let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
-            let work_rx = Arc::clone(&work_rx);
+        // Worker pool: one channel per worker (no shared-receiver lock),
+        // fed round-robin by the batcher.
+        let n_workers = cfg.workers.max(1);
+        let mut work_txs: Vec<SyncSender<Vec<Job>>> = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (work_tx, work_rx) = sync_channel::<Vec<Job>>(cfg.queue_depth.max(16));
+            work_txs.push(work_tx);
             let shared = Arc::clone(&shared);
             let w = cfg.w;
-            workers.push(std::thread::spawn(move || loop {
-                let item = {
-                    let guard = work_rx.lock().unwrap();
-                    guard.recv()
-                };
-                let Ok((pw, pending)) = item else { break };
-                let packed = simd::execute(pw.op, pw.word, w);
-                let results = unpack_results(&pw, packed);
-                shared.words.fetch_add(1, Ordering::Relaxed);
-                shared.active_lanes.fetch_add(pw.active_lanes as u64, Ordering::Relaxed);
-                shared
-                    .total_lanes
-                    .fetch_add(pw.lane_count() as u64, Ordering::Relaxed);
-                let e = word_energy_pj(per_word_pj, pw.active_lanes, pw.lane_count() as u32);
-                shared
-                    .energy_mpj
-                    .fetch_add((e * 1000.0) as u64, Ordering::Relaxed);
-                for (id, value) in results {
-                    if let Some((_, tx)) = pending.iter().find(|(pid, _)| *pid == id) {
-                        let _ = tx.send(Response { id, value });
+            workers.push(std::thread::spawn(move || {
+                // Per-width coefficient rescales hoisted once per worker
+                // thread, not once per chunk.
+                let kernel = batch::WordKernel::new(table::tables_for(w));
+                let mut ops = Vec::new();
+                let mut words = Vec::new();
+                let mut results = Vec::new();
+                while let Ok(jobs) = work_rx.recv() {
+                    // Execute the whole chunk through the batched kernel.
+                    ops.clear();
+                    ops.extend(jobs.iter().map(|j| j.pw.op));
+                    words.clear();
+                    words.extend(jobs.iter().map(|j| j.pw.word));
+                    results.clear();
+                    results.resize(jobs.len(), 0);
+                    kernel.execute_into(&ops, &words, &mut results);
+
+                    let (mut active, mut total) = (0u64, 0u64);
+                    let mut energy = 0.0f64;
+                    for (job, &packed) in jobs.iter().zip(&results) {
+                        let pw = &job.pw;
+                        active += pw.active_lanes as u64;
+                        total += pw.lane_count() as u64;
+                        energy +=
+                            word_energy_pj(per_word_pj, pw.active_lanes, pw.lane_count() as u32);
+                        for (l, route) in job.routes.iter().enumerate().take(pw.lane_count()) {
+                            if let Some((id, route)) = route {
+                                route.send(Response { id: *id, value: lane_value(pw, packed, l) });
+                            }
+                        }
                     }
+                    shared.words.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+                    shared.active_lanes.fetch_add(active, Ordering::Relaxed);
+                    shared.total_lanes.fetch_add(total, Ordering::Relaxed);
+                    shared
+                        .energy_mpj
+                        .fetch_add(energy_increment_mpj(energy), Ordering::Relaxed);
                 }
             }));
         }
@@ -144,29 +268,54 @@ impl Coordinator {
         let batch_size = cfg.batch.max(1);
         let batcher = std::thread::spawn(move || {
             let mut stop = false;
+            let mut rr = 0usize; // round-robin worker cursor
             while !stop {
+                // Requests renumbered to their drain index; `routes[i]` is
+                // the original id + response route of drained request `i`.
                 let mut reqs: Vec<Request> = Vec::new();
-                let mut senders: Vec<(u64, Sender<Response>)> = Vec::new();
+                let mut routes: Vec<(u64, Route)> = Vec::new();
+                // Fold one message into the drain; returns the resulting
+                // control flow (continue draining / close batch / stop).
+                let on_msg = |reqs: &mut Vec<Request>,
+                              routes: &mut Vec<(u64, Route)>,
+                              msg: Msg|
+                 -> Flow {
+                    let mut push_req = |r: Request, route: Route| {
+                        let mut local = r;
+                        local.id = reqs.len() as u64;
+                        routes.push((r.id, route));
+                        reqs.push(local);
+                    };
+                    match msg {
+                        Msg::Req(r, s) => push_req(r, s),
+                        Msg::Batch(batch_reqs, base, tx) => {
+                            for (k, r) in batch_reqs.into_iter().enumerate() {
+                                push_req(r, Route::Slot(tx.clone(), base + k as u32));
+                            }
+                        }
+                        Msg::Flush => return Flow::CloseBatch,
+                        Msg::Stop => return Flow::Stop,
+                    }
+                    Flow::Drain
+                };
                 // Block for the first message, then drain greedily.
                 match rx.recv() {
-                    Ok(Msg::Req(r, s)) => {
-                        senders.push((r.id, s));
-                        reqs.push(r);
-                    }
-                    Ok(Msg::Flush) => {}
-                    Ok(Msg::Stop) | Err(_) => break,
+                    Ok(msg) => match on_msg(&mut reqs, &mut routes, msg) {
+                        Flow::Stop => break,
+                        Flow::Drain | Flow::CloseBatch => {}
+                    },
+                    Err(_) => break,
                 }
                 while reqs.len() < batch_size {
                     match rx.try_recv() {
-                        Ok(Msg::Req(r, s)) => {
-                            senders.push((r.id, s));
-                            reqs.push(r);
-                        }
-                        Ok(Msg::Flush) => break,
-                        Ok(Msg::Stop) => {
-                            stop = true;
-                            break;
-                        }
+                        Ok(msg) => match on_msg(&mut reqs, &mut routes, msg) {
+                            Flow::Drain => {}
+                            Flow::CloseBatch => break,
+                            Flow::Stop => {
+                                stop = true;
+                                break;
+                            }
+                        },
                         Err(_) => break,
                     }
                 }
@@ -174,33 +323,76 @@ impl Coordinator {
                     continue;
                 }
                 shared_b.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-                for pw in pack_requests(&reqs) {
-                    let pending: Vec<(u64, Sender<Response>)> = pw
-                        .lane_req
-                        .iter()
-                        .flatten()
-                        .filter_map(|id| senders.iter().find(|(sid, _)| sid == id).cloned())
-                        .collect();
-                    if work_tx.send((pw, pending)).is_err() {
+
+                // Pack, attach lane-aligned routes by direct index, and
+                // dispatch contiguous chunks round-robin to the workers.
+                let jobs: Vec<Job> = pack_requests(&reqs)
+                    .into_iter()
+                    .map(|pw| {
+                        let mut lane_routes: [Option<(u64, Route)>; 4] = [None, None, None, None];
+                        for (l, lane) in pw.lane_req.iter().enumerate() {
+                            if let Some(local) = lane {
+                                let (orig_id, route) = &routes[*local as usize];
+                                lane_routes[l] = Some((*orig_id, route.clone()));
+                            }
+                        }
+                        Job { pw, routes: lane_routes }
+                    })
+                    .collect();
+                let chunk = jobs.len().div_ceil(n_workers).max(1);
+                let mut iter = jobs.into_iter();
+                loop {
+                    let chunk_jobs: Vec<Job> = iter.by_ref().take(chunk).collect();
+                    if chunk_jobs.is_empty() {
+                        break;
+                    }
+                    if work_txs[rr % n_workers].send(chunk_jobs).is_err() {
                         return;
                     }
+                    rr = rr.wrapping_add(1);
                 }
             }
-            drop(work_tx);
+            drop(work_txs);
             for w in workers {
                 let _ = w.join();
             }
         });
 
-        Coordinator { tx, batcher: Some(batcher), shared }
+        Coordinator { tx, batcher: Some(batcher), shared, batch_chunk: batch_size }
     }
 
     /// Submit a request; returns the response channel. Blocks when the
     /// queue is full (backpressure).
     pub fn submit(&self, req: Request) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.tx.send(Msg::Req(req, tx)).expect("coordinator stopped");
+        self.tx.send(Msg::Req(req, Route::Single(tx))).expect("coordinator stopped");
         rx
+    }
+
+    /// Submit a batch of requests sharing one response channel; responses
+    /// are tagged with their request-index slot and reassembled in
+    /// submission order by [`BatchHandle::wait`]. This is the throughput
+    /// path: one channel allocation per batch instead of one per request.
+    ///
+    /// The batch is split into `cfg.batch`-sized queue messages, so the
+    /// bounded queue's backpressure applies to batch submitters too (a
+    /// batch occupies one queue slot per `cfg.batch` requests; submission
+    /// blocks when the queue is full).
+    pub fn submit_batch(&self, reqs: Vec<Request>) -> BatchHandle {
+        let n = reqs.len();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut slot = 0u32;
+        let mut iter = reqs.into_iter();
+        loop {
+            let chunk: Vec<Request> = iter.by_ref().take(self.batch_chunk).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            let len = chunk.len() as u32;
+            self.tx.send(Msg::Batch(chunk, slot, tx.clone())).expect("coordinator stopped");
+            slot += len;
+        }
+        BatchHandle { rx, n }
     }
 
     /// Force the batcher to close the current batch.
@@ -254,6 +446,7 @@ pub fn simd_word_energy_pj() -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arith::simdive::{simdive_div, simdive_mul};
     use crate::coordinator::packer::ReqOp;
 
     #[test]
@@ -279,6 +472,81 @@ mod tests {
     }
 
     #[test]
+    fn batch_submission_routes_in_order() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let mut rng = crate::util::Rng::new(0xBEEF);
+        let reqs: Vec<Request> = (0..500u64)
+            .map(|i| {
+                let bits = [8u32, 16, 32][rng.below(3) as usize];
+                Request {
+                    id: 1000 + i,
+                    op: if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
+                    bits,
+                    a: rng.operand(bits),
+                    b: rng.operand(bits),
+                }
+            })
+            .collect();
+        let handle = coord.submit_batch(reqs.clone());
+        assert_eq!(handle.len(), 500);
+        let responses = handle.wait();
+        for (resp, req) in responses.iter().zip(&reqs) {
+            assert_eq!(resp.id, req.id, "responses must come back in submission order");
+            let want = match req.op {
+                ReqOp::Mul => simdive_mul(req.bits, req.a, req.b),
+                ReqOp::Div => simdive_div(req.bits, req.a, req.b),
+            };
+            assert_eq!(resp.value, want, "req {}", req.id);
+        }
+        let s = coord.shutdown();
+        assert_eq!(s.requests, 500);
+    }
+
+    #[test]
+    fn empty_batch_returns_immediately() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let handle = coord.submit_batch(Vec::new());
+        assert!(handle.is_empty());
+        assert!(handle.wait().is_empty());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn duplicate_ids_each_get_a_response() {
+        // Caller-chosen ids need not be unique: routing is positional.
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let reqs: Vec<Request> =
+            (0..8).map(|_| Request { id: 7, op: ReqOp::Mul, bits: 8, a: 43, b: 10 }).collect();
+        let responses = coord.submit_batch(reqs).wait();
+        assert_eq!(responses.len(), 8);
+        for r in responses {
+            assert_eq!(r.id, 7);
+            assert_eq!(r.value, simdive_mul(8, 43, 10));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mixed_single_and_batch_submission() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            w: 8,
+            queue_depth: 64,
+            batch: 16,
+        });
+        let single = coord.submit(Request { id: 0, op: ReqOp::Div, bits: 16, a: 5000, b: 40 });
+        let batch = coord.submit_batch(
+            (0..32).map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, a: 1 + i, b: 3 }).collect(),
+        );
+        assert_eq!(single.recv().unwrap().value, simdive_div(16, 5000, 40));
+        let responses = batch.wait();
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.value, simdive_mul(8, 1 + i as u64, 3));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
     fn power_gating_reduces_energy_of_partial_words() {
         let full = word_energy_pj(100.0, 4, 4);
         let one = word_energy_pj(100.0, 1, 4);
@@ -290,5 +558,16 @@ mod tests {
     fn word_energy_is_positive_and_sane() {
         let e = simd_word_energy_pj();
         assert!(e > 1.0 && e < 100_000.0, "per-word energy {e} pJ");
+    }
+
+    #[test]
+    fn energy_accumulation_rounds_not_floors() {
+        // The increment actually used by the worker loop must round to the
+        // nearest milli-pJ; truncation (`as u64` on the raw product) would
+        // floor 0.4999 pJ to 499 and 0.0006 pJ to 0.
+        assert_eq!(energy_increment_mpj(0.4999), 500);
+        assert_eq!(energy_increment_mpj(0.0006), 1);
+        assert_eq!(energy_increment_mpj(0.0004), 0);
+        assert!(energy_increment_mpj(0.4999) > (0.4999f64 * 1000.0) as u64);
     }
 }

@@ -9,7 +9,7 @@
 //!   the paper's two experiment arms.
 
 use super::Image;
-use crate::arith::{mitchell, saadat, simdive};
+use crate::arith::{DivDesign, MulDesign};
 
 /// Pluggable arithmetic backend for the applications.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,15 +25,32 @@ pub enum ArithKind {
 }
 
 impl ArithKind {
+    /// The equivalent multiplier design (identical per-element semantics,
+    /// including `ArithKind::Accurate` ↔ `MulDesign::Accurate`).
+    pub fn mul_design(self) -> MulDesign {
+        match self {
+            ArithKind::Accurate => MulDesign::Accurate,
+            ArithKind::Mitchell => MulDesign::Mitchell,
+            ArithKind::MbmInzed => MulDesign::Mbm,
+            ArithKind::Simdive(w) => MulDesign::Simdive { w },
+        }
+    }
+
+    /// The equivalent divider design (`MbmInzed` pairs MBM's multiplier
+    /// with the INZeD divider, as in the paper's SoA baseline).
+    pub fn div_design(self) -> DivDesign {
+        match self {
+            ArithKind::Accurate => DivDesign::Accurate,
+            ArithKind::Mitchell => DivDesign::Mitchell,
+            ArithKind::MbmInzed => DivDesign::Inzed,
+            ArithKind::Simdive(w) => DivDesign::Simdive { w },
+        }
+    }
+
     /// 16-bit multiply (operands must fit 16 bits).
     #[inline]
     pub fn mul16(self, a: u64, b: u64) -> u64 {
-        match self {
-            ArithKind::Accurate => a * b,
-            ArithKind::Mitchell => mitchell::mul(16, a, b),
-            ArithKind::MbmInzed => saadat::mbm_mul(16, a, b),
-            ArithKind::Simdive(w) => simdive::simdive_mul_w(16, a, b, w),
-        }
+        self.mul_design().mul(16, a, b)
     }
 
     /// Division of a ≤ 24-bit dividend by a ≤ 16-bit divisor (wider
@@ -41,14 +58,20 @@ impl ArithKind {
     /// kernel; the hardware analogue is a 32-bit SIMDive lane).
     #[inline]
     pub fn div32(self, a: u64, b: u64) -> u64 {
-        match self {
-            ArithKind::Accurate => {
-                if b == 0 { u32::MAX as u64 } else { a / b }
-            }
-            ArithKind::Mitchell => mitchell::div(32, a, b),
-            ArithKind::MbmInzed => saadat::inzed_div(32, a, b),
-            ArithKind::Simdive(w) => simdive::simdive_div_w(32, a, b, w),
-        }
+        self.div_design().div(32, a, b)
+    }
+
+    /// Batched 16-bit multiply into a reusable buffer, bit-identical to
+    /// per-element [`Self::mul16`] (SIMDive routes through the batched
+    /// slice kernel with tables resolved once per call).
+    pub fn mul16_batch_into(self, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        self.mul_design().mul_batch_into(16, a, b, out)
+    }
+
+    /// Batched wide divide into a reusable buffer, bit-identical to
+    /// per-element [`Self::div32`].
+    pub fn div32_batch_into(self, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        self.div_design().div_batch_into(32, a, b, out)
     }
 
     pub fn name(self) -> &'static str {
@@ -63,14 +86,29 @@ impl ArithKind {
 
 /// Multiply-blend two images: `out = A·B / 256` with the multiplier from
 /// `kind` (the divide-by-256 is a shift in all variants, as in the paper's
-/// multiplier-only experiment).
+/// multiplier-only experiment). Pixels are processed in tiles through the
+/// batched multiplier kernel — one table resolution per tile, not per
+/// pixel — with bit-identical results.
 pub fn blend(a: &Image, b: &Image, kind: ArithKind) -> Image {
     assert_eq!(a.width, b.width);
     assert_eq!(a.height, b.height);
+    const TILE: usize = 4096;
     let mut out = Image::new(a.width, a.height);
-    for i in 0..a.data.len() {
-        let p = kind.mul16(a.data[i] as u64, b.data[i] as u64);
-        out.data[i] = (p >> 8).min(255) as u8;
+    let mut ops_a: Vec<u64> = Vec::with_capacity(TILE);
+    let mut ops_b: Vec<u64> = Vec::with_capacity(TILE);
+    let mut prods: Vec<u64> = Vec::with_capacity(TILE);
+    let mut offset = 0usize;
+    while offset < a.data.len() {
+        let end = (offset + TILE).min(a.data.len());
+        ops_a.clear();
+        ops_a.extend(a.data[offset..end].iter().map(|&p| p as u64));
+        ops_b.clear();
+        ops_b.extend(b.data[offset..end].iter().map(|&p| p as u64));
+        kind.mul16_batch_into(&ops_a, &ops_b, &mut prods);
+        for (dst, &p) in out.data[offset..end].iter_mut().zip(&prods) {
+            *dst = (p >> 8).min(255) as u8;
+        }
+        offset = end;
     }
     out
 }
@@ -88,20 +126,61 @@ pub const GAUSS5_SUM: u64 = 273;
 /// Gaussian smoothing. `approx_mul` selects the hybrid arm (weight
 /// multiplies also approximate); the ÷273 normalization always uses
 /// `kind`'s divider (the div-only arm passes `approx_mul = false`).
+///
+/// Evaluation is row-batched through the slice kernels: in the hybrid arm
+/// the 25 weight multiplies of every pixel in a row form one batched
+/// multiply (width·25 products per call), and the ÷273 normalizations of
+/// the row form one batched divide. Tap order and accumulation are
+/// unchanged, so output is bit-identical to the per-pixel path.
 pub fn gaussian_smooth(img: &Image, kind: ArithKind, approx_mul: bool) -> Image {
+    const TAPS: usize = 25;
     let mut out = Image::new(img.width, img.height);
+    // The weight pattern of a row is the same for every row: width copies
+    // of the flattened 5×5 kernel. Build it once.
+    let ops_w: Vec<u64> = if approx_mul {
+        GAUSS5.iter().flatten().copied().cycle().take(img.width * TAPS).collect()
+    } else {
+        Vec::new()
+    };
+    let mut ops_px: Vec<u64> = Vec::with_capacity(img.width * TAPS);
+    let mut prods: Vec<u64> = Vec::new();
+    let mut accs: Vec<u64> = Vec::with_capacity(img.width);
+    let divisors: Vec<u64> = vec![GAUSS5_SUM; img.width];
+    let mut quots: Vec<u64> = Vec::new();
     for y in 0..img.height {
-        for x in 0..img.width {
-            let mut acc = 0u64;
-            for (dy, row) in GAUSS5.iter().enumerate() {
-                for (dx, &w) in row.iter().enumerate() {
-                    let px =
-                        img.at_clamped(x as isize + dx as isize - 2, y as isize + dy as isize - 2)
-                            as u64;
-                    acc += if approx_mul { kind.mul16(w, px) } else { w * px };
+        accs.clear();
+        if approx_mul {
+            // Gather the row's taps, batch-multiply, then reduce per pixel.
+            ops_px.clear();
+            for x in 0..img.width {
+                for dy in 0..5isize {
+                    for dx in 0..5isize {
+                        let px = img.at_clamped(x as isize + dx - 2, y as isize + dy - 2) as u64;
+                        ops_px.push(px);
+                    }
                 }
             }
-            let v = kind.div32(acc, GAUSS5_SUM);
+            kind.mul16_batch_into(&ops_w, &ops_px, &mut prods);
+            for chunk in prods.chunks_exact(TAPS) {
+                accs.push(chunk.iter().sum());
+            }
+        } else {
+            for x in 0..img.width {
+                let mut acc = 0u64;
+                for (dy, row) in GAUSS5.iter().enumerate() {
+                    for (dx, &w) in row.iter().enumerate() {
+                        let px = img.at_clamped(
+                            x as isize + dx as isize - 2,
+                            y as isize + dy as isize - 2,
+                        ) as u64;
+                        acc += w * px;
+                    }
+                }
+                accs.push(acc);
+            }
+        }
+        kind.div32_batch_into(&accs, &divisors, &mut quots);
+        for (x, &v) in quots.iter().enumerate() {
             out.set(x, y, v.min(255) as u8);
         }
     }
@@ -164,6 +243,59 @@ mod tests {
         // Hybrid stays close to div-only for SIMDive (paper's motivation
         // for the integrated unit).
         assert!((sd_div - sd_hyb).abs() < 2.0, "div {sd_div} vs hybrid {sd_hyb}");
+    }
+
+    /// Per-pixel reference of the batched [`blend`]/[`gaussian_smooth`]
+    /// paths, used as the bit-equality oracle.
+    fn blend_scalar(a: &Image, b: &Image, kind: ArithKind) -> Image {
+        let mut out = Image::new(a.width, a.height);
+        for i in 0..a.data.len() {
+            let p = kind.mul16(a.data[i] as u64, b.data[i] as u64);
+            out.data[i] = (p >> 8).min(255) as u8;
+        }
+        out
+    }
+
+    fn gaussian_scalar(img: &Image, kind: ArithKind, approx_mul: bool) -> Image {
+        let mut out = Image::new(img.width, img.height);
+        for y in 0..img.height {
+            for x in 0..img.width {
+                let mut acc = 0u64;
+                for (dy, row) in GAUSS5.iter().enumerate() {
+                    for (dx, &w) in row.iter().enumerate() {
+                        let px = img
+                            .at_clamped(x as isize + dx as isize - 2, y as isize + dy as isize - 2)
+                            as u64;
+                        acc += if approx_mul { kind.mul16(w, px) } else { w * px };
+                    }
+                }
+                let v = kind.div32(acc, GAUSS5_SUM);
+                out.set(x, y, v.min(255) as u8);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn batched_pipelines_bit_match_scalar() {
+        let a = generate(Scene::Portrait, 64, 41);
+        let b = generate(Scene::Texture, 64, 42);
+        for kind in [
+            ArithKind::Accurate,
+            ArithKind::Mitchell,
+            ArithKind::MbmInzed,
+            ArithKind::Simdive(8),
+            ArithKind::Simdive(3),
+        ] {
+            assert_eq!(blend(&a, &b, kind).data, blend_scalar(&a, &b, kind).data, "{kind:?}");
+            for approx_mul in [false, true] {
+                assert_eq!(
+                    gaussian_smooth(&a, kind, approx_mul).data,
+                    gaussian_scalar(&a, kind, approx_mul).data,
+                    "{kind:?} hybrid={approx_mul}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -108,34 +108,41 @@ fn demo() {
     );
 }
 
-/// Serving benchmark through the coordinator.
+/// Serving benchmark through the coordinator (windowed batch submission:
+/// one response channel per 1024-request window, double-buffered so the
+/// coordinator always has a window in flight).
 fn serve(n: u64) {
-    use simdive::coordinator::{Coordinator, CoordinatorConfig, ReqOp, Request};
+    use simdive::coordinator::{BatchHandle, Coordinator, CoordinatorConfig, ReqOp, Request};
     use simdive::util::Rng;
     let coord = Coordinator::start(CoordinatorConfig::default());
     let mut rng = Rng::new(0xD15C0);
     let t0 = std::time::Instant::now();
-    let mut handles = Vec::with_capacity(1024);
     let mut done = 0u64;
-    for i in 0..n {
-        let bits = [8u32, 8, 8, 16, 16, 32][rng.below(6) as usize];
-        handles.push(coord.submit(Request {
-            id: i,
-            op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
-            bits,
-            a: rng.operand(bits),
-            b: rng.operand(bits),
-        }));
-        if handles.len() >= 1024 {
-            for h in handles.drain(..) {
-                h.recv().unwrap();
-                done += 1;
-            }
+    let mut submitted = 0u64;
+    let mut pending: Option<BatchHandle> = None;
+    while submitted < n {
+        let window = (n - submitted).min(1024);
+        let reqs: Vec<Request> = (submitted..submitted + window)
+            .map(|i| {
+                let bits = [8u32, 8, 8, 16, 16, 32][rng.below(6) as usize];
+                Request {
+                    id: i,
+                    op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
+                    bits,
+                    a: rng.operand(bits),
+                    b: rng.operand(bits),
+                }
+            })
+            .collect();
+        let handle = coord.submit_batch(reqs);
+        if let Some(p) = pending.take() {
+            done += p.wait().len() as u64;
         }
+        pending = Some(handle);
+        submitted += window;
     }
-    for h in handles.drain(..) {
-        h.recv().unwrap();
-        done += 1;
+    if let Some(p) = pending.take() {
+        done += p.wait().len() as u64;
     }
     let dt = t0.elapsed();
     let s = coord.shutdown();

@@ -2,12 +2,19 @@
 //! per the 64-bit-proto-id workaround — see /opt/xla-example/README.md and
 //! DESIGN.md §2) and executes them on the CPU PJRT client from the request
 //! path. Python never runs at serve time.
+//!
+//! The `xla` bindings are not present in the offline vendored registry, so
+//! the PJRT-backed engine is gated behind the `pjrt` cargo feature
+//! (DESIGN.md §2). The default build compiles a stub engine with the same
+//! artifact-discovery and weight-loading surface; `run` reports the backend
+//! as unavailable instead of executing.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// A loaded model artifact bundle.
+/// A loaded model artifact bundle (PJRT-backed build).
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -15,28 +22,24 @@ pub struct Engine {
     manifest: Vec<(String, Vec<usize>)>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU engine and load every `*.hlo.txt` in `dir`, plus any
     /// `weights.bin` + `weights.manifest` pair (flat f32 tensors).
     pub fn load(dir: &Path) -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let mut executables = HashMap::new();
-        for entry in std::fs::read_dir(dir)
-            .with_context(|| format!("reading artifacts dir {}", dir.display()))?
-        {
-            let path = entry?.path();
-            let name = path.file_name().unwrap().to_string_lossy().to_string();
-            if let Some(stem) = name.strip_suffix(".hlo.txt") {
-                let proto = xla::HloModuleProto::from_text_file(
-                    path.to_str().context("non-utf8 path")?,
-                )
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {name}"))?;
-                executables.insert(stem.to_string(), exe);
-            }
+        for name in hlo_artifact_names(dir)? {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            executables.insert(name, exe);
         }
         let (weights, manifest) = load_weights(dir)?;
         Ok(Engine { client, executables, weights, manifest })
@@ -73,6 +76,70 @@ impl Engine {
     pub fn weight_manifest(&self) -> &[(String, Vec<usize>)] {
         &self.manifest
     }
+}
+
+/// A loaded model artifact bundle (stub build, no PJRT backend).
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    models: Vec<String>,
+    weights: HashMap<String, Vec<f32>>,
+    manifest: Vec<(String, Vec<usize>)>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Discover `*.hlo.txt` artifacts and load weight tensors. Execution is
+    /// unavailable in this build; see the module docs.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let mut models = hlo_artifact_names(dir)?;
+        models.sort();
+        let (weights, manifest) = load_weights(dir)?;
+        Ok(Engine { models, weights, manifest })
+    }
+
+    /// Artifact names available.
+    pub fn models(&self) -> Vec<String> {
+        self.models.clone()
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the pjrt feature)".to_string()
+    }
+
+    /// Always errors: the PJRT backend is compiled out of this build. The
+    /// generic input parameter keeps call sites compiling in both builds
+    /// (the pjrt build takes `&[xla::Literal]`).
+    pub fn run<T>(&self, name: &str, _inputs: &[T]) -> Result<Vec<f32>> {
+        anyhow::bail!(
+            "cannot execute model {name}: PJRT backend unavailable \
+             (rebuild with `--features pjrt` and a vendored xla crate)"
+        )
+    }
+
+    /// A named weight tensor (flat) from the artifact bundle.
+    pub fn weight(&self, name: &str) -> Option<&[f32]> {
+        self.weights.get(name).map(|v| v.as_slice())
+    }
+
+    /// Weight manifest (name, shape) in file order.
+    pub fn weight_manifest(&self) -> &[(String, Vec<usize>)] {
+        &self.manifest
+    }
+}
+
+/// Stems of every `*.hlo.txt` artifact in `dir`.
+fn hlo_artifact_names(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("reading artifacts dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if let Some(stem) = name.strip_suffix(".hlo.txt") {
+            names.push(stem.to_string());
+        }
+    }
+    Ok(names)
 }
 
 /// Load `weights.manifest` ("name dim0 dim1 …" per line) + `weights.bin`
@@ -147,5 +214,17 @@ mod tests {
         assert_eq!(w["w1"], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
         assert_eq!(w["b1"], vec![6.0, 7.0, 8.0]);
         assert_eq!(m[0].1, vec![2, 3]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_backend_unavailable() {
+        let dir = std::env::temp_dir().join("simdive_rt_stub");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("demo.hlo.txt"), "HloModule demo").unwrap();
+        let eng = Engine::load(&dir).unwrap();
+        assert!(eng.models().contains(&"demo".to_string()));
+        let err = eng.run("demo", &[0i32]).unwrap_err();
+        assert!(format!("{err}").contains("PJRT backend unavailable"));
     }
 }

@@ -1,0 +1,148 @@
+//! Property tests: the batched slice kernels in `arith::batch` are
+//! bit-exactly equivalent to the scalar `simdive_mul_with` /
+//! `simdive_div_with` path across all widths, all accuracy knobs `w`, and
+//! the zero-operand conventions (`b == 0 → max_val`, `a == 0 → 0`). Uses
+//! the in-repo prop helper (proptest substitute — DESIGN.md §1).
+
+use simdive::arith::simd::{LaneCfg, LaneMode, SimdOp, SimdWord};
+use simdive::arith::simdive::{simdive_div_with, simdive_mul_with};
+use simdive::arith::table::tables_for;
+use simdive::arith::{batch, max_val, simd, W_MAX, WIDTHS};
+use simdive::util::prop;
+use simdive::util::Rng;
+
+/// Draw a batch of operand pairs with deliberate zero density (~1/8 of
+/// each side) so the `a == 0` / `b == 0` conventions are exercised in
+/// every case, alongside uniform full-width operands.
+fn operand_batch(r: &mut Rng, bits: u32, n: usize) -> (Vec<u64>, Vec<u64>) {
+    let draw = |r: &mut Rng| -> u64 {
+        if r.below(8) == 0 {
+            0
+        } else {
+            r.below(1u64 << bits)
+        }
+    };
+    let a = (0..n).map(|_| draw(r)).collect();
+    let b = (0..n).map(|_| draw(r)).collect();
+    (a, b)
+}
+
+#[test]
+fn prop_mul_batch_bit_exact_all_widths_all_w() {
+    for &bits in &WIDTHS {
+        for w in 0..=W_MAX {
+            let t = tables_for(w);
+            prop::check(
+                (bits as u64) << 8 | w as u64,
+                40,
+                |r| {
+                    let n = 1 + r.below(200) as usize;
+                    operand_batch(r, bits, n)
+                },
+                |(a, b)| {
+                    let got = batch::mul_batch(t, bits, a, b);
+                    for i in 0..a.len() {
+                        let want = simdive_mul_with(t, bits, a[i], b[i]);
+                        if got[i] != want {
+                            return Err(format!(
+                                "bits={bits} w={w}: {}x{} -> {} != {}",
+                                a[i], b[i], got[i], want
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_div_batch_bit_exact_all_widths_all_w() {
+    for &bits in &WIDTHS {
+        for w in 0..=W_MAX {
+            let t = tables_for(w);
+            prop::check(
+                (bits as u64) << 16 | w as u64,
+                40,
+                |r| {
+                    let n = 1 + r.below(200) as usize;
+                    operand_batch(r, bits, n)
+                },
+                |(a, b)| {
+                    let got = batch::div_batch(t, bits, a, b);
+                    for i in 0..a.len() {
+                        let want = simdive_div_with(t, bits, a[i], b[i]);
+                        if got[i] != want {
+                            return Err(format!(
+                                "bits={bits} w={w}: {}/{} -> {} != {}",
+                                a[i], b[i], got[i], want
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_conventions_all_widths() {
+    for &bits in &WIDTHS {
+        for w in [0, 4, W_MAX] {
+            let t = tables_for(w);
+            let a = [0u64, 0, 5, max_val(bits), 0];
+            let b = [0u64, 9, 0, 0, max_val(bits)];
+            let m = batch::mul_batch(t, bits, &a, &b);
+            assert_eq!(m, vec![0, 0, 0, 0, 0], "mul zeros at bits={bits} w={w}");
+            let d = batch::div_batch(t, bits, &a, &b);
+            assert_eq!(d[0], max_val(bits), "0/0 saturates (b==0 checked first)");
+            assert_eq!(d[1], 0, "0/9 is 0");
+            assert_eq!(d[2], max_val(bits), "5/0 saturates");
+            assert_eq!(d[3], max_val(bits), "max/0 saturates");
+            assert_eq!(d[4], 0, "0/max is 0");
+        }
+    }
+}
+
+#[test]
+fn prop_execute_words_bit_exact() {
+    for w in [0u32, 3, 8] {
+        let t = tables_for(w);
+        prop::check(
+            0xE0 + w as u64,
+            60,
+            |r| {
+                let n = 1 + r.below(60) as usize;
+                let mut ops = Vec::with_capacity(n);
+                let mut words = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let cfg = LaneCfg::ALL[r.below(4) as usize];
+                    let lanes = cfg.lanes();
+                    let a: Vec<u64> = lanes.iter().map(|&(_, wd)| r.below(1u64 << wd)).collect();
+                    let b: Vec<u64> = lanes.iter().map(|&(_, wd)| r.below(1u64 << wd)).collect();
+                    let mut modes = [LaneMode::Mul; 4];
+                    for m in modes.iter_mut() {
+                        if r.below(2) == 1 {
+                            *m = LaneMode::Div;
+                        }
+                    }
+                    ops.push(SimdOp { cfg, modes });
+                    words.push(SimdWord::pack(cfg, &a, &b));
+                }
+                (ops, words)
+            },
+            |(ops, words)| {
+                let got = batch::execute_words(t, ops, words);
+                for i in 0..ops.len() {
+                    let want = simd::execute_with(t, ops[i], words[i]);
+                    if got[i] != want {
+                        return Err(format!("word {i} ({:?}): {} != {want}", ops[i], got[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -173,21 +173,6 @@ fn bench_coordinator() -> (f64, f64) {
     (scalar_rps, batched_rps)
 }
 
-/// Repository root: nearest ancestor holding `.git` (or `ROADMAP.md`),
-/// falling back to the current directory.
-fn repo_root() -> std::path::PathBuf {
-    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
-    let mut dir = cwd.clone();
-    loop {
-        if dir.join(".git").exists() || dir.join("ROADMAP.md").exists() {
-            return dir;
-        }
-        if !dir.pop() {
-            return cwd;
-        }
-    }
-}
-
 fn json_op_section(results: &[&OpResult]) -> String {
     let mut s = String::from("{");
     for (k, r) in results.iter().enumerate() {
@@ -227,7 +212,7 @@ fn main() {
         coord_scalar_rps,
         coord_batched_rps,
     );
-    let path = repo_root().join("BENCH_hotpath.json");
+    let path = simdive::util::repo_root().join("BENCH_hotpath.json");
     match std::fs::write(&path, &json) {
         Ok(()) => println!("[bench] wrote {}", path.display()),
         Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),

@@ -1,0 +1,50 @@
+//! Network serving throughput: a loopback SIMD-wire server driven by the
+//! in-crate load generator, reported next to the in-process coordinator
+//! batched figure so the cost of the network boundary is visible.
+//!
+//! Results go to stdout and to `BENCH_serve.json` at the repository root
+//! (schema `simdive-serve-v1`, documented in CHANGES.md alongside the
+//! hotpath schema).
+
+use simdive::serve::loadgen::{self, LoadgenConfig};
+use simdive::serve::{ServeConfig, Server};
+
+/// Total requests across connections.
+const REQUESTS: u64 = 100_000;
+
+/// In-process coordinator comparison requests (matches hotpath's figure).
+const COORD_REQUESTS: u64 = 40_000;
+
+fn main() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default())
+        .expect("cannot bind loopback server");
+    let addr = server.local_addr().to_string();
+    let cfg = LoadgenConfig { requests: REQUESTS, ..LoadgenConfig::default() };
+    let report = loadgen::run(&addr, &cfg).expect("loadgen run failed");
+    let s = &report.server;
+    println!(
+        "[bench] serve: {} requests over {} connections in {:.3}s — {:.1} kreq/s \
+         (p50 {} µs, p99 {} µs, lane util {:.0}%)",
+        report.requests,
+        report.connections,
+        report.wall_s,
+        report.rps / 1e3,
+        s.p50_us,
+        s.p99_us,
+        s.lane_utilization() * 100.0
+    );
+    let coord_rps = loadgen::coordinator_batched_rps(COORD_REQUESTS);
+    println!(
+        "[bench] coordinator (in-process, batched): {:.1} kreq/s — network/in-process ratio {:.2}",
+        coord_rps / 1e3,
+        report.rps / coord_rps
+    );
+    server.shutdown();
+
+    let json = loadgen::to_json(&report, COORD_REQUESTS, coord_rps);
+    let path = simdive::util::repo_root().join("BENCH_serve.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[bench] wrote {}", path.display()),
+        Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+    }
+}

@@ -28,5 +28,5 @@ fn main() {
     let t = timing::analyze(&nl, cal);
     println!("  area  : {} LUT6 ({} CARRY4)", a.luts, a.carry4);
     println!("  delay : {:.2} ns critical path ({} logic levels)", t.critical_ns, t.levels);
-    println!("\nNext: `cargo run --release --bin repro table2` regenerates paper Table 2.");
+    println!("\nNext: `cargo run --release table2` regenerates paper Table 2.");
 }

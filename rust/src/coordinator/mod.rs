@@ -13,7 +13,7 @@ pub mod packer;
 pub mod server;
 
 pub use packer::{lane_value, pack_requests, unpack_results, PackedWord, ReqOp, Request};
-pub use server::{BatchHandle, Coordinator, CoordinatorConfig, Stats};
+pub use server::{BatchHandle, Coordinator, CoordinatorConfig, Response, Stats};
 
 #[cfg(test)]
 mod tests {

@@ -74,6 +74,17 @@ impl Stats {
             self.active_lanes as f64 / self.total_lanes as f64
         }
     }
+
+    /// Fold another snapshot into this one. The serve layer runs one
+    /// coordinator per accuracy knob `w` and sums their snapshots into a
+    /// single server-wide view (DESIGN.md §8).
+    pub fn merge(&mut self, other: &Stats) {
+        self.requests += other.requests;
+        self.words += other.words;
+        self.active_lanes += other.active_lanes;
+        self.total_lanes += other.total_lanes;
+        self.energy_pj += other.energy_pj;
+    }
 }
 
 struct Shared {
@@ -381,7 +392,24 @@ impl Coordinator {
     pub fn submit_batch(&self, reqs: Vec<Request>) -> BatchHandle {
         let n = reqs.len();
         let (tx, rx) = std::sync::mpsc::channel();
-        let mut slot = 0u32;
+        self.submit_batch_streaming(reqs, 0, &tx);
+        BatchHandle { rx, n }
+    }
+
+    /// Streaming form of [`Coordinator::submit_batch`]: the response for
+    /// `reqs[i]` is sent on the caller-owned channel tagged with slot
+    /// `base_slot + i`, *as its lane completes* — there is no reassembly
+    /// barrier. The network serve layer uses this to write responses
+    /// out-of-order while lanes are still executing (DESIGN.md §8); every
+    /// response still carries the caller's original request id. Chunking
+    /// (and therefore bounded-queue backpressure) matches `submit_batch`.
+    pub fn submit_batch_streaming(
+        &self,
+        reqs: Vec<Request>,
+        base_slot: u32,
+        tx: &Sender<(u32, Response)>,
+    ) {
+        let mut slot = base_slot;
         let mut iter = reqs.into_iter();
         loop {
             let chunk: Vec<Request> = iter.by_ref().take(self.batch_chunk).collect();
@@ -392,7 +420,6 @@ impl Coordinator {
             self.tx.send(Msg::Batch(chunk, slot, tx.clone())).expect("coordinator stopped");
             slot += len;
         }
-        BatchHandle { rx, n }
     }
 
     /// Force the batcher to close the current batch.
@@ -500,6 +527,29 @@ mod tests {
         }
         let s = coord.shutdown();
         assert_eq!(s.requests, 500);
+    }
+
+    #[test]
+    fn streaming_submission_delivers_every_response_with_original_ids() {
+        // The serve layer's entry point: caller-owned channel, responses
+        // arriving as lanes complete (any order), ids preserved.
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (tx, rx) = std::sync::mpsc::channel();
+        let reqs: Vec<Request> = (0..300u64)
+            .map(|i| Request { id: 5000 + i, op: ReqOp::Mul, bits: 8, a: 1 + i % 255, b: 3 })
+            .collect();
+        coord.submit_batch_streaming(reqs.clone(), 7, &tx);
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..reqs.len() {
+            let (slot, resp) = rx.recv().unwrap();
+            assert!((7..7 + reqs.len() as u32).contains(&slot), "slot {slot}");
+            seen.insert(resp.id, resp.value);
+        }
+        for req in &reqs {
+            assert_eq!(seen[&req.id], simdive_mul(8, req.a, req.b), "req {}", req.id);
+        }
+        let s = coord.shutdown();
+        assert_eq!(s.requests, 300);
     }
 
     #[test]

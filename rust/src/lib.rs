@@ -14,6 +14,8 @@
 //!   paper's §4.3 (image blending, Gaussian smoothing, quantized MLP).
 //! * [`coordinator`] — the L3 SIMD dispatch engine (lane packing, batching,
 //!   power gating).
+//! * [`serve`] — the network serving subsystem: SIMD-wire protocol, TCP
+//!   server over the coordinator, pipelined client, load generator.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs on the request path).
 //!
@@ -29,4 +31,5 @@ pub mod coordinator;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

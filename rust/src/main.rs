@@ -1,13 +1,14 @@
-//! `repro` — CLI entry point for the SIMDive reproduction.
+//! `simdive` — CLI entry point for the SIMDive reproduction.
 //!
 //! Subcommands regenerate each paper table/figure (DESIGN.md §5), export
-//! golden vectors for the Python layer, and run the serving demo.
+//! golden vectors for the Python layer, run the SIMD-wire network server
+//! (`serve --listen`), and drive one (`loadgen`) — DESIGN.md §8.
 
 use simdive::report;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <command> [args]\n\
+        "usage: simdive <command> [args]\n\
          commands:\n\
          \ttable2 [--samples N]   SISD multiplier/divider metrics (Table 2)\n\
          \ttable3                 32-bit SIMD metrics (Table 3)\n\
@@ -18,7 +19,11 @@ fn usage() -> ! {
          \ttunable [--samples N]  accuracy-vs-w sweep (§3.3)\n\
          \texport-golden          golden vectors for python tests\n\
          \tdemo                   quick SIMD coordinator demo\n\
-         \tserve [--requests N]   batched serving demo through the coordinator\n\
+         \tserve --listen ADDR [--workers N] [--window K] [--batch B]\n\
+         \t                       SIMD-wire TCP server over the coordinator\n\
+         \tloadgen --addr ADDR [--connections C] [--requests N] [--chunk B]\n\
+         \t        [--mix 8,8,16,32] [--w N] [--out PATH]\n\
+         \t                       drive a server; writes BENCH_serve.json\n\
          \tall                    every table + figure in sequence"
     );
     std::process::exit(2)
@@ -30,6 +35,32 @@ fn arg_u64(args: &[String], name: &str, default: u64) -> u64 {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn arg_str<'a>(args: &'a [String], name: &str, default: &'a str) -> &'a str {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or(default)
+}
+
+/// Strict integer flag: absent → `None`, present-but-unparsable → error
+/// (the serve/loadgen flags feed CI and bench scripts, where a typo must
+/// fail loudly rather than fall back to a plausible default).
+fn arg_u64_opt(args: &[String], name: &str) -> anyhow::Result<Option<u64>> {
+    match args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("{name} expects an integer (got '{v}')")),
+    }
+}
+
+/// Strict integer flag with a default.
+fn arg_u64_strict(args: &[String], name: &str, default: u64) -> anyhow::Result<u64> {
+    Ok(arg_u64_opt(args, name)?.unwrap_or(default))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -58,7 +89,8 @@ fn main() -> anyhow::Result<()> {
         }
         "export-golden" => println!("{}", report::golden::export()?),
         "demo" => demo(),
-        "serve" => serve(arg_u64(&args, "--requests", 100_000)),
+        "serve" => serve(&args)?,
+        "loadgen" => loadgen(&args)?,
         "all" => {
             let samples = arg_u64(&args, "--samples", report::table2::ERROR_SAMPLES);
             println!("{}", report::table2::render(samples));
@@ -70,7 +102,11 @@ fn main() -> anyhow::Result<()> {
             println!("{}", report::tunable::render(300_000));
             println!("{}", report::golden::export()?);
         }
-        _ => usage(),
+        "" => usage(),
+        other => {
+            eprintln!("error: unknown subcommand '{other}'\n");
+            usage()
+        }
     }
     Ok(())
 }
@@ -108,51 +144,95 @@ fn demo() {
     );
 }
 
-/// Serving benchmark through the coordinator (windowed batch submission:
-/// one response channel per 1024-request window, double-buffered so the
-/// coordinator always has a window in flight).
-fn serve(n: u64) {
-    use simdive::coordinator::{BatchHandle, Coordinator, CoordinatorConfig, ReqOp, Request};
-    use simdive::util::Rng;
-    let coord = Coordinator::start(CoordinatorConfig::default());
-    let mut rng = Rng::new(0xD15C0);
-    let t0 = std::time::Instant::now();
-    let mut done = 0u64;
-    let mut submitted = 0u64;
-    let mut pending: Option<BatchHandle> = None;
-    while submitted < n {
-        let window = (n - submitted).min(1024);
-        let reqs: Vec<Request> = (submitted..submitted + window)
-            .map(|i| {
-                let bits = [8u32, 8, 8, 16, 16, 32][rng.below(6) as usize];
-                Request {
-                    id: i,
-                    op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
-                    bits,
-                    a: rng.operand(bits),
-                    b: rng.operand(bits),
-                }
-            })
-            .collect();
-        let handle = coord.submit_batch(reqs);
-        if let Some(p) = pending.take() {
-            done += p.wait().len() as u64;
-        }
-        pending = Some(handle);
-        submitted += window;
-    }
-    if let Some(p) = pending.take() {
-        done += p.wait().len() as u64;
-    }
-    let dt = t0.elapsed();
-    let s = coord.shutdown();
+/// `serve --listen ADDR`: run the SIMD-wire TCP server over the
+/// coordinator until the process is killed (DESIGN.md §8). Replaces the
+/// old in-process serving demo — drive it with `simdive loadgen`.
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    use simdive::serve::{ServeConfig, Server};
+    let listen = arg_str(args, "--listen", "127.0.0.1:7171");
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        workers: arg_u64_strict(args, "--workers", defaults.workers as u64)? as usize,
+        window: arg_u64_strict(args, "--window", defaults.window as u64)? as usize,
+        batch: arg_u64_strict(args, "--batch", defaults.batch as u64)? as usize,
+        queue_depth: arg_u64_strict(args, "--queue-depth", defaults.queue_depth as u64)? as usize,
+    };
+    let server = Server::start(listen, cfg)
+        .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
     println!(
-        "served {done} requests in {:.3}s ({:.1} kops/s) — {} words, lane util {:.0}%, \
-         model energy {:.2} µJ",
-        dt.as_secs_f64(),
-        done as f64 / dt.as_secs_f64() / 1e3,
+        "simdive serve: listening on {} (workers/w {}, window {}, batch {})",
+        server.local_addr(),
+        cfg.workers,
+        cfg.window,
+        cfg.batch
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `loadgen --addr ADDR`: drive a SIMD-wire server and write
+/// `BENCH_serve.json` (schema `simdive-serve-v1`).
+fn loadgen(args: &[String]) -> anyhow::Result<()> {
+    use simdive::serve::loadgen::{self, LoadgenConfig};
+    let addr = arg_str(args, "--addr", "127.0.0.1:7171").to_string();
+    let defaults = LoadgenConfig::default();
+    let mix = arg_str(args, "--mix", "8,8,8,16,16,32");
+    let widths: Vec<u32> = mix
+        .split(',')
+        .map(|s| s.trim().parse::<u32>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| anyhow::anyhow!("--mix must be a comma list of 8/16/32 (got '{mix}')"))?;
+    anyhow::ensure!(
+        !widths.is_empty() && widths.iter().all(|&w| matches!(w, 8 | 16 | 32)),
+        "--mix must be a comma list of 8/16/32 (got '{mix}')"
+    );
+    // --w N pins the accuracy knob; absent, w is spread over 0..=8.
+    let fixed_w = arg_u64_opt(args, "--w")?;
+    anyhow::ensure!(
+        fixed_w.map_or(true, |w| w <= simdive::arith::W_MAX as u64),
+        "--w must be 0..=8"
+    );
+    let cfg = LoadgenConfig {
+        connections: arg_u64_strict(args, "--connections", defaults.connections as u64)? as usize,
+        requests: arg_u64_strict(args, "--requests", defaults.requests)?,
+        chunk: arg_u64_strict(args, "--chunk", defaults.chunk as u64)? as usize,
+        widths,
+        fixed_w: fixed_w.map(|w| w as u32),
+        seed: arg_u64_strict(args, "--seed", defaults.seed)?,
+        ..defaults
+    };
+    let report = loadgen::run(&addr, &cfg).map_err(|e| anyhow::anyhow!("loadgen: {e}"))?;
+    let s = &report.server;
+    println!(
+        "loadgen: {} requests over {} connections in {:.3}s — {:.1} kreq/s\n\
+         server: {} requests, {} words, lane util {:.0}%, energy {:.2} µJ, \
+         p50 {} µs, p99 {} µs",
+        report.requests,
+        report.connections,
+        report.wall_s,
+        report.rps / 1e3,
+        s.requests,
         s.words,
         s.lane_utilization() * 100.0,
-        s.energy_pj / 1e6
+        s.energy_pj() / 1e6,
+        s.p50_us,
+        s.p99_us
     );
+    // In-process coordinator comparison (same figure as BENCH_hotpath.json).
+    let coord_n = report.requests.clamp(1, 40_000);
+    let coord_rps = loadgen::coordinator_batched_rps(coord_n);
+    println!(
+        "coordinator (in-process, batched): {:.1} kreq/s over {coord_n} requests",
+        coord_rps / 1e3
+    );
+    let out_path = match arg_str(args, "--out", "") {
+        "" => simdive::util::repo_root().join("BENCH_serve.json"),
+        p => std::path::PathBuf::from(p),
+    };
+    let json = loadgen::to_json(&report, coord_n, coord_rps);
+    std::fs::write(&out_path, &json)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", out_path.display()))?;
+    println!("wrote {}", out_path.display());
+    Ok(())
 }

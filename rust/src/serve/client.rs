@@ -1,0 +1,173 @@
+//! Pipelined SIMD-wire client (DESIGN.md §8).
+//!
+//! [`Client::exchange`] is the throughput path: it keeps up to two
+//! pipeline chunks of requests in flight (writing chunk *k+1* before the
+//! responses of chunk *k* have drained) and reassembles the out-of-order
+//! response stream into submission order by correlation id. The chunk
+//! size is capped so the worst-case unread response backlog always fits
+//! kernel socket buffers — the client can therefore never deadlock
+//! against a server whose admission window is smaller than the pipeline.
+
+use super::wire::{self, ServerFrame, WireRequest, WireResponse, WireStats};
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Default pipeline chunk (requests per `BATCH` frame).
+pub const DEFAULT_CHUNK: usize = 256;
+
+/// Upper bound on the pipeline chunk: with two chunks in flight plus one
+/// being written, the unread response backlog stays ≤ ~3 · 1024 · 17 B
+/// ≈ 52 KB, below the smallest kernel socket buffers.
+pub const MAX_CHUNK: usize = 1024;
+
+/// A SIMD-wire connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    chunk: usize,
+}
+
+impl Client {
+    /// Connect and perform the hello exchange.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let mut writer = BufWriter::new(stream.try_clone()?);
+        let mut reader = BufReader::new(stream);
+        wire::write_hello(&mut writer)?;
+        writer.flush()?;
+        let version = wire::read_hello(&mut reader)?;
+        if version != wire::VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("server speaks SIMD-wire v{version}, client v{}", wire::VERSION),
+            ));
+        }
+        Ok(Client { reader, writer, chunk: DEFAULT_CHUNK })
+    }
+
+    /// Connect, retrying while the server is still coming up (used by the
+    /// load generator and CI smoke against a just-spawned `simdive serve`).
+    pub fn connect_retry<A: ToSocketAddrs + Clone>(
+        addr: A,
+        timeout: Duration,
+    ) -> io::Result<Client> {
+        let t0 = Instant::now();
+        loop {
+            match Client::connect(addr.clone()) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if t0.elapsed() >= timeout {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Set the pipeline chunk size (clamped to `1..=MAX_CHUNK`).
+    pub fn with_chunk(mut self, chunk: usize) -> Client {
+        self.chunk = chunk.clamp(1, MAX_CHUNK);
+        self
+    }
+
+    /// One synchronous round trip.
+    pub fn call(&mut self, req: WireRequest) -> io::Result<WireResponse> {
+        wire::write_request(&mut self.writer, &req)?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    /// Pipelined exchange: submit every request, return the responses in
+    /// **submission order** (responses arrive out of order; correlation is
+    /// by id, so ids must be unique within one call — duplicates are
+    /// rejected up front rather than silently mis-associated).
+    pub fn exchange(&mut self, reqs: &[WireRequest]) -> io::Result<Vec<WireResponse>> {
+        let n = reqs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        // id → submission position still awaiting its response.
+        let mut by_id: HashMap<u64, usize> = HashMap::with_capacity(n);
+        for (i, r) in reqs.iter().enumerate() {
+            if by_id.insert(r.id, i).is_some() {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("duplicate request id {} in one exchange", r.id),
+                ));
+            }
+        }
+        let mut out: Vec<Option<WireResponse>> = vec![None; n];
+        let max_inflight = 2 * self.chunk;
+        let (mut sent, mut recvd) = (0usize, 0usize);
+        while recvd < n {
+            // Top up the pipeline without exceeding two chunks in flight.
+            while sent < n && (sent - recvd) + (n - sent).min(self.chunk) <= max_inflight {
+                let take = (n - sent).min(self.chunk);
+                wire::write_batch(&mut self.writer, &reqs[sent..sent + take])?;
+                sent += take;
+            }
+            self.writer.flush()?;
+            // Drain responses until another chunk fits (or until done).
+            loop {
+                let resp = self.read_response()?;
+                let pos = by_id.remove(&resp.id).ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("response for unknown id {}", resp.id),
+                    )
+                })?;
+                out[pos] = Some(resp);
+                recvd += 1;
+                if recvd == n {
+                    break;
+                }
+                let can_send =
+                    sent < n && (sent - recvd) + (n - sent).min(self.chunk) <= max_inflight;
+                if can_send {
+                    break;
+                }
+            }
+        }
+        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    /// Fetch a server stats snapshot. Must not be called with requests in
+    /// flight (i.e. outside `exchange`, which always drains fully).
+    pub fn stats(&mut self) -> io::Result<WireStats> {
+        wire::write_stats_req(&mut self.writer)?;
+        self.writer.flush()?;
+        match wire::read_server_frame(&mut self.reader)? {
+            ServerFrame::Stats(s) => Ok(s),
+            ServerFrame::Resp(r) => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response frame (id {}) while awaiting stats", r.id),
+            )),
+            ServerFrame::Err(code) => Err(server_err(code)),
+        }
+    }
+
+    fn read_response(&mut self) -> io::Result<WireResponse> {
+        match wire::read_server_frame(&mut self.reader)? {
+            ServerFrame::Resp(r) => Ok(r),
+            ServerFrame::Stats(_) => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "unexpected stats frame while awaiting responses",
+            )),
+            ServerFrame::Err(code) => Err(server_err(code)),
+        }
+    }
+}
+
+fn server_err(code: u8) -> io::Error {
+    let what = match code {
+        wire::ERR_BAD_FRAME => "bad frame",
+        wire::ERR_BAD_REQUEST => "bad request",
+        wire::ERR_BAD_VERSION => "unsupported protocol version",
+        _ => "unknown error",
+    };
+    io::Error::new(io::ErrorKind::InvalidData, format!("server error {code} ({what})"))
+}

@@ -1,0 +1,256 @@
+//! Load generator for the SIMD-wire server: N connections × pipelined
+//! request streams with a configurable width mix and per-request accuracy
+//! knob spread, reporting client-side throughput plus the server's own
+//! `STATS` snapshot, and writing `BENCH_serve.json` (schema
+//! `simdive-serve-v1`, documented in CHANGES.md alongside the hotpath
+//! schema). Used by the `simdive loadgen` subcommand, `benches/serve.rs`
+//! and the CI loopback smoke.
+
+use super::client::Client;
+use super::wire::{WireRequest, WireStats};
+use crate::arith::W_MAX;
+use crate::coordinator::ReqOp;
+use crate::util::Rng;
+use std::fmt::Write as _;
+use std::io;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent connections.
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: u64,
+    /// Client pipeline chunk (requests per `BATCH` frame).
+    pub chunk: usize,
+    /// Operand-width mix, sampled uniformly (e.g. `[8, 8, 8, 16, 16, 32]`
+    /// for the DNN/multimedia-heavy mix of §3.2).
+    pub widths: Vec<u32>,
+    /// `Some(w)` pins every request's accuracy knob; `None` spreads it
+    /// uniformly over `0..=W_MAX`.
+    pub fixed_w: Option<u32>,
+    /// One in `div_ratio` requests is a divide (rest multiply).
+    pub div_ratio: u64,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            connections: 4,
+            requests: 100_000,
+            chunk: 256,
+            widths: vec![8, 8, 8, 16, 16, 32],
+            fixed_w: None,
+            div_ratio: 4,
+            seed: 0xD15C0,
+        }
+    }
+}
+
+/// What one load-generation run measured.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub connections: usize,
+    pub requests: u64,
+    pub chunk: usize,
+    pub widths: Vec<u32>,
+    pub wall_s: f64,
+    /// Client-observed completed requests per second across connections.
+    pub rps: f64,
+    /// Server-side snapshot taken after the run.
+    pub server: WireStats,
+}
+
+/// Generate one request deterministically from a connection's RNG.
+fn make_request(cfg: &LoadgenConfig, rng: &mut Rng, id: u64) -> WireRequest {
+    let bits = cfg.widths[rng.below(cfg.widths.len() as u64) as usize];
+    let w = cfg.fixed_w.unwrap_or_else(|| rng.below(W_MAX as u64 + 1) as u32);
+    WireRequest {
+        id,
+        op: if rng.below(cfg.div_ratio.max(1)) == 0 { ReqOp::Div } else { ReqOp::Mul },
+        bits,
+        w,
+        a: rng.operand(bits),
+        b: rng.operand(bits),
+    }
+}
+
+/// Drive `addr` with `cfg`; blocks until every request has its response.
+///
+/// Every connection is established (with retry, for just-spawned servers)
+/// *before* the throughput clock starts — `rps` measures serving, not
+/// server start-up.
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> io::Result<LoadgenReport> {
+    let connections = cfg.connections.max(1);
+    let chunk = cfg.chunk.clamp(1, super::client::MAX_CHUNK);
+    let per = cfg.requests / connections as u64;
+    let remainder = cfg.requests % connections as u64;
+    // All parties (worker threads + this one) rendezvous after connecting.
+    let barrier = Arc::new(Barrier::new(connections + 1));
+    let mut handles = Vec::with_capacity(connections);
+    for c in 0..connections {
+        let addr = addr.to_string();
+        let cfg = cfg.clone();
+        let barrier = Arc::clone(&barrier);
+        let quota = per + if (c as u64) < remainder { 1 } else { 0 };
+        handles.push(std::thread::spawn(move || -> io::Result<u64> {
+            let client = if quota == 0 {
+                None
+            } else {
+                Some(Client::connect_retry(addr.as_str(), Duration::from_secs(5)))
+            };
+            barrier.wait();
+            let Some(client) = client else { return Ok(0) };
+            let mut client = client?.with_chunk(chunk);
+            let mut rng = Rng::new(cfg.seed ^ (0x9E37_79B9 * (c as u64 + 1)));
+            let mut done = 0u64;
+            // Windows of up to 8 pipeline chunks per exchange call.
+            let window = chunk as u64 * 8;
+            while done < quota {
+                let n = (quota - done).min(window);
+                let reqs: Vec<WireRequest> =
+                    (0..n).map(|k| make_request(&cfg, &mut rng, done + k)).collect();
+                let resps = client.exchange(&reqs)?;
+                debug_assert_eq!(resps.len(), reqs.len());
+                done += n;
+            }
+            Ok(done)
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut total = 0u64;
+    let mut first_err: Option<io::Error> = None;
+    for h in handles {
+        match h.join().expect("loadgen connection thread panicked") {
+            Ok(n) => total += n,
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    // Final server-side snapshot over a fresh connection.
+    let server = Client::connect_retry(addr, Duration::from_secs(5))?.stats()?;
+    Ok(LoadgenReport {
+        connections,
+        requests: total,
+        chunk,
+        widths: cfg.widths.clone(),
+        wall_s,
+        rps: total as f64 / wall_s,
+        server,
+    })
+}
+
+/// In-process coordinator batched-submission throughput over the same
+/// request generator — the comparison number reported next to the network
+/// rps (mirrors the `coordinator.batched_rps` figure of
+/// `BENCH_hotpath.json`).
+pub fn coordinator_batched_rps(n: u64) -> f64 {
+    use crate::coordinator::{Coordinator, CoordinatorConfig, Request};
+    let cfg = LoadgenConfig { fixed_w: Some(W_MAX), ..LoadgenConfig::default() };
+    let mut rng = Rng::new(cfg.seed);
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let t0 = Instant::now();
+    let mut submitted = 0u64;
+    while submitted < n {
+        let window = (n - submitted).min(1024);
+        let reqs: Vec<Request> = (0..window)
+            .map(|k| {
+                let r = make_request(&cfg, &mut rng, submitted + k);
+                Request { id: r.id, op: r.op, bits: r.bits, a: r.a, b: r.b }
+            })
+            .collect();
+        coord.submit_batch(reqs).wait();
+        submitted += window;
+    }
+    let rps = n as f64 / t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    rps
+}
+
+/// Render the `simdive-serve-v1` JSON document.
+pub fn to_json(report: &LoadgenReport, coord_requests: u64, coord_batched_rps: f64) -> String {
+    let mut widths = String::from("[");
+    for (i, w) in report.widths.iter().enumerate() {
+        if i > 0 {
+            widths.push_str(", ");
+        }
+        write!(widths, "{w}").unwrap();
+    }
+    widths.push(']');
+    let s = &report.server;
+    format!(
+        "{{\n  \"schema\": \"simdive-serve-v1\",\n  \"connections\": {},\n  \"requests\": {},\n  \
+         \"chunk\": {},\n  \"widths\": {widths},\n  \"wall_s\": {:.4},\n  \"rps\": {:.1},\n  \
+         \"server\": {{\"requests\": {}, \"words\": {}, \"lane_utilization\": {:.4}, \
+         \"energy_pj\": {:.1}, \"p50_us\": {}, \"p99_us\": {}}},\n  \
+         \"coordinator\": {{\"requests\": {coord_requests}, \"batched_rps\": {:.1}}}\n}}\n",
+        report.connections,
+        report.requests,
+        report.chunk,
+        report.wall_s,
+        report.rps,
+        s.requests,
+        s.words,
+        s.lane_utilization(),
+        s.energy_pj(),
+        s.p50_us,
+        s.p99_us,
+        coord_batched_rps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_generator_respects_config() {
+        let cfg =
+            LoadgenConfig { widths: vec![16], fixed_w: Some(3), ..LoadgenConfig::default() };
+        let mut rng = Rng::new(1);
+        for i in 0..200 {
+            let r = make_request(&cfg, &mut rng, i);
+            assert_eq!(r.bits, 16);
+            assert_eq!(r.w, 3, "--w pin must reach every request");
+            assert_eq!(r.id, i);
+            assert!((1..=crate::arith::max_val(16)).contains(&r.a));
+        }
+        let cfg = LoadgenConfig::default();
+        let mut rng = Rng::new(2);
+        let mut saw_w = [false; (W_MAX + 1) as usize];
+        let mut saw_div = false;
+        for i in 0..2000 {
+            let r = make_request(&cfg, &mut rng, i);
+            assert!(matches!(r.bits, 8 | 16 | 32));
+            saw_w[r.w as usize] = true;
+            saw_div |= r.op == ReqOp::Div;
+        }
+        assert!(saw_w.iter().all(|&s| s), "w spread must cover 0..=W_MAX");
+        assert!(saw_div);
+    }
+
+    #[test]
+    fn json_document_is_well_formed_enough() {
+        let report = LoadgenReport {
+            connections: 2,
+            requests: 100,
+            chunk: 16,
+            widths: vec![8, 16],
+            wall_s: 0.5,
+            rps: 200.0,
+            server: WireStats { requests: 100, words: 30, ..WireStats::default() },
+        };
+        let j = to_json(&report, 40_000, 1234.5);
+        assert!(j.contains("\"schema\": \"simdive-serve-v1\""));
+        assert!(j.contains("\"widths\": [8, 16]"));
+        assert!(j.contains("\"batched_rps\": 1234.5"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+}

@@ -1,0 +1,33 @@
+//! Network serving subsystem: the SIMD-wire protocol, a TCP server over
+//! the coordinator, a pipelined client library, and a load generator
+//! (DESIGN.md §8).
+//!
+//! The paper's headline claims are throughput and energy under SIMD
+//! packing with *tunable* accuracy; this layer gives those claims a
+//! network boundary to be measured across. Everything is dependency-free
+//! (`std::net` + threads — tokio is unavailable offline, DESIGN.md §1):
+//!
+//! * [`wire`] — versioned little-endian binary protocol; fixed-size
+//!   request frames carry `{id, op, bits, w, a, b}` so the per-operand
+//!   accuracy knob `w` (§3.3) travels on the wire per request, plus batch
+//!   framing and a `STATS` op.
+//! * [`server`] — TCP listener; per-connection reader/writer threads, a
+//!   bounded in-flight admission window (backpressure over TCP instead of
+//!   OOM), a lazily-started coordinator per accuracy knob, and
+//!   out-of-order response writes as SIMD lanes complete.
+//! * [`client`] — pipelined client used by the examples, tests and load
+//!   generator.
+//! * [`stats`] — per-connection and server-wide counters with log2
+//!   latency histograms, exposed via the `STATS` wire op.
+//! * [`loadgen`] — multi-connection load generator writing
+//!   `BENCH_serve.json` (schema `simdive-serve-v1`).
+
+pub mod client;
+pub mod loadgen;
+pub mod server;
+pub mod stats;
+pub mod wire;
+
+pub use client::Client;
+pub use server::{ServeConfig, Server};
+pub use wire::{WireRequest, WireResponse, WireStats};

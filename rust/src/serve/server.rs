@@ -1,0 +1,456 @@
+//! SIMD-wire TCP server over the coordinator (DESIGN.md §8).
+//!
+//! Thread layout: one accept thread; per connection, the spawned
+//! connection thread becomes the *reader* and starts one *writer* thread.
+//! The reader decodes frames, admits requests under a bounded in-flight
+//! window (admission control: when the window is full the reader stops
+//! draining the socket, so backpressure propagates over TCP instead of
+//! buffering unboundedly), and funnels them into a bank of coordinators —
+//! one per accuracy knob `w`, started lazily — via
+//! [`Coordinator::submit_batch_streaming`]. The writer drains completions
+//! and writes response frames **out of order, as SIMD lanes complete**,
+//! freeing window slots and recording latency as it goes.
+//!
+//! The per-request `w` of the wire protocol maps to the coordinator bank:
+//! requests sharing a `w` are batched together so the lane packer can
+//! still fill words, while different-`w` requests never share a word
+//! (their correction tables differ — §3.3).
+
+use super::stats::ServeCounters;
+use super::wire::{self, ClientFrame, WireStats};
+use crate::arith::W_MAX;
+use crate::coordinator::{Coordinator, CoordinatorConfig, Request, Response, Stats};
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads per per-`w` coordinator.
+    pub workers: usize,
+    /// Coordinator packing-batch size.
+    pub batch: usize,
+    /// Coordinator bounded-queue depth.
+    pub queue_depth: usize,
+    /// Per-connection admission window: maximum in-flight requests before
+    /// the reader stops draining the socket.
+    pub window: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 4, batch: 64, queue_depth: 1024, window: 1024 }
+    }
+}
+
+/// Shared server state.
+struct Inner {
+    cfg: ServeConfig,
+    stop: AtomicBool,
+    /// One coordinator per accuracy knob `w ∈ 0..=W_MAX`, started on first
+    /// use so a server only pays for the accuracy points its clients ask
+    /// for.
+    coords: [OnceLock<Coordinator>; (W_MAX + 1) as usize],
+    /// Server-wide completed requests + latency.
+    global: ServeCounters,
+    connections: AtomicU64,
+}
+
+impl Inner {
+    fn coord(&self, w: u32) -> &Coordinator {
+        self.coords[w as usize].get_or_init(|| {
+            Coordinator::start(CoordinatorConfig {
+                workers: self.cfg.workers,
+                w,
+                queue_depth: self.cfg.queue_depth,
+                batch: self.cfg.batch,
+            })
+        })
+    }
+
+    /// Sum of the started coordinators' snapshots.
+    fn coordinator_stats(&self) -> Stats {
+        let mut s = Stats::default();
+        for c in &self.coords {
+            if let Some(c) = c.get() {
+                s.merge(&c.stats());
+            }
+        }
+        s
+    }
+
+    /// Build the `STATS_RESP` payload for one connection's view.
+    fn snapshot(&self, conn: &ServeCounters) -> WireStats {
+        let cs = self.coordinator_stats();
+        WireStats {
+            requests: self.global.requests(),
+            words: cs.words,
+            active_lanes: cs.active_lanes,
+            total_lanes: cs.total_lanes,
+            energy_mpj: (cs.energy_pj * 1000.0).round() as u64,
+            p50_us: self.global.hist.percentile_us(0.50),
+            p99_us: self.global.hist.percentile_us(0.99),
+            conn_requests: conn.requests(),
+            conn_p50_us: conn.hist.percentile_us(0.50),
+            conn_p99_us: conn.hist.percentile_us(0.99),
+        }
+    }
+}
+
+/// The serving front end. Dropping (or [`Server::shutdown`]) stops the
+/// accept loop; established connections drain on their own threads.
+pub struct Server {
+    addr: SocketAddr,
+    inner: Arc<Inner>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections.
+    pub fn start<A: ToSocketAddrs>(listen: A, cfg: ServeConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            cfg,
+            stop: AtomicBool::new(false),
+            coords: std::array::from_fn(|_| OnceLock::new()),
+            global: ServeCounters::new(),
+            connections: AtomicU64::new(0),
+        });
+        let accept = {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || accept_loop(listener, inner))
+        };
+        Ok(Server { addr, inner, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Server-wide stats snapshot (connection-local fields are zero).
+    pub fn stats(&self) -> WireStats {
+        self.inner.snapshot(&ServeCounters::new())
+    }
+
+    /// Currently open connections.
+    pub fn connections(&self) -> u64 {
+        self.inner.connections.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting new connections and join the accept thread.
+    pub fn shutdown(mut self) {
+        self.stop_accept();
+    }
+
+    fn stop_accept(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_accept();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
+    for conn in listener.incoming() {
+        if inner.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, inner);
+                });
+            }
+            Err(_) => continue, // transient accept error
+        }
+    }
+}
+
+/// Per-connection in-flight window: a fixed slot table guarded by a
+/// mutex + condvar. `acquire` is the admission-control point — it blocks
+/// the reader when every slot is taken, which stops socket draining and
+/// pushes backpressure to the client over TCP.
+struct Inflight {
+    slots: Mutex<SlotTable>,
+    freed: Condvar,
+}
+
+struct SlotTable {
+    free: Vec<u32>,
+    /// `entries[slot]` = (wire id, admission time) of the occupying request.
+    entries: Vec<(u64, Instant)>,
+}
+
+impl Inflight {
+    fn new(window: usize) -> Self {
+        let window = window.max(1);
+        Inflight {
+            slots: Mutex::new(SlotTable {
+                free: (0..window as u32).rev().collect(),
+                entries: vec![(0, Instant::now()); window],
+            }),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Take a slot if one is free (never blocks).
+    fn try_acquire(&self, wire_id: u64) -> Option<u32> {
+        let mut t = self.slots.lock().unwrap();
+        let slot = t.free.pop()?;
+        t.entries[slot as usize] = (wire_id, Instant::now());
+        Some(slot)
+    }
+
+    /// Block until a slot frees, then take it.
+    fn acquire(&self, wire_id: u64) -> u32 {
+        let mut t = self.slots.lock().unwrap();
+        loop {
+            if let Some(slot) = t.free.pop() {
+                t.entries[slot as usize] = (wire_id, Instant::now());
+                return slot;
+            }
+            t = self.freed.wait(t).unwrap();
+        }
+    }
+
+    /// Free a slot; returns the wire id and the admission→now latency.
+    fn release(&self, slot: u32) -> (u64, u64) {
+        let mut t = self.slots.lock().unwrap();
+        let (id, t0) = t.entries[slot as usize];
+        t.free.push(slot);
+        drop(t);
+        self.freed.notify_one();
+        (id, t0.elapsed().as_nanos() as u64)
+    }
+}
+
+/// Shared buffered write half. The writer thread owns the response
+/// stream; the reader grabs the lock only for the rare `STATS_RESP`/`ERR`
+/// frames, so frames never interleave mid-frame.
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+fn handle_conn(stream: TcpStream, inner: Arc<Inner>) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
+
+    // Hello exchange. The server always answers with its *own* hello (so
+    // a cross-version client can read the server's version and report it),
+    // then closes a mismatched connection with ERR_BAD_VERSION.
+    let peer_version = wire::read_hello(&mut reader)?;
+    {
+        let mut w = writer.lock().unwrap();
+        wire::write_hello(&mut *w)?;
+        if peer_version != wire::VERSION {
+            wire::write_err(&mut *w, wire::ERR_BAD_VERSION)?;
+            w.flush()?;
+            return Ok(());
+        }
+        w.flush()?;
+    }
+
+    inner.connections.fetch_add(1, Ordering::Relaxed);
+    let conn_stats = Arc::new(ServeCounters::new());
+    let inflight = Arc::new(Inflight::new(inner.cfg.window));
+    // Set once the reader has queued an `ERR` frame: the protocol promises
+    // `ERR` is the last frame, so the writer stops emitting `RESP`s.
+    let closed = Arc::new(AtomicBool::new(false));
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel::<(u32, Response)>();
+
+    let writer_handle = {
+        let writer = Arc::clone(&writer);
+        let inflight = Arc::clone(&inflight);
+        let conn_stats = Arc::clone(&conn_stats);
+        let inner = Arc::clone(&inner);
+        let closed = Arc::clone(&closed);
+        std::thread::spawn(move || {
+            writer_loop(writer, resp_rx, inflight, conn_stats, inner, closed)
+        })
+    };
+
+    let result =
+        reader_loop(&mut reader, &writer, &inner, &inflight, &conn_stats, &resp_tx, &closed);
+
+    // Dropping our sender lets the writer exit once every in-flight
+    // response (whose routes hold clones) has been delivered.
+    drop(resp_tx);
+    let _ = writer_handle.join();
+    inner.connections.fetch_sub(1, Ordering::Relaxed);
+    result
+}
+
+fn reader_loop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &SharedWriter,
+    inner: &Arc<Inner>,
+    inflight: &Arc<Inflight>,
+    conn_stats: &Arc<ServeCounters>,
+    resp_tx: &Sender<(u32, Response)>,
+    closed: &Arc<AtomicBool>,
+) -> io::Result<()> {
+    // Per-`w` submission buckets: requests sharing an accuracy knob batch
+    // together into that knob's coordinator.
+    let mut buckets: Vec<Vec<Request>> = (0..=W_MAX).map(|_| Vec::new()).collect();
+    let mut pending = 0usize;
+    loop {
+        match wire::read_client_frame(reader)? {
+            ClientFrame::Eof => return Ok(()),
+            ClientFrame::Bad(code) => {
+                // `ERR` must be the last frame on the wire: mark the
+                // connection closed *before* taking the lock, so once the
+                // writer's current drain (which holds the lock) finishes,
+                // it emits no further `RESP` frames.
+                closed.store(true, Ordering::SeqCst);
+                let mut w = writer.lock().unwrap();
+                wire::write_err(&mut *w, code)?;
+                w.flush()?;
+                return Ok(());
+            }
+            ClientFrame::Stats => {
+                // Submit buffered work first so the snapshot reflects it.
+                pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+                let snap = inner.snapshot(conn_stats);
+                let mut w = writer.lock().unwrap();
+                wire::write_stats_resp(&mut *w, &snap)?;
+                w.flush()?;
+            }
+            ClientFrame::Requests(reqs) => {
+                for r in &reqs {
+                    // Admission control: take a window slot, submitting
+                    // buffered work before blocking so slots can free.
+                    let slot = match inflight.try_acquire(r.id) {
+                        Some(s) => s,
+                        None => {
+                            pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+                            inflight.acquire(r.id)
+                        }
+                    };
+                    // The coordinator-side id is the window slot; the wire
+                    // id is recovered from the slot table on completion.
+                    buckets[r.w as usize].push(Request {
+                        id: slot as u64,
+                        op: r.op,
+                        bits: r.bits,
+                        a: r.a,
+                        b: r.b,
+                    });
+                    pending += 1;
+                    if pending >= inner.cfg.batch {
+                        pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+                    }
+                }
+                pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+            }
+        }
+    }
+}
+
+/// Flush every non-empty per-`w` bucket into its coordinator; returns the
+/// new pending count (0).
+fn submit_buckets(
+    inner: &Arc<Inner>,
+    buckets: &mut [Vec<Request>],
+    pending: usize,
+    resp_tx: &Sender<(u32, Response)>,
+) -> usize {
+    if pending > 0 {
+        for (w, bucket) in buckets.iter_mut().enumerate() {
+            if !bucket.is_empty() {
+                inner.coord(w as u32).submit_batch_streaming(std::mem::take(bucket), 0, resp_tx);
+            }
+        }
+    }
+    0
+}
+
+/// Writer thread: drain completions, free window slots, record latency,
+/// and write `RESP` frames out-of-order as lanes complete. Write failures
+/// (client went away) switch to drain-only mode so slots keep freeing and
+/// the reader can run to its own error/EOF.
+fn writer_loop(
+    writer: SharedWriter,
+    rx: Receiver<(u32, Response)>,
+    inflight: Arc<Inflight>,
+    conn_stats: Arc<ServeCounters>,
+    inner: Arc<Inner>,
+    closed: Arc<AtomicBool>,
+) {
+    let mut dead = false;
+    loop {
+        // Block for one completion, then drain greedily before flushing.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut w = writer.lock().unwrap();
+        let mut msg = Some(first);
+        while let Some((_, resp)) = msg.take() {
+            let (wire_id, latency_ns) = inflight.release(resp.id as u32);
+            conn_stats.record(latency_ns);
+            inner.global.record(latency_ns);
+            dead = dead || closed.load(Ordering::SeqCst);
+            if !dead && wire::write_response(&mut *w, wire_id, resp.value).is_err() {
+                dead = true;
+            }
+            if let Ok(m) = rx.try_recv() {
+                msg = Some(m);
+            }
+        }
+        if !dead && w.flush().is_err() {
+            dead = true;
+        }
+    }
+    if !dead {
+        let _ = writer.lock().unwrap().flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inflight_window_blocks_and_frees() {
+        let inflight = Arc::new(Inflight::new(2));
+        let s0 = inflight.acquire(10);
+        let s1 = inflight.acquire(11);
+        assert_ne!(s0, s1);
+        assert!(inflight.try_acquire(12).is_none(), "window must be full");
+        let inflight2 = Arc::clone(&inflight);
+        let t = std::thread::spawn(move || inflight2.acquire(12));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let (id, _lat) = inflight.release(s0);
+        assert_eq!(id, 10);
+        let s2 = t.join().unwrap();
+        assert_eq!(s2, s0, "freed slot is reused");
+        inflight.release(s1);
+        inflight.release(s2);
+        assert!(inflight.try_acquire(13).is_some());
+    }
+
+    #[test]
+    fn server_binds_ephemeral_port_and_shuts_down() {
+        let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0);
+        assert_eq!(server.connections(), 0);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,147 @@
+//! Serving-side counters: completed-request counts and a lock-free
+//! log2-bucketed latency histogram, kept per connection and server-wide
+//! (DESIGN.md §8). The writer thread records one sample per response at
+//! completion time (admission → response write), so the percentiles
+//! include queueing under the admission window — the number a client
+//! actually experiences.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 buckets: bucket `i` counts samples in `[2^i, 2^{i+1})`
+/// nanoseconds, with the top bucket absorbing everything ≥ 2^47 ns (~39 h).
+const BUCKETS: usize = 48;
+
+/// Lock-free latency histogram over log2-spaced nanosecond buckets.
+///
+/// Percentiles are read as the *upper bound* of the bucket holding the
+/// requested rank — at most 2× off, which is plenty for p50/p99 serving
+/// telemetry and costs one relaxed increment per sample.
+pub struct LatencyHist {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency sample in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        let idx = if ns == 0 { 0 } else { (63 - ns.leading_zeros() as usize).min(BUCKETS - 1) };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Percentile `p` in `(0, 1]`, reported in microseconds (upper bound of
+    /// the holding bucket). Returns 0 when no samples were recorded.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // Upper bound of bucket i is 2^{i+1} − 1 ns.
+                return ((1u64 << (i + 1)) - 1) / 1000;
+            }
+        }
+        ((1u64 << BUCKETS) - 1) / 1000
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Completed-request counter + latency histogram; one per connection and
+/// one server-wide.
+pub struct ServeCounters {
+    requests: AtomicU64,
+    pub hist: LatencyHist,
+}
+
+impl ServeCounters {
+    pub fn new() -> Self {
+        ServeCounters { requests: AtomicU64::new(0), hist: LatencyHist::new() }
+    }
+
+    /// Record one completed request and its admission→response latency.
+    pub fn record(&self, latency_ns: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.hist.record_ns(latency_ns);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for ServeCounters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(0.5), 0);
+        assert_eq!(h.percentile_us(0.99), 0);
+    }
+
+    #[test]
+    fn percentiles_bound_samples() {
+        let h = LatencyHist::new();
+        // 99 samples at ~1 µs, one at ~1 ms.
+        for _ in 0..99 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(1_000_000);
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_us(0.50);
+        let p99 = h.percentile_us(0.99);
+        let p100 = h.percentile_us(1.0);
+        // p50/p99 fall in the ~1 µs bucket (upper bound ≤ 2 µs), p100 in
+        // the ~1 ms bucket.
+        assert!((1..=2).contains(&p50), "p50 = {p50}");
+        assert!((1..=2).contains(&p99), "p99 = {p99}");
+        assert!((1_000..=2_100).contains(&p100), "p100 = {p100}");
+        assert!(p50 <= p99 && p99 <= p100);
+    }
+
+    #[test]
+    fn zero_and_huge_samples_are_absorbed() {
+        let h = LatencyHist::new();
+        h.record_ns(0);
+        h.record_ns(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(1.0) > 0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = ServeCounters::new();
+        c.record(5_000);
+        c.record(7_000);
+        assert_eq!(c.requests(), 2);
+        assert_eq!(c.hist.count(), 2);
+    }
+}

@@ -1,0 +1,479 @@
+//! SIMD-wire: the versioned little-endian binary protocol of the network
+//! serving subsystem (DESIGN.md §8).
+//!
+//! A connection opens with an 8-byte hello exchanged in both directions
+//! (`MAGIC` + protocol version; the server always states its own version,
+//! then answers an unsupported one with `ERR_BAD_VERSION` and a close),
+//! then carries a stream of 1-byte-kind frames. Request bodies are fixed-size (28 bytes) and carry the paper's
+//! per-operand accuracy knob `w` (§3.3) *per request*, so every client
+//! chooses its own accuracy/latency trade-off on the wire. A `BATCH` frame
+//! carries up to [`MAX_BATCH`] request bodies under one header — the
+//! framing the pipelined client and the load generator use.
+//!
+//! | kind | dir | body |
+//! |------|-----|------|
+//! | `REQ` (0x01)        | c→s | 28 B: `id:u64, a:u64, b:u64, op:u8, bits:u8, w:u8, flags:u8` |
+//! | `BATCH` (0x02)      | c→s | `count:u16` then `count` request bodies |
+//! | `STATS` (0x03)      | c→s | empty |
+//! | `RESP` (0x81)       | s→c | 16 B: `id:u64, value:u64` |
+//! | `STATS_RESP` (0x82) | s→c | 80 B: ten `u64` counters ([`WireStats`]) |
+//! | `ERR` (0xEE)        | s→c | 1 B error code, then the server closes |
+//!
+//! Responses arrive **out of order** (as SIMD lanes complete); the `id` is
+//! the correlation key and is echoed verbatim.
+
+use crate::arith::W_MAX;
+use crate::coordinator::ReqOp;
+use std::io::{self, Read, Write};
+
+/// Connection magic, first bytes on the wire in both directions.
+pub const MAGIC: [u8; 4] = *b"SDIV";
+
+/// Protocol version carried in the hello.
+pub const VERSION: u16 = 1;
+
+/// Frame kinds (client → server).
+pub const FRAME_REQ: u8 = 0x01;
+pub const FRAME_BATCH: u8 = 0x02;
+pub const FRAME_STATS: u8 = 0x03;
+
+/// Frame kinds (server → client).
+pub const FRAME_RESP: u8 = 0x81;
+pub const FRAME_STATS_RESP: u8 = 0x82;
+pub const FRAME_ERR: u8 = 0xEE;
+
+/// Error codes carried by an `ERR` frame.
+pub const ERR_BAD_FRAME: u8 = 1;
+pub const ERR_BAD_REQUEST: u8 = 2;
+pub const ERR_BAD_VERSION: u8 = 3;
+
+/// Fixed size of a request body.
+pub const REQ_BODY_LEN: usize = 28;
+
+/// Fixed size of a response body.
+pub const RESP_BODY_LEN: usize = 16;
+
+/// Maximum request bodies in one `BATCH` frame (`count` is a `u16`).
+pub const MAX_BATCH: usize = u16::MAX as usize;
+
+/// One request as it travels on the wire: the coordinator request fields
+/// plus the per-request accuracy knob `w`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireRequest {
+    /// Client-chosen correlation id, echoed on the response.
+    pub id: u64,
+    pub op: ReqOp,
+    /// Operand width: 8, 16 or 32.
+    pub bits: u32,
+    /// Accuracy knob (number of coefficient LUTs), `0..=W_MAX`.
+    pub w: u32,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl WireRequest {
+    /// Encode the fixed-size body (no kind byte).
+    pub fn encode_body(&self, buf: &mut [u8; REQ_BODY_LEN]) {
+        buf[0..8].copy_from_slice(&self.id.to_le_bytes());
+        buf[8..16].copy_from_slice(&self.a.to_le_bytes());
+        buf[16..24].copy_from_slice(&self.b.to_le_bytes());
+        buf[24] = match self.op {
+            ReqOp::Mul => 0,
+            ReqOp::Div => 1,
+        };
+        buf[25] = self.bits as u8;
+        buf[26] = self.w as u8;
+        buf[27] = 0; // flags, reserved
+    }
+
+    /// Decode and validate a fixed-size body. Errors name the offending
+    /// field; the server answers them with `ERR_BAD_REQUEST`.
+    pub fn decode_body(buf: &[u8; REQ_BODY_LEN]) -> Result<WireRequest, String> {
+        let id = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let a = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let b = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let op = match buf[24] {
+            0 => ReqOp::Mul,
+            1 => ReqOp::Div,
+            other => return Err(format!("bad op byte {other}")),
+        };
+        let bits = buf[25] as u32;
+        if !matches!(bits, 8 | 16 | 32) {
+            return Err(format!("bad width {bits}"));
+        }
+        let w = buf[26] as u32;
+        if w > W_MAX {
+            return Err(format!("accuracy knob w={w} exceeds {W_MAX}"));
+        }
+        let max = crate::arith::max_val(bits);
+        if a > max || b > max {
+            return Err(format!("operands ({a}, {b}) exceed {bits}-bit range"));
+        }
+        Ok(WireRequest { id, op, bits, w, a, b })
+    }
+}
+
+/// One response as it travels on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireResponse {
+    pub id: u64,
+    pub value: u64,
+}
+
+/// The `STATS_RESP` payload: server-wide counters (first seven fields) plus
+/// the requesting connection's own view (last three). Fixed ten-`u64`
+/// little-endian layout; new fields are append-only with a version bump.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Completed requests, server-wide.
+    pub requests: u64,
+    /// Packed SIMD words executed, summed over the per-`w` coordinators.
+    pub words: u64,
+    pub active_lanes: u64,
+    pub total_lanes: u64,
+    /// Modelled energy in milli-pJ (integer on the wire).
+    pub energy_mpj: u64,
+    /// Server-wide admission→response latency percentiles, microseconds.
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Completed requests on this connection.
+    pub conn_requests: u64,
+    pub conn_p50_us: u64,
+    pub conn_p99_us: u64,
+}
+
+impl WireStats {
+    pub const BODY_LEN: usize = 80;
+
+    pub fn lane_utilization(&self) -> f64 {
+        if self.total_lanes == 0 {
+            0.0
+        } else {
+            self.active_lanes as f64 / self.total_lanes as f64
+        }
+    }
+
+    pub fn energy_pj(&self) -> f64 {
+        self.energy_mpj as f64 / 1000.0
+    }
+
+    fn fields(&self) -> [u64; 10] {
+        [
+            self.requests,
+            self.words,
+            self.active_lanes,
+            self.total_lanes,
+            self.energy_mpj,
+            self.p50_us,
+            self.p99_us,
+            self.conn_requests,
+            self.conn_p50_us,
+            self.conn_p99_us,
+        ]
+    }
+
+    fn from_fields(f: [u64; 10]) -> WireStats {
+        WireStats {
+            requests: f[0],
+            words: f[1],
+            active_lanes: f[2],
+            total_lanes: f[3],
+            energy_mpj: f[4],
+            p50_us: f[5],
+            p99_us: f[6],
+            conn_requests: f[7],
+            conn_p50_us: f[8],
+            conn_p99_us: f[9],
+        }
+    }
+}
+
+/// Write the 8-byte hello (magic, version, reserved).
+pub fn write_hello<W: Write>(w: &mut W) -> io::Result<()> {
+    let mut buf = [0u8; 8];
+    buf[0..4].copy_from_slice(&MAGIC);
+    buf[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    w.write_all(&buf)
+}
+
+/// Read and check the 8-byte hello; returns the peer's version.
+pub fn read_hello<R: Read>(r: &mut R) -> io::Result<u16> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    if buf[0..4] != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad SIMD-wire magic"));
+    }
+    Ok(u16::from_le_bytes(buf[4..6].try_into().unwrap()))
+}
+
+/// Write a single-request frame.
+pub fn write_request<W: Write>(w: &mut W, req: &WireRequest) -> io::Result<()> {
+    let mut body = [0u8; REQ_BODY_LEN];
+    req.encode_body(&mut body);
+    w.write_all(&[FRAME_REQ])?;
+    w.write_all(&body)
+}
+
+/// Write a batch frame (`reqs.len()` must be `1..=MAX_BATCH`).
+pub fn write_batch<W: Write>(w: &mut W, reqs: &[WireRequest]) -> io::Result<()> {
+    assert!(!reqs.is_empty() && reqs.len() <= MAX_BATCH, "batch of {}", reqs.len());
+    w.write_all(&[FRAME_BATCH])?;
+    w.write_all(&(reqs.len() as u16).to_le_bytes())?;
+    let mut body = [0u8; REQ_BODY_LEN];
+    for req in reqs {
+        req.encode_body(&mut body);
+        w.write_all(&body)?;
+    }
+    Ok(())
+}
+
+/// Write a stats-request frame.
+pub fn write_stats_req<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(&[FRAME_STATS])
+}
+
+/// Write a response frame.
+pub fn write_response<W: Write>(w: &mut W, id: u64, value: u64) -> io::Result<()> {
+    let mut buf = [0u8; 1 + RESP_BODY_LEN];
+    buf[0] = FRAME_RESP;
+    buf[1..9].copy_from_slice(&id.to_le_bytes());
+    buf[9..17].copy_from_slice(&value.to_le_bytes());
+    w.write_all(&buf)
+}
+
+/// Write a stats-response frame.
+pub fn write_stats_resp<W: Write>(w: &mut W, s: &WireStats) -> io::Result<()> {
+    w.write_all(&[FRAME_STATS_RESP])?;
+    for v in s.fields() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Write an error frame (the server closes the connection after this).
+pub fn write_err<W: Write>(w: &mut W, code: u8) -> io::Result<()> {
+    w.write_all(&[FRAME_ERR, code])
+}
+
+/// A frame as decoded by the server.
+#[derive(Debug)]
+pub enum ClientFrame {
+    /// One `REQ` or the contents of one `BATCH`.
+    Requests(Vec<WireRequest>),
+    Stats,
+    /// Clean end of stream (the client closed the connection).
+    Eof,
+    /// Protocol violation; the payload is the `ERR_*` code to answer with.
+    Bad(u8),
+}
+
+/// Read one client frame. I/O errors (including truncated frames) surface
+/// as `Err`; a clean close before a kind byte is `Ok(Eof)`.
+pub fn read_client_frame<R: Read>(r: &mut R) -> io::Result<ClientFrame> {
+    let mut kind = [0u8; 1];
+    if r.read(&mut kind)? == 0 {
+        return Ok(ClientFrame::Eof);
+    }
+    match kind[0] {
+        FRAME_REQ => {
+            let mut body = [0u8; REQ_BODY_LEN];
+            r.read_exact(&mut body)?;
+            match WireRequest::decode_body(&body) {
+                Ok(req) => Ok(ClientFrame::Requests(vec![req])),
+                Err(_) => Ok(ClientFrame::Bad(ERR_BAD_REQUEST)),
+            }
+        }
+        FRAME_BATCH => {
+            let mut cnt = [0u8; 2];
+            r.read_exact(&mut cnt)?;
+            let count = u16::from_le_bytes(cnt) as usize;
+            let mut reqs = Vec::with_capacity(count);
+            let mut body = [0u8; REQ_BODY_LEN];
+            for _ in 0..count {
+                r.read_exact(&mut body)?;
+                match WireRequest::decode_body(&body) {
+                    Ok(req) => reqs.push(req),
+                    Err(_) => return Ok(ClientFrame::Bad(ERR_BAD_REQUEST)),
+                }
+            }
+            if reqs.is_empty() {
+                return Ok(ClientFrame::Bad(ERR_BAD_FRAME));
+            }
+            Ok(ClientFrame::Requests(reqs))
+        }
+        FRAME_STATS => Ok(ClientFrame::Stats),
+        _ => Ok(ClientFrame::Bad(ERR_BAD_FRAME)),
+    }
+}
+
+/// A frame as decoded by the client.
+#[derive(Debug)]
+pub enum ServerFrame {
+    Resp(WireResponse),
+    Stats(WireStats),
+    /// Server-reported protocol error code; the connection is closing.
+    Err(u8),
+}
+
+/// Read one server frame.
+pub fn read_server_frame<R: Read>(r: &mut R) -> io::Result<ServerFrame> {
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    match kind[0] {
+        FRAME_RESP => {
+            let mut body = [0u8; RESP_BODY_LEN];
+            r.read_exact(&mut body)?;
+            Ok(ServerFrame::Resp(WireResponse {
+                id: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                value: u64::from_le_bytes(body[8..16].try_into().unwrap()),
+            }))
+        }
+        FRAME_STATS_RESP => {
+            let mut body = [0u8; WireStats::BODY_LEN];
+            r.read_exact(&mut body)?;
+            let mut fields = [0u64; 10];
+            for (i, f) in fields.iter_mut().enumerate() {
+                *f = u64::from_le_bytes(body[i * 8..i * 8 + 8].try_into().unwrap());
+            }
+            Ok(ServerFrame::Stats(WireStats::from_fields(fields)))
+        }
+        FRAME_ERR => {
+            let mut code = [0u8; 1];
+            r.read_exact(&mut code)?;
+            Ok(ServerFrame::Err(code[0]))
+        }
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unknown server frame kind 0x{other:02x}"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(id: u64, op: ReqOp, bits: u32, w: u32, a: u64, b: u64) -> WireRequest {
+        WireRequest { id, op, bits, w, a, b }
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf).unwrap();
+        assert_eq!(buf.len(), 8);
+        assert_eq!(read_hello(&mut Cursor::new(&buf)).unwrap(), VERSION);
+    }
+
+    #[test]
+    fn hello_rejects_bad_magic() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf).unwrap();
+        buf[0] = b'X';
+        assert!(read_hello(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn request_body_roundtrip() {
+        for r in [
+            req(0, ReqOp::Mul, 8, 0, 0, 255),
+            req(u64::MAX, ReqOp::Div, 32, 8, u32::MAX as u64, 1),
+            req(7, ReqOp::Div, 16, 3, 5000, 40),
+        ] {
+            let mut body = [0u8; REQ_BODY_LEN];
+            r.encode_body(&mut body);
+            assert_eq!(WireRequest::decode_body(&body).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_fields() {
+        let mut body = [0u8; REQ_BODY_LEN];
+        req(1, ReqOp::Mul, 8, 8, 43, 10).encode_body(&mut body);
+        let mut bad_op = body;
+        bad_op[24] = 9;
+        assert!(WireRequest::decode_body(&bad_op).is_err());
+        let mut bad_bits = body;
+        bad_bits[25] = 24;
+        assert!(WireRequest::decode_body(&bad_bits).is_err());
+        let mut bad_w = body;
+        bad_w[26] = (W_MAX + 1) as u8;
+        assert!(WireRequest::decode_body(&bad_w).is_err());
+        let mut bad_operand = body;
+        bad_operand[9] = 1; // a = 43 + 256 exceeds 8 bits
+        assert!(WireRequest::decode_body(&bad_operand).is_err());
+    }
+
+    #[test]
+    fn single_request_frame_roundtrip() {
+        let r = req(42, ReqOp::Mul, 8, 8, 43, 10);
+        let mut buf = Vec::new();
+        write_request(&mut buf, &r).unwrap();
+        assert_eq!(buf.len(), 1 + REQ_BODY_LEN);
+        match read_client_frame(&mut Cursor::new(&buf)).unwrap() {
+            ClientFrame::Requests(v) => assert_eq!(v, vec![r]),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_frame_roundtrip() {
+        let reqs: Vec<WireRequest> =
+            (0..100).map(|i| req(i, ReqOp::Div, 16, (i % 9) as u32, 5000 + i, 1 + i)).collect();
+        let mut buf = Vec::new();
+        write_batch(&mut buf, &reqs).unwrap();
+        assert_eq!(buf.len(), 3 + reqs.len() * REQ_BODY_LEN);
+        match read_client_frame(&mut Cursor::new(&buf)).unwrap() {
+            ClientFrame::Requests(v) => assert_eq!(v, reqs),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_and_stats_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 99, 430).unwrap();
+        let stats = WireStats {
+            requests: 1,
+            words: 2,
+            active_lanes: 3,
+            total_lanes: 4,
+            energy_mpj: 5,
+            p50_us: 6,
+            p99_us: 7,
+            conn_requests: 8,
+            conn_p50_us: 9,
+            conn_p99_us: 10,
+        };
+        write_stats_resp(&mut buf, &stats).unwrap();
+        write_err(&mut buf, ERR_BAD_FRAME).unwrap();
+        let mut cur = Cursor::new(&buf);
+        match read_server_frame(&mut cur).unwrap() {
+            ServerFrame::Resp(r) => assert_eq!(r, WireResponse { id: 99, value: 430 }),
+            other => panic!("unexpected frame {other:?}"),
+        }
+        match read_server_frame(&mut cur).unwrap() {
+            ServerFrame::Stats(s) => assert_eq!(s, stats),
+            other => panic!("unexpected frame {other:?}"),
+        }
+        match read_server_frame(&mut cur).unwrap() {
+            ServerFrame::Err(code) => assert_eq!(code, ERR_BAD_FRAME),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_and_bad_kind() {
+        let empty: Vec<u8> = Vec::new();
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(&empty)).unwrap(),
+            ClientFrame::Eof
+        ));
+        let junk = vec![0x7Fu8];
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(&junk)).unwrap(),
+            ClientFrame::Bad(ERR_BAD_FRAME)
+        ));
+    }
+}

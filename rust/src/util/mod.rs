@@ -8,3 +8,20 @@ pub mod stats;
 
 pub use rng::Rng;
 pub use stats::Summary;
+
+/// Repository root: nearest ancestor holding `.git` (or `ROADMAP.md`),
+/// falling back to the current directory. The tracked bench outputs
+/// (`BENCH_hotpath.json`, `BENCH_serve.json`) land here so they are
+/// comparable PR-over-PR regardless of the invocation directory.
+pub fn repo_root() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join(".git").exists() || dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return cwd;
+        }
+    }
+}

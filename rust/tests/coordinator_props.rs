@@ -79,6 +79,66 @@ fn prop_packed_results_equal_sisd() {
 }
 
 #[test]
+fn prop_pack_invariants() {
+    // The full lane-packing contract over randomized 8/16/32-bit mixes:
+    // every request id appears in exactly one lane of exactly one word,
+    // idle lanes carry zero operands (they are power-gated — §3.2), and
+    // `active_lanes` matches the non-`None` entries of `lane_req`.
+    prop::check(
+        17,
+        300,
+        |r| { let n = 1 + r.below(70) as usize; random_requests(r, n) },
+        |reqs| {
+            let words = pack_requests(reqs);
+            let mut seen = std::collections::HashSet::new();
+            for w in &words {
+                let mut active = 0u32;
+                for (l, lane) in w.lane_req.iter().enumerate() {
+                    match lane {
+                        Some(id) => {
+                            if l >= w.lane_count() {
+                                return Err(format!(
+                                    "id {id} sits in lane {l} beyond {:?}'s {} lanes",
+                                    w.op.cfg,
+                                    w.lane_count()
+                                ));
+                            }
+                            if !seen.insert(*id) {
+                                return Err(format!("id {id} packed into two lanes"));
+                            }
+                            active += 1;
+                        }
+                        None if l < w.lane_count() => {
+                            // Generated operands are non-zero, so any
+                            // non-zero operand in an idle lane would be a
+                            // leak from an active request.
+                            let (a, b) = w.word.lane(w.op.cfg, l);
+                            if a != 0 || b != 0 {
+                                return Err(format!(
+                                    "idle lane {l} of {:?} carries operands ({a}, {b})",
+                                    w.op.cfg
+                                ));
+                            }
+                        }
+                        None => {}
+                    }
+                }
+                if active != w.active_lanes {
+                    return Err(format!(
+                        "active_lanes {} but {} occupied lane_req entries in {:?}",
+                        w.active_lanes, active, w.op.cfg
+                    ));
+                }
+            }
+            if seen.len() != reqs.len() {
+                return Err(format!("{} of {} ids packed", seen.len(), reqs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_packing_efficiency() {
     // No packing may use more words than the trivial one-per-request, and
     // uniform 8-bit loads must reach ≥ 4× compaction.

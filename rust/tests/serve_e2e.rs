@@ -1,0 +1,225 @@
+//! Loopback end-to-end tests of the network serving subsystem: a real TCP
+//! server on 127.0.0.1, driven through `serve::client`, with every
+//! response checked bit-identical against the in-process `arith::batch`
+//! kernels for the same `{bits, w}` (DESIGN.md §8).
+
+use simdive::arith::{batch, table};
+use simdive::coordinator::ReqOp;
+use simdive::serve::{Client, ServeConfig, Server, WireRequest};
+use simdive::util::Rng;
+use std::io::{Read, Write};
+
+/// Ground truth: the batched kernel result for one request at its own
+/// `{bits, w}` — the same arithmetic the server's coordinator bank runs.
+fn expect_one(r: &WireRequest) -> u64 {
+    let t = table::tables_for(r.w);
+    match r.op {
+        ReqOp::Mul => batch::mul_batch(t, r.bits, &[r.a], &[r.b])[0],
+        ReqOp::Div => batch::div_batch(t, r.bits, &[r.a], &[r.b])[0],
+    }
+}
+
+fn random_request(rng: &mut Rng, id: u64) -> WireRequest {
+    let bits = [8u32, 8, 8, 16, 16, 32][rng.below(6) as usize];
+    WireRequest {
+        id,
+        op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
+        bits,
+        w: rng.below(simdive::arith::W_MAX as u64 + 1) as u32,
+        a: rng.operand(bits),
+        b: rng.operand(bits),
+    }
+}
+
+/// The acceptance-criteria run: ≥ 10k mixed-width mul/div requests with
+/// varied per-request `w` through one pipelined connection, every response
+/// bit-identical to `arith::batch`.
+#[test]
+fn loopback_10k_mixed_requests_bit_identical() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let mut rng = Rng::new(0x5E12_7E57);
+    let n = 10_000u64;
+    let mut checked = 0u64;
+    for window_base in (0..n).step_by(2_000) {
+        let reqs: Vec<WireRequest> = (window_base..(window_base + 2_000).min(n))
+            .map(|i| random_request(&mut rng, i))
+            .collect();
+        let resps = client.exchange(&reqs).unwrap();
+        assert_eq!(resps.len(), reqs.len());
+        for (req, resp) in reqs.iter().zip(&resps) {
+            assert_eq!(resp.id, req.id, "responses must come back in submission order");
+            assert_eq!(
+                resp.value,
+                expect_one(req),
+                "bits={} w={} {:?} a={} b={}",
+                req.bits,
+                req.w,
+                req.op,
+                req.a,
+                req.b
+            );
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, n);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.conn_requests, n);
+    assert!(stats.requests >= n);
+    assert!(stats.words > 0);
+    assert!(stats.words <= n);
+    assert!(stats.active_lanes <= stats.total_lanes);
+    assert!(stats.energy_mpj > 0);
+    assert!(stats.p50_us <= stats.p99_us);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_connections_are_isolated() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let mut handles = Vec::new();
+    for conn in 0..4u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap().with_chunk(64);
+            let mut rng = Rng::new(0xC0_4C + conn);
+            let reqs: Vec<WireRequest> = (0..2_500).map(|i| random_request(&mut rng, i)).collect();
+            let resps = client.exchange(&reqs).unwrap();
+            for (req, resp) in reqs.iter().zip(&resps) {
+                assert_eq!(resp.id, req.id);
+                assert_eq!(resp.value, expect_one(req), "conn {conn} req {}", req.id);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 4 * 2_500);
+    server.shutdown();
+}
+
+#[test]
+fn tiny_admission_window_still_completes() {
+    // window ≪ pipeline: the reader must keep admitting as lanes complete
+    // (backpressure, not deadlock or loss).
+    let server =
+        Server::start("127.0.0.1:0", ServeConfig { window: 8, ..ServeConfig::default() }).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap().with_chunk(256);
+    let mut rng = Rng::new(7);
+    let reqs: Vec<WireRequest> = (0..5_000).map(|i| random_request(&mut rng, i)).collect();
+    let resps = client.exchange(&reqs).unwrap();
+    assert_eq!(resps.len(), reqs.len());
+    for (req, resp) in reqs.iter().zip(&resps) {
+        assert_eq!(resp.value, expect_one(req));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn single_call_and_per_request_w_tunability() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    // The paper's running example 43 × 10 at every accuracy knob: the
+    // per-request `w` on the wire must select the matching tables.
+    let mut values = Vec::new();
+    for w in 0..=simdive::arith::W_MAX {
+        let req = WireRequest { id: w as u64, op: ReqOp::Mul, bits: 8, w, a: 43, b: 10 };
+        let resp = client.call(req).unwrap();
+        assert_eq!(resp.id, w as u64);
+        assert_eq!(resp.value, expect_one(&req), "w={w}");
+        values.push(resp.value);
+    }
+    // w=0 degenerates to pure Mitchell, w=8 is the paper's most accurate
+    // configuration; the knob must actually change the answer.
+    assert!(values.iter().any(|&v| v != values[0]), "w knob had no effect: {values:?}");
+    server.shutdown();
+}
+
+#[test]
+fn zero_operand_conventions_cross_the_wire() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for bits in [8u32, 16, 32] {
+        let max = simdive::arith::max_val(bits);
+        let cases = [
+            WireRequest { id: 0, op: ReqOp::Mul, bits, w: 8, a: 0, b: max },
+            WireRequest { id: 1, op: ReqOp::Div, bits, w: 8, a: 0, b: 7 },
+            WireRequest { id: 2, op: ReqOp::Div, bits, w: 8, a: max, b: 0 },
+        ];
+        let resps = client.exchange(&cases).unwrap();
+        assert_eq!(resps[0].value, 0, "0 × max at {bits} bits");
+        assert_eq!(resps[1].value, 0, "0 ÷ 7 at {bits} bits");
+        assert_eq!(resps[2].value, max, "x ÷ 0 saturates at {bits} bits");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn loadgen_loopback_reports_and_renders_json() {
+    use simdive::serve::loadgen::{self, LoadgenConfig};
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let cfg =
+        LoadgenConfig { connections: 2, requests: 4_000, chunk: 64, ..LoadgenConfig::default() };
+    let report = loadgen::run(&addr, &cfg).unwrap();
+    assert_eq!(report.requests, 4_000);
+    assert_eq!(report.connections, 2);
+    assert!(report.rps > 0.0);
+    assert!(report.server.requests >= 4_000);
+    assert!(report.server.words > 0);
+    let json = loadgen::to_json(&report, 1_000, 123.4);
+    assert!(json.contains("\"schema\": \"simdive-serve-v1\""));
+    assert!(json.contains("\"batched_rps\": 123.4"));
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    server.shutdown();
+}
+
+#[test]
+fn bad_frame_answered_with_err_and_close() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    // Valid hello...
+    let mut hello = [0u8; 8];
+    hello[0..4].copy_from_slice(b"SDIV");
+    hello[4..6].copy_from_slice(&1u16.to_le_bytes());
+    stream.write_all(&hello).unwrap();
+    let mut ack = [0u8; 8];
+    stream.read_exact(&mut ack).unwrap();
+    assert_eq!(&ack[0..4], b"SDIV");
+    // ...then a junk frame kind.
+    stream.write_all(&[0x7F]).unwrap();
+    let mut err = [0u8; 2];
+    stream.read_exact(&mut err).unwrap();
+    assert_eq!(err[0], 0xEE, "expected ERR frame");
+    assert_eq!(err[1], 1, "expected ERR_BAD_FRAME");
+    // Server closes after ERR.
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn version_mismatch_gets_server_hello_then_err() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    let mut hello = [0u8; 8];
+    hello[0..4].copy_from_slice(b"SDIV");
+    hello[4..6].copy_from_slice(&9u16.to_le_bytes());
+    stream.write_all(&hello).unwrap();
+    // The server still sends its own hello (so the client can name the
+    // server's version in its error), then ERR_BAD_VERSION and a close.
+    let mut ack = [0u8; 8];
+    stream.read_exact(&mut ack).unwrap();
+    assert_eq!(&ack[0..4], b"SDIV");
+    assert_eq!(u16::from_le_bytes([ack[4], ack[5]]), 1, "server must state its version");
+    let mut err = [0u8; 2];
+    stream.read_exact(&mut err).unwrap();
+    assert_eq!(err[0], 0xEE);
+    assert_eq!(err[1], 3, "expected ERR_BAD_VERSION");
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown();
+}

@@ -119,18 +119,25 @@ fn bench_op(bits: u32, is_div: bool, rng: &mut Rng) -> OpResult {
     r
 }
 
-fn bench_coordinator() -> (f64, f64) {
+fn bench_coordinator() -> (f64, f64, f64, f64) {
     use simdive::coordinator::{Coordinator, CoordinatorConfig, ReqOp, Request};
+    // Fixed-w generator: same workload as pre-v2 benches (every request
+    // at the full 8-LUT knob), so `batched_rps` stays comparable
+    // PR-over-PR.
     let make = |i: u64| {
         let bits = [8u32, 8, 16, 32][(i % 4) as usize];
         Request {
             id: i,
             op: if i % 4 == 0 { ReqOp::Div } else { ReqOp::Mul },
             bits,
+            w: 8,
             a: 1 + (i % ((1u64 << bits) - 1)),
             b: 1 + ((i * 7) % ((1u64 << bits) - 1)),
         }
     };
+    // Mixed-accuracy generator: the coordinator-v2 headline workload —
+    // every request picks its own w, all through one shared pool.
+    let make_mixed = |i: u64| Request { w: (i % 9) as u32, ..make(i) };
     let n = COORD_REQUESTS;
 
     // Per-request submission (one channel per request).
@@ -164,13 +171,30 @@ fn bench_coordinator() -> (f64, f64) {
     let batched_rps = n as f64 / t0.elapsed().as_secs_f64();
     coord.shutdown();
 
+    // Mixed-w batched submission through the same shared pool, with lane
+    // utilization from the coordinator's own accounting.
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let t0 = Instant::now();
+    let mut submitted = 0u64;
+    while submitted < n {
+        let window = (n - submitted).min(1024);
+        let reqs: Vec<Request> = (submitted..submitted + window).map(make_mixed).collect();
+        coord.submit_batch(reqs).wait();
+        submitted += window;
+    }
+    let mixed_rps = n as f64 / t0.elapsed().as_secs_f64();
+    let mixed_util = coord.shutdown().lane_utilization();
+
     println!(
-        "[bench] coordinator: per-request {:.1} kreq/s, batched {:.1} kreq/s ({:.2}x)",
+        "[bench] coordinator: per-request {:.1} kreq/s, batched {:.1} kreq/s ({:.2}x), \
+         mixed-w batched {:.1} kreq/s (lane util {:.0}%)",
         scalar_rps / 1e3,
         batched_rps / 1e3,
-        batched_rps / scalar_rps
+        batched_rps / scalar_rps,
+        mixed_rps / 1e3,
+        mixed_util * 100.0
     );
-    (scalar_rps, batched_rps)
+    (scalar_rps, batched_rps, mixed_rps, mixed_util)
 }
 
 fn json_op_section(results: &[&OpResult]) -> String {
@@ -201,16 +225,22 @@ fn main() {
         muls.push(bench_op(bits, false, &mut rng));
         divs.push(bench_op(bits, true, &mut rng));
     }
-    let (coord_scalar_rps, coord_batched_rps) = bench_coordinator();
+    let (coord_scalar_rps, coord_batched_rps, coord_mixed_rps, coord_mixed_util) =
+        bench_coordinator();
 
+    // Schema note: `batched_mixed_w_rps` and `mixed_w_lane_utilization`
+    // are append-only additions for coordinator v2 (CHANGES.md).
     let json = format!(
         "{{\n  \"schema\": \"simdive-hotpath-v1\",\n  \"elements_per_pass\": {N},\n  \
          \"mul\": {},\n  \"div\": {},\n  \"coordinator\": {{\"requests\": {COORD_REQUESTS}, \
-         \"per_request_rps\": {:.1}, \"batched_rps\": {:.1}}}\n}}\n",
+         \"per_request_rps\": {:.1}, \"batched_rps\": {:.1}, \
+         \"batched_mixed_w_rps\": {:.1}, \"mixed_w_lane_utilization\": {:.4}}}\n}}\n",
         json_op_section(&muls.iter().collect::<Vec<_>>()),
         json_op_section(&divs.iter().collect::<Vec<_>>()),
         coord_scalar_rps,
         coord_batched_rps,
+        coord_mixed_rps,
+        coord_mixed_util,
     );
     let path = simdive::util::repo_root().join("BENCH_hotpath.json");
     match std::fs::write(&path, &json) {

@@ -26,6 +26,7 @@ fn main() {
                 id: i,
                 op: if i % 3 == 0 { ReqOp::Div } else { ReqOp::Mul },
                 bits,
+                w: (i % 9) as u32,
                 a: 1 + (i % 200),
                 b: 3 + (i % 100),
             }
@@ -44,7 +45,7 @@ fn main() {
     while submitted < n {
         let window = (n - submitted).min(1024);
         let batch: Vec<Request> = (submitted..submitted + window)
-            .map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, a: 1 + (i % 250), b: 3 })
+            .map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, w: 8, a: 1 + (i % 250), b: 3 })
             .collect();
         coord.submit_batch(batch).wait();
         submitted += window;

@@ -44,6 +44,7 @@ fn predict_over_wire(q: &QuantMlp, pixels: &[u8], client: &mut Client, w: u32) -
                     op: ReqOp::Mul,
                     bits: 8,
                     w,
+                    budget_ppm: 0,
                     a: wq.unsigned_abs() as u64,
                     b: a,
                 });

@@ -8,20 +8,26 @@ use simdive::coordinator::{pack_requests, Coordinator, CoordinatorConfig, ReqOp,
 use simdive::util::Rng;
 
 fn main() {
-    // Static packing view.
+    // Static packing view: mixed widths *and* mixed accuracy knobs —
+    // requests with different w never share a word (their correction
+    // tables differ), but one coordinator serves them all.
     let reqs = vec![
-        Request { id: 0, op: ReqOp::Mul, bits: 16, a: 1200, b: 37 },
-        Request { id: 1, op: ReqOp::Div, bits: 8, a: 200, b: 9 },
-        Request { id: 2, op: ReqOp::Mul, bits: 8, a: 43, b: 10 },
-        Request { id: 3, op: ReqOp::Div, bits: 32, a: 1 << 20, b: 77 },
-        Request { id: 4, op: ReqOp::Mul, bits: 8, a: 7, b: 3 },
-        Request { id: 5, op: ReqOp::Mul, bits: 8, a: 9, b: 5 },
+        Request { id: 0, op: ReqOp::Mul, bits: 16, w: 8, a: 1200, b: 37 },
+        Request { id: 1, op: ReqOp::Div, bits: 8, w: 8, a: 200, b: 9 },
+        Request { id: 2, op: ReqOp::Mul, bits: 8, w: 8, a: 43, b: 10 },
+        Request { id: 3, op: ReqOp::Div, bits: 32, w: 4, a: 1 << 20, b: 77 },
+        Request { id: 4, op: ReqOp::Mul, bits: 8, w: 4, a: 7, b: 3 },
+        Request { id: 5, op: ReqOp::Mul, bits: 8, w: 4, a: 9, b: 5 },
     ];
     println!("packing {} mixed requests:", reqs.len());
     for w in pack_requests(&reqs) {
         println!(
-            "  {:?} modes {:?} lanes {:?} ({} active)",
-            w.op.cfg, &w.op.modes[..w.lane_count()], w.lane_req, w.active_lanes
+            "  {:?} w={} modes {:?} lanes {:?} ({} active)",
+            w.op.cfg,
+            w.w,
+            &w.op.modes[..w.lane_count()],
+            w.lane_req,
+            w.active_lanes
         );
     }
 
@@ -39,6 +45,7 @@ fn main() {
             id: i,
             op: if rng.below(5) == 0 { ReqOp::Div } else { ReqOp::Mul },
             bits,
+            w: rng.below(9) as u32,
             a: rng.operand(bits),
             b: rng.operand(bits),
         }));

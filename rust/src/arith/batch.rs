@@ -27,7 +27,7 @@
 
 use super::mitchell::{div_decode, frac_aligned, mul_decode};
 use super::simd::{LaneMode, SimdOp, SimdWord};
-use super::table::CorrectionTables;
+use super::table::{tables_for, CorrectionTables, W_MAX};
 
 /// Per-call context for one operation kind at one width: the flat
 /// coefficient grid rescaled to `F = bits - 1` fraction-bit units.
@@ -201,6 +201,58 @@ impl WordKernel {
     }
 }
 
+/// Mixed-accuracy packed-word kernel: one rescaled context per accuracy
+/// knob `w ∈ 0..=W_MAX`, all built at construction. This is the kernel
+/// entry of coordinator v2 (DESIGN.md §9): a single shared worker pool
+/// executes words of *any* `{bits, w}` mix, so per-word `w` tags select
+/// the correction tables with one index — no per-word table resolution
+/// and no per-`w` worker pools.
+///
+/// Bit-identical to `simd::execute_with(tables_for(w), op, word)` for
+/// every word (property-tested in `tests/batch_props.rs`).
+pub struct MultiKernel {
+    /// Indexed by `w`.
+    ctxs: Vec<WordContext>,
+}
+
+impl MultiKernel {
+    /// Build contexts for every accuracy knob (9 × ~3 KB of rescaled
+    /// coefficients — cheap enough to pay once per worker thread).
+    pub fn new() -> Self {
+        MultiKernel { ctxs: (0..=W_MAX).map(|w| WordContext::new(tables_for(w))).collect() }
+    }
+
+    /// Execute one packed word at accuracy knob `w`.
+    #[inline]
+    pub fn execute(&self, w: u32, op: SimdOp, word: SimdWord) -> u64 {
+        debug_assert!(w <= W_MAX);
+        self.ctxs[w as usize].execute(op, word)
+    }
+
+    /// Execute a chunk of packed words with per-word accuracy knobs into
+    /// `out` (all slices of equal length).
+    pub fn execute_mixed_into(
+        &self,
+        ws: &[u32],
+        ops: &[SimdOp],
+        words: &[SimdWord],
+        out: &mut [u64],
+    ) {
+        debug_assert_eq!(ws.len(), ops.len());
+        debug_assert_eq!(ws.len(), words.len());
+        debug_assert_eq!(ws.len(), out.len());
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.execute(ws[i], ops[i], words[i]);
+        }
+    }
+}
+
+impl Default for MultiKernel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Batched packed-word execution: `out[i] = simd::execute_with(t, ops[i],
 /// words[i])`, bit-exactly, with the six per-width coefficient rescales
 /// hoisted out of the loop. One-shot form of [`WordKernel`].
@@ -294,6 +346,64 @@ mod tests {
         assert!(mul_batch(t, 16, &[], &[]).is_empty());
         assert!(div_batch(t, 16, &[], &[]).is_empty());
         assert!(execute_words(t, &[], &[]).is_empty());
+    }
+
+    #[test]
+    fn multi_kernel_matches_per_w_word_kernels() {
+        let mk = MultiKernel::new();
+        let mut rng = Rng::new(0x3317);
+        for w in 0..=crate::arith::W_MAX {
+            let single = WordKernel::new(tables_for(w));
+            for _ in 0..100 {
+                let cfg = LaneCfg::ALL[rng.below(4) as usize];
+                let lanes = cfg.lanes();
+                let a: Vec<u64> = lanes.iter().map(|&(_, wd)| rng.below(1u64 << wd)).collect();
+                let b: Vec<u64> = lanes.iter().map(|&(_, wd)| rng.below(1u64 << wd)).collect();
+                let mut modes = [LaneMode::Mul; 4];
+                for m in modes.iter_mut() {
+                    if rng.below(2) == 1 {
+                        *m = LaneMode::Div;
+                    }
+                }
+                let op = SimdOp { cfg, modes };
+                let word = SimdWord::pack(cfg, &a, &b);
+                assert_eq!(mk.execute(w, op, word), single.execute(op, word), "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_mixed_into_matches_scalar_path() {
+        let mk = MultiKernel::new();
+        let mut rng = Rng::new(0x3318);
+        let mut ws = Vec::new();
+        let mut ops = Vec::new();
+        let mut words = Vec::new();
+        for _ in 0..300 {
+            let cfg = LaneCfg::ALL[rng.below(4) as usize];
+            let lanes = cfg.lanes();
+            let a: Vec<u64> = lanes.iter().map(|&(_, wd)| rng.below(1u64 << wd)).collect();
+            let b: Vec<u64> = lanes.iter().map(|&(_, wd)| rng.below(1u64 << wd)).collect();
+            let mut modes = [LaneMode::Mul; 4];
+            for m in modes.iter_mut() {
+                if rng.below(2) == 1 {
+                    *m = LaneMode::Div;
+                }
+            }
+            ws.push(rng.below(crate::arith::W_MAX as u64 + 1) as u32);
+            ops.push(SimdOp { cfg, modes });
+            words.push(SimdWord::pack(cfg, &a, &b));
+        }
+        let mut out = vec![0u64; ws.len()];
+        mk.execute_mixed_into(&ws, &ops, &words, &mut out);
+        for i in 0..ws.len() {
+            assert_eq!(
+                out[i],
+                simd::execute_with(tables_for(ws[i]), ops[i], words[i]),
+                "word {i} at w={}",
+                ws[i]
+            );
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod trunc;
 
 pub use batch::{
     div_batch, div_batch_into, execute_words, execute_words_into, mul_batch, mul_batch_into,
-    WordKernel,
+    MultiKernel, WordKernel,
 };
 pub use mitchell::{frac_aligned, lod};
 pub use models::{DivDesign, MulDesign};

@@ -1,30 +1,40 @@
 //! L3 coordinator: the SIMD dispatch engine.
 //!
 //! SIMDive's architectural point is that one 32-bit unit serves mixed
-//! precision *and* mixed functionality at once. The coordinator realizes
-//! the serving side of that claim: scalar multiply/divide requests at
-//! 8/16/32-bit precision arrive on a queue, the [`packer`] bin-packs them
-//! into 32-bit SIMD word-ops (choosing the one-hot lane configuration per
-//! word), and a pool of worker threads executes the packed words on the
-//! behavioral SIMDive unit, with per-word energy/latency accounting from
-//! the calibrated fabric model and power gating for idle lanes.
+//! precision *and* mixed functionality at once. Coordinator v2 (DESIGN.md
+//! §9) extends the serving side of that claim to mixed *accuracy*:
+//! scalar multiply/divide requests at 8/16/32-bit precision — each
+//! carrying its own accuracy knob `w` — arrive on one queue, the
+//! [`packer`]'s word assembler bin-packs them into 32-bit SIMD word-ops
+//! from per-`{bits, w}` sub-queues drained round-robin, and a single
+//! shared pool of worker threads executes the packed words on the
+//! behavioral SIMDive unit through the multi-accuracy batched kernel,
+//! with per-word energy/latency accounting from the calibrated fabric
+//! model and power gating for idle lanes.
+//!
+//! Clients that think in error budgets rather than LUT counts go through
+//! [`profile`]: a precomputed `{op, width, w} → MRED` table routes a
+//! maximum-relative-error budget to the cheapest satisfying `w`.
 
 pub mod packer;
+pub mod profile;
 pub mod server;
 
-pub use packer::{lane_value, pack_requests, unpack_results, PackedWord, ReqOp, Request};
+pub use packer::{
+    lane_value, pack_requests, unpack_results, Assembled, Assembler, PackedWord, ReqOp, Request,
+};
+pub use profile::ErrorProfile;
 pub use server::{BatchHandle, Coordinator, CoordinatorConfig, Response, Stats};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arith::simdive::{simdive_div, simdive_mul};
+    use crate::arith::simdive::{simdive_div_w, simdive_mul_w};
 
     #[test]
     fn end_to_end_through_threads() {
         let coord = Coordinator::start(CoordinatorConfig {
             workers: 2,
-            w: 8,
             queue_depth: 64,
             batch: 16,
         });
@@ -33,14 +43,15 @@ mod tests {
         let mut handles = Vec::new();
         for i in 0..500u64 {
             let bits = [8u32, 16, 32][rng.below(3) as usize];
+            let w = rng.below(crate::arith::W_MAX as u64 + 1) as u32;
             let a = rng.operand(bits);
             let b = rng.operand(bits);
             let op = if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div };
             expected.push(match op {
-                ReqOp::Mul => simdive_mul(bits, a, b),
-                ReqOp::Div => simdive_div(bits, a, b),
+                ReqOp::Mul => simdive_mul_w(bits, a, b, w),
+                ReqOp::Div => simdive_div_w(bits, a, b, w),
             });
-            handles.push(coord.submit(Request { id: i, op, bits, a, b }));
+            handles.push(coord.submit(Request { id: i, op, bits, w, a, b }));
         }
         for (h, want) in handles.into_iter().zip(expected) {
             assert_eq!(h.recv().unwrap().value, want);

@@ -1,15 +1,26 @@
 //! Lane packer: greedy bin-packing of scalar requests into 32-bit SIMD
-//! word-ops.
+//! word-ops, mixed-width *and* mixed-accuracy (coordinator v2 — DESIGN.md
+//! §9).
 //!
-//! Policy (highest lane utilization first):
+//! Width policy within one accuracy tier (highest lane utilization first):
 //! 1. any 32-bit request → `One32`;
 //! 2. two 16-bit requests → `Two16`;
 //! 3. one 16-bit + up to two 8-bit → `One16Two8`;
 //! 4. up to four 8-bit → `Four8`.
 //! Partial words are padded with power-gated idle lanes (operands 0,
 //! which the hardware's per-lane data-size gating switches off — §3.2).
+//!
+//! Requests carrying different accuracy knobs `w` use different correction
+//! tables (§3.3) and must never share a word, so the [`Assembler`] keeps
+//! one sub-queue bank per `w` and drains the banks round-robin: full words
+//! are emitted eagerly from whichever tier can form one, partial words
+//! only on flush. Held-back partials merge with later arrivals of the
+//! same `{bits, w}` tier, which is what lifts lane utilization under
+//! mixed-accuracy traffic compared to one isolated pool per `w`.
 
 use crate::arith::simd::{LaneCfg, LaneMode, SimdOp, SimdWord};
+use crate::arith::W_MAX;
+use std::collections::VecDeque;
 
 /// Request operation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,16 +35,21 @@ pub struct Request {
     pub id: u64,
     pub op: ReqOp,
     pub bits: u32,
+    /// Accuracy knob (coefficient LUTs, `0..=W_MAX`) — per request, so one
+    /// coordinator serves every accuracy tier (DESIGN.md §9).
+    pub w: u32,
     pub a: u64,
     pub b: u64,
 }
 
-/// A packed word-op: the SIMD op, operand word, and per-lane request ids
-/// (None = idle, power-gated lane).
+/// A packed word-op: the SIMD op, operand word, accuracy knob, and
+/// per-lane request ids (None = idle, power-gated lane).
 #[derive(Clone, Debug)]
 pub struct PackedWord {
     pub op: SimdOp,
     pub word: SimdWord,
+    /// Accuracy knob shared by every request in this word.
+    pub w: u32,
     pub lane_req: [Option<u64>; 4],
     /// Active lanes (for the power-gating model).
     pub active_lanes: u32,
@@ -52,95 +68,244 @@ fn mode_of(op: ReqOp) -> LaneMode {
     }
 }
 
-/// Pack a batch of requests into word-ops. Every request appears in
-/// exactly one lane of exactly one word.
-pub fn pack_requests(reqs: &[Request]) -> Vec<PackedWord> {
-    let mut q8: Vec<&Request> = Vec::new();
-    let mut q16: Vec<&Request> = Vec::new();
-    let mut q32: Vec<&Request> = Vec::new();
-    for r in reqs {
-        match r.bits {
-            8 => q8.push(r),
-            16 => q16.push(r),
-            32 => q32.push(r),
-            other => panic!("unsupported precision {other}"),
+/// A packed word plus the lane-aligned payloads of its requests —
+/// `payload[l]` belongs to the request in lane `l`. The coordinator
+/// attaches response routes here, so routing a result is a direct index.
+pub struct Assembled<T> {
+    pub pw: PackedWord,
+    pub payload: [Option<T>; 4],
+}
+
+/// One accuracy tier's width-split sub-queues.
+struct SubQueue<T> {
+    q8: VecDeque<(Request, T)>,
+    q16: VecDeque<(Request, T)>,
+    q32: VecDeque<(Request, T)>,
+}
+
+impl<T> SubQueue<T> {
+    fn new() -> Self {
+        SubQueue { q8: VecDeque::new(), q16: VecDeque::new(), q32: VecDeque::new() }
+    }
+
+    /// Form one *full* word (every lane active) if the queued widths allow
+    /// it: a 32-bit request, a 16-bit pair, or an 8-bit quad.
+    fn pop_full_word(&mut self, w: u32) -> Option<Assembled<T>> {
+        if let Some((r, t)) = self.q32.pop_front() {
+            return Some(Assembled {
+                pw: PackedWord {
+                    op: SimdOp { cfg: LaneCfg::One32, modes: [mode_of(r.op); 4] },
+                    word: SimdWord::new(r.a as u32, r.b as u32),
+                    w,
+                    lane_req: [Some(r.id), None, None, None],
+                    active_lanes: 1,
+                },
+                payload: [Some(t), None, None, None],
+            });
         }
-    }
-    let mut out = Vec::new();
-
-    // 1: 32-bit words.
-    for r in q32 {
-        out.push(PackedWord {
-            op: SimdOp { cfg: LaneCfg::One32, modes: [mode_of(r.op); 4] },
-            word: SimdWord::new(r.a as u32, r.b as u32),
-            lane_req: [Some(r.id), None, None, None],
-            active_lanes: 1,
-        });
-    }
-
-    // 2: pair up 16-bit requests.
-    let mut i16 = 0;
-    while i16 + 1 < q16.len() {
-        let (r0, r1) = (q16[i16], q16[i16 + 1]);
-        let word = SimdWord::pack(LaneCfg::Two16, &[r0.a, r1.a], &[r0.b, r1.b]);
-        let mut modes = [LaneMode::Mul; 4];
-        modes[0] = mode_of(r0.op); // SimdOp.modes is lane-indexed
-        modes[1] = mode_of(r1.op);
-        out.push(PackedWord {
-            op: SimdOp { cfg: LaneCfg::Two16, modes },
-            word,
-            lane_req: [Some(r0.id), Some(r1.id), None, None],
-            active_lanes: 2,
-        });
-        i16 += 2;
-    }
-
-    // 3: leftover 16-bit + up to two 8-bit → One16Two8.
-    if i16 < q16.len() {
-        let r16 = q16[i16];
-        let e0 = q8.pop();
-        let e1 = q8.pop();
-        let word = SimdWord::pack(
-            LaneCfg::One16Two8,
-            &[e0.map_or(0, |r| r.a), e1.map_or(0, |r| r.a), r16.a],
-            &[e0.map_or(0, |r| r.b), e1.map_or(0, |r| r.b), r16.b],
-        );
-        let mut modes = [LaneMode::Mul; 4];
-        if let Some(r) = e0 {
-            modes[0] = mode_of(r.op);
+        if self.q16.len() >= 2 {
+            let (r0, t0) = self.q16.pop_front().unwrap();
+            let (r1, t1) = self.q16.pop_front().unwrap();
+            let word = SimdWord::pack(LaneCfg::Two16, &[r0.a, r1.a], &[r0.b, r1.b]);
+            let mut modes = [LaneMode::Mul; 4];
+            modes[0] = mode_of(r0.op); // SimdOp.modes is lane-indexed
+            modes[1] = mode_of(r1.op);
+            return Some(Assembled {
+                pw: PackedWord {
+                    op: SimdOp { cfg: LaneCfg::Two16, modes },
+                    word,
+                    w,
+                    lane_req: [Some(r0.id), Some(r1.id), None, None],
+                    active_lanes: 2,
+                },
+                payload: [Some(t0), Some(t1), None, None],
+            });
         }
-        if let Some(r) = e1 {
-            modes[1] = mode_of(r.op);
+        if self.q8.len() >= 4 {
+            return Some(self.pop_four8(w));
         }
-        modes[2] = mode_of(r16.op);
-        out.push(PackedWord {
-            op: SimdOp { cfg: LaneCfg::One16Two8, modes },
-            word,
-            lane_req: [e0.map(|r| r.id), e1.map(|r| r.id), Some(r16.id), None],
-            active_lanes: 1 + e0.is_some() as u32 + e1.is_some() as u32,
-        });
+        None
     }
 
-    // 4: quads of 8-bit.
-    for chunk in q8.chunks(4) {
+    /// Form a `Four8` word from up to four queued 8-bit requests (callers
+    /// guarantee at least one).
+    fn pop_four8(&mut self, w: u32) -> Assembled<T> {
         let mut a = [0u64; 4];
         let mut b = [0u64; 4];
         let mut modes = [LaneMode::Mul; 4];
         let mut ids = [None; 4];
-        for (l, r) in chunk.iter().enumerate() {
+        let mut payload = [None, None, None, None];
+        let mut active = 0u32;
+        for l in 0..4 {
+            let Some((r, t)) = self.q8.pop_front() else { break };
             a[l] = r.a;
             b[l] = r.b;
             modes[l] = mode_of(r.op);
             ids[l] = Some(r.id);
+            payload[l] = Some(t);
+            active += 1;
         }
-        out.push(PackedWord {
-            op: SimdOp { cfg: LaneCfg::Four8, modes },
-            word: SimdWord::pack(LaneCfg::Four8, &a, &b),
-            lane_req: ids,
-            active_lanes: chunk.len() as u32,
-        });
+        Assembled {
+            pw: PackedWord {
+                op: SimdOp { cfg: LaneCfg::Four8, modes },
+                word: SimdWord::pack(LaneCfg::Four8, &a, &b),
+                w,
+                lane_req: ids,
+                active_lanes: active,
+            },
+            payload,
+        }
     }
-    out
+
+    /// Flush the leftovers (≤ one 16-bit, ≤ three 8-bit after full-word
+    /// extraction), padding with power-gated idle lanes.
+    fn pop_partials(&mut self, w: u32, out: &mut Vec<Assembled<T>>) {
+        while let Some(word) = self.pop_full_word(w) {
+            out.push(word);
+        }
+        if let Some((r16, t16)) = self.q16.pop_front() {
+            // Leftover 16-bit + up to two 8-bit → One16Two8.
+            let e0 = self.q8.pop_front();
+            let e1 = self.q8.pop_front();
+            let (r0, t0) = match e0 {
+                Some((r, t)) => (Some(r), Some(t)),
+                None => (None, None),
+            };
+            let (r1, t1) = match e1 {
+                Some((r, t)) => (Some(r), Some(t)),
+                None => (None, None),
+            };
+            let word = SimdWord::pack(
+                LaneCfg::One16Two8,
+                &[r0.map_or(0, |r| r.a), r1.map_or(0, |r| r.a), r16.a],
+                &[r0.map_or(0, |r| r.b), r1.map_or(0, |r| r.b), r16.b],
+            );
+            let mut modes = [LaneMode::Mul; 4];
+            if let Some(r) = r0 {
+                modes[0] = mode_of(r.op);
+            }
+            if let Some(r) = r1 {
+                modes[1] = mode_of(r.op);
+            }
+            modes[2] = mode_of(r16.op);
+            out.push(Assembled {
+                pw: PackedWord {
+                    op: SimdOp { cfg: LaneCfg::One16Two8, modes },
+                    word,
+                    w,
+                    lane_req: [r0.map(|r| r.id), r1.map(|r| r.id), Some(r16.id), None],
+                    active_lanes: 1 + r0.is_some() as u32 + r1.is_some() as u32,
+                },
+                payload: [t0, t1, Some(t16), None],
+            });
+        }
+        while !self.q8.is_empty() {
+            let word = self.pop_four8(w);
+            out.push(word);
+        }
+    }
+}
+
+/// The mixed-`{bits, w}` word assembler of coordinator v2: one sub-queue
+/// bank per accuracy knob, drained round-robin. `T` is an opaque per-
+/// request payload carried lane-aligned into the emitted words (the
+/// coordinator uses it for response routes).
+pub struct Assembler<T> {
+    subs: Vec<SubQueue<T>>,
+    held: usize,
+    /// Round-robin cursor over accuracy tiers, rotated per emission cycle
+    /// so no tier is systematically drained first.
+    rr: usize,
+}
+
+impl<T> Assembler<T> {
+    pub fn new() -> Self {
+        Assembler {
+            subs: (0..=W_MAX).map(|_| SubQueue::new()).collect(),
+            held: 0,
+            rr: 0,
+        }
+    }
+
+    /// Requests currently queued (not yet emitted in a word).
+    pub fn len(&self) -> usize {
+        self.held
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.held == 0
+    }
+
+    /// Queue one request with its payload.
+    ///
+    /// Panics on an unsupported width or accuracy knob — the coordinator
+    /// front ends validate both before submission.
+    pub fn push(&mut self, req: Request, payload: T) {
+        assert!(req.w <= W_MAX, "unsupported accuracy knob {}", req.w);
+        let sub = &mut self.subs[req.w as usize];
+        match req.bits {
+            8 => sub.q8.push_back((req, payload)),
+            16 => sub.q16.push_back((req, payload)),
+            32 => sub.q32.push_back((req, payload)),
+            other => panic!("unsupported precision {other}"),
+        }
+        self.held += 1;
+    }
+
+    /// Emit every word that can be formed with all lanes active, round-
+    /// robin across accuracy tiers. Partial residues stay queued to merge
+    /// with later arrivals of the same `{bits, w}` tier.
+    pub fn emit_full(&mut self, out: &mut Vec<Assembled<T>>) {
+        loop {
+            let mut progress = false;
+            for k in 0..self.subs.len() {
+                let w = (self.rr + k) % self.subs.len();
+                if let Some(word) = self.subs[w].pop_full_word(w as u32) {
+                    self.held -= word.pw.active_lanes as usize;
+                    out.push(word);
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+            self.rr = (self.rr + 1) % self.subs.len();
+        }
+    }
+
+    /// Emit everything: full words first, then the partial residues padded
+    /// with power-gated idle lanes (flush / shutdown path).
+    pub fn emit_all(&mut self, out: &mut Vec<Assembled<T>>) {
+        self.emit_full(out);
+        for w in 0..self.subs.len() {
+            let tier = (self.rr + w) % self.subs.len();
+            let before = out.len();
+            self.subs[tier].pop_partials(tier as u32, out);
+            for word in &out[before..] {
+                self.held -= word.pw.active_lanes as usize;
+            }
+        }
+        debug_assert_eq!(self.held, 0);
+    }
+}
+
+impl<T> Default for Assembler<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Pack a batch of requests into word-ops. Every request appears in
+/// exactly one lane of exactly one word, and only requests sharing an
+/// accuracy knob `w` share a word. One-shot form of [`Assembler`].
+pub fn pack_requests(reqs: &[Request]) -> Vec<PackedWord> {
+    let mut asm: Assembler<()> = Assembler::new();
+    for r in reqs {
+        asm.push(*r, ());
+    }
+    let mut out = Vec::new();
+    asm.emit_all(&mut out);
+    out.into_iter().map(|a| a.pw).collect()
 }
 
 /// Extract lane `lane`'s scalar result from a packed 64-bit result word.
@@ -172,7 +337,7 @@ mod tests {
     use crate::arith::simd;
 
     fn req(id: u64, op: ReqOp, bits: u32, a: u64, b: u64) -> Request {
-        Request { id, op, bits, a, b }
+        Request { id, op, bits, w: 8, a, b }
     }
 
     #[test]
@@ -181,13 +346,15 @@ mod tests {
         let reqs: Vec<Request> = (0..200)
             .map(|i| {
                 let bits = [8u32, 16, 32][rng.below(3) as usize];
-                req(
+                let mut r = req(
                     i,
                     if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
                     bits,
                     rng.operand(bits),
                     rng.operand(bits),
-                )
+                );
+                r.w = rng.below(W_MAX as u64 + 1) as u32;
+                r
             })
             .collect();
         let words = pack_requests(&reqs);
@@ -223,6 +390,71 @@ mod tests {
     }
 
     #[test]
+    fn different_w_never_share_a_word() {
+        // Four 8-bit requests that would pack into one word — except they
+        // carry two different accuracy knobs, whose correction tables
+        // differ (§3.3).
+        let mut reqs: Vec<Request> =
+            (0..4).map(|i| req(i, ReqOp::Mul, 8, 10 + i, 3)).collect();
+        reqs[0].w = 2;
+        reqs[1].w = 2;
+        let words = pack_requests(&reqs);
+        assert_eq!(words.len(), 2, "mixed-w quad must split into 2 words");
+        for word in &words {
+            for (l, id) in word.lane_req.iter().enumerate() {
+                if let Some(id) = id {
+                    assert_eq!(
+                        reqs[*id as usize].w, word.w,
+                        "request {id} in lane {l} has w {} but word is tagged {}",
+                        reqs[*id as usize].w, word.w
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_holds_partials_until_flush() {
+        let mut asm: Assembler<u64> = Assembler::new();
+        for i in 0..6u64 {
+            asm.push(req(i, ReqOp::Mul, 8, 1 + i, 3), i);
+        }
+        let mut out = Vec::new();
+        asm.emit_full(&mut out);
+        // One full quad comes out; two 8-bit requests stay queued.
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].pw.active_lanes, 4);
+        assert_eq!(asm.len(), 2);
+        // Two more arrivals complete the second quad without a partial.
+        asm.push(req(6, ReqOp::Mul, 8, 9, 3), 6);
+        asm.push(req(7, ReqOp::Mul, 8, 11, 3), 7);
+        asm.emit_full(&mut out);
+        assert_eq!(out.len(), 2);
+        assert!(asm.is_empty());
+        assert!(out.iter().all(|a| a.pw.active_lanes == 4));
+        // Payloads ride lane-aligned with their requests.
+        for a in &out {
+            for (l, p) in a.payload.iter().enumerate() {
+                assert_eq!(a.pw.lane_req[l], *p, "payload follows its lane");
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_flush_emits_padded_partials() {
+        let mut asm: Assembler<()> = Assembler::new();
+        asm.push(req(0, ReqOp::Mul, 8, 5, 6), ());
+        let mut out = Vec::new();
+        asm.emit_full(&mut out);
+        assert!(out.is_empty(), "a lone 8-bit request cannot fill a word");
+        asm.emit_all(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].pw.active_lanes, 1);
+        assert_eq!(out[0].pw.lane_req[1], None);
+        assert!(asm.is_empty());
+    }
+
+    #[test]
     fn results_roundtrip_through_simd_unit() {
         let reqs = vec![
             req(0, ReqOp::Mul, 16, 300, 21),
@@ -234,6 +466,7 @@ mod tests {
         let words = pack_requests(&reqs);
         let mut results = std::collections::HashMap::new();
         for w in &words {
+            assert_eq!(w.w, 8);
             let packed = simd::execute(w.op, w.word, 8);
             for (id, v) in unpack_results(w, packed) {
                 results.insert(id, v);

@@ -1,0 +1,202 @@
+//! Error profiles and the error-budget router (DESIGN.md §9).
+//!
+//! SIMDive's accuracy knob `w` (§3.3) is a cost dial: every extra
+//! coefficient LUT buys error reduction. Most clients, though, don't think
+//! in LUT counts — they have an error *budget* ("anything under 1%
+//! relative error is fine"). The router turns one into the other: a
+//! precomputed profile maps every `{op, width, w}` point to its measured
+//! mean relative error (MRED), and [`ErrorProfile::pick_w`] returns the
+//! **cheapest** `w` whose profiled MRED fits the budget.
+//!
+//! Profiles are measured once per process against the real-valued
+//! behavioral models (`simdive_{mul,div}_real_w`) vs the exact real
+//! product/quotient — the paper's §4.1 error convention: 8-bit entries
+//! are exhaustive over all non-zero operand pairs; 16/32-bit entries are
+//! sampled with fixed [`util::Rng`](crate::util::Rng) seeds, so the table
+//! (and therefore budget routing) is deterministic run-to-run.
+
+use super::packer::ReqOp;
+use crate::arith::simdive::{simdive_div_real_w, simdive_mul_real_w};
+use crate::arith::{W_MAX, WIDTHS};
+use crate::util::Rng;
+use std::sync::OnceLock;
+
+/// Samples per `{op, width, w}` point for the 16/32-bit profile entries.
+const PROFILE_SAMPLES: u64 = 20_000;
+
+/// Fixed seed base for the sampled profile entries.
+const PROFILE_SEED: u64 = 0x0E44_0B0D_6E70;
+
+/// Measured mean relative error per `{op, width, w}`, in parts per
+/// million, plus the budget router over it.
+pub struct ErrorProfile {
+    /// `mred_ppm[op][width_index][w]`; op 0 = mul, 1 = div.
+    mred_ppm: [[[u64; (W_MAX + 1) as usize]; 3]; 2],
+}
+
+fn op_index(op: ReqOp) -> usize {
+    match op {
+        ReqOp::Mul => 0,
+        ReqOp::Div => 1,
+    }
+}
+
+fn width_index(bits: u32) -> usize {
+    match bits {
+        8 => 0,
+        16 => 1,
+        32 => 2,
+        other => panic!("unsupported precision {other}"),
+    }
+}
+
+/// Mean relative error (fraction, not percent) of one `{op, bits, w}`
+/// point over an operand-pair iterator.
+fn mred_over(op: ReqOp, bits: u32, w: u32, pairs: impl Iterator<Item = (u64, u64)>) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0u64);
+    for (a, b) in pairs {
+        let (exact, approx) = match op {
+            ReqOp::Mul => ((a as f64) * (b as f64), simdive_mul_real_w(bits, a, b, w)),
+            ReqOp::Div => (a as f64 / b as f64, simdive_div_real_w(bits, a, b, w)),
+        };
+        sum += (exact - approx).abs() / exact;
+        n += 1;
+    }
+    sum / n as f64
+}
+
+impl ErrorProfile {
+    /// The process-wide profile, computed on first use (~2M behavioral
+    /// evaluations, sub-second in release).
+    pub fn get() -> &'static ErrorProfile {
+        static CACHE: OnceLock<ErrorProfile> = OnceLock::new();
+        CACHE.get_or_init(ErrorProfile::compute)
+    }
+
+    fn compute() -> ErrorProfile {
+        let mut mred_ppm = [[[0u64; (W_MAX + 1) as usize]; 3]; 2];
+        for op in [ReqOp::Mul, ReqOp::Div] {
+            for &bits in &WIDTHS {
+                for w in 0..=W_MAX {
+                    let mred = if bits == 8 {
+                        // Exhaustive: every non-zero 8-bit operand pair.
+                        mred_over(
+                            op,
+                            bits,
+                            w,
+                            (1..256u64).flat_map(|a| (1..256u64).map(move |b| (a, b))),
+                        )
+                    } else {
+                        let mut rng = Rng::new(
+                            PROFILE_SEED ^ ((op_index(op) as u64) << 32)
+                                ^ ((bits as u64) << 8)
+                                ^ w as u64,
+                        );
+                        mred_over(
+                            op,
+                            bits,
+                            w,
+                            (0..PROFILE_SAMPLES).map(|_| (rng.operand(bits), rng.operand(bits))),
+                        )
+                    };
+                    mred_ppm[op_index(op)][width_index(bits)][w as usize] =
+                        (mred * 1e6).round() as u64;
+                }
+            }
+        }
+        ErrorProfile { mred_ppm }
+    }
+
+    /// Profiled mean relative error of `{op, bits, w}` in parts per
+    /// million (10_000 ppm = 1% MRED).
+    pub fn mred_ppm(&self, op: ReqOp, bits: u32, w: u32) -> u64 {
+        assert!(w <= W_MAX, "unsupported accuracy knob {w}");
+        self.mred_ppm[op_index(op)][width_index(bits)][w as usize]
+    }
+
+    /// Route an error budget to the cheapest accuracy knob: the smallest
+    /// `w` whose profiled MRED is within `budget_ppm`. An unsatisfiable
+    /// budget (tighter than even the full 8-LUT correction achieves)
+    /// degrades to best effort: `W_MAX`.
+    pub fn pick_w(&self, op: ReqOp, bits: u32, budget_ppm: u32) -> u32 {
+        let table = &self.mred_ppm[op_index(op)][width_index(bits)];
+        for w in 0..=W_MAX {
+            if table[w as usize] <= budget_ppm as u64 {
+                return w;
+            }
+        }
+        W_MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_is_populated_and_sane() {
+        let p = ErrorProfile::get();
+        for op in [ReqOp::Mul, ReqOp::Div] {
+            for &bits in &WIDTHS {
+                // w=0 is pure Mitchell (~4% MRED); w=W_MAX well under 2%.
+                let worst = p.mred_ppm(op, bits, 0);
+                let best = p.mred_ppm(op, bits, W_MAX);
+                assert!(worst > 20_000, "{op:?}@{bits}: Mitchell MRED {worst} ppm");
+                assert!(worst < 80_000, "{op:?}@{bits}: Mitchell MRED {worst} ppm");
+                assert!(best < 20_000, "{op:?}@{bits}: full-w MRED {best} ppm");
+                assert!(best < worst, "{op:?}@{bits}: w must reduce MRED");
+            }
+        }
+    }
+
+    #[test]
+    fn pick_w_returns_cheapest_satisfying_knob() {
+        let p = ErrorProfile::get();
+        for op in [ReqOp::Mul, ReqOp::Div] {
+            for &bits in &WIDTHS {
+                // A budget looser than Mitchell's own error costs nothing.
+                let loose = p.mred_ppm(op, bits, 0) + 1;
+                assert_eq!(p.pick_w(op, bits, loose as u32), 0);
+                // The exact MRED of some mid w must pick a knob no more
+                // expensive than that w, and its profile must fit.
+                for w in 0..=W_MAX {
+                    let budget = p.mred_ppm(op, bits, w);
+                    let picked = p.pick_w(op, bits, budget as u32);
+                    assert!(picked <= w, "{op:?}@{bits}: picked {picked} for budget of w={w}");
+                    assert!(
+                        p.mred_ppm(op, bits, picked) <= budget,
+                        "{op:?}@{bits}: picked w={picked} violates its own budget"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unsatisfiable_budget_degrades_to_best_effort() {
+        let p = ErrorProfile::get();
+        // 1 ppm is far below anything an approximate log multiplier can
+        // reach; the router must hand back the most accurate knob.
+        assert_eq!(p.pick_w(ReqOp::Mul, 16, 1), W_MAX);
+        assert_eq!(p.pick_w(ReqOp::Div, 8, 1), W_MAX);
+    }
+
+    #[cfg_attr(
+        debug_assertions,
+        ignore = "recomputes the full profile twice; run in --release (CI accuracy-oracle job)"
+    )]
+    #[test]
+    fn profile_is_deterministic() {
+        // Two independent computations (not the cached singleton) agree —
+        // the sampled entries are seeded.
+        let a = ErrorProfile::compute();
+        let b = ErrorProfile::compute();
+        for op in [ReqOp::Mul, ReqOp::Div] {
+            for &bits in &WIDTHS {
+                for w in 0..=W_MAX {
+                    assert_eq!(a.mred_ppm(op, bits, w), b.mred_ppm(op, bits, w));
+                }
+            }
+        }
+    }
+}

@@ -1,16 +1,24 @@
-//! Threaded coordinator: bounded request queue (backpressure), a batcher
-//! that drains the queue into the lane packer, a worker pool executing
-//! packed words on the batched SIMDive kernel, and accounting (latency,
-//! energy from the calibrated fabric model, lane utilization, power-gated
-//! idle lanes). std::thread + mpsc — tokio is unavailable offline
-//! (DESIGN.md §1).
+//! Threaded coordinator v2: bounded request queue (backpressure), a
+//! batcher that drains the queue into the mixed-`{bits, w}` word
+//! [`Assembler`], one shared worker pool executing packed words through
+//! the multi-accuracy batched kernel, and accounting (latency, energy
+//! from the calibrated fabric model, lane utilization, power-gated idle
+//! lanes). std::thread + mpsc — tokio is unavailable offline (DESIGN.md
+//! §1).
 //!
-//! Hot-path structure (DESIGN.md §6):
+//! Hot-path structure (DESIGN.md §6, §9):
 //!
-//! * **O(1) response routing.** The batcher renumbers each drained request
-//!   to its index in the drain, so a packed word carries its routes in a
-//!   lane-aligned array and every route lookup is a direct index — there
-//!   are no linear `find` scans anywhere on the request path.
+//! * **One pool for every accuracy tier.** Requests carry their own `w`;
+//!   the assembler keeps per-`{bits, w}` sub-queues drained round-robin,
+//!   so mixed-accuracy traffic shares one worker pool instead of
+//!   fragmenting across per-`w` coordinators. Words are emitted eagerly
+//!   while full; partial residues are held to merge with later arrivals
+//!   of the same tier, flushed the instant the queue idles (and at a
+//!   round cap under saturation), so a lone request is never stranded.
+//! * **O(1) response routing.** Response routes ride lane-aligned inside
+//!   each assembled word ([`Assembled::payload`]), so every route lookup
+//!   is a direct index — there are no linear `find` scans anywhere on
+//!   the request path.
 //! * **Per-batch response channels.** [`Coordinator::submit_batch`] sends
 //!   a whole request batch with *one* response channel; workers tag each
 //!   response with its request-index slot and [`BatchHandle::wait`]
@@ -19,11 +27,12 @@
 //! * **Per-worker feeds.** Each worker owns its own channel, fed
 //!   round-robin with contiguous chunks of packed words, so workers never
 //!   contend on a shared `Mutex<Receiver>`; chunks execute through a
-//!   [`batch::WordKernel`](crate::arith::batch::WordKernel) whose
-//!   correction-table rescales are resolved once per worker thread.
+//!   [`batch::MultiKernel`](crate::arith::batch::MultiKernel) whose
+//!   correction-table rescales (all nine accuracy knobs) are resolved
+//!   once per worker thread.
 
-use super::packer::{lane_value, pack_requests, PackedWord, Request};
-use crate::arith::{batch, table};
+use super::packer::{lane_value, Assembled, Assembler, Request};
+use crate::arith::batch;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
@@ -40,8 +49,6 @@ pub struct Response {
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
     pub workers: usize,
-    /// SIMDive accuracy knob for the executing units.
-    pub w: u32,
     /// Bounded queue depth (backpressure: submit blocks when full).
     pub queue_depth: usize,
     /// Max requests drained into one packing batch.
@@ -50,7 +57,7 @@ pub struct CoordinatorConfig {
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 4, w: 8, queue_depth: 1024, batch: 64 }
+        CoordinatorConfig { workers: 4, queue_depth: 1024, batch: 64 }
     }
 }
 
@@ -75,9 +82,8 @@ impl Stats {
         }
     }
 
-    /// Fold another snapshot into this one. The serve layer runs one
-    /// coordinator per accuracy knob `w` and sums their snapshots into a
-    /// single server-wide view (DESIGN.md §8).
+    /// Fold another snapshot into this one (aggregation across
+    /// coordinators, e.g. in multi-process roll-ups).
     pub fn merge(&mut self, other: &Stats) {
         self.requests += other.requests;
         self.words += other.words;
@@ -119,13 +125,10 @@ impl Route {
     }
 }
 
-/// One packed word plus its lane-aligned response routes: `routes[l]` is
-/// `(original request id, route)` for the request in lane `l`. Routing a
-/// result is a direct index — no scan.
-struct Job {
-    pw: PackedWord,
-    routes: [Option<(u64, Route)>; 4],
-}
+/// One packed word plus its lane-aligned response routes (the assembler's
+/// payload slot `l` routes the request in lane `l` — direct index, no
+/// scan).
+type Job = Assembled<Route>;
 
 enum Msg {
     Req(Request, Route),
@@ -142,10 +145,54 @@ enum Msg {
 enum Flow {
     /// Keep draining into the current batch.
     Drain,
-    /// Close the current batch now (flush).
+    /// Close the current batch now (flush partial residues too).
     CloseBatch,
     /// Shut the coordinator down.
     Stop,
+}
+
+/// Residues survive at most this many consecutive full-word emission
+/// rounds under sustained traffic before being force-flushed — a rare
+/// `{bits, w}` tier must not be starved by a saturated queue that never
+/// goes empty. (When the queue *does* go empty, everything flushes
+/// immediately — residues never wait on traffic that may not come.)
+const MAX_HELD_ROUNDS: u32 = 4;
+
+/// One batcher emission round: emit words from the assembler (full words
+/// only while residues may still merge, everything when `flush` or the
+/// round cap hits) and dispatch them round-robin to the workers in
+/// contiguous chunks. Returns false when the workers are gone.
+fn emit_and_dispatch(
+    asm: &mut Assembler<Route>,
+    words: &mut Vec<Job>,
+    work_txs: &[SyncSender<Vec<Job>>],
+    rr: &mut usize,
+    held_rounds: &mut u32,
+    flush: bool,
+) -> bool {
+    words.clear();
+    if flush || *held_rounds >= MAX_HELD_ROUNDS {
+        asm.emit_all(words);
+    } else {
+        asm.emit_full(words);
+    }
+    *held_rounds = if asm.is_empty() { 0 } else { *held_rounds + 1 };
+    if words.is_empty() {
+        return true;
+    }
+    let n_workers = work_txs.len();
+    let chunk = words.len().div_ceil(n_workers).max(1);
+    let mut iter = words.drain(..);
+    loop {
+        let chunk_jobs: Vec<Job> = iter.by_ref().take(chunk).collect();
+        if chunk_jobs.is_empty() {
+            return true;
+        }
+        if work_txs[*rr % n_workers].send(chunk_jobs).is_err() {
+            return false;
+        }
+        *rr = rr.wrapping_add(1);
+    }
 }
 
 /// The coordinator front end.
@@ -232,23 +279,25 @@ impl Coordinator {
             let (work_tx, work_rx) = sync_channel::<Vec<Job>>(cfg.queue_depth.max(16));
             work_txs.push(work_tx);
             let shared = Arc::clone(&shared);
-            let w = cfg.w;
             workers.push(std::thread::spawn(move || {
-                // Per-width coefficient rescales hoisted once per worker
-                // thread, not once per chunk.
-                let kernel = batch::WordKernel::new(table::tables_for(w));
+                // Coefficient rescales for every {width, w} hoisted once
+                // per worker thread, not once per chunk.
+                let kernel = batch::MultiKernel::new();
+                let mut ws = Vec::new();
                 let mut ops = Vec::new();
                 let mut words = Vec::new();
                 let mut results = Vec::new();
                 while let Ok(jobs) = work_rx.recv() {
                     // Execute the whole chunk through the batched kernel.
+                    ws.clear();
+                    ws.extend(jobs.iter().map(|j| j.pw.w));
                     ops.clear();
                     ops.extend(jobs.iter().map(|j| j.pw.op));
                     words.clear();
                     words.extend(jobs.iter().map(|j| j.pw.word));
                     results.clear();
                     results.resize(jobs.len(), 0);
-                    kernel.execute_into(&ops, &words, &mut results);
+                    kernel.execute_mixed_into(&ws, &ops, &words, &mut results);
 
                     let (mut active, mut total) = (0u64, 0u64);
                     let mut energy = 0.0f64;
@@ -258,9 +307,10 @@ impl Coordinator {
                         total += pw.lane_count() as u64;
                         energy +=
                             word_energy_pj(per_word_pj, pw.active_lanes, pw.lane_count() as u32);
-                        for (l, route) in job.routes.iter().enumerate().take(pw.lane_count()) {
-                            if let Some((id, route)) = route {
-                                route.send(Response { id: *id, value: lane_value(pw, packed, l) });
+                        for (l, route) in job.payload.iter().enumerate().take(pw.lane_count()) {
+                            if let Some(route) = route {
+                                let id = pw.lane_req[l].expect("routed lane carries an id");
+                                route.send(Response { id, value: lane_value(pw, packed, l) });
                             }
                         }
                     }
@@ -274,93 +324,108 @@ impl Coordinator {
             }));
         }
 
-        // Batcher thread: drain up to `batch` requests, pack, dispatch.
+        // Batcher thread: drain bursts into the word assembler, emit
+        // full words every `batch` requests, and flush everything the
+        // instant the queue goes empty (or on Flush/Stop) — a partial
+        // residue never waits on traffic that may not come.
         let shared_b = Arc::clone(&shared);
         let batch_size = cfg.batch.max(1);
         let batcher = std::thread::spawn(move || {
-            let mut stop = false;
             let mut rr = 0usize; // round-robin worker cursor
-            while !stop {
-                // Requests renumbered to their drain index; `routes[i]` is
-                // the original id + response route of drained request `i`.
-                let mut reqs: Vec<Request> = Vec::new();
-                let mut routes: Vec<(u64, Route)> = Vec::new();
-                // Fold one message into the drain; returns the resulting
-                // control flow (continue draining / close batch / stop).
-                let on_msg = |reqs: &mut Vec<Request>,
-                              routes: &mut Vec<(u64, Route)>,
-                              msg: Msg|
-                 -> Flow {
-                    let mut push_req = |r: Request, route: Route| {
-                        let mut local = r;
-                        local.id = reqs.len() as u64;
-                        routes.push((r.id, route));
-                        reqs.push(local);
-                    };
-                    match msg {
-                        Msg::Req(r, s) => push_req(r, s),
-                        Msg::Batch(batch_reqs, base, tx) => {
-                            for (k, r) in batch_reqs.into_iter().enumerate() {
-                                push_req(r, Route::Slot(tx.clone(), base + k as u32));
-                            }
-                        }
-                        Msg::Flush => return Flow::CloseBatch,
-                        Msg::Stop => return Flow::Stop,
+            let mut asm: Assembler<Route> = Assembler::new();
+            let mut words: Vec<Job> = Vec::new();
+            // Consecutive full-word-only emissions with residues still
+            // held; at MAX_HELD_ROUNDS the next emission flushes, so a
+            // rare tier's residue is bounded by ~MAX_HELD_ROUNDS × batch
+            // requests of sustained foreign traffic.
+            let mut held_rounds = 0u32;
+            let mut stop = false;
+            // Fold one message into the assembler; returns the resulting
+            // control flow.
+            let on_msg = |asm: &mut Assembler<Route>, folded: &mut usize, msg: Msg| -> Flow {
+                match msg {
+                    Msg::Req(r, route) => {
+                        asm.push(r, route);
+                        *folded += 1;
                     }
-                    Flow::Drain
-                };
-                // Block for the first message, then drain greedily.
-                match rx.recv() {
-                    Ok(msg) => match on_msg(&mut reqs, &mut routes, msg) {
-                        Flow::Stop => break,
-                        Flow::Drain | Flow::CloseBatch => {}
-                    },
-                    Err(_) => break,
+                    Msg::Batch(batch_reqs, base, tx) => {
+                        for (k, r) in batch_reqs.into_iter().enumerate() {
+                            asm.push(r, Route::Slot(tx.clone(), base + k as u32));
+                            *folded += 1;
+                        }
+                    }
+                    Msg::Flush => return Flow::CloseBatch,
+                    Msg::Stop => return Flow::Stop,
                 }
-                while reqs.len() < batch_size {
+                Flow::Drain
+            };
+            'bursts: while !stop {
+                // Between bursts the assembler is empty (every burst ends
+                // in a flush), so blocking indefinitely strands nothing.
+                let mut folded = 0usize;
+                match rx.recv() {
+                    Ok(msg) => match on_msg(&mut asm, &mut folded, msg) {
+                        Flow::Drain => {}
+                        Flow::CloseBatch => {} // nothing held yet
+                        Flow::Stop => stop = true,
+                    },
+                    Err(_) => break 'bursts,
+                }
+                // Drain the burst.
+                while !stop {
+                    if folded >= batch_size {
+                        shared_b.requests.fetch_add(folded as u64, Ordering::Relaxed);
+                        folded = 0;
+                        if !emit_and_dispatch(
+                            &mut asm,
+                            &mut words,
+                            &work_txs,
+                            &mut rr,
+                            &mut held_rounds,
+                            false,
+                        ) {
+                            return;
+                        }
+                    }
                     match rx.try_recv() {
-                        Ok(msg) => match on_msg(&mut reqs, &mut routes, msg) {
+                        Ok(msg) => match on_msg(&mut asm, &mut folded, msg) {
                             Flow::Drain => {}
-                            Flow::CloseBatch => break,
-                            Flow::Stop => {
-                                stop = true;
-                                break;
+                            Flow::CloseBatch => {
+                                // Explicit flush request mid-burst.
+                                shared_b.requests.fetch_add(folded as u64, Ordering::Relaxed);
+                                folded = 0;
+                                if !emit_and_dispatch(
+                                    &mut asm,
+                                    &mut words,
+                                    &work_txs,
+                                    &mut rr,
+                                    &mut held_rounds,
+                                    true,
+                                ) {
+                                    return;
+                                }
                             }
+                            Flow::Stop => stop = true,
                         },
+                        // Empty (burst over) or disconnected — either way
+                        // flush below; a disconnect also ends the outer
+                        // loop at its next recv.
                         Err(_) => break,
                     }
                 }
-                if reqs.is_empty() {
-                    continue;
+                // Burst over (idle queue or Stop): flush everything held.
+                if folded > 0 {
+                    shared_b.requests.fetch_add(folded as u64, Ordering::Relaxed);
                 }
-                shared_b.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-
-                // Pack, attach lane-aligned routes by direct index, and
-                // dispatch contiguous chunks round-robin to the workers.
-                let jobs: Vec<Job> = pack_requests(&reqs)
-                    .into_iter()
-                    .map(|pw| {
-                        let mut lane_routes: [Option<(u64, Route)>; 4] = [None, None, None, None];
-                        for (l, lane) in pw.lane_req.iter().enumerate() {
-                            if let Some(local) = lane {
-                                let (orig_id, route) = &routes[*local as usize];
-                                lane_routes[l] = Some((*orig_id, route.clone()));
-                            }
-                        }
-                        Job { pw, routes: lane_routes }
-                    })
-                    .collect();
-                let chunk = jobs.len().div_ceil(n_workers).max(1);
-                let mut iter = jobs.into_iter();
-                loop {
-                    let chunk_jobs: Vec<Job> = iter.by_ref().take(chunk).collect();
-                    if chunk_jobs.is_empty() {
-                        break;
-                    }
-                    if work_txs[rr % n_workers].send(chunk_jobs).is_err() {
-                        return;
-                    }
-                    rr = rr.wrapping_add(1);
+                if !emit_and_dispatch(
+                    &mut asm,
+                    &mut words,
+                    &work_txs,
+                    &mut rr,
+                    &mut held_rounds,
+                    true,
+                ) {
+                    return;
                 }
             }
             drop(work_txs);
@@ -422,7 +487,8 @@ impl Coordinator {
         }
     }
 
-    /// Force the batcher to close the current batch.
+    /// Force the batcher to close the current batch (flushing any held
+    /// partial words).
     pub fn flush(&self) {
         let _ = self.tx.send(Msg::Flush);
     }
@@ -438,7 +504,9 @@ impl Coordinator {
         }
     }
 
-    /// Stop the coordinator and return final statistics.
+    /// Stop the coordinator and return final statistics. Messages queued
+    /// before the stop are fully processed (their responses delivered)
+    /// and every batcher/worker thread is joined before this returns.
     pub fn shutdown(mut self) -> Stats {
         let _ = self.tx.send(Msg::Stop);
         if let Some(b) = self.batcher.take() {
@@ -473,8 +541,15 @@ pub fn simd_word_energy_pj() -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arith::simdive::{simdive_div, simdive_mul};
+    use crate::arith::simdive::{simdive_div_w, simdive_mul_w};
     use crate::coordinator::packer::ReqOp;
+
+    fn expect(req: &Request) -> u64 {
+        match req.op {
+            ReqOp::Mul => simdive_mul_w(req.bits, req.a, req.b, req.w),
+            ReqOp::Div => simdive_div_w(req.bits, req.a, req.b, req.w),
+        }
+    }
 
     #[test]
     fn stats_account_all_requests() {
@@ -485,6 +560,7 @@ mod tests {
                 id: i,
                 op: ReqOp::Mul,
                 bits: 8,
+                w: 8,
                 a: 1 + i % 200,
                 b: 3,
             }));
@@ -509,6 +585,7 @@ mod tests {
                     id: 1000 + i,
                     op: if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
                     bits,
+                    w: rng.below(crate::arith::W_MAX as u64 + 1) as u32,
                     a: rng.operand(bits),
                     b: rng.operand(bits),
                 }
@@ -519,11 +596,7 @@ mod tests {
         let responses = handle.wait();
         for (resp, req) in responses.iter().zip(&reqs) {
             assert_eq!(resp.id, req.id, "responses must come back in submission order");
-            let want = match req.op {
-                ReqOp::Mul => simdive_mul(req.bits, req.a, req.b),
-                ReqOp::Div => simdive_div(req.bits, req.a, req.b),
-            };
-            assert_eq!(resp.value, want, "req {}", req.id);
+            assert_eq!(resp.value, expect(req), "req {}", req.id);
         }
         let s = coord.shutdown();
         assert_eq!(s.requests, 500);
@@ -536,7 +609,7 @@ mod tests {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (tx, rx) = std::sync::mpsc::channel();
         let reqs: Vec<Request> = (0..300u64)
-            .map(|i| Request { id: 5000 + i, op: ReqOp::Mul, bits: 8, a: 1 + i % 255, b: 3 })
+            .map(|i| Request { id: 5000 + i, op: ReqOp::Mul, bits: 8, w: 8, a: 1 + i % 255, b: 3 })
             .collect();
         coord.submit_batch_streaming(reqs.clone(), 7, &tx);
         let mut seen = std::collections::HashMap::new();
@@ -546,7 +619,7 @@ mod tests {
             seen.insert(resp.id, resp.value);
         }
         for req in &reqs {
-            assert_eq!(seen[&req.id], simdive_mul(8, req.a, req.b), "req {}", req.id);
+            assert_eq!(seen[&req.id], simdive_mul_w(8, req.a, req.b, 8), "req {}", req.id);
         }
         let s = coord.shutdown();
         assert_eq!(s.requests, 300);
@@ -565,35 +638,65 @@ mod tests {
     fn duplicate_ids_each_get_a_response() {
         // Caller-chosen ids need not be unique: routing is positional.
         let coord = Coordinator::start(CoordinatorConfig::default());
-        let reqs: Vec<Request> =
-            (0..8).map(|_| Request { id: 7, op: ReqOp::Mul, bits: 8, a: 43, b: 10 }).collect();
+        let reqs: Vec<Request> = (0..8)
+            .map(|_| Request { id: 7, op: ReqOp::Mul, bits: 8, w: 8, a: 43, b: 10 })
+            .collect();
         let responses = coord.submit_batch(reqs).wait();
         assert_eq!(responses.len(), 8);
         for r in responses {
             assert_eq!(r.id, 7);
-            assert_eq!(r.value, simdive_mul(8, 43, 10));
+            assert_eq!(r.value, simdive_mul_w(8, 43, 10, 8));
         }
         coord.shutdown();
     }
 
     #[test]
     fn mixed_single_and_batch_submission() {
-        let coord = Coordinator::start(CoordinatorConfig {
-            workers: 2,
-            w: 8,
-            queue_depth: 64,
-            batch: 16,
-        });
-        let single = coord.submit(Request { id: 0, op: ReqOp::Div, bits: 16, a: 5000, b: 40 });
+        let coord =
+            Coordinator::start(CoordinatorConfig { workers: 2, queue_depth: 64, batch: 16 });
+        let single =
+            coord.submit(Request { id: 0, op: ReqOp::Div, bits: 16, w: 8, a: 5000, b: 40 });
         let batch = coord.submit_batch(
-            (0..32).map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, a: 1 + i, b: 3 }).collect(),
+            (0..32)
+                .map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, w: 8, a: 1 + i, b: 3 })
+                .collect(),
         );
-        assert_eq!(single.recv().unwrap().value, simdive_div(16, 5000, 40));
+        assert_eq!(single.recv().unwrap().value, simdive_div_w(16, 5000, 40, 8));
         let responses = batch.wait();
         for (i, r) in responses.iter().enumerate() {
-            assert_eq!(r.value, simdive_mul(8, 1 + i as u64, 3));
+            assert_eq!(r.value, simdive_mul_w(8, 1 + i as u64, 3, 8));
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn mixed_w_traffic_shares_one_pool_and_stays_bit_exact() {
+        // The v2 headline: one coordinator serves every accuracy tier at
+        // once, and each request's answer matches its own w's tables.
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let mut rng = crate::util::Rng::new(0x2A11);
+        let reqs: Vec<Request> = (0..1_000u64)
+            .map(|i| {
+                let bits = [8u32, 8, 16, 32][rng.below(4) as usize];
+                Request {
+                    id: i,
+                    op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
+                    bits,
+                    w: rng.below(crate::arith::W_MAX as u64 + 1) as u32,
+                    a: rng.operand(bits),
+                    b: rng.operand(bits),
+                }
+            })
+            .collect();
+        let responses = coord.submit_batch(reqs.clone()).wait();
+        for (resp, req) in responses.iter().zip(&reqs) {
+            assert_eq!(resp.value, expect(req), "req {} (w={})", req.id, req.w);
+        }
+        let s = coord.shutdown();
+        assert_eq!(s.requests, 1_000);
+        // Mixed-w 8-bit-heavy traffic must still pack multiple lanes per
+        // word on average (the shared-pool utilization claim).
+        assert!(s.lane_utilization() > 0.5, "utilization {}", s.lane_utilization());
     }
 
     #[test]

@@ -19,10 +19,11 @@ fn usage() -> ! {
          \ttunable [--samples N]  accuracy-vs-w sweep (§3.3)\n\
          \texport-golden          golden vectors for python tests\n\
          \tdemo                   quick SIMD coordinator demo\n\
+         \tprofile                error-profile table driving the budget router (§9)\n\
          \tserve --listen ADDR [--workers N] [--window K] [--batch B]\n\
-         \t                       SIMD-wire TCP server over the coordinator\n\
+         \t                       SIMD-wire TCP server over the shared coordinator\n\
          \tloadgen --addr ADDR [--connections C] [--requests N] [--chunk B]\n\
-         \t        [--mix 8,8,16,32] [--w N] [--out PATH]\n\
+         \t        [--mix 8,8,16,32] [--w N | --budget-ppm E] [--out PATH]\n\
          \t                       drive a server; writes BENCH_serve.json\n\
          \tall                    every table + figure in sequence"
     );
@@ -89,6 +90,7 @@ fn main() -> anyhow::Result<()> {
         }
         "export-golden" => println!("{}", report::golden::export()?),
         "demo" => demo(),
+        "profile" => profile(),
         "serve" => serve(&args)?,
         "loadgen" => loadgen(&args)?,
         "all" => {
@@ -126,6 +128,7 @@ fn demo() {
             id: i,
             op: if i % 3 == 0 { ReqOp::Div } else { ReqOp::Mul },
             bits: [8, 16, 32][(i % 3) as usize],
+            w: (i % 9) as u32,
             a: 40 + i,
             b: 3 + i,
         }));
@@ -144,6 +147,44 @@ fn demo() {
     );
 }
 
+/// `profile`: print the measured `{op, width, w} → MRED` table the
+/// error-budget router picks from (DESIGN.md §9), with an example routing
+/// column.
+fn profile() {
+    use simdive::arith::{W_MAX, WIDTHS};
+    use simdive::coordinator::{ErrorProfile, ReqOp};
+    let p = ErrorProfile::get();
+    println!("error profile (MRED, % — mean relative error vs exact):");
+    println!("{:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "w", "mul8", "mul16", "mul32", "div8", "div16", "div32");
+    for w in 0..=W_MAX {
+        let cell = |op, bits| p.mred_ppm(op, bits, w) as f64 / 10_000.0;
+        println!(
+            "{w:>4} {:>11.3}% {:>11.3}% {:>11.3}% {:>11.3}% {:>11.3}% {:>11.3}%",
+            cell(ReqOp::Mul, 8),
+            cell(ReqOp::Mul, 16),
+            cell(ReqOp::Mul, 32),
+            cell(ReqOp::Div, 8),
+            cell(ReqOp::Div, 16),
+            cell(ReqOp::Div, 32),
+        );
+    }
+    println!("\nbudget routing examples (cheapest w meeting the budget):");
+    for budget_pct in [5.0f64, 3.0, 2.0, 1.5, 1.2] {
+        let ppm = (budget_pct * 10_000.0) as u32;
+        let picks: Vec<String> = WIDTHS
+            .iter()
+            .map(|&bits| format!("mul{bits}→w{}", p.pick_w(ReqOp::Mul, bits, ppm)))
+            .chain(
+                WIDTHS
+                    .iter()
+                    .map(|&bits| format!("div{bits}→w{}", p.pick_w(ReqOp::Div, bits, ppm))),
+            )
+            .collect();
+        println!("  ≤{budget_pct}% ({ppm} ppm): {}", picks.join(", "));
+    }
+}
+
 /// `serve --listen ADDR`: run the SIMD-wire TCP server over the
 /// coordinator until the process is killed (DESIGN.md §8). Replaces the
 /// old in-process serving demo — drive it with `simdive loadgen`.
@@ -157,6 +198,10 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         batch: arg_u64_strict(args, "--batch", defaults.batch as u64)? as usize,
         queue_depth: arg_u64_strict(args, "--queue-depth", defaults.queue_depth as u64)? as usize,
     };
+    // Warm the error-profile table before accepting traffic, so the first
+    // budget-routed request doesn't stall its connection on the one-time
+    // ~2M-evaluation measurement (DESIGN.md §9).
+    simdive::coordinator::ErrorProfile::get();
     let server = Server::start(listen, cfg)
         .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
     println!(
@@ -188,10 +233,20 @@ fn loadgen(args: &[String]) -> anyhow::Result<()> {
         "--mix must be a comma list of 8/16/32 (got '{mix}')"
     );
     // --w N pins the accuracy knob; absent, w is spread over 0..=8.
+    // --budget-ppm E switches every request to error-budget routing.
     let fixed_w = arg_u64_opt(args, "--w")?;
     anyhow::ensure!(
         fixed_w.map_or(true, |w| w <= simdive::arith::W_MAX as u64),
         "--w must be 0..=8"
+    );
+    let budget_ppm = arg_u64_opt(args, "--budget-ppm")?;
+    anyhow::ensure!(
+        budget_ppm.map_or(true, |p| (1..=u32::MAX as u64).contains(&p)),
+        "--budget-ppm must be 1..=4294967295 (parts per million of relative error)"
+    );
+    anyhow::ensure!(
+        fixed_w.is_none() || budget_ppm.is_none(),
+        "--w and --budget-ppm are mutually exclusive"
     );
     let cfg = LoadgenConfig {
         connections: arg_u64_strict(args, "--connections", defaults.connections as u64)? as usize,
@@ -199,6 +254,7 @@ fn loadgen(args: &[String]) -> anyhow::Result<()> {
         chunk: arg_u64_strict(args, "--chunk", defaults.chunk as u64)? as usize,
         widths,
         fixed_w: fixed_w.map(|w| w as u32),
+        budget_ppm: budget_ppm.map(|p| p as u32),
         seed: arg_u64_strict(args, "--seed", defaults.seed)?,
         ..defaults
     };

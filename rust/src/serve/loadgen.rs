@@ -31,6 +31,10 @@ pub struct LoadgenConfig {
     /// `Some(w)` pins every request's accuracy knob; `None` spreads it
     /// uniformly over `0..=W_MAX`.
     pub fixed_w: Option<u32>,
+    /// `Some(ppm)` puts every request in error-budget mode instead: the
+    /// wire carries the budget and the server's router picks the cheapest
+    /// satisfying `w` (overrides `fixed_w`/the spread).
+    pub budget_ppm: Option<u32>,
     /// One in `div_ratio` requests is a divide (rest multiply).
     pub div_ratio: u64,
     pub seed: u64,
@@ -44,6 +48,7 @@ impl Default for LoadgenConfig {
             chunk: 256,
             widths: vec![8, 8, 8, 16, 16, 32],
             fixed_w: None,
+            budget_ppm: None,
             div_ratio: 4,
             seed: 0xD15C0,
         }
@@ -68,11 +73,16 @@ pub struct LoadgenReport {
 fn make_request(cfg: &LoadgenConfig, rng: &mut Rng, id: u64) -> WireRequest {
     let bits = cfg.widths[rng.below(cfg.widths.len() as u64) as usize];
     let w = cfg.fixed_w.unwrap_or_else(|| rng.below(W_MAX as u64 + 1) as u32);
+    let (w, budget_ppm) = match cfg.budget_ppm {
+        Some(ppm) => (0, ppm.max(1)),
+        None => (w, 0),
+    };
     WireRequest {
         id,
         op: if rng.below(cfg.div_ratio.max(1)) == 0 { ReqOp::Div } else { ReqOp::Mul },
         bits,
         w,
+        budget_ppm,
         a: rng.operand(bits),
         b: rng.operand(bits),
     }
@@ -163,7 +173,7 @@ pub fn coordinator_batched_rps(n: u64) -> f64 {
         let reqs: Vec<Request> = (0..window)
             .map(|k| {
                 let r = make_request(&cfg, &mut rng, submitted + k);
-                Request { id: r.id, op: r.op, bits: r.bits, a: r.a, b: r.b }
+                Request { id: r.id, op: r.op, bits: r.bits, w: r.w, a: r.a, b: r.b }
             })
             .collect();
         coord.submit_batch(reqs).wait();
@@ -229,11 +239,19 @@ mod tests {
         for i in 0..2000 {
             let r = make_request(&cfg, &mut rng, i);
             assert!(matches!(r.bits, 8 | 16 | 32));
+            assert_eq!(r.budget_ppm, 0, "default mode is fixed-w");
             saw_w[r.w as usize] = true;
             saw_div |= r.op == ReqOp::Div;
         }
         assert!(saw_w.iter().all(|&s| s), "w spread must cover 0..=W_MAX");
         assert!(saw_div);
+        let cfg = LoadgenConfig { budget_ppm: Some(12_000), ..LoadgenConfig::default() };
+        let mut rng = Rng::new(3);
+        for i in 0..200 {
+            let r = make_request(&cfg, &mut rng, i);
+            assert_eq!(r.budget_ppm, 12_000, "budget must reach every request");
+            assert_eq!(r.w, 0, "budget mode leaves the w byte unused");
+        }
     }
 
     #[test]

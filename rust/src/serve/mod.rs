@@ -8,13 +8,15 @@
 //! (`std::net` + threads — tokio is unavailable offline, DESIGN.md §1):
 //!
 //! * [`wire`] — versioned little-endian binary protocol; fixed-size
-//!   request frames carry `{id, op, bits, w, a, b}` so the per-operand
-//!   accuracy knob `w` (§3.3) travels on the wire per request, plus batch
-//!   framing and a `STATS` op.
+//!   request frames carry `{id, op, bits, w, budget_ppm, a, b}` so the
+//!   per-operand accuracy knob `w` (§3.3) — or, since wire v2, a maximum
+//!   relative-error budget routed server-side — travels on the wire per
+//!   request, plus batch framing and a `STATS` op.
 //! * [`server`] — TCP listener; per-connection reader/writer threads, a
 //!   bounded in-flight admission window (backpressure over TCP instead of
-//!   OOM), a lazily-started coordinator per accuracy knob, and
-//!   out-of-order response writes as SIMD lanes complete.
+//!   OOM), one shared mixed-`{bits, w}` coordinator with an error-budget
+//!   router at admission (DESIGN.md §9), and out-of-order response writes
+//!   as SIMD lanes complete.
 //! * [`client`] — pipelined client used by the examples, tests and load
 //!   generator.
 //! * [`stats`] — per-connection and server-wide counters with log2

@@ -1,37 +1,41 @@
-//! SIMD-wire TCP server over the coordinator (DESIGN.md §8).
+//! SIMD-wire TCP server over coordinator v2 (DESIGN.md §8–§9).
 //!
 //! Thread layout: one accept thread; per connection, the spawned
 //! connection thread becomes the *reader* and starts one *writer* thread.
 //! The reader decodes frames, admits requests under a bounded in-flight
 //! window (admission control: when the window is full the reader stops
 //! draining the socket, so backpressure propagates over TCP instead of
-//! buffering unboundedly), and funnels them into a bank of coordinators —
-//! one per accuracy knob `w`, started lazily — via
-//! [`Coordinator::submit_batch_streaming`]. The writer drains completions
-//! and writes response frames **out of order, as SIMD lanes complete**,
-//! freeing window slots and recording latency as it goes.
+//! buffering unboundedly), and funnels them into **one shared
+//! coordinator** via [`Coordinator::submit_batch_streaming`] — requests
+//! carry their accuracy knob `w` per request, and the coordinator's own
+//! mixed-`{bits, w}` word assembler keeps different-`w` requests out of
+//! each other's words (their correction tables differ — §3.3) while the
+//! whole accuracy spectrum shares one worker pool. The writer drains
+//! completions and writes response frames **out of order, as SIMD lanes
+//! complete**, freeing window slots and recording latency as it goes.
 //!
-//! The per-request `w` of the wire protocol maps to the coordinator bank:
-//! requests sharing a `w` are batched together so the lane packer can
-//! still fill words, while different-`w` requests never share a word
-//! (their correction tables differ — §3.3).
+//! Requests flagged with an error budget instead of a fixed `w` are
+//! resolved at admission through the error-budget router
+//! ([`ErrorProfile::pick_w`]): the cheapest `w` whose profiled MRED fits
+//! the stated budget.
 
 use super::stats::ServeCounters;
 use super::wire::{self, ClientFrame, WireStats};
-use crate::arith::W_MAX;
-use crate::coordinator::{Coordinator, CoordinatorConfig, Request, Response, Stats};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, ErrorProfile, Request, Response, Stats,
+};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
-    /// Worker threads per per-`w` coordinator.
+    /// Worker threads of the shared coordinator.
     pub workers: usize,
     /// Coordinator packing-batch size.
     pub batch: usize,
@@ -52,36 +56,17 @@ impl Default for ServeConfig {
 struct Inner {
     cfg: ServeConfig,
     stop: AtomicBool,
-    /// One coordinator per accuracy knob `w ∈ 0..=W_MAX`, started on first
-    /// use so a server only pays for the accuracy points its clients ask
-    /// for.
-    coords: [OnceLock<Coordinator>; (W_MAX + 1) as usize],
+    /// The one shared coordinator serving every `{bits, w}` mix
+    /// (coordinator v2 — DESIGN.md §9).
+    coordinator: Coordinator,
     /// Server-wide completed requests + latency.
     global: ServeCounters,
     connections: AtomicU64,
 }
 
 impl Inner {
-    fn coord(&self, w: u32) -> &Coordinator {
-        self.coords[w as usize].get_or_init(|| {
-            Coordinator::start(CoordinatorConfig {
-                workers: self.cfg.workers,
-                w,
-                queue_depth: self.cfg.queue_depth,
-                batch: self.cfg.batch,
-            })
-        })
-    }
-
-    /// Sum of the started coordinators' snapshots.
     fn coordinator_stats(&self) -> Stats {
-        let mut s = Stats::default();
-        for c in &self.coords {
-            if let Some(c) = c.get() {
-                s.merge(&c.stats());
-            }
-        }
-        s
+        self.coordinator.stats()
     }
 
     /// Build the `STATS_RESP` payload for one connection's view.
@@ -119,7 +104,11 @@ impl Server {
         let inner = Arc::new(Inner {
             cfg,
             stop: AtomicBool::new(false),
-            coords: std::array::from_fn(|_| OnceLock::new()),
+            coordinator: Coordinator::start(CoordinatorConfig {
+                workers: cfg.workers,
+                queue_depth: cfg.queue_depth,
+                batch: cfg.batch,
+            }),
             global: ServeCounters::new(),
             connections: AtomicU64::new(0),
         });
@@ -296,6 +285,17 @@ fn handle_conn(stream: TcpStream, inner: Arc<Inner>) -> io::Result<()> {
     result
 }
 
+/// Resolve a wire request's effective accuracy knob: the stated `w`, or —
+/// with an error budget on the wire — the cheapest `w` whose profiled
+/// MRED fits the budget (DESIGN.md §9).
+fn resolve_w(r: &wire::WireRequest) -> u32 {
+    if r.budget_ppm > 0 {
+        ErrorProfile::get().pick_w(r.op, r.bits, r.budget_ppm)
+    } else {
+        r.w
+    }
+}
+
 fn reader_loop(
     reader: &mut BufReader<TcpStream>,
     writer: &SharedWriter,
@@ -305,10 +305,9 @@ fn reader_loop(
     resp_tx: &Sender<(u32, Response)>,
     closed: &Arc<AtomicBool>,
 ) -> io::Result<()> {
-    // Per-`w` submission buckets: requests sharing an accuracy knob batch
-    // together into that knob's coordinator.
-    let mut buckets: Vec<Vec<Request>> = (0..=W_MAX).map(|_| Vec::new()).collect();
-    let mut pending = 0usize;
+    // Admitted requests buffered for one streaming submission; the shared
+    // coordinator's assembler does the per-{bits, w} sub-queueing.
+    let mut pending: Vec<Request> = Vec::new();
     loop {
         match wire::read_client_frame(reader)? {
             ClientFrame::Eof => return Ok(()),
@@ -325,7 +324,7 @@ fn reader_loop(
             }
             ClientFrame::Stats => {
                 // Submit buffered work first so the snapshot reflects it.
-                pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+                submit_pending(inner, &mut pending, resp_tx);
                 let snap = inner.snapshot(conn_stats);
                 let mut w = writer.lock().unwrap();
                 wire::write_stats_resp(&mut *w, &snap)?;
@@ -338,46 +337,39 @@ fn reader_loop(
                     let slot = match inflight.try_acquire(r.id) {
                         Some(s) => s,
                         None => {
-                            pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+                            submit_pending(inner, &mut pending, resp_tx);
                             inflight.acquire(r.id)
                         }
                     };
                     // The coordinator-side id is the window slot; the wire
                     // id is recovered from the slot table on completion.
-                    buckets[r.w as usize].push(Request {
+                    pending.push(Request {
                         id: slot as u64,
                         op: r.op,
                         bits: r.bits,
+                        w: resolve_w(r),
                         a: r.a,
                         b: r.b,
                     });
-                    pending += 1;
-                    if pending >= inner.cfg.batch {
-                        pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+                    if pending.len() >= inner.cfg.batch {
+                        submit_pending(inner, &mut pending, resp_tx);
                     }
                 }
-                pending = submit_buckets(inner, &mut buckets, pending, resp_tx);
+                submit_pending(inner, &mut pending, resp_tx);
             }
         }
     }
 }
 
-/// Flush every non-empty per-`w` bucket into its coordinator; returns the
-/// new pending count (0).
-fn submit_buckets(
+/// Stream the buffered admissions into the shared coordinator.
+fn submit_pending(
     inner: &Arc<Inner>,
-    buckets: &mut [Vec<Request>],
-    pending: usize,
+    pending: &mut Vec<Request>,
     resp_tx: &Sender<(u32, Response)>,
-) -> usize {
-    if pending > 0 {
-        for (w, bucket) in buckets.iter_mut().enumerate() {
-            if !bucket.is_empty() {
-                inner.coord(w as u32).submit_batch_streaming(std::mem::take(bucket), 0, resp_tx);
-            }
-        }
+) {
+    if !pending.is_empty() {
+        inner.coordinator.submit_batch_streaming(std::mem::take(pending), 0, resp_tx);
     }
-    0
 }
 
 /// Writer thread: drain completions, free window slots, record latency,

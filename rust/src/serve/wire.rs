@@ -4,15 +4,25 @@
 //! A connection opens with an 8-byte hello exchanged in both directions
 //! (`MAGIC` + protocol version; the server always states its own version,
 //! then answers an unsupported one with `ERR_BAD_VERSION` and a close),
-//! then carries a stream of 1-byte-kind frames. Request bodies are fixed-size (28 bytes) and carry the paper's
-//! per-operand accuracy knob `w` (§3.3) *per request*, so every client
-//! chooses its own accuracy/latency trade-off on the wire. A `BATCH` frame
-//! carries up to [`MAX_BATCH`] request bodies under one header — the
-//! framing the pipelined client and the load generator use.
+//! then carries a stream of 1-byte-kind frames. Request bodies are
+//! fixed-size (32 bytes) and carry the paper's per-operand accuracy knob
+//! `w` (§3.3) *per request*, so every client chooses its own
+//! accuracy/latency trade-off on the wire. A `BATCH` frame carries up to
+//! [`MAX_BATCH`] request bodies under one header — the framing the
+//! pipelined client and the load generator use.
+//!
+//! Wire v2 (append-only evolution of v1): the request body grows a
+//! trailing `budget_ppm:u32` field and a defined `flags` bit. With
+//! [`FLAG_BUDGET`] set, the client states a maximum mean-relative-error
+//! budget in parts per million instead of committing to a `w`; the
+//! server's error-budget router (DESIGN.md §9) picks the cheapest `w`
+//! satisfying it. Reserved flag bits must be zero and the flag must agree
+//! with the field (`FLAG_BUDGET` ⟺ `budget_ppm > 0`) — a frame violating
+//! either is malformed, never silently reinterpreted.
 //!
 //! | kind | dir | body |
 //! |------|-----|------|
-//! | `REQ` (0x01)        | c→s | 28 B: `id:u64, a:u64, b:u64, op:u8, bits:u8, w:u8, flags:u8` |
+//! | `REQ` (0x01)        | c→s | 32 B: `id:u64, a:u64, b:u64, op:u8, bits:u8, w:u8, flags:u8, budget_ppm:u32` |
 //! | `BATCH` (0x02)      | c→s | `count:u16` then `count` request bodies |
 //! | `STATS` (0x03)      | c→s | empty |
 //! | `RESP` (0x81)       | s→c | 16 B: `id:u64, value:u64` |
@@ -29,8 +39,9 @@ use std::io::{self, Read, Write};
 /// Connection magic, first bytes on the wire in both directions.
 pub const MAGIC: [u8; 4] = *b"SDIV";
 
-/// Protocol version carried in the hello.
-pub const VERSION: u16 = 1;
+/// Protocol version carried in the hello. v2 widened the request body by
+/// an appended `budget_ppm:u32` and defined [`FLAG_BUDGET`].
+pub const VERSION: u16 = 2;
 
 /// Frame kinds (client → server).
 pub const FRAME_REQ: u8 = 0x01;
@@ -47,8 +58,15 @@ pub const ERR_BAD_FRAME: u8 = 1;
 pub const ERR_BAD_REQUEST: u8 = 2;
 pub const ERR_BAD_VERSION: u8 = 3;
 
-/// Fixed size of a request body.
-pub const REQ_BODY_LEN: usize = 28;
+/// Fixed size of a request body (v2: v1's 28 bytes + `budget_ppm:u32`).
+pub const REQ_BODY_LEN: usize = 32;
+
+/// Request `flags` bit 0: route by error budget. When set, `budget_ppm`
+/// holds the client's maximum mean relative error (parts per million;
+/// 10_000 ppm = 1%) and the server picks the cheapest accuracy knob
+/// satisfying it; the `w` byte is carried but ignored. All other flag
+/// bits are reserved and must be zero.
+pub const FLAG_BUDGET: u8 = 0x01;
 
 /// Fixed size of a response body.
 pub const RESP_BODY_LEN: usize = 16;
@@ -65,14 +83,20 @@ pub struct WireRequest {
     pub op: ReqOp,
     /// Operand width: 8, 16 or 32.
     pub bits: u32,
-    /// Accuracy knob (number of coefficient LUTs), `0..=W_MAX`.
+    /// Accuracy knob (number of coefficient LUTs), `0..=W_MAX`. Ignored
+    /// by the server when `budget_ppm > 0`.
     pub w: u32,
+    /// Error budget in parts per million; `0` = fixed-`w` mode. When
+    /// non-zero the server's error-budget router picks the cheapest `w`
+    /// whose profiled MRED fits (DESIGN.md §9).
+    pub budget_ppm: u32,
     pub a: u64,
     pub b: u64,
 }
 
 impl WireRequest {
-    /// Encode the fixed-size body (no kind byte).
+    /// Encode the fixed-size body (no kind byte). `FLAG_BUDGET` is set
+    /// exactly when `budget_ppm > 0`.
     pub fn encode_body(&self, buf: &mut [u8; REQ_BODY_LEN]) {
         buf[0..8].copy_from_slice(&self.id.to_le_bytes());
         buf[8..16].copy_from_slice(&self.a.to_le_bytes());
@@ -83,11 +107,14 @@ impl WireRequest {
         };
         buf[25] = self.bits as u8;
         buf[26] = self.w as u8;
-        buf[27] = 0; // flags, reserved
+        buf[27] = if self.budget_ppm > 0 { FLAG_BUDGET } else { 0 };
+        buf[28..32].copy_from_slice(&self.budget_ppm.to_le_bytes());
     }
 
     /// Decode and validate a fixed-size body. Errors name the offending
-    /// field; the server answers them with `ERR_BAD_REQUEST`.
+    /// field; the server answers them with `ERR_BAD_REQUEST`. Reserved
+    /// flag bits and a flag/field mismatch are rejected — a corrupted
+    /// frame must never be silently reinterpreted.
     pub fn decode_body(buf: &[u8; REQ_BODY_LEN]) -> Result<WireRequest, String> {
         let id = u64::from_le_bytes(buf[0..8].try_into().unwrap());
         let a = u64::from_le_bytes(buf[8..16].try_into().unwrap());
@@ -105,11 +132,21 @@ impl WireRequest {
         if w > W_MAX {
             return Err(format!("accuracy knob w={w} exceeds {W_MAX}"));
         }
+        let flags = buf[27];
+        if flags & !FLAG_BUDGET != 0 {
+            return Err(format!("reserved flag bits set (0x{flags:02x})"));
+        }
+        let budget_ppm = u32::from_le_bytes(buf[28..32].try_into().unwrap());
+        if (flags & FLAG_BUDGET != 0) != (budget_ppm > 0) {
+            return Err(format!(
+                "budget flag 0x{flags:02x} disagrees with budget_ppm {budget_ppm}"
+            ));
+        }
         let max = crate::arith::max_val(bits);
         if a > max || b > max {
             return Err(format!("operands ({a}, {b}) exceed {bits}-bit range"));
         }
-        Ok(WireRequest { id, op, bits, w, a, b })
+        Ok(WireRequest { id, op, bits, w, budget_ppm, a, b })
     }
 }
 
@@ -127,7 +164,7 @@ pub struct WireResponse {
 pub struct WireStats {
     /// Completed requests, server-wide.
     pub requests: u64,
-    /// Packed SIMD words executed, summed over the per-`w` coordinators.
+    /// Packed SIMD words executed by the shared coordinator.
     pub words: u64,
     pub active_lanes: u64,
     pub total_lanes: u64,
@@ -355,7 +392,7 @@ mod tests {
     use std::io::Cursor;
 
     fn req(id: u64, op: ReqOp, bits: u32, w: u32, a: u64, b: u64) -> WireRequest {
-        WireRequest { id, op, bits, w, a, b }
+        WireRequest { id, op, bits, w, budget_ppm: 0, a, b }
     }
 
     #[test]
@@ -380,6 +417,8 @@ mod tests {
             req(0, ReqOp::Mul, 8, 0, 0, 255),
             req(u64::MAX, ReqOp::Div, 32, 8, u32::MAX as u64, 1),
             req(7, ReqOp::Div, 16, 3, 5000, 40),
+            WireRequest { budget_ppm: 15_000, ..req(9, ReqOp::Mul, 8, 0, 43, 10) },
+            WireRequest { budget_ppm: u32::MAX, ..req(10, ReqOp::Div, 32, 0, 1 << 30, 3) },
         ] {
             let mut body = [0u8; REQ_BODY_LEN];
             r.encode_body(&mut body);
@@ -403,6 +442,30 @@ mod tests {
         let mut bad_operand = body;
         bad_operand[9] = 1; // a = 43 + 256 exceeds 8 bits
         assert!(WireRequest::decode_body(&bad_operand).is_err());
+        let mut bad_flags = body;
+        bad_flags[27] = 0x82; // reserved bits
+        assert!(WireRequest::decode_body(&bad_flags).is_err());
+        // Flag/field mismatches in both directions.
+        let mut flag_no_budget = body;
+        flag_no_budget[27] = FLAG_BUDGET;
+        assert!(WireRequest::decode_body(&flag_no_budget).is_err());
+        let mut budget_no_flag = body;
+        budget_no_flag[28] = 42;
+        assert!(WireRequest::decode_body(&budget_no_flag).is_err());
+    }
+
+    #[test]
+    fn budget_frame_roundtrip() {
+        let r = WireRequest { budget_ppm: 30_000, ..req(77, ReqOp::Div, 16, 0, 5000, 40) };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &r).unwrap();
+        match read_client_frame(&mut Cursor::new(&buf)).unwrap() {
+            ClientFrame::Requests(v) => {
+                assert_eq!(v, vec![r]);
+                assert_eq!(v[0].budget_ppm, 30_000);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
     }
 
     #[test]

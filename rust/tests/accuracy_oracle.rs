@@ -1,0 +1,257 @@
+//! Differential accuracy oracle: SIMDive mul/div vs the exact arithmetic
+//! in `arith::exact`, swept over the full accuracy-knob range `w ∈
+//! 0..=W_MAX` (DESIGN.md §9).
+//!
+//! The 8-bit sweeps are *exhaustive* (every non-zero operand pair) and
+//! therefore deterministic by construction; the 16/32-bit sweeps are
+//! sampled with fixed `util::Rng` seeds. Errors follow the paper's §4.1
+//! convention: real-valued behavioral outputs compared to the exact real
+//! product/quotient, `|exact − approx| / exact`.
+//!
+//! The exhaustive sweeps are too slow for the debug-profile `cargo test
+//! -q` tier, so they are `#[ignore]`d under `debug_assertions` and run by
+//! the CI accuracy-oracle job in `--release` (where each completes in
+//! well under a second).
+
+use simdive::arith::simdive::{
+    simdive_div_real_w, simdive_div_w, simdive_mul_real_w, simdive_mul_w,
+};
+use simdive::arith::{exact, W_MAX, WIDTHS};
+use simdive::coordinator::{ErrorProfile, ReqOp};
+use simdive::util::Rng;
+
+/// Seed base for the sampled 16/32-bit sweeps.
+const SEED_SAMPLED_SWEEP: u64 = 0x0AC1_E0_0D;
+
+/// Seed for the paper-scenario divider sweep (16-bit dividend, 8-bit
+/// divisor).
+const SEED_DIV_16_8: u64 = 0x0D1_F168;
+
+/// Mean and peak relative error of one `{op, bits, w}` point over an
+/// operand-pair iterator, on real-valued outputs.
+fn errors_over(
+    is_div: bool,
+    bits: u32,
+    w: u32,
+    pairs: impl Iterator<Item = (u64, u64)>,
+) -> (f64, f64) {
+    let (mut sum, mut peak, mut n) = (0.0f64, 0.0f64, 0u64);
+    for (a, b) in pairs {
+        let (exact, approx) = if is_div {
+            (a as f64 / b as f64, simdive_div_real_w(bits, a, b, w))
+        } else {
+            // `exact::mul` is the repo's integer ground truth; 8/16-bit
+            // products are exactly representable in f64.
+            (exact::mul(bits, a, b) as f64, simdive_mul_real_w(bits, a, b, w))
+        };
+        let rel = (exact - approx).abs() / exact;
+        sum += rel;
+        peak = peak.max(rel);
+        n += 1;
+    }
+    (sum / n as f64, peak)
+}
+
+fn exhaustive_8bit(is_div: bool, w: u32) -> (f64, f64) {
+    errors_over(
+        is_div,
+        8,
+        w,
+        (1..256u64).flat_map(|a| (1..256u64).map(move |b| (a, b))),
+    )
+}
+
+/// Assert a per-`w` error series improves monotonically (with `slack` for
+/// quantization plateaus and sampling noise) and strongly end-to-end.
+fn assert_improves(what: &str, series: &[f64], slack: f64, endpoint_ratio: f64) {
+    for w in 0..series.len() - 1 {
+        assert!(
+            series[w + 1] <= series[w] * slack + 1e-12,
+            "{what}: w={} ({:.5}) worse than w={w} ({:.5}) beyond slack {slack}",
+            w + 1,
+            series[w + 1],
+            series[w]
+        );
+    }
+    let (first, last) = (series[0], series[series.len() - 1]);
+    assert!(
+        last < first * endpoint_ratio,
+        "{what}: full correction ({last:.5}) must land below {endpoint_ratio} × Mitchell ({first:.5})"
+    );
+}
+
+#[cfg_attr(
+    debug_assertions,
+    ignore = "exhaustive 8-bit sweep; run in --release (CI accuracy-oracle job)"
+)]
+#[test]
+fn exhaustive_8bit_mul_differential_sweep() {
+    let mut mred = Vec::new();
+    let mut peak = Vec::new();
+    for w in 0..=W_MAX {
+        let (m, p) = exhaustive_8bit(false, w);
+        println!("mul8 w={w}: MRED {:.4}%, max {:.3}%", m * 100.0, p * 100.0);
+        mred.push(m);
+        peak.push(p);
+    }
+    // MRED must improve essentially monotonically with every extra LUT
+    // and land far below Mitchell (w=0 ≈ 3.8%) at full correction.
+    assert_improves("mul8 MRED", &mred, 1.05, 0.4);
+    assert!(mred[W_MAX as usize] < 0.013, "mul8 full-w MRED {:.5}", mred[W_MAX as usize]);
+    // Peak error improves too, though quantization makes it lumpier.
+    assert_improves("mul8 max", &peak, 1.3, 0.8);
+    assert!(peak[W_MAX as usize] < 0.09, "mul8 full-w peak {:.5}", peak[W_MAX as usize]);
+}
+
+#[cfg_attr(
+    debug_assertions,
+    ignore = "exhaustive 8-bit sweep; run in --release (CI accuracy-oracle job)"
+)]
+#[test]
+fn exhaustive_8bit_div_differential_sweep() {
+    let mut mred = Vec::new();
+    let mut peak = Vec::new();
+    for w in 0..=W_MAX {
+        let (m, p) = exhaustive_8bit(true, w);
+        println!("div8 w={w}: MRED {:.4}%, max {:.3}%", m * 100.0, p * 100.0);
+        mred.push(m);
+        peak.push(p);
+    }
+    assert_improves("div8 MRED", &mred, 1.05, 0.45);
+    assert!(mred[W_MAX as usize] < 0.02, "div8 full-w MRED {:.5}", mred[W_MAX as usize]);
+    assert_improves("div8 max", &peak, 1.3, 0.85);
+    assert!(peak[W_MAX as usize] < 0.12, "div8 full-w peak {:.5}", peak[W_MAX as usize]);
+}
+
+#[cfg_attr(
+    debug_assertions,
+    ignore = "exhaustive integer sweep; run in --release (CI accuracy-oracle job)"
+)]
+#[test]
+fn exhaustive_8bit_integer_outputs_track_real_oracle() {
+    // The integer datapath (what the hardware emits) must track the
+    // real-valued oracle within a floor plus internal fixed-point wiggle,
+    // for every w and every non-zero operand pair — so the real-valued
+    // sweeps above speak for the integer hardware too. Additionally, the
+    // integer multiplier's exhaustive MRED vs `arith::exact` must stay in
+    // the regime the unit tests pin (< 1.3% at full correction).
+    let (mut int_sum, mut n) = (0.0f64, 0u64);
+    for w in [0u32, 4, W_MAX] {
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let mr = simdive_mul_real_w(8, a, b, w);
+                let mi = simdive_mul_w(8, a, b, w) as f64;
+                assert!(
+                    (mi - mr).abs() <= mr * 1e-9 + 1.5,
+                    "mul {a}x{b} w={w}: int {mi} vs real {mr}"
+                );
+                let dr = simdive_div_real_w(8, a, b, w);
+                let di = simdive_div_w(8, a, b, w) as f64;
+                assert!(
+                    (di - dr).abs() <= dr * 1e-9 + 1.5,
+                    "div {a}/{b} w={w}: int {di} vs real {dr}"
+                );
+                if w == W_MAX {
+                    let ex = exact::mul(8, a, b) as f64;
+                    int_sum += (ex - mi).abs() / ex;
+                    n += 1;
+                }
+            }
+        }
+    }
+    let int_mred = int_sum / n as f64;
+    println!("mul8 integer MRED {:.4}%", int_mred * 100.0);
+    assert!(int_mred < 0.013, "mul8 integer MRED {int_mred:.5}");
+}
+
+#[test]
+fn divider_mred_tracks_paper_table_claim() {
+    // Paper Table 2, row "Proposed", divider scenario (16-bit dividend,
+    // 8-bit divisor, quotient ≥ 1): MRED 0.77% with the paper's
+    // optimized coefficients. This reproduction derives its coefficients
+    // as region means of the ideal correction (DESIGN.md §4), which
+    // lands ~0.3pp above the paper's figure — the same documented gap as
+    // the multiplier ("≈98.9% vs the paper's >99.2%", report::tunable).
+    // So the oracle pins the claim with the region-mean allowance: well
+    // under 1.3%, and at least a 60% reduction of Mitchell's error.
+    let sample = |w: u32| {
+        let mut rng = Rng::new(SEED_DIV_16_8 ^ w as u64);
+        let mut pairs = Vec::with_capacity(150_000);
+        while pairs.len() < 150_000 {
+            let a = rng.operand(16);
+            let b = rng.operand(8);
+            if a >= b {
+                pairs.push((a, b));
+            }
+        }
+        errors_over(true, 16, w, pairs.into_iter())
+    };
+    let (mitchell_mred, _) = sample(0);
+    let (full_mred, full_peak) = sample(W_MAX);
+    println!(
+        "div 16/8: Mitchell MRED {:.3}%, full-w MRED {:.3}% (paper claims 0.77%), peak {:.2}%",
+        mitchell_mred * 100.0,
+        full_mred * 100.0,
+        full_peak * 100.0
+    );
+    assert!(full_mred < 0.013, "full-correction div MRED {:.5}", full_mred);
+    assert!(
+        full_mred < 0.4 * mitchell_mred,
+        "correction must remove ≥60% of Mitchell's divider error ({full_mred:.5} vs {mitchell_mred:.5})"
+    );
+    // Paper PRE for the divider is 5.24%; region-mean tables stay in the
+    // same regime.
+    assert!(full_peak < 0.08, "full-correction div peak {:.5}", full_peak);
+}
+
+#[test]
+fn sampled_16_and_32_bit_sweeps_improve_with_w() {
+    // Seeded sampled sweeps at the wider datapaths: the knob must behave
+    // the same once the fraction resolution stops being the limiter.
+    for &bits in &[16u32, 32] {
+        for is_div in [false, true] {
+            // One fixed operand set per {op, bits}, reused across every w
+            // — the per-step comparison is then free of sampling noise.
+            let mut rng =
+                Rng::new(SEED_SAMPLED_SWEEP ^ ((bits as u64) << 16) ^ ((is_div as u64) << 8));
+            let pairs: Vec<(u64, u64)> =
+                (0..30_000).map(|_| (rng.operand(bits), rng.operand(bits))).collect();
+            let mut mred = Vec::new();
+            for w in 0..=W_MAX {
+                let (m, _) = errors_over(is_div, bits, w, pairs.iter().copied());
+                mred.push(m);
+            }
+            let what = format!("{}{bits} MRED", if is_div { "div" } else { "mul" });
+            assert_improves(&what, &mred, 1.05, 0.5);
+            assert!(mred[W_MAX as usize] < 0.016, "{what} at full w: {:.5}", mred[W_MAX as usize]);
+        }
+    }
+}
+
+#[test]
+fn oracle_agrees_with_the_router_profile() {
+    // The error-budget router picks `w` from `ErrorProfile`'s table; that
+    // table must describe the same arithmetic this oracle measures. Spot
+    // check the sampled 16-bit mul entries against an independent seeded
+    // measurement: same regime (within 15% relative — different seeds,
+    // 20k vs 30k samples), identical ordering at the endpoints.
+    let p = ErrorProfile::get();
+    for w in [0u32, 4, W_MAX] {
+        let mut rng = Rng::new(SEED_SAMPLED_SWEEP ^ 0xFACE ^ w as u64);
+        let pairs = (0..30_000).map(|_| (rng.operand(16), rng.operand(16)));
+        let (m, _) = errors_over(false, 16, w, pairs);
+        let profiled = p.mred_ppm(ReqOp::Mul, 16, w) as f64 / 1e6;
+        assert!(
+            (m - profiled).abs() < 0.15 * m.max(profiled),
+            "w={w}: oracle {m:.5} vs profile {profiled:.5}"
+        );
+    }
+    for &bits in &WIDTHS {
+        for op in [ReqOp::Mul, ReqOp::Div] {
+            assert!(
+                p.mred_ppm(op, bits, W_MAX) < p.mred_ppm(op, bits, 0),
+                "{op:?}@{bits}: profile must improve with w"
+            );
+        }
+    }
+}

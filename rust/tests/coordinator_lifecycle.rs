@@ -1,0 +1,153 @@
+//! Coordinator lifecycle tests: shutdown/drop join every thread, work
+//! queued before the stop completes with its responses delivered, and
+//! concurrent streaming submitters keep their per-request index slots
+//! (DESIGN.md §9).
+
+use simdive::arith::simdive::simdive_mul_w;
+use simdive::coordinator::{Coordinator, CoordinatorConfig, ReqOp, Request};
+use simdive::util::Rng;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+fn mul_req(id: u64, w: u32, a: u64, b: u64) -> Request {
+    Request { id, op: ReqOp::Mul, bits: 8, w, a, b }
+}
+
+#[test]
+fn shutdown_completes_in_flight_batches_before_joining() {
+    // A batch queued before the Stop message must be fully executed and
+    // its responses delivered even though shutdown() is called while the
+    // batch is still in flight.
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let reqs: Vec<Request> =
+        (0..500u64).map(|i| mul_req(i, (i % 9) as u32, 1 + i % 255, 3)).collect();
+    let handle = coord.submit_batch(reqs.clone());
+    let stats = coord.shutdown();
+    assert_eq!(stats.requests, 500, "queued work must be drained, not dropped");
+    let responses = handle.wait();
+    assert_eq!(responses.len(), 500);
+    for (resp, req) in responses.iter().zip(&reqs) {
+        assert_eq!(resp.id, req.id);
+        assert_eq!(resp.value, simdive_mul_w(8, req.a, req.b, req.w), "req {}", req.id);
+    }
+}
+
+#[test]
+fn drop_joins_threads_and_delivers_pending_singles() {
+    let mut receivers = Vec::new();
+    let reqs: Vec<Request> =
+        (0..64u64).map(|i| mul_req(i, 8, 1 + i % 200, 7)).collect();
+    {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            queue_depth: 128,
+            batch: 16,
+        });
+        for r in &reqs {
+            receivers.push(coord.submit(*r));
+        }
+        // `coord` dropped here: Drop sends Stop and joins the batcher,
+        // which in turn joins every worker.
+    }
+    for (rx, req) in receivers.into_iter().zip(&reqs) {
+        let resp = rx.recv().expect("response must have been delivered before the join");
+        assert_eq!(resp.value, simdive_mul_w(8, req.a, req.b, 8));
+    }
+}
+
+#[test]
+fn repeated_start_shutdown_cycles_are_clean() {
+    // Start/stop churn must not wedge or accumulate state: every cycle's
+    // threads are joined inside shutdown(), so 16 cycles complete quickly
+    // and each one serves its requests in full.
+    for cycle in 0..16u64 {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            queue_depth: 64,
+            batch: 8,
+        });
+        let reqs: Vec<Request> =
+            (0..40u64).map(|i| mul_req(i, (cycle % 9) as u32, 1 + i, 5)).collect();
+        let responses = coord.submit_batch(reqs.clone()).wait();
+        for (resp, req) in responses.iter().zip(&reqs) {
+            assert_eq!(resp.value, simdive_mul_w(8, req.a, req.b, req.w), "cycle {cycle}");
+        }
+        let s = coord.shutdown();
+        assert_eq!(s.requests, 40, "cycle {cycle}");
+    }
+}
+
+#[test]
+fn concurrent_streaming_submitters_preserve_index_slots() {
+    // Several threads stream batches into one coordinator over one shared
+    // response channel, each with its own base slot range. Every slot
+    // must come back exactly once, carrying the response of exactly the
+    // request submitted under that slot.
+    const SUBMITTERS: u64 = 4;
+    const PER: u64 = 1_000;
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::default()));
+    let (tx, rx) = channel();
+    let mut threads = Vec::new();
+    for t in 0..SUBMITTERS {
+        let coord = Arc::clone(&coord);
+        let tx = tx.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x51071 + t);
+            let base = (t * PER) as u32;
+            // Split into several streaming calls to interleave with the
+            // other submitters.
+            for chunk in 0..4u64 {
+                let reqs: Vec<Request> = (0..PER / 4)
+                    .map(|k| {
+                        let slot = t * PER + chunk * (PER / 4) + k;
+                        mul_req(slot, rng.below(9) as u32, rng.operand(8), rng.operand(8))
+                    })
+                    .collect();
+                coord.submit_batch_streaming(
+                    reqs,
+                    base + (chunk * (PER / 4)) as u32,
+                    &tx,
+                );
+            }
+        }));
+    }
+    drop(tx);
+    for th in threads {
+        th.join().unwrap();
+    }
+    let total = (SUBMITTERS * PER) as usize;
+    let mut seen: Vec<Option<u64>> = vec![None; total];
+    for _ in 0..total {
+        let (slot, resp) = rx.recv().expect("missing responses");
+        assert!(
+            seen[slot as usize].replace(resp.value).is_none(),
+            "slot {slot} delivered twice"
+        );
+        // The request under slot s carried id s (by construction), and
+        // the response must echo it.
+        assert_eq!(resp.id, slot as u64, "slot {slot} routed a different request");
+    }
+    assert!(rx.try_recv().is_err(), "no extra responses may appear");
+    assert!(seen.iter().all(|s| s.is_some()));
+    // Recompute the expected values from each submitter's deterministic
+    // RNG stream and compare slot-by-slot.
+    for t in 0..SUBMITTERS {
+        let mut rng = Rng::new(0x51071 + t);
+        for chunk in 0..4u64 {
+            for k in 0..PER / 4 {
+                let slot = (t * PER + chunk * (PER / 4) + k) as usize;
+                let w = rng.below(9) as u32;
+                let a = rng.operand(8);
+                let b = rng.operand(8);
+                assert_eq!(
+                    seen[slot],
+                    Some(simdive_mul_w(8, a, b, w)),
+                    "slot {slot} value mismatch"
+                );
+            }
+        }
+    }
+    let coord = Arc::into_inner(coord).expect("all submitter clones joined");
+    let s = coord.shutdown();
+    assert_eq!(s.requests, SUBMITTERS * PER);
+}

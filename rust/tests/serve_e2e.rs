@@ -1,18 +1,27 @@
 //! Loopback end-to-end tests of the network serving subsystem: a real TCP
 //! server on 127.0.0.1, driven through `serve::client`, with every
 //! response checked bit-identical against the in-process `arith::batch`
-//! kernels for the same `{bits, w}` (DESIGN.md §8).
+//! kernels for the same `{bits, w}` (DESIGN.md §8). Since coordinator v2
+//! every mix of `{bits, w}` flows through one shared worker pool, and
+//! requests may carry an error budget routed server-side (§9).
 
 use simdive::arith::{batch, table};
-use simdive::coordinator::ReqOp;
+use simdive::coordinator::{ErrorProfile, ReqOp};
 use simdive::serve::{Client, ServeConfig, Server, WireRequest};
 use simdive::util::Rng;
 use std::io::{Read, Write};
 
 /// Ground truth: the batched kernel result for one request at its own
-/// `{bits, w}` — the same arithmetic the server's coordinator bank runs.
+/// `{bits, w}` — the same arithmetic the server's shared coordinator
+/// runs. Budget-mode requests resolve `w` through the same profile table
+/// the server's router uses (it is deterministic — seeded measurement).
 fn expect_one(r: &WireRequest) -> u64 {
-    let t = table::tables_for(r.w);
+    let w = if r.budget_ppm > 0 {
+        ErrorProfile::get().pick_w(r.op, r.bits, r.budget_ppm)
+    } else {
+        r.w
+    };
+    let t = table::tables_for(w);
     match r.op {
         ReqOp::Mul => batch::mul_batch(t, r.bits, &[r.a], &[r.b])[0],
         ReqOp::Div => batch::div_batch(t, r.bits, &[r.a], &[r.b])[0],
@@ -26,6 +35,7 @@ fn random_request(rng: &mut Rng, id: u64) -> WireRequest {
         op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
         bits,
         w: rng.below(simdive::arith::W_MAX as u64 + 1) as u32,
+        budget_ppm: 0,
         a: rng.operand(bits),
         b: rng.operand(bits),
     }
@@ -124,7 +134,8 @@ fn single_call_and_per_request_w_tunability() {
     // per-request `w` on the wire must select the matching tables.
     let mut values = Vec::new();
     for w in 0..=simdive::arith::W_MAX {
-        let req = WireRequest { id: w as u64, op: ReqOp::Mul, bits: 8, w, a: 43, b: 10 };
+        let req =
+            WireRequest { id: w as u64, op: ReqOp::Mul, bits: 8, w, budget_ppm: 0, a: 43, b: 10 };
         let resp = client.call(req).unwrap();
         assert_eq!(resp.id, w as u64);
         assert_eq!(resp.value, expect_one(&req), "w={w}");
@@ -143,15 +154,82 @@ fn zero_operand_conventions_cross_the_wire() {
     for bits in [8u32, 16, 32] {
         let max = simdive::arith::max_val(bits);
         let cases = [
-            WireRequest { id: 0, op: ReqOp::Mul, bits, w: 8, a: 0, b: max },
-            WireRequest { id: 1, op: ReqOp::Div, bits, w: 8, a: 0, b: 7 },
-            WireRequest { id: 2, op: ReqOp::Div, bits, w: 8, a: max, b: 0 },
+            WireRequest { id: 0, op: ReqOp::Mul, bits, w: 8, budget_ppm: 0, a: 0, b: max },
+            WireRequest { id: 1, op: ReqOp::Div, bits, w: 8, budget_ppm: 0, a: 0, b: 7 },
+            WireRequest { id: 2, op: ReqOp::Div, bits, w: 8, budget_ppm: 0, a: max, b: 0 },
         ];
         let resps = client.exchange(&cases).unwrap();
         assert_eq!(resps[0].value, 0, "0 × max at {bits} bits");
         assert_eq!(resps[1].value, 0, "0 ÷ 7 at {bits} bits");
         assert_eq!(resps[2].value, max, "x ÷ 0 saturates at {bits} bits");
     }
+    server.shutdown();
+}
+
+#[test]
+fn error_budget_requests_route_to_cheapest_satisfying_w() {
+    // Wire v2: clients may state a maximum relative-error budget instead
+    // of a w. The server must (a) answer bit-identically to the kernel at
+    // the w its router picks (checked via the same deterministic profile
+    // table), and (b) actually vary the picked w with the budget.
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let profile = ErrorProfile::get();
+    let mut rng = Rng::new(0xB0D6E7);
+    let mut reqs = Vec::new();
+    for i in 0..2_000u64 {
+        let mut r = random_request(&mut rng, i);
+        // Budgets from very loose (50%) down to unsatisfiable (0.01%).
+        r.w = 0;
+        r.budget_ppm = [500_000u32, 60_000, 30_000, 15_000, 100][rng.below(5) as usize];
+        reqs.push(r);
+    }
+    let resps = client.exchange(&reqs).unwrap();
+    for (req, resp) in reqs.iter().zip(&resps) {
+        assert_eq!(
+            resp.value,
+            expect_one(req),
+            "bits={} budget={}ppm routed w={}",
+            req.bits,
+            req.budget_ppm,
+            profile.pick_w(req.op, req.bits, req.budget_ppm)
+        );
+    }
+    // The router must use the knob range: a 50% budget is satisfied by
+    // pure Mitchell, a 100 ppm budget degrades to best effort (W_MAX).
+    assert_eq!(profile.pick_w(ReqOp::Mul, 16, 500_000), 0);
+    assert_eq!(profile.pick_w(ReqOp::Mul, 16, 100), simdive::arith::W_MAX);
+    server.shutdown();
+}
+
+#[test]
+fn mixed_w_traffic_packs_lanes_through_the_shared_pool() {
+    // Coordinator v2's reason to exist: mixed-accuracy traffic no longer
+    // fragments across per-w pools, so the packer still fills words. An
+    // 8-bit-only mixed-w stream must sustain high lane utilization.
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap().with_chunk(256);
+    let mut rng = Rng::new(0x9_AC4E);
+    let reqs: Vec<WireRequest> = (0..8_000u64)
+        .map(|i| {
+            let mut r = random_request(&mut rng, i);
+            r.bits = 8;
+            r.a = rng.operand(8);
+            r.b = rng.operand(8);
+            r
+        })
+        .collect();
+    let resps = client.exchange(&reqs).unwrap();
+    for (req, resp) in reqs.iter().zip(&resps) {
+        assert_eq!(resp.value, expect_one(req));
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.words > 0);
+    let util = stats.lane_utilization();
+    assert!(
+        util > 0.5,
+        "mixed-w 8-bit stream should pack >2 lanes/word on average, got {util:.3}"
+    );
     server.shutdown();
 }
 
@@ -182,7 +260,7 @@ fn bad_frame_answered_with_err_and_close() {
     // Valid hello...
     let mut hello = [0u8; 8];
     hello[0..4].copy_from_slice(b"SDIV");
-    hello[4..6].copy_from_slice(&1u16.to_le_bytes());
+    hello[4..6].copy_from_slice(&simdive::serve::wire::VERSION.to_le_bytes());
     stream.write_all(&hello).unwrap();
     let mut ack = [0u8; 8];
     stream.read_exact(&mut ack).unwrap();
@@ -213,7 +291,11 @@ fn version_mismatch_gets_server_hello_then_err() {
     let mut ack = [0u8; 8];
     stream.read_exact(&mut ack).unwrap();
     assert_eq!(&ack[0..4], b"SDIV");
-    assert_eq!(u16::from_le_bytes([ack[4], ack[5]]), 1, "server must state its version");
+    assert_eq!(
+        u16::from_le_bytes([ack[4], ack[5]]),
+        simdive::serve::wire::VERSION,
+        "server must state its version"
+    );
     let mut err = [0u8; 2];
     stream.read_exact(&mut err).unwrap();
     assert_eq!(err[0], 0xEE);

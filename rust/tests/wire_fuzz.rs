@@ -1,0 +1,292 @@
+//! Wire-protocol fuzz/property tests (deterministic, seeded): random
+//! byte mutations of valid SIMD-wire frames must yield clean `Err`s or
+//! `ERR` answers — never a panic, and never a silently-accepted frame
+//! whose decoded fields violate the protocol's invariants. Also
+//! round-trips every frame kind, STATS included, through one contiguous
+//! stream.
+
+use simdive::arith::W_MAX;
+use simdive::coordinator::ReqOp;
+use simdive::serve::wire::{
+    self, ClientFrame, ServerFrame, WireRequest, WireStats, FLAG_BUDGET, REQ_BODY_LEN,
+};
+use simdive::serve::{ServeConfig, Server};
+use simdive::util::Rng;
+use std::io::Cursor;
+
+const SEED_REQ_MUTATION: u64 = 0xF022_0001;
+const SEED_BATCH_MUTATION: u64 = 0xF022_0002;
+const SEED_BODY_FUZZ: u64 = 0xF022_0003;
+const SEED_SERVER_FRAME_MUTATION: u64 = 0xF022_0004;
+
+/// Every invariant `WireRequest::decode_body` promises about a request it
+/// accepts. A mutated frame may still decode — mutating an operand byte
+/// yields a different but *valid* request — but it must never decode to
+/// something outside these bounds.
+fn assert_valid(r: &WireRequest) {
+    assert!(matches!(r.bits, 8 | 16 | 32), "accepted width {}", r.bits);
+    assert!(r.w <= W_MAX, "accepted w {}", r.w);
+    let max = simdive::arith::max_val(r.bits);
+    assert!(r.a <= max && r.b <= max, "accepted out-of-range operands ({}, {})", r.a, r.b);
+    assert!(matches!(r.op, ReqOp::Mul | ReqOp::Div));
+}
+
+fn sample_request(rng: &mut Rng, id: u64) -> WireRequest {
+    let bits = [8u32, 16, 32][rng.below(3) as usize];
+    let budget_ppm =
+        if rng.below(3) == 0 { 1 + rng.below(1_000_000) as u32 } else { 0 };
+    WireRequest {
+        id,
+        op: if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
+        bits,
+        w: rng.below(W_MAX as u64 + 1) as u32,
+        budget_ppm,
+        a: rng.operand(bits),
+        b: rng.operand(bits),
+    }
+}
+
+/// Outcome check shared by the mutation properties: decoding the mutated
+/// bytes must terminate cleanly, and anything accepted must be valid.
+fn check_mutated_client_bytes(buf: &[u8]) {
+    match wire::read_client_frame(&mut Cursor::new(buf)) {
+        Ok(ClientFrame::Requests(reqs)) => {
+            for r in &reqs {
+                assert_valid(r);
+            }
+        }
+        Ok(ClientFrame::Bad(code)) => {
+            assert!(
+                matches!(code, wire::ERR_BAD_FRAME | wire::ERR_BAD_REQUEST),
+                "unknown error code {code}"
+            );
+        }
+        Ok(ClientFrame::Stats) | Ok(ClientFrame::Eof) => {}
+        Err(_) => {} // truncated/garbled I/O surfaces as a clean error
+    }
+}
+
+#[test]
+fn mutated_single_request_frames_never_panic_or_leak_invalid_fields() {
+    let mut rng = Rng::new(SEED_REQ_MUTATION);
+    for case in 0..4_000u64 {
+        let req = sample_request(&mut rng, case);
+        let mut buf = Vec::new();
+        wire::write_request(&mut buf, &req).unwrap();
+        // 1..=4 byte mutations anywhere in the frame (kind byte included).
+        let mutations = 1 + rng.below(4) as usize;
+        for _ in 0..mutations {
+            let pos = rng.below(buf.len() as u64) as usize;
+            buf[pos] ^= (1 + rng.below(255)) as u8;
+        }
+        check_mutated_client_bytes(&buf);
+    }
+}
+
+#[test]
+fn mutated_batch_frames_never_panic_or_leak_invalid_fields() {
+    let mut rng = Rng::new(SEED_BATCH_MUTATION);
+    for case in 0..800u64 {
+        let n = 1 + rng.below(30);
+        let reqs: Vec<WireRequest> =
+            (0..n).map(|i| sample_request(&mut rng, case * 100 + i)).collect();
+        let mut buf = Vec::new();
+        wire::write_batch(&mut buf, &reqs).unwrap();
+        let mutations = 1 + rng.below(6) as usize;
+        for _ in 0..mutations {
+            let pos = rng.below(buf.len() as u64) as usize;
+            buf[pos] ^= (1 + rng.below(255)) as u8;
+        }
+        check_mutated_client_bytes(&buf);
+    }
+}
+
+#[test]
+fn truncated_frames_are_clean_errors() {
+    let mut rng = Rng::new(SEED_BODY_FUZZ);
+    let req = sample_request(&mut rng, 42);
+    let mut buf = Vec::new();
+    wire::write_request(&mut buf, &req).unwrap();
+    wire::write_batch(&mut buf, &[sample_request(&mut rng, 43), sample_request(&mut rng, 44)])
+        .unwrap();
+    // Every strict prefix must either report a clean Eof (empty) or a
+    // clean I/O error (mid-frame cut) — and decode the frames it fully
+    // contains.
+    for cut in 0..buf.len() {
+        let mut cur = Cursor::new(&buf[..cut]);
+        loop {
+            match wire::read_client_frame(&mut cur) {
+                Ok(ClientFrame::Requests(reqs)) => {
+                    for r in &reqs {
+                        assert_valid(r);
+                    }
+                }
+                Ok(ClientFrame::Eof) => break,
+                Ok(ClientFrame::Stats) | Ok(ClientFrame::Bad(_)) => {}
+                Err(e) => {
+                    assert_eq!(
+                        e.kind(),
+                        std::io::ErrorKind::UnexpectedEof,
+                        "cut at {cut}: {e}"
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_request_bodies_decode_or_reject_cleanly() {
+    let mut rng = Rng::new(SEED_BODY_FUZZ ^ 0xB0D1);
+    for _ in 0..20_000 {
+        let mut body = [0u8; REQ_BODY_LEN];
+        for b in body.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        if let Ok(r) = WireRequest::decode_body(&body) {
+            assert_valid(&r);
+            // Accepted bodies re-encode to the very same bytes — decode
+            // accepts nothing encode could not have produced.
+            let mut re = [0u8; REQ_BODY_LEN];
+            r.encode_body(&mut re);
+            assert_eq!(re, body, "decode/encode must be a bijection on accepted bodies");
+        }
+    }
+}
+
+#[test]
+fn mutated_server_frames_never_panic_the_client_side() {
+    let mut rng = Rng::new(SEED_SERVER_FRAME_MUTATION);
+    for _ in 0..4_000 {
+        let mut buf = Vec::new();
+        match rng.below(3) {
+            0 => wire::write_response(&mut buf, rng.next_u64(), rng.next_u64()).unwrap(),
+            1 => wire::write_stats_resp(
+                &mut buf,
+                &WireStats { requests: rng.next_u64(), ..WireStats::default() },
+            )
+            .unwrap(),
+            _ => wire::write_err(&mut buf, wire::ERR_BAD_REQUEST).unwrap(),
+        }
+        let mutations = 1 + rng.below(3) as usize;
+        for _ in 0..mutations {
+            let pos = rng.below(buf.len() as u64) as usize;
+            buf[pos] ^= (1 + rng.below(255)) as u8;
+        }
+        // Any outcome is fine except a panic; a decoded frame is by
+        // construction structurally valid (fixed-size bodies).
+        let _ = wire::read_server_frame(&mut Cursor::new(&buf));
+    }
+}
+
+#[test]
+fn every_frame_kind_roundtrips_through_one_stream() {
+    // hello → REQ (fixed-w) → REQ (budget) → BATCH → STATS on the client
+    // stream; RESP → STATS_RESP → ERR on the server stream.
+    let mut rng = Rng::new(0x2066_57EA);
+    let mut c2s = Vec::new();
+    wire::write_hello(&mut c2s).unwrap();
+    let single = sample_request(&mut rng, 1);
+    let budget = WireRequest { budget_ppm: 12_345, w: 0, ..sample_request(&mut rng, 2) };
+    let batch: Vec<WireRequest> = (3..40).map(|i| sample_request(&mut rng, i)).collect();
+    wire::write_request(&mut c2s, &single).unwrap();
+    wire::write_request(&mut c2s, &budget).unwrap();
+    wire::write_batch(&mut c2s, &batch).unwrap();
+    wire::write_stats_req(&mut c2s).unwrap();
+
+    let mut cur = Cursor::new(&c2s);
+    assert_eq!(wire::read_hello(&mut cur).unwrap(), wire::VERSION);
+    match wire::read_client_frame(&mut cur).unwrap() {
+        ClientFrame::Requests(v) => assert_eq!(v, vec![single]),
+        other => panic!("unexpected frame {other:?}"),
+    }
+    match wire::read_client_frame(&mut cur).unwrap() {
+        ClientFrame::Requests(v) => {
+            assert_eq!(v, vec![budget]);
+            assert_eq!(v[0].budget_ppm, 12_345);
+        }
+        other => panic!("unexpected frame {other:?}"),
+    }
+    match wire::read_client_frame(&mut cur).unwrap() {
+        ClientFrame::Requests(v) => assert_eq!(v, batch),
+        other => panic!("unexpected frame {other:?}"),
+    }
+    assert!(matches!(wire::read_client_frame(&mut cur).unwrap(), ClientFrame::Stats));
+    assert!(matches!(wire::read_client_frame(&mut cur).unwrap(), ClientFrame::Eof));
+
+    let mut s2c = Vec::new();
+    wire::write_hello(&mut s2c).unwrap();
+    let stats = WireStats {
+        requests: 10,
+        words: 4,
+        active_lanes: 14,
+        total_lanes: 16,
+        energy_mpj: 12_500,
+        p50_us: 3,
+        p99_us: 17,
+        conn_requests: 10,
+        conn_p50_us: 3,
+        conn_p99_us: 17,
+    };
+    wire::write_response(&mut s2c, 9, 430).unwrap();
+    wire::write_stats_resp(&mut s2c, &stats).unwrap();
+    wire::write_err(&mut s2c, wire::ERR_BAD_VERSION).unwrap();
+    let mut cur = Cursor::new(&s2c);
+    assert_eq!(wire::read_hello(&mut cur).unwrap(), wire::VERSION);
+    assert!(matches!(
+        wire::read_server_frame(&mut cur).unwrap(),
+        ServerFrame::Resp(r) if r.id == 9 && r.value == 430
+    ));
+    match wire::read_server_frame(&mut cur).unwrap() {
+        ServerFrame::Stats(s) => assert_eq!(s, stats),
+        other => panic!("unexpected frame {other:?}"),
+    }
+    assert!(matches!(
+        wire::read_server_frame(&mut cur).unwrap(),
+        ServerFrame::Err(code) if code == wire::ERR_BAD_VERSION
+    ));
+}
+
+#[test]
+fn server_answers_corrupted_request_body_with_err_and_close() {
+    use std::io::{Read, Write};
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    let mut hello = [0u8; 8];
+    hello[0..4].copy_from_slice(b"SDIV");
+    hello[4..6].copy_from_slice(&wire::VERSION.to_le_bytes());
+    stream.write_all(&hello).unwrap();
+    let mut ack = [0u8; 8];
+    stream.read_exact(&mut ack).unwrap();
+    // A REQ frame whose body fails validation (width byte 24).
+    let mut body = [0u8; REQ_BODY_LEN];
+    WireRequest { id: 1, op: ReqOp::Mul, bits: 8, w: 8, budget_ppm: 0, a: 43, b: 10 }
+        .encode_body(&mut body);
+    body[25] = 24;
+    stream.write_all(&[wire::FRAME_REQ]).unwrap();
+    stream.write_all(&body).unwrap();
+    let mut err = [0u8; 2];
+    stream.read_exact(&mut err).unwrap();
+    assert_eq!(err[0], wire::FRAME_ERR, "expected ERR frame");
+    assert_eq!(err[1], wire::ERR_BAD_REQUEST);
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after ERR");
+    server.shutdown();
+
+    // Same over a reserved-flags violation.
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    stream.write_all(&hello).unwrap();
+    stream.read_exact(&mut ack).unwrap();
+    let mut body = [0u8; REQ_BODY_LEN];
+    WireRequest { id: 1, op: ReqOp::Mul, bits: 8, w: 8, budget_ppm: 0, a: 43, b: 10 }
+        .encode_body(&mut body);
+    body[27] = FLAG_BUDGET | 0x40;
+    stream.write_all(&[wire::FRAME_REQ]).unwrap();
+    stream.write_all(&body).unwrap();
+    stream.read_exact(&mut err).unwrap();
+    assert_eq!((err[0], err[1]), (wire::FRAME_ERR, wire::ERR_BAD_REQUEST));
+    server.shutdown();
+}

@@ -1,6 +1,7 @@
 //! Hot-path throughput: scalar-call vs batched kernels for mul/div at
-//! 8/16/32 bits, plus coordinator round-trip throughput under per-request
-//! and per-batch submission.
+//! 8/16/32 bits, coordinator round-trip throughput under per-request and
+//! per-batch submission, and the engine shard-scaling sweep
+//! (`sharded_rps` at 1/2/4/8 shards — DESIGN.md §10).
 //!
 //! Results go to stdout and to `BENCH_hotpath.json` at the repository
 //! root, so the performance trajectory is tracked PR-over-PR (the JSON
@@ -13,6 +14,7 @@
 //! results (asserted here before timing).
 
 use simdive::arith::{batch, table, DivDesign, MulDesign};
+use simdive::coordinator::{ReqOp, Request};
 use simdive::util::Rng;
 use std::fmt::Write as _;
 use std::hint::black_box;
@@ -119,25 +121,29 @@ fn bench_op(bits: u32, is_div: bool, rng: &mut Rng) -> OpResult {
     r
 }
 
+/// Fixed-w request generator: same workload as pre-v2 benches (every
+/// request at the full 8-LUT knob), so `batched_rps` stays comparable
+/// PR-over-PR.
+fn make(i: u64) -> Request {
+    let bits = [8u32, 8, 16, 32][(i % 4) as usize];
+    Request {
+        id: i,
+        op: if i % 4 == 0 { ReqOp::Div } else { ReqOp::Mul },
+        bits,
+        w: 8,
+        a: 1 + (i % ((1u64 << bits) - 1)),
+        b: 1 + ((i * 7) % ((1u64 << bits) - 1)),
+    }
+}
+
+/// Mixed-accuracy generator: the shared-pool headline workload — every
+/// request picks its own w.
+fn make_mixed(i: u64) -> Request {
+    Request { w: (i % 9) as u32, ..make(i) }
+}
+
 fn bench_coordinator() -> (f64, f64, f64, f64) {
-    use simdive::coordinator::{Coordinator, CoordinatorConfig, ReqOp, Request};
-    // Fixed-w generator: same workload as pre-v2 benches (every request
-    // at the full 8-LUT knob), so `batched_rps` stays comparable
-    // PR-over-PR.
-    let make = |i: u64| {
-        let bits = [8u32, 8, 16, 32][(i % 4) as usize];
-        Request {
-            id: i,
-            op: if i % 4 == 0 { ReqOp::Div } else { ReqOp::Mul },
-            bits,
-            w: 8,
-            a: 1 + (i % ((1u64 << bits) - 1)),
-            b: 1 + ((i * 7) % ((1u64 << bits) - 1)),
-        }
-    };
-    // Mixed-accuracy generator: the coordinator-v2 headline workload —
-    // every request picks its own w, all through one shared pool.
-    let make_mixed = |i: u64| Request { w: (i % 9) as u32, ..make(i) };
+    use simdive::coordinator::{Coordinator, CoordinatorConfig};
     let n = COORD_REQUESTS;
 
     // Per-request submission (one channel per request).
@@ -197,6 +203,54 @@ fn bench_coordinator() -> (f64, f64, f64, f64) {
     (scalar_rps, batched_rps, mixed_rps, mixed_util)
 }
 
+/// Engine shard-scaling sweep (DESIGN.md §10): the mixed-w workload
+/// executed directly through `engine::Sharded` at 1/2/4/8 shards, in
+/// 4096-request streams. The 4+-shard figures exceeding the single-pool
+/// `batched_mixed_w_rps` is the sharding payoff tracked in
+/// `BENCH_hotpath.json` (`coordinator.sharded_rps`).
+fn bench_sharded(n: u64) -> Vec<(usize, f64)> {
+    use simdive::arith::simdive::{simdive_div_w, simdive_mul_w};
+    use simdive::engine::{Engine, ShardedConfig};
+    let expect = |r: &Request| match r.op {
+        ReqOp::Mul => simdive_mul_w(r.bits, r.a, r.b, r.w),
+        ReqOp::Div => simdive_div_w(r.bits, r.a, r.b, r.w),
+    };
+    let reqs: Vec<Request> = (0..n).map(make_mixed).collect();
+    let mut out: Vec<u64> = Vec::new();
+    let mut results = Vec::new();
+    for &shards in &[1usize, 2, 4, 8] {
+        let eng = Engine::sharded(
+            MulDesign::Simdive { w: 8 },
+            DivDesign::Simdive { w: 8 },
+            ShardedConfig { shards, queue_depth: 1024, batch: 64 },
+        );
+        // Bit-exactness gate before timing (the scaling claim is only
+        // worth tracking if the answers stay identical).
+        let gate = 1024.min(reqs.len());
+        eng.execute_stream_into(&reqs[..gate], &mut out);
+        for (r, &got) in reqs[..gate].iter().zip(&out) {
+            assert_eq!(got, expect(r), "sharded x{shards} diverged");
+        }
+        // Warm-up pass, then timed passes for ~0.3 s.
+        for chunk in reqs.chunks(4096) {
+            eng.execute_stream_into(chunk, &mut out);
+        }
+        let t0 = Instant::now();
+        let mut passes = 0u32;
+        while t0.elapsed().as_millis() < 300 {
+            for chunk in reqs.chunks(4096) {
+                eng.execute_stream_into(chunk, &mut out);
+                black_box(&out);
+            }
+            passes += 1;
+        }
+        let rps = (n * passes as u64) as f64 / t0.elapsed().as_secs_f64();
+        println!("[bench] engine sharded x{shards}: {:.1} kreq/s", rps / 1e3);
+        results.push((shards, rps));
+    }
+    results
+}
+
 fn json_op_section(results: &[&OpResult]) -> String {
     let mut s = String::from("{");
     for (k, r) in results.iter().enumerate() {
@@ -227,20 +281,37 @@ fn main() {
     }
     let (coord_scalar_rps, coord_batched_rps, coord_mixed_rps, coord_mixed_util) =
         bench_coordinator();
+    let sharded = bench_sharded(COORD_REQUESTS);
 
-    // Schema note: `batched_mixed_w_rps` and `mixed_w_lane_utilization`
-    // are append-only additions for coordinator v2 (CHANGES.md).
+    // JSON fragments for the shard sweep (`shards` lists the swept
+    // counts; `sharded_rps` maps each count to its throughput).
+    let shard_counts = sharded.iter().map(|(s, _)| s.to_string()).collect::<Vec<_>>().join(", ");
+    let mut sharded_rps = String::from("{");
+    for (k, (s, rps)) in sharded.iter().enumerate() {
+        if k > 0 {
+            sharded_rps.push_str(", ");
+        }
+        write!(sharded_rps, "\"{s}\": {rps:.1}").unwrap();
+    }
+    sharded_rps.push('}');
+
+    // Schema note: `batched_mixed_w_rps`/`mixed_w_lane_utilization`
+    // (coordinator v2) and `shards`/`sharded_rps` (engine sharding) are
+    // append-only additions; the schema name is unchanged (CHANGES.md).
     let json = format!(
         "{{\n  \"schema\": \"simdive-hotpath-v1\",\n  \"elements_per_pass\": {N},\n  \
          \"mul\": {},\n  \"div\": {},\n  \"coordinator\": {{\"requests\": {COORD_REQUESTS}, \
          \"per_request_rps\": {:.1}, \"batched_rps\": {:.1}, \
-         \"batched_mixed_w_rps\": {:.1}, \"mixed_w_lane_utilization\": {:.4}}}\n}}\n",
+         \"batched_mixed_w_rps\": {:.1}, \"mixed_w_lane_utilization\": {:.4}, \
+         \"shards\": [{}], \"sharded_rps\": {}}}\n}}\n",
         json_op_section(&muls.iter().collect::<Vec<_>>()),
         json_op_section(&divs.iter().collect::<Vec<_>>()),
         coord_scalar_rps,
         coord_batched_rps,
         coord_mixed_rps,
         coord_mixed_util,
+        shard_counts,
+        sharded_rps,
     );
     let path = simdive::util::repo_root().join("BENCH_hotpath.json");
     match std::fs::write(&path, &json) {

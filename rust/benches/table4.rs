@@ -13,19 +13,21 @@ fn main() {
         render(scale)
     });
     println!("{table}");
-    // Per-image quantized inference timing.
+    // Per-image quantized inference timing through the engine seam.
     use simdive::ann::{Mlp, QuantMlp};
     use simdive::arith::MulDesign;
     use simdive::datasets::{generate, Family};
+    use simdive::engine::Engine;
     let train = generate(Family::Digits, 1500, 11);
     let mut net = Mlp::new(&[48], 7);
     net.train(&train, 2, 0.1, 8);
     let q = QuantMlp::from_float(&net, &train[..200]);
     let test = generate(Family::Digits, 64, 12);
+    let engine = Engine::from_mul(MulDesign::Simdive { w: 8 });
     let mut i = 0;
     harness::ns_per_op("quantized inference/image (SIMDive mul)", || {
         let ex = &test[i & 63];
         i += 1;
-        std::hint::black_box(q.predict(&ex.pixels, MulDesign::Simdive { w: 8 }));
+        std::hint::black_box(q.predict(&ex.pixels, &engine));
     });
 }

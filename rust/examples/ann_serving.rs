@@ -6,8 +6,9 @@
 //! chosen per request on the wire.
 //!
 //! Each prediction is verified bit-identical to the in-process
-//! `QuantMlp::predict` with the same `MulDesign::Simdive { w }`, so the
-//! network path provably computes the same network.
+//! `QuantMlp::predict` through a batched engine with the same
+//! `MulDesign::Simdive { w }`, so the network path provably computes the
+//! same network.
 //!
 //! Run: `cargo run --release --example ann_serving [-- <test-images>]`
 
@@ -15,6 +16,7 @@ use simdive::ann::{Mlp, QuantMlp};
 use simdive::arith::MulDesign;
 use simdive::coordinator::ReqOp;
 use simdive::datasets::{generate, Family};
+use simdive::engine::Engine;
 use simdive::serve::{Client, ServeConfig, Server, WireRequest};
 use std::time::Instant;
 
@@ -102,13 +104,13 @@ fn main() {
     // configuration and a cheaper 2-LUT one — the trade-off every client
     // picks per request on the wire.
     for w in [8u32, 2] {
-        let design = MulDesign::Simdive { w };
+        let engine = Engine::from_mul(MulDesign::Simdive { w });
         let t0 = Instant::now();
         let mut correct = 0usize;
         let mut requests = 0u64;
         for ex in &test {
             let (pred, issued) = predict_over_wire(&q, &ex.pixels, &mut client, w);
-            let local = q.predict(&ex.pixels, design);
+            let local = q.predict(&ex.pixels, &engine);
             assert_eq!(pred, local, "network and in-process inference diverged at w={w}");
             requests += issued;
             if pred == ex.label as usize {

@@ -1,32 +1,65 @@
-//! Quickstart: the paper's running example (43 × 10, 43 ÷ 10) across
-//! accurate / Mitchell / SIMDive, the tunable-accuracy knob, and a look at
-//! the gate-level unit's calibrated metrics.
+//! Quickstart: the engine seam first (DESIGN.md §10) — one `Engine`
+//! handle runs the paper's running example (43 × 10, 43 ÷ 10) across
+//! accurate / Mitchell / SIMDive, the tunable-accuracy knob, batched
+//! slices, and a mixed-`{bits, w}` word stream — then a look at the
+//! gate-level unit's calibrated metrics.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use simdive::arith::simdive as sd;
-use simdive::arith::{exact, mitchell};
+use simdive::arith::{DivDesign, MulDesign};
+use simdive::coordinator::{ReqOp, Request};
+use simdive::engine::Engine;
 use simdive::fabric::{area, calibrate, timing};
 
 fn main() {
     println!("== SIMDive quickstart ==\n");
+
+    // The engine seam: every design sits behind the same handle. The
+    // substrates (ANN, image, metrics, the serve path) all execute
+    // through this API — so should you.
+    let exact = Engine::accurate();
+    let mitchell = Engine::batched(MulDesign::Mitchell, DivDesign::Mitchell);
+    let simdive = Engine::simdive(8);
+
     println!("paper running example, 8-bit operands a=43 b=10:");
-    println!("  exact    : 43×10 = {:3}   43÷10 = {}", exact::mul(8, 43, 10), exact::div(8, 43, 10));
-    println!("  mitchell : 43×10 = {:3}   43÷10 = {}", mitchell::mul(8, 43, 10), mitchell::div(8, 43, 10));
-    println!("  simdive  : 43×10 = {:3}   43÷10 = {}", sd::simdive_mul(8, 43, 10), sd::simdive_div(8, 43, 10));
+    for (name, eng) in [("exact", &exact), ("mitchell", &mitchell), ("simdive", &simdive)] {
+        println!(
+            "  {name:<8} : 43×10 = {:3}   43÷10 = {}",
+            eng.mul(8, 43, 10),
+            eng.div(8, 43, 10)
+        );
+    }
 
     println!("\ntunable accuracy (w = number of coefficient LUTs):");
     for w in [0u32, 2, 4, 8] {
-        let p = sd::simdive_mul_w(8, 43, 10, w);
-        println!("  w={w}: 43×10 = {p:3}  (exact 430)");
+        println!("  w={w}: 43×10 = {:3}  (exact 430)", Engine::simdive(w).mul(8, 43, 10));
     }
+
+    // Batched slices: one call, tables resolved once, bit-identical to
+    // the scalar path.
+    let a: [u64; 4] = [43, 43, 200, 255];
+    let b: [u64; 4] = [10, 13, 3, 2];
+    let mut prods = Vec::new();
+    simdive.mul_into(8, &a, &b, &mut prods);
+    println!("\nbatched 8-bit multiplies through the engine: {prods:?}");
+
+    // A mixed-{bits, w} word stream — what the coordinator shards execute
+    // under serving traffic, available in-process through the same seam.
+    let reqs = [
+        Request { id: 0, op: ReqOp::Mul, bits: 8, w: 8, a: 43, b: 10 },
+        Request { id: 1, op: ReqOp::Div, bits: 8, w: 2, a: 200, b: 13 },
+        Request { id: 2, op: ReqOp::Mul, bits: 16, w: 5, a: 300, b: 21 },
+        Request { id: 3, op: ReqOp::Div, bits: 32, w: 0, a: 1 << 20, b: 3 },
+    ];
+    let vals = simdive.execute_stream(&reqs);
+    println!("mixed {{bits, w}} stream (mul/div, 8/16/32-bit): {vals:?}");
 
     println!("\ngate-level 16-bit hybrid multiplier-divider (calibrated Virtex-7 model):");
     let nl = simdive::circuits::simdive::hybrid(16, 8);
     let cal = calibrate::fitted();
-    let a = area::report(&nl);
+    let ar = area::report(&nl);
     let t = timing::analyze(&nl, cal);
-    println!("  area  : {} LUT6 ({} CARRY4)", a.luts, a.carry4);
+    println!("  area  : {} LUT6 ({} CARRY4)", ar.luts, ar.carry4);
     println!("  delay : {:.2} ns critical path ({} logic levels)", t.critical_ns, t.levels);
     println!("\nNext: `cargo run --release table2` regenerates paper Table 2.");
 }

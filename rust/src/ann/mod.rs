@@ -1,15 +1,16 @@
 //! ANN substrate for Table 4: a fully-connected network (784 → 100 [→ 100]
 //! → 10, as in the paper's MNIST-CNN-derived MLP [1]) trained in floating
 //! point, then quantized to 8-bit fixed point for inference where every
-//! weight×activation product routes through a pluggable multiplier —
-//! accurate, SIMDive, or MBM.
+//! weight×activation product routes through a pluggable
+//! [`Engine`] — accurate, SIMDive, or MBM behind the one execution seam
+//! (DESIGN.md §10).
 //!
 //! Training runs either here (self-contained, used by the Table-4 bench)
 //! or in `python/compile/train.py` (for the PJRT serving artifacts); both
 //! consume the same synthetic datasets ([`crate::datasets`]).
 
-use crate::arith::MulDesign;
 use crate::datasets::{Example, CLASSES, IMG};
+use crate::engine::Engine;
 use crate::util::Rng;
 
 /// Float MLP: weights `w[l]` are `[out × in]` row-major.
@@ -169,7 +170,9 @@ impl QuantMlp {
             let wmax = net.w[l].iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-6);
             let sw = 127.0 / wmax;
             let sa = 255.0 / act_max[l].max(1e-6); // activation scale into u8
-            w_q.push(net.w[l].iter().map(|&v| (v * sw).round().clamp(-127.0, 127.0) as i8).collect());
+            w_q.push(
+                net.w[l].iter().map(|&v| (v * sw).round().clamp(-127.0, 127.0) as i8).collect(),
+            );
             b_q.push(net.b[l].iter().map(|&v| (v * sw * sa) as i64).collect());
             // acc units = value · sw · sa ; next activation u8 = value ·
             // sa_next ⇒ requant = sa_next / (sw · sa).
@@ -180,16 +183,17 @@ impl QuantMlp {
     }
 
     /// Quantized forward pass with a pluggable 8-bit multiplier. Products
-    /// are `|w| × a` through `design` (both operands 8-bit unsigned, as in
-    /// the SIMDive lane), signs re-applied, accumulation exact.
+    /// are `|w| × a` through the engine's multiplier design (both operands
+    /// 8-bit unsigned, as in the SIMDive lane), signs re-applied,
+    /// accumulation exact.
     ///
     /// The weight×activation products of a whole layer are gathered into
-    /// operand slices and evaluated through one
-    /// [`MulDesign::mul_batch_into`] call (the batched SIMDive kernel,
-    /// DESIGN.md §6) instead of one scalar dispatch per weight — the
-    /// per-neuron skip of zero operands and the accumulation order are
-    /// unchanged, so results are bit-identical to the scalar path.
-    pub fn predict(&self, pixels: &[u8], design: MulDesign) -> usize {
+    /// operand slices and evaluated through one [`Engine::mul_into`] call
+    /// (the engine seam, DESIGN.md §10) instead of one scalar dispatch per
+    /// weight — the per-neuron skip of zero operands and the accumulation
+    /// order are unchanged, so results are bit-identical to the scalar
+    /// path for every backend.
+    pub fn predict(&self, pixels: &[u8], engine: &Engine) -> usize {
         let layers = self.w_q.len();
         let mut act: Vec<u8> = pixels.to_vec();
         // Reusable per-layer gather buffers (operands, signs, row bounds).
@@ -217,7 +221,7 @@ impl QuantMlp {
                 }
                 row_end.push(ops_w.len());
             }
-            design.mul_batch_into(8, &ops_w, &ops_a, &mut prods);
+            engine.mul_into(8, &ops_w, &ops_a, &mut prods);
             let mut next = vec![0u8; fan_out];
             let mut logits = vec![0i64; fan_out];
             let mut start = 0usize;
@@ -250,10 +254,10 @@ impl QuantMlp {
         unreachable!()
     }
 
-    /// Accuracy with the given multiplier.
-    pub fn accuracy(&self, data: &[Example], design: MulDesign) -> f64 {
+    /// Accuracy with the given engine.
+    pub fn accuracy(&self, data: &[Example], engine: &Engine) -> f64 {
         let correct =
-            data.iter().filter(|ex| self.predict(&ex.pixels, design) == ex.label as usize).count();
+            data.iter().filter(|ex| self.predict(&ex.pixels, engine) == ex.label as usize).count();
         correct as f64 / data.len() as f64
     }
 }
@@ -261,6 +265,7 @@ impl QuantMlp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arith::MulDesign;
     use crate::datasets::{generate, Family};
 
     fn small_net(family: Family) -> (Mlp, Vec<Example>, Vec<Example>) {
@@ -283,7 +288,7 @@ mod tests {
         let (net, train, test) = small_net(Family::Digits);
         let q = QuantMlp::from_float(&net, &train[..200]);
         let fa = net.accuracy(&test);
-        let qa = q.accuracy(&test, MulDesign::Accurate);
+        let qa = q.accuracy(&test, &Engine::from_mul(MulDesign::Accurate));
         assert!(qa > fa - 0.08, "float {fa} vs quant {qa}");
     }
 
@@ -293,15 +298,15 @@ mod tests {
         // (± noise), thanks to ANN error resilience.
         let (net, train, test) = small_net(Family::Digits);
         let q = QuantMlp::from_float(&net, &train[..200]);
-        let qa = q.accuracy(&test, MulDesign::Accurate);
-        let qs = q.accuracy(&test, MulDesign::Simdive { w: 8 });
-        let qm = q.accuracy(&test, MulDesign::Mbm);
+        let qa = q.accuracy(&test, &Engine::from_mul(MulDesign::Accurate));
+        let qs = q.accuracy(&test, &Engine::from_mul(MulDesign::Simdive { w: 8 }));
+        let qm = q.accuracy(&test, &Engine::from_mul(MulDesign::Mbm));
         assert!((qa - qs).abs() < 0.05, "accurate {qa} vs simdive {qs}");
         assert!((qa - qm).abs() < 0.08, "accurate {qa} vs mbm {qm}");
     }
 
     /// Reference scalar forward pass (one `design.mul` dispatch per
-    /// weight) — the pre-batching hot path, kept as the equivalence oracle.
+    /// weight) — the pre-engine hot path, kept as the equivalence oracle.
     fn scalar_predict(q: &QuantMlp, pixels: &[u8], design: MulDesign) -> usize {
         let layers = q.w_q.len();
         let mut act: Vec<u8> = pixels.to_vec();
@@ -341,9 +346,10 @@ mod tests {
         let (net, train, test) = small_net(Family::Digits);
         let q = QuantMlp::from_float(&net, &train[..200]);
         for design in [MulDesign::Simdive { w: 8 }, MulDesign::Accurate, MulDesign::Mbm] {
+            let engine = Engine::from_mul(design);
             for ex in &test[..60] {
                 assert_eq!(
-                    q.predict(&ex.pixels, design),
+                    q.predict(&ex.pixels, &engine),
                     scalar_predict(&q, &ex.pixels, design),
                     "design {}",
                     design.name()
@@ -353,10 +359,31 @@ mod tests {
     }
 
     #[test]
+    fn inference_is_backend_invariant() {
+        // The engine-seam contract holds end to end: reference, batched
+        // and sharded backends classify every example identically.
+        let (net, train, test) = small_net(Family::Digits);
+        let q = QuantMlp::from_float(&net, &train[..200]);
+        let design = MulDesign::Simdive { w: 8 };
+        let batched = Engine::from_mul(design);
+        let reference = Engine::reference(design, crate::arith::DivDesign::Accurate);
+        let sharded = Engine::sharded(
+            design,
+            crate::arith::DivDesign::Accurate,
+            crate::engine::ShardedConfig { shards: 2, queue_depth: 256, batch: 32 },
+        );
+        for ex in &test[..20] {
+            let want = q.predict(&ex.pixels, &reference);
+            assert_eq!(q.predict(&ex.pixels, &batched), want);
+            assert_eq!(q.predict(&ex.pixels, &sharded), want);
+        }
+    }
+
+    #[test]
     fn fashion_trains_too() {
         let (net, train, test) = small_net(Family::Fashion);
         let q = QuantMlp::from_float(&net, &train[..200]);
-        let qa = q.accuracy(&test, MulDesign::Accurate);
+        let qa = q.accuracy(&test, &Engine::from_mul(MulDesign::Accurate));
         assert!(qa > 0.6, "fashion quant accuracy {qa}");
     }
 }

@@ -66,7 +66,7 @@ mod tests {
         // If both operands already fit in m/n bits nothing is truncated.
         for a in 1..128u64 {
             for b in 1..16u64 {
-                assert_eq!(aaxd_div(16, 8, 4, a << 0, b), if b <= 15 && a <= 255 { a / b } else { a / b });
+                assert_eq!(aaxd_div(16, 8, 4, a, b), a / b);
             }
         }
     }

@@ -25,7 +25,7 @@
 //! arithmetic is the same [`frac_aligned`] → correction → decode pipeline,
 //! verified by the property tests below and in `tests/batch_props.rs`.
 
-use super::mitchell::{div_decode, frac_aligned, mul_decode};
+use super::mitchell::{div_decode, div_decode_real, frac_aligned, mul_decode, mul_decode_real};
 use super::simd::{LaneMode, SimdOp, SimdWord};
 use super::table::{tables_for, CorrectionTables, W_MAX};
 
@@ -124,6 +124,67 @@ pub fn div_batch(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64]) -> Vec<u
     let mut out = vec![0u64; a.len()];
     div_batch_into(t, bits, a, b, &mut out);
     out
+}
+
+/// One batched real-valued multiply element. Identical arithmetic to
+/// [`simdive_mul_real_w`](super::simdive::simdive_mul_real_w) — the
+/// behavioral error-analysis form (paper §4.1).
+#[inline(always)]
+fn mul_one_real(rc: &Rescaled, bits: u32, region_shift: u32, a: u64, b: u64) -> f64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if a == 0 || b == 0 {
+        return 0.0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = rc.corr[pair_index(region_shift, f1, f2)];
+    mul_decode_real(bits, k1, k2, f1 as i64 + f2 as i64 + corr)
+}
+
+/// One batched real-valued divide element. Identical arithmetic to
+/// [`simdive_div_real_w`](super::simdive::simdive_div_real_w).
+#[inline(always)]
+fn div_one_real(rc: &Rescaled, bits: u32, region_shift: u32, max: f64, a: u64, b: u64) -> f64 {
+    debug_assert!(super::fits(a, bits) && super::fits(b, bits));
+    if b == 0 {
+        return max;
+    }
+    if a == 0 {
+        return 0.0;
+    }
+    let (k1, f1) = frac_aligned(bits, a);
+    let (k2, f2) = frac_aligned(bits, b);
+    let corr = rc.corr[pair_index(region_shift, f1, f2)];
+    div_decode_real(bits, k1, k2, f1 as i64 - f2 as i64 + corr)
+}
+
+/// Batched real-valued SIMDive multiply: `out[i] =
+/// simdive_mul_real_w(bits, a[i], b[i], t.w)` exactly, with the table
+/// resolution and coefficient rescale hoisted out of the loop. This is
+/// what the error sweeps (`metrics::error`, the Table-2/tunable reports)
+/// evaluate through the engine seam instead of one scalar dispatch per
+/// sample.
+pub fn mul_real_batch_into(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let rc = Rescaled::new(&t.mul_flat, bits);
+    let region_shift = bits - 4;
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = mul_one_real(&rc, bits, region_shift, x, y);
+    }
+}
+
+/// Batched real-valued SIMDive divide: `out[i] = simdive_div_real_w(bits,
+/// a[i], b[i], t.w)` exactly (`b == 0 → max_val(bits)` as a real).
+pub fn div_real_batch_into(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let rc = Rescaled::new(&t.div_flat, bits);
+    let region_shift = bits - 4;
+    let max = super::max_val(bits) as f64;
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = div_one_real(&rc, bits, region_shift, max, x, y);
+    }
 }
 
 /// Rescaled mul+div coefficient grids for every lane width, computed once
@@ -317,8 +378,16 @@ mod tests {
                 let m = mul_batch(t, bits, &a, &b);
                 let d = div_batch(t, bits, &a, &b);
                 for i in 0..a.len() {
-                    assert_eq!(m[i], simdive_mul_with(t, bits, a[i], b[i]), "mul w={w} bits={bits}");
-                    assert_eq!(d[i], simdive_div_with(t, bits, a[i], b[i]), "div w={w} bits={bits}");
+                    assert_eq!(
+                        m[i],
+                        simdive_mul_with(t, bits, a[i], b[i]),
+                        "mul w={w} bits={bits}"
+                    );
+                    assert_eq!(
+                        d[i],
+                        simdive_div_with(t, bits, a[i], b[i]),
+                        "div w={w} bits={bits}"
+                    );
                 }
             }
         }
@@ -404,6 +473,45 @@ mod tests {
                 ws[i]
             );
         }
+    }
+
+    #[test]
+    fn real_batch_matches_scalar_real_all_widths_and_w() {
+        use crate::arith::simdive::{simdive_div_real_w, simdive_mul_real_w};
+        let mut rng = Rng::new(0xF10A);
+        for &bits in &crate::arith::WIDTHS {
+            for w in [0u32, 3, 8] {
+                let t = tables_for(w);
+                let mut a: Vec<u64> = (0..256).map(|_| rng.below(1u64 << bits)).collect();
+                let b: Vec<u64> = (0..256).map(|_| rng.below(1u64 << bits)).collect();
+                a[0] = 0; // exercise the zero conventions too
+                let mut m = vec![0.0f64; a.len()];
+                let mut d = vec![0.0f64; a.len()];
+                mul_real_batch_into(t, bits, &a, &b, &mut m);
+                div_real_batch_into(t, bits, &a, &b, &mut d);
+                for i in 0..a.len() {
+                    assert_eq!(
+                        m[i],
+                        simdive_mul_real_w(bits, a[i], b[i], w),
+                        "mul w={w} bits={bits}"
+                    );
+                    assert_eq!(
+                        d[i],
+                        simdive_div_real_w(bits, a[i], b[i], w),
+                        "div w={w} bits={bits}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn real_batch_zero_divisor_saturates() {
+        let t = tables_for(8);
+        let mut out = [0.0f64; 2];
+        div_real_batch_into(t, 16, &[100, 0], &[0, 0], &mut out);
+        assert_eq!(out[0], 65535.0);
+        assert_eq!(out[1], 65535.0, "0/0 follows b==0 first");
     }
 
     #[test]

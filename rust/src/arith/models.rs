@@ -61,6 +61,27 @@ impl MulDesign {
         }
     }
 
+    /// Batched real-valued evaluation into a reusable buffer: `out[i] =
+    /// self.mul_real(bits, a[i], b[i])` exactly. SIMDive routes through
+    /// the [`batch`](super::batch) real-valued slice kernel (tables and
+    /// rescale resolved once per call — what the error sweeps hit via the
+    /// engine seam); the other designs fall back to per-element calls.
+    pub fn mul_real_batch_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<f64>) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.resize(a.len(), 0.0);
+        match *self {
+            MulDesign::Simdive { w } => {
+                batch::mul_real_batch_into(table::tables_for(w), bits, a, b, out)
+            }
+            _ => {
+                for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                    *o = self.mul_real(bits, x, y);
+                }
+            }
+        }
+    }
+
     /// Real-valued output for error analysis (the paper's behavioral-model
     /// form; integer designs return their integer result as a real).
     #[inline]
@@ -151,6 +172,26 @@ impl DivDesign {
         }
     }
 
+    /// Batched real-valued evaluation into a reusable buffer: `out[i] =
+    /// self.div_real(bits, a[i], b[i])` exactly. SIMDive routes through
+    /// the [`batch`](super::batch) real-valued slice kernel; the other
+    /// designs fall back to per-element calls.
+    pub fn div_real_batch_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<f64>) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.resize(a.len(), 0.0);
+        match *self {
+            DivDesign::Simdive { w } => {
+                batch::div_real_batch_into(table::tables_for(w), bits, a, b, out)
+            }
+            _ => {
+                for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                    *o = self.div_real(bits, x, y);
+                }
+            }
+        }
+    }
+
     /// Real-valued output for error analysis (behavioral-model form).
     #[inline]
     pub fn div_real(&self, bits: u32, a: u64, b: u64) -> f64 {
@@ -236,6 +277,26 @@ mod tests {
             d.div_batch_into(16, &a, &b, &mut out);
             for i in 0..a.len() {
                 assert_eq!(out[i], d.div(16, a[i], b[i]), "{} at {i}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_real_dispatch_matches_scalar_for_every_design() {
+        let mut rng = crate::util::Rng::new(43);
+        let a: Vec<u64> = (0..200).map(|_| rng.below(1 << 16)).collect();
+        let b: Vec<u64> = (0..200).map(|_| rng.below(1 << 16)).collect();
+        let mut out = Vec::new();
+        for d in MulDesign::table2_rows() {
+            d.mul_real_batch_into(16, &a, &b, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i], d.mul_real(16, a[i], b[i]), "{} at {i}", d.name());
+            }
+        }
+        for d in DivDesign::table2_rows() {
+            d.div_real_batch_into(16, &a, &b, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i], d.div_real(16, a[i], b[i]), "{} at {i}", d.name());
             }
         }
     }

@@ -227,7 +227,8 @@ mod tests {
         for w in 1..8u32 {
             let a = CorrectionTables::generate(w);
             let b = CorrectionTables::generate(w + 1);
-            let tol = (2f64.powi(-((w + 3) as i32)) * (1 << TABLE_RESOLUTION_BITS) as f64) as i32 + 1;
+            let tol =
+                (2f64.powi(-((w + 3) as i32)) * (1 << TABLE_RESOLUTION_BITS) as f64) as i32 + 1;
             for i in 0..8 {
                 for j in 0..8 {
                     assert!((a.mul[i][j] - b.mul[i][j]).abs() <= tol);

@@ -113,7 +113,10 @@ mod tests {
         }
         let (are77, are157) = (e77 / n as f64 * 100.0, e157 / n as f64 * 100.0);
         assert!(are157 < are77, "15x7 {are157}% must beat 7x7 {are77}%");
-        assert!(are77 > 2.0 * are157 * 0.5 && are77 < 4.0 * are157, "ratio off: {are77} vs {are157}");
+        assert!(
+            are77 > 2.0 * are157 * 0.5 && are77 < 4.0 * are157,
+            "ratio off: {are77} vs {are157}"
+        );
         assert!(are77 < 6.0, "7x7 ARE {are77}%");
         assert!(are157 < 3.0, "15x7 ARE {are157}%");
     }

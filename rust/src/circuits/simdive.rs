@@ -365,7 +365,13 @@ mod tests {
                     ("mode", mode_bits),
                 ])[0]
                     .1;
-                assert_eq!(got, want, "cfg {cfg:?} a={:#x} b={:#x} modes {modes:?}", word.a, word.b);
+                assert_eq!(
+                    got,
+                    want,
+                    "cfg {cfg:?} a={:#x} b={:#x} modes {modes:?}",
+                    word.a,
+                    word.b
+                );
             }
         }
     }

@@ -1,16 +1,19 @@
-//! L3 coordinator: the SIMD dispatch engine.
+//! L3 coordinator: the SIMD dispatch front end.
 //!
 //! SIMDive's architectural point is that one 32-bit unit serves mixed
 //! precision *and* mixed functionality at once. Coordinator v2 (DESIGN.md
 //! §9) extends the serving side of that claim to mixed *accuracy*:
 //! scalar multiply/divide requests at 8/16/32-bit precision — each
-//! carrying its own accuracy knob `w` — arrive on one queue, the
-//! [`packer`]'s word assembler bin-packs them into 32-bit SIMD word-ops
-//! from per-`{bits, w}` sub-queues drained round-robin, and a single
-//! shared pool of worker threads executes the packed words on the
-//! behavioral SIMDive unit through the multi-accuracy batched kernel,
-//! with per-word energy/latency accounting from the calibrated fabric
-//! model and power gating for idle lanes.
+//! carrying its own accuracy knob `w` — are bin-packed by the [`packer`]'s
+//! word assembler into 32-bit SIMD word-ops from per-`{bits, w}`
+//! sub-queues, with per-word energy/latency accounting from the
+//! calibrated fabric model and power gating for idle lanes.
+//!
+//! Execution lives behind the engine seam (DESIGN.md §10): [`server`]'s
+//! [`Coordinator`] is a submission front end over
+//! [`engine::Sharded`](crate::engine::Sharded) — N independent shards,
+//! each owning its own assembler and rescaled correction tables, fed
+//! round-robin. Scaling the pool is a shard-count knob, not a rewrite.
 //!
 //! Clients that think in error budgets rather than LUT counts go through
 //! [`profile`]: a precomputed `{op, width, w} → MRED` table routes a

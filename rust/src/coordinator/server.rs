@@ -1,57 +1,42 @@
-//! Threaded coordinator v2: bounded request queue (backpressure), a
-//! batcher that drains the queue into the mixed-`{bits, w}` word
-//! [`Assembler`], one shared worker pool executing packed words through
-//! the multi-accuracy batched kernel, and accounting (latency, energy
-//! from the calibrated fabric model, lane utilization, power-gated idle
-//! lanes). std::thread + mpsc — tokio is unavailable offline (DESIGN.md
-//! §1).
+//! Coordinator front end over the sharded execution engine.
 //!
-//! Hot-path structure (DESIGN.md §6, §9):
+//! The batcher-plus-worker-pool of coordinator v2 is gone: request
+//! assembly and execution both live in [`engine::Sharded`] (DESIGN.md
+//! §10), a pool of independent shards each owning its own mixed-`{bits,
+//! w}` word [`Assembler`](super::packer::Assembler) and its own bank of
+//! rescaled correction tables. This module keeps the submission surface
+//! the serve layer and the benches speak:
 //!
-//! * **One pool for every accuracy tier.** Requests carry their own `w`;
-//!   the assembler keeps per-`{bits, w}` sub-queues drained round-robin,
-//!   so mixed-accuracy traffic shares one worker pool instead of
-//!   fragmenting across per-`w` coordinators. Words are emitted eagerly
-//!   while full; partial residues are held to merge with later arrivals
-//!   of the same tier, flushed the instant the queue idles (and at a
-//!   round cap under saturation), so a lone request is never stranded.
-//! * **O(1) response routing.** Response routes ride lane-aligned inside
-//!   each assembled word ([`Assembled::payload`]), so every route lookup
-//!   is a direct index — there are no linear `find` scans anywhere on
-//!   the request path.
-//! * **Per-batch response channels.** [`Coordinator::submit_batch`] sends
-//!   a whole request batch with *one* response channel; workers tag each
-//!   response with its request-index slot and [`BatchHandle::wait`]
-//!   reassembles in submission order. The per-request channel of
-//!   [`Coordinator::submit`] remains for single-shot callers.
-//! * **Per-worker feeds.** Each worker owns its own channel, fed
-//!   round-robin with contiguous chunks of packed words, so workers never
-//!   contend on a shared `Mutex<Receiver>`; chunks execute through a
-//!   [`batch::MultiKernel`](crate::arith::batch::MultiKernel) whose
-//!   correction-table rescales (all nine accuracy knobs) are resolved
-//!   once per worker thread.
+//! * [`Coordinator::submit`] — one request, one response channel;
+//! * [`Coordinator::submit_batch`] — one response channel per batch,
+//!   request-index slots, reassembled in order by [`BatchHandle::wait`];
+//! * [`Coordinator::submit_batch_streaming`] — caller-owned channel, no
+//!   reassembly barrier (the network serve path, DESIGN.md §8).
+//!
+//! Submissions are split into `cfg.batch`-sized chunks dispatched
+//! round-robin across the shards, so the bounded per-shard queues apply
+//! backpressure to every submitter and a chunk's requests assemble
+//! together on one shard (packing quality tracks the chunk size).
+//! Results are bit-identical to the scalar models for every `{op, bits,
+//! w}` and invariant under the shard count (`tests/engine_props.rs`).
 
-use super::packer::{lane_value, Assembled, Assembler, Request};
-use crate::arith::batch;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+use super::packer::Request;
+use crate::engine::sharded::{Route, Sharded, ShardedConfig, StatsHandle};
+use std::sync::mpsc::{Receiver, Sender};
 
-/// A completed request.
-#[derive(Clone, Copy, Debug)]
-pub struct Response {
-    pub id: u64,
-    pub value: u64,
-}
+// Re-exported so the serve layer and external callers keep one import
+// path for the coordinator surface.
+pub use crate::engine::sharded::{simd_word_energy_pj, Response, Stats, IDLE_FRACTION};
 
 /// Coordinator configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
+    /// Worker shards of the execution pool.
     pub workers: usize,
-    /// Bounded queue depth (backpressure: submit blocks when full).
+    /// Bounded per-shard queue depth (backpressure: submit blocks when a
+    /// shard's queue is full).
     pub queue_depth: usize,
-    /// Max requests drained into one packing batch.
+    /// Max requests per dispatch chunk (and per shard emission round).
     pub batch: usize,
 }
 
@@ -61,146 +46,11 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Aggregate statistics.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct Stats {
-    pub requests: u64,
-    pub words: u64,
-    pub active_lanes: u64,
-    pub total_lanes: u64,
-    /// Estimated energy (pJ) from the calibrated per-word figure, with
-    /// idle lanes power-gated to ~10% of their share.
-    pub energy_pj: f64,
-}
-
-impl Stats {
-    pub fn lane_utilization(&self) -> f64 {
-        if self.total_lanes == 0 {
-            0.0
-        } else {
-            self.active_lanes as f64 / self.total_lanes as f64
-        }
-    }
-
-    /// Fold another snapshot into this one (aggregation across
-    /// coordinators, e.g. in multi-process roll-ups).
-    pub fn merge(&mut self, other: &Stats) {
-        self.requests += other.requests;
-        self.words += other.words;
-        self.active_lanes += other.active_lanes;
-        self.total_lanes += other.total_lanes;
-        self.energy_pj += other.energy_pj;
-    }
-}
-
-struct Shared {
-    requests: AtomicU64,
-    words: AtomicU64,
-    active_lanes: AtomicU64,
-    total_lanes: AtomicU64,
-    energy_mpj: AtomicU64, // milli-pJ, to keep atomic integer math
-}
-
-/// Where a completed request's response goes.
-#[derive(Clone)]
-enum Route {
-    /// Dedicated per-request channel ([`Coordinator::submit`]).
-    Single(Sender<Response>),
-    /// Shared per-batch channel + request-index slot
-    /// ([`Coordinator::submit_batch`]).
-    Slot(Sender<(u32, Response)>, u32),
-}
-
-impl Route {
-    #[inline]
-    fn send(&self, resp: Response) {
-        match self {
-            Route::Single(tx) => {
-                let _ = tx.send(resp);
-            }
-            Route::Slot(tx, slot) => {
-                let _ = tx.send((*slot, resp));
-            }
-        }
-    }
-}
-
-/// One packed word plus its lane-aligned response routes (the assembler's
-/// payload slot `l` routes the request in lane `l` — direct index, no
-/// scan).
-type Job = Assembled<Route>;
-
-enum Msg {
-    Req(Request, Route),
-    /// A chunk of a batch submission: requests, the slot index of the
-    /// first one, and the batch's shared response channel. Large batches
-    /// are split into `cfg.batch`-sized chunks so the bounded queue's
-    /// backpressure still applies to batch submitters.
-    Batch(Vec<Request>, u32, Sender<(u32, Response)>),
-    Flush,
-    Stop,
-}
-
-/// Batcher control flow after folding in one queue message.
-enum Flow {
-    /// Keep draining into the current batch.
-    Drain,
-    /// Close the current batch now (flush partial residues too).
-    CloseBatch,
-    /// Shut the coordinator down.
-    Stop,
-}
-
-/// Residues survive at most this many consecutive full-word emission
-/// rounds under sustained traffic before being force-flushed — a rare
-/// `{bits, w}` tier must not be starved by a saturated queue that never
-/// goes empty. (When the queue *does* go empty, everything flushes
-/// immediately — residues never wait on traffic that may not come.)
-const MAX_HELD_ROUNDS: u32 = 4;
-
-/// One batcher emission round: emit words from the assembler (full words
-/// only while residues may still merge, everything when `flush` or the
-/// round cap hits) and dispatch them round-robin to the workers in
-/// contiguous chunks. Returns false when the workers are gone.
-fn emit_and_dispatch(
-    asm: &mut Assembler<Route>,
-    words: &mut Vec<Job>,
-    work_txs: &[SyncSender<Vec<Job>>],
-    rr: &mut usize,
-    held_rounds: &mut u32,
-    flush: bool,
-) -> bool {
-    words.clear();
-    if flush || *held_rounds >= MAX_HELD_ROUNDS {
-        asm.emit_all(words);
-    } else {
-        asm.emit_full(words);
-    }
-    *held_rounds = if asm.is_empty() { 0 } else { *held_rounds + 1 };
-    if words.is_empty() {
-        return true;
-    }
-    let n_workers = work_txs.len();
-    let chunk = words.len().div_ceil(n_workers).max(1);
-    let mut iter = words.drain(..);
-    loop {
-        let chunk_jobs: Vec<Job> = iter.by_ref().take(chunk).collect();
-        if chunk_jobs.is_empty() {
-            return true;
-        }
-        if work_txs[*rr % n_workers].send(chunk_jobs).is_err() {
-            return false;
-        }
-        *rr = rr.wrapping_add(1);
-    }
-}
-
 /// The coordinator front end.
 pub struct Coordinator {
-    tx: SyncSender<Msg>,
-    batcher: Option<JoinHandle<()>>,
-    shared: Arc<Shared>,
-    /// Chunk size for splitting batch submissions (`cfg.batch`).
+    pool: Sharded,
+    stats: StatsHandle,
+    /// Chunk size for splitting submissions (`cfg.batch`).
     batch_chunk: usize,
 }
 
@@ -237,211 +87,27 @@ impl BatchHandle {
     }
 }
 
-/// Per-word energy estimate (pJ) with power gating: idle lanes of a word
-/// consume `IDLE_FRACTION` of their proportional share.
-pub const IDLE_FRACTION: f64 = 0.1;
-
-fn word_energy_pj(per_word_pj: f64, active: u32, lanes: u32) -> f64 {
-    let share = per_word_pj / lanes as f64;
-    share * active as f64 + share * (lanes - active) as f64 * IDLE_FRACTION
-}
-
-/// Milli-pJ increment added to the shared energy counter for a chunk's
-/// energy. Rounds to nearest — truncation would floor every chunk's
-/// fractional milli-pJ and drift `Stats::energy_pj` low over millions of
-/// words.
-#[inline]
-fn energy_increment_mpj(energy_pj: f64) -> u64 {
-    (energy_pj * 1000.0).round() as u64
-}
-
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Self {
-        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
-        let shared = Arc::new(Shared {
-            requests: AtomicU64::new(0),
-            words: AtomicU64::new(0),
-            active_lanes: AtomicU64::new(0),
-            total_lanes: AtomicU64::new(0),
-            energy_mpj: AtomicU64::new(0),
+        let pool = Sharded::start(ShardedConfig {
+            shards: cfg.workers.max(1),
+            queue_depth: cfg.queue_depth,
+            batch: cfg.batch.max(1),
         });
+        let stats = pool.stats_handle();
+        Coordinator { pool, stats, batch_chunk: cfg.batch.max(1) }
+    }
 
-        // Calibrated per-word energy of the 32-bit SIMD unit (computed
-        // once; the gate-level characterization is cached globally).
-        let per_word_pj = simd_word_energy_pj();
-
-        // Worker pool: one channel per worker (no shared-receiver lock),
-        // fed round-robin by the batcher.
-        let n_workers = cfg.workers.max(1);
-        let mut work_txs: Vec<SyncSender<Vec<Job>>> = Vec::with_capacity(n_workers);
-        let mut workers = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            let (work_tx, work_rx) = sync_channel::<Vec<Job>>(cfg.queue_depth.max(16));
-            work_txs.push(work_tx);
-            let shared = Arc::clone(&shared);
-            workers.push(std::thread::spawn(move || {
-                // Coefficient rescales for every {width, w} hoisted once
-                // per worker thread, not once per chunk.
-                let kernel = batch::MultiKernel::new();
-                let mut ws = Vec::new();
-                let mut ops = Vec::new();
-                let mut words = Vec::new();
-                let mut results = Vec::new();
-                while let Ok(jobs) = work_rx.recv() {
-                    // Execute the whole chunk through the batched kernel.
-                    ws.clear();
-                    ws.extend(jobs.iter().map(|j| j.pw.w));
-                    ops.clear();
-                    ops.extend(jobs.iter().map(|j| j.pw.op));
-                    words.clear();
-                    words.extend(jobs.iter().map(|j| j.pw.word));
-                    results.clear();
-                    results.resize(jobs.len(), 0);
-                    kernel.execute_mixed_into(&ws, &ops, &words, &mut results);
-
-                    let (mut active, mut total) = (0u64, 0u64);
-                    let mut energy = 0.0f64;
-                    for (job, &packed) in jobs.iter().zip(&results) {
-                        let pw = &job.pw;
-                        active += pw.active_lanes as u64;
-                        total += pw.lane_count() as u64;
-                        energy +=
-                            word_energy_pj(per_word_pj, pw.active_lanes, pw.lane_count() as u32);
-                        for (l, route) in job.payload.iter().enumerate().take(pw.lane_count()) {
-                            if let Some(route) = route {
-                                let id = pw.lane_req[l].expect("routed lane carries an id");
-                                route.send(Response { id, value: lane_value(pw, packed, l) });
-                            }
-                        }
-                    }
-                    shared.words.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-                    shared.active_lanes.fetch_add(active, Ordering::Relaxed);
-                    shared.total_lanes.fetch_add(total, Ordering::Relaxed);
-                    shared
-                        .energy_mpj
-                        .fetch_add(energy_increment_mpj(energy), Ordering::Relaxed);
-                }
-            }));
-        }
-
-        // Batcher thread: drain bursts into the word assembler, emit
-        // full words every `batch` requests, and flush everything the
-        // instant the queue goes empty (or on Flush/Stop) — a partial
-        // residue never waits on traffic that may not come.
-        let shared_b = Arc::clone(&shared);
-        let batch_size = cfg.batch.max(1);
-        let batcher = std::thread::spawn(move || {
-            let mut rr = 0usize; // round-robin worker cursor
-            let mut asm: Assembler<Route> = Assembler::new();
-            let mut words: Vec<Job> = Vec::new();
-            // Consecutive full-word-only emissions with residues still
-            // held; at MAX_HELD_ROUNDS the next emission flushes, so a
-            // rare tier's residue is bounded by ~MAX_HELD_ROUNDS × batch
-            // requests of sustained foreign traffic.
-            let mut held_rounds = 0u32;
-            let mut stop = false;
-            // Fold one message into the assembler; returns the resulting
-            // control flow.
-            let on_msg = |asm: &mut Assembler<Route>, folded: &mut usize, msg: Msg| -> Flow {
-                match msg {
-                    Msg::Req(r, route) => {
-                        asm.push(r, route);
-                        *folded += 1;
-                    }
-                    Msg::Batch(batch_reqs, base, tx) => {
-                        for (k, r) in batch_reqs.into_iter().enumerate() {
-                            asm.push(r, Route::Slot(tx.clone(), base + k as u32));
-                            *folded += 1;
-                        }
-                    }
-                    Msg::Flush => return Flow::CloseBatch,
-                    Msg::Stop => return Flow::Stop,
-                }
-                Flow::Drain
-            };
-            'bursts: while !stop {
-                // Between bursts the assembler is empty (every burst ends
-                // in a flush), so blocking indefinitely strands nothing.
-                let mut folded = 0usize;
-                match rx.recv() {
-                    Ok(msg) => match on_msg(&mut asm, &mut folded, msg) {
-                        Flow::Drain => {}
-                        Flow::CloseBatch => {} // nothing held yet
-                        Flow::Stop => stop = true,
-                    },
-                    Err(_) => break 'bursts,
-                }
-                // Drain the burst.
-                while !stop {
-                    if folded >= batch_size {
-                        shared_b.requests.fetch_add(folded as u64, Ordering::Relaxed);
-                        folded = 0;
-                        if !emit_and_dispatch(
-                            &mut asm,
-                            &mut words,
-                            &work_txs,
-                            &mut rr,
-                            &mut held_rounds,
-                            false,
-                        ) {
-                            return;
-                        }
-                    }
-                    match rx.try_recv() {
-                        Ok(msg) => match on_msg(&mut asm, &mut folded, msg) {
-                            Flow::Drain => {}
-                            Flow::CloseBatch => {
-                                // Explicit flush request mid-burst.
-                                shared_b.requests.fetch_add(folded as u64, Ordering::Relaxed);
-                                folded = 0;
-                                if !emit_and_dispatch(
-                                    &mut asm,
-                                    &mut words,
-                                    &work_txs,
-                                    &mut rr,
-                                    &mut held_rounds,
-                                    true,
-                                ) {
-                                    return;
-                                }
-                            }
-                            Flow::Stop => stop = true,
-                        },
-                        // Empty (burst over) or disconnected — either way
-                        // flush below; a disconnect also ends the outer
-                        // loop at its next recv.
-                        Err(_) => break,
-                    }
-                }
-                // Burst over (idle queue or Stop): flush everything held.
-                if folded > 0 {
-                    shared_b.requests.fetch_add(folded as u64, Ordering::Relaxed);
-                }
-                if !emit_and_dispatch(
-                    &mut asm,
-                    &mut words,
-                    &work_txs,
-                    &mut rr,
-                    &mut held_rounds,
-                    true,
-                ) {
-                    return;
-                }
-            }
-            drop(work_txs);
-            for w in workers {
-                let _ = w.join();
-            }
-        });
-
-        Coordinator { tx, batcher: Some(batcher), shared, batch_chunk: batch_size }
+    /// Number of execution shards.
+    pub fn shards(&self) -> usize {
+        self.pool.shards()
     }
 
     /// Submit a request; returns the response channel. Blocks when the
-    /// queue is full (backpressure).
+    /// target shard's queue is full (backpressure).
     pub fn submit(&self, req: Request) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.tx.send(Msg::Req(req, Route::Single(tx))).expect("coordinator stopped");
+        self.pool.submit(vec![(req, Route::Single(tx))]);
         rx
     }
 
@@ -449,11 +115,6 @@ impl Coordinator {
     /// are tagged with their request-index slot and reassembled in
     /// submission order by [`BatchHandle::wait`]. This is the throughput
     /// path: one channel allocation per batch instead of one per request.
-    ///
-    /// The batch is split into `cfg.batch`-sized queue messages, so the
-    /// bounded queue's backpressure applies to batch submitters too (a
-    /// batch occupies one queue slot per `cfg.batch` requests; submission
-    /// blocks when the queue is full).
     pub fn submit_batch(&self, reqs: Vec<Request>) -> BatchHandle {
         let n = reqs.len();
         let (tx, rx) = std::sync::mpsc::channel();
@@ -466,8 +127,11 @@ impl Coordinator {
     /// `base_slot + i`, *as its lane completes* — there is no reassembly
     /// barrier. The network serve layer uses this to write responses
     /// out-of-order while lanes are still executing (DESIGN.md §8); every
-    /// response still carries the caller's original request id. Chunking
-    /// (and therefore bounded-queue backpressure) matches `submit_batch`.
+    /// response still carries the caller's original request id.
+    ///
+    /// The batch is split into `cfg.batch`-sized chunks round-robin
+    /// across the shards, so the bounded per-shard queues' backpressure
+    /// applies to batch submitters too.
     pub fn submit_batch_streaming(
         &self,
         reqs: Vec<Request>,
@@ -477,65 +141,39 @@ impl Coordinator {
         let mut slot = base_slot;
         let mut iter = reqs.into_iter();
         loop {
-            let chunk: Vec<Request> = iter.by_ref().take(self.batch_chunk).collect();
+            let chunk: Vec<(Request, Route)> = iter
+                .by_ref()
+                .take(self.batch_chunk)
+                .map(|r| {
+                    let routed = (r, Route::Slot(tx.clone(), slot));
+                    slot += 1;
+                    routed
+                })
+                .collect();
             if chunk.is_empty() {
                 break;
             }
-            let len = chunk.len() as u32;
-            self.tx.send(Msg::Batch(chunk, slot, tx.clone())).expect("coordinator stopped");
-            slot += len;
+            self.pool.submit(chunk);
         }
     }
 
-    /// Force the batcher to close the current batch (flushing any held
-    /// partial words).
+    /// Ask every shard to flush its held partial words now.
     pub fn flush(&self) {
-        let _ = self.tx.send(Msg::Flush);
+        self.pool.flush();
     }
 
     /// Current statistics snapshot.
     pub fn stats(&self) -> Stats {
-        Stats {
-            requests: self.shared.requests.load(Ordering::Relaxed),
-            words: self.shared.words.load(Ordering::Relaxed),
-            active_lanes: self.shared.active_lanes.load(Ordering::Relaxed),
-            total_lanes: self.shared.total_lanes.load(Ordering::Relaxed),
-            energy_pj: self.shared.energy_mpj.load(Ordering::Relaxed) as f64 / 1000.0,
-        }
+        self.stats.snapshot()
     }
 
-    /// Stop the coordinator and return final statistics. Messages queued
+    /// Stop the coordinator and return final statistics. Chunks submitted
     /// before the stop are fully processed (their responses delivered)
-    /// and every batcher/worker thread is joined before this returns.
-    pub fn shutdown(mut self) -> Stats {
-        let _ = self.tx.send(Msg::Stop);
-        if let Some(b) = self.batcher.take() {
-            let _ = b.join();
-        }
-        self.stats()
+    /// and every shard thread is joined before this returns.
+    pub fn shutdown(self) -> Stats {
+        let Coordinator { pool, .. } = self;
+        pool.shutdown()
     }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Stop);
-        if let Some(b) = self.batcher.take() {
-            let _ = b.join();
-        }
-    }
-}
-
-/// Calibrated energy per packed word (pJ), cached.
-pub fn simd_word_energy_pj() -> f64 {
-    use std::sync::OnceLock;
-    static CACHE: OnceLock<f64> = OnceLock::new();
-    *CACHE.get_or_init(|| {
-        let nl = crate::circuits::simdive::simd32(8);
-        let cal = crate::fabric::calibrate::fitted();
-        let t = crate::fabric::timing::analyze(&nl, cal);
-        let p = crate::fabric::power::estimate_at(&nl, cal, 0x51D, 2048, t.critical_ns);
-        p.total_mw * t.critical_ns
-    })
 }
 
 #[cfg(test)]
@@ -671,8 +309,9 @@ mod tests {
 
     #[test]
     fn mixed_w_traffic_shares_one_pool_and_stays_bit_exact() {
-        // The v2 headline: one coordinator serves every accuracy tier at
-        // once, and each request's answer matches its own w's tables.
+        // The headline invariant: one coordinator serves every accuracy
+        // tier at once, and each request's answer matches its own w's
+        // tables — now across independent shards.
         let coord = Coordinator::start(CoordinatorConfig::default());
         let mut rng = crate::util::Rng::new(0x2A11);
         let reqs: Vec<Request> = (0..1_000u64)
@@ -695,32 +334,8 @@ mod tests {
         let s = coord.shutdown();
         assert_eq!(s.requests, 1_000);
         // Mixed-w 8-bit-heavy traffic must still pack multiple lanes per
-        // word on average (the shared-pool utilization claim).
+        // word on average (the shared-pool utilization claim), even with
+        // the batch split across shards.
         assert!(s.lane_utilization() > 0.5, "utilization {}", s.lane_utilization());
-    }
-
-    #[test]
-    fn power_gating_reduces_energy_of_partial_words() {
-        let full = word_energy_pj(100.0, 4, 4);
-        let one = word_energy_pj(100.0, 1, 4);
-        assert!((full - 100.0).abs() < 1e-9);
-        assert!(one < 0.4 * full, "gated {one} vs full {full}");
-    }
-
-    #[test]
-    fn word_energy_is_positive_and_sane() {
-        let e = simd_word_energy_pj();
-        assert!(e > 1.0 && e < 100_000.0, "per-word energy {e} pJ");
-    }
-
-    #[test]
-    fn energy_accumulation_rounds_not_floors() {
-        // The increment actually used by the worker loop must round to the
-        // nearest milli-pJ; truncation (`as u64` on the raw product) would
-        // floor 0.4999 pJ to 499 and 0.0006 pJ to 0.
-        assert_eq!(energy_increment_mpj(0.4999), 500);
-        assert_eq!(energy_increment_mpj(0.0006), 1);
-        assert_eq!(energy_increment_mpj(0.0004), 0);
-        assert!(energy_increment_mpj(0.4999) > (0.4999f64 * 1000.0) as u64);
     }
 }

@@ -1,0 +1,491 @@
+//! The unified execution engine: one [`Backend`] seam from the scalar
+//! models to the serve path (DESIGN.md §10).
+//!
+//! Before this seam existed the repo had three parallel execution
+//! surfaces that callers hand-picked: scalar `MulDesign`/`DivDesign`
+//! dispatch (ANN, image, metrics, report), `arith::batch` slice kernels,
+//! and word execution inside the coordinator. The seam collapses them:
+//! every substrate holds an [`Engine`] handle and the backend decides how
+//! the work runs —
+//!
+//! * [`Reference`] — one scalar-model dispatch per element: the bit-exact
+//!   oracle every other backend is tested against;
+//! * [`Batched`] — the `arith::batch` slice kernels (tables and width
+//!   resolved once per call) and one-shot word assembly for mixed
+//!   `{bits, w}` streams; the default for in-process substrates;
+//! * [`Sharded`] — N independent worker shards, each with its own
+//!   assembler and rescaled tables, fed round-robin: the coordinator's
+//!   worker pool and the scaling path (see [`sharded`]).
+//!
+//! The seam contract: **every backend is bit-identical to [`Reference`]
+//! for every `{op, bits, w}`**, and [`Sharded`] is invariant under shard
+//! count (`tests/engine_props.rs`). Pick backends for speed, never for
+//! semantics.
+//!
+//! Not to be confused with [`crate::runtime::Engine`], the PJRT executor
+//! for the AOT-compiled Pallas artifacts.
+
+pub mod sharded;
+
+pub use sharded::{Response, Route, Sharded, ShardedConfig, Stats, StatsHandle};
+
+use crate::arith::simdive::{simdive_div_w, simdive_mul_w};
+use crate::arith::{batch, DivDesign, MulDesign};
+use crate::coordinator::packer::{lane_value, Assembler, ReqOp, Request};
+use std::sync::Arc;
+
+/// The execution seam: batched multiply/divide slices (integer and the
+/// real-valued error-analysis form) plus mixed-`{bits, w}` SIMDive word
+/// streams.
+///
+/// Contract: for any backend, `mul_batch`/`div_batch` are bit-identical
+/// to `design.mul`/`design.div` per element, and `execute_stream` is
+/// bit-identical to `simdive_mul_w`/`simdive_div_w` per request.
+pub trait Backend: Send + Sync {
+    /// Backend name (for benches and logs).
+    fn name(&self) -> &'static str;
+
+    /// `out[i] = design.mul(bits, a[i], b[i])`, bit-exactly.
+    fn mul_batch(&self, design: MulDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>);
+
+    /// `out[i] = design.div(bits, a[i], b[i])`, bit-exactly.
+    fn div_batch(&self, design: DivDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>);
+
+    /// `out[i] = design.mul_real(bits, a[i], b[i])` — the behavioral
+    /// error-analysis form (paper §4.1).
+    fn mul_real_batch(
+        &self,
+        design: MulDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    );
+
+    /// `out[i] = design.div_real(bits, a[i], b[i])`.
+    fn div_real_batch(
+        &self,
+        design: DivDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    );
+
+    /// Mixed-`{op, bits, w}` SIMDive stream: `out[i]` is the scalar result
+    /// of `reqs[i]` (request ids are not interpreted).
+    fn execute_stream(&self, reqs: &[Request], out: &mut Vec<u64>);
+}
+
+/// Scalar-model backend: one design dispatch per element. Slow and
+/// table-resolving per call — exactly why it is the oracle, not the hot
+/// path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Reference;
+
+impl Backend for Reference {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn mul_batch(&self, design: MulDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.extend(a.iter().zip(b.iter()).map(|(&x, &y)| design.mul(bits, x, y)));
+    }
+
+    fn div_batch(&self, design: DivDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.extend(a.iter().zip(b.iter()).map(|(&x, &y)| design.div(bits, x, y)));
+    }
+
+    fn mul_real_batch(
+        &self,
+        design: MulDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.extend(a.iter().zip(b.iter()).map(|(&x, &y)| design.mul_real(bits, x, y)));
+    }
+
+    fn div_real_batch(
+        &self,
+        design: DivDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(a.len(), b.len());
+        out.clear();
+        out.extend(a.iter().zip(b.iter()).map(|(&x, &y)| design.div_real(bits, x, y)));
+    }
+
+    fn execute_stream(&self, reqs: &[Request], out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(reqs.iter().map(|r| match r.op {
+            ReqOp::Mul => simdive_mul_w(r.bits, r.a, r.b, r.w),
+            ReqOp::Div => simdive_div_w(r.bits, r.a, r.b, r.w),
+        }));
+    }
+}
+
+/// Batched in-process backend: slice kernels with per-call hoisting for
+/// mul/div batches, and one-shot word assembly through a resident
+/// [`batch::MultiKernel`] (all nine accuracy knobs' rescales paid once at
+/// construction) for mixed streams.
+pub struct Batched {
+    kernel: batch::MultiKernel,
+}
+
+impl Batched {
+    pub fn new() -> Self {
+        Batched { kernel: batch::MultiKernel::new() }
+    }
+}
+
+impl Default for Batched {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for Batched {
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn mul_batch(&self, design: MulDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        design.mul_batch_into(bits, a, b, out);
+    }
+
+    fn div_batch(&self, design: DivDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        design.div_batch_into(bits, a, b, out);
+    }
+
+    fn mul_real_batch(
+        &self,
+        design: MulDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        design.mul_real_batch_into(bits, a, b, out);
+    }
+
+    fn div_real_batch(
+        &self,
+        design: DivDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        design.div_real_batch_into(bits, a, b, out);
+    }
+
+    fn execute_stream(&self, reqs: &[Request], out: &mut Vec<u64>) {
+        out.clear();
+        out.resize(reqs.len(), 0);
+        if reqs.is_empty() {
+            return;
+        }
+        // One-shot assembly: payloads are request indices, so scatter-back
+        // is a direct index per lane.
+        let mut asm: Assembler<u32> = Assembler::new();
+        for (i, r) in reqs.iter().enumerate() {
+            asm.push(*r, i as u32);
+        }
+        let mut words = Vec::new();
+        asm.emit_all(&mut words);
+        for job in &words {
+            let packed = self.kernel.execute(job.pw.w, job.pw.op, job.pw.word);
+            for (l, payload) in job.payload.iter().enumerate().take(job.pw.lane_count()) {
+                if let Some(idx) = payload {
+                    out[*idx as usize] = lane_value(&job.pw, packed, l);
+                }
+            }
+        }
+    }
+}
+
+impl Backend for Sharded {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn mul_batch(&self, design: MulDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        debug_assert_eq!(a.len(), b.len());
+        match design {
+            // Only SIMDive at a SIMD lane width has a word form; anything
+            // else falls back to the batched slice path (same numbers, no
+            // shard parallelism) so every backend accepts the same inputs.
+            MulDesign::Simdive { w } if crate::arith::WIDTHS.contains(&bits) => {
+                let mut reqs = Vec::with_capacity(a.len());
+                for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+                    reqs.push(Request { id: i as u64, op: ReqOp::Mul, bits, w, a: x, b: y });
+                }
+                self.execute_stream(&reqs, out);
+            }
+            _ => design.mul_batch_into(bits, a, b, out),
+        }
+    }
+
+    fn div_batch(&self, design: DivDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        debug_assert_eq!(a.len(), b.len());
+        match design {
+            DivDesign::Simdive { w } if crate::arith::WIDTHS.contains(&bits) => {
+                let mut reqs = Vec::with_capacity(a.len());
+                for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+                    reqs.push(Request { id: i as u64, op: ReqOp::Div, bits, w, a: x, b: y });
+                }
+                self.execute_stream(&reqs, out);
+            }
+            _ => design.div_batch_into(bits, a, b, out),
+        }
+    }
+
+    fn mul_real_batch(
+        &self,
+        design: MulDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        // The real-valued error-analysis form has no packed-word
+        // equivalent; delegate to the batched kernels.
+        design.mul_real_batch_into(bits, a, b, out);
+    }
+
+    fn div_real_batch(
+        &self,
+        design: DivDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        design.div_real_batch_into(bits, a, b, out);
+    }
+
+    fn execute_stream(&self, reqs: &[Request], out: &mut Vec<u64>) {
+        out.clear();
+        out.resize(reqs.len(), 0);
+        if reqs.is_empty() {
+            return;
+        }
+        // Contiguous per-shard chunks (packing quality tracks chunk size),
+        // responses routed slot-aligned back into `out`.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let chunk = reqs.len().div_ceil(self.shards()).max(1);
+        let mut slot = 0u32;
+        for piece in reqs.chunks(chunk) {
+            let routed: Vec<(Request, Route)> = piece
+                .iter()
+                .enumerate()
+                .map(|(k, r)| (*r, Route::Slot(tx.clone(), slot + k as u32)))
+                .collect();
+            slot += piece.len() as u32;
+            self.submit(routed);
+        }
+        drop(tx);
+        for _ in 0..reqs.len() {
+            let (s, resp) = rx.recv().expect("engine shards stopped");
+            out[s as usize] = resp.value;
+        }
+    }
+}
+
+/// The caller-facing handle: a shared backend plus the `{mul, div}`
+/// design pair it executes. Cloning shares the backend.
+#[derive(Clone)]
+pub struct Engine {
+    backend: Arc<dyn Backend>,
+    mul_design: MulDesign,
+    div_design: DivDesign,
+}
+
+impl Engine {
+    /// Wrap an existing backend.
+    pub fn with_backend(backend: Arc<dyn Backend>, mul: MulDesign, div: DivDesign) -> Engine {
+        Engine { backend, mul_design: mul, div_design: div }
+    }
+
+    /// Scalar-oracle engine ([`Reference`]).
+    pub fn reference(mul: MulDesign, div: DivDesign) -> Engine {
+        Engine::with_backend(Arc::new(Reference), mul, div)
+    }
+
+    /// Batched in-process engine ([`Batched`]) — the default choice for
+    /// the application substrates.
+    pub fn batched(mul: MulDesign, div: DivDesign) -> Engine {
+        Engine::with_backend(Arc::new(Batched::new()), mul, div)
+    }
+
+    /// Sharded engine ([`Sharded`]): spawns the shard pool.
+    pub fn sharded(mul: MulDesign, div: DivDesign, cfg: ShardedConfig) -> Engine {
+        Engine::with_backend(Arc::new(Sharded::start(cfg)), mul, div)
+    }
+
+    /// Batched SIMDive engine at accuracy knob `w` for both operations.
+    pub fn simdive(w: u32) -> Engine {
+        Engine::batched(MulDesign::Simdive { w }, DivDesign::Simdive { w })
+    }
+
+    /// Batched exact-arithmetic engine.
+    pub fn accurate() -> Engine {
+        Engine::batched(MulDesign::Accurate, DivDesign::Accurate)
+    }
+
+    /// Batched engine for a multiplier design (divider: accurate) —
+    /// convenience for multiply-only substrates like the quantized MLP.
+    pub fn from_mul(mul: MulDesign) -> Engine {
+        Engine::batched(mul, DivDesign::Accurate)
+    }
+
+    /// Same backend, different design pair.
+    pub fn with_designs(&self, mul: MulDesign, div: DivDesign) -> Engine {
+        Engine { backend: Arc::clone(&self.backend), mul_design: mul, div_design: div }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn mul_design(&self) -> MulDesign {
+        self.mul_design
+    }
+
+    pub fn div_design(&self) -> DivDesign {
+        self.div_design
+    }
+
+    /// Scalar multiply — bit-identical to the batched path (the seam
+    /// contract), for one-off values and oracles.
+    #[inline]
+    pub fn mul(&self, bits: u32, a: u64, b: u64) -> u64 {
+        self.mul_design.mul(bits, a, b)
+    }
+
+    /// Scalar divide — bit-identical to the batched path.
+    #[inline]
+    pub fn div(&self, bits: u32, a: u64, b: u64) -> u64 {
+        self.div_design.div(bits, a, b)
+    }
+
+    /// Batched multiply into a reusable buffer.
+    pub fn mul_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        self.backend.mul_batch(self.mul_design, bits, a, b, out);
+    }
+
+    /// Batched divide into a reusable buffer.
+    pub fn div_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        self.backend.div_batch(self.div_design, bits, a, b, out);
+    }
+
+    /// Batched real-valued multiply (error-analysis form).
+    pub fn mul_real_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<f64>) {
+        self.backend.mul_real_batch(self.mul_design, bits, a, b, out);
+    }
+
+    /// Batched real-valued divide (error-analysis form).
+    pub fn div_real_into(&self, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<f64>) {
+        self.backend.div_real_batch(self.div_design, bits, a, b, out);
+    }
+
+    /// Execute a mixed-`{op, bits, w}` SIMDive request stream.
+    pub fn execute_stream_into(&self, reqs: &[Request], out: &mut Vec<u64>) {
+        self.backend.execute_stream(reqs, out);
+    }
+
+    /// Allocating form of [`Engine::execute_stream_into`].
+    pub fn execute_stream(&self, reqs: &[Request]) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.execute_stream_into(reqs, &mut out);
+        out
+    }
+}
+
+impl Default for Engine {
+    /// The paper's full-accuracy configuration: batched SIMDive at
+    /// `w = 8`.
+    fn default() -> Self {
+        Engine::simdive(crate::arith::W_MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn batched_matches_reference_for_every_design() {
+        let mut rng = Rng::new(0xE16);
+        let a: Vec<u64> = (0..256).map(|_| rng.below(1 << 16)).collect();
+        let b: Vec<u64> = (0..256).map(|_| rng.below(1 << 16)).collect();
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        for d in MulDesign::table2_rows() {
+            let eng = Engine::batched(d, DivDesign::Accurate);
+            let oracle = Engine::reference(d, DivDesign::Accurate);
+            eng.mul_into(16, &a, &b, &mut got);
+            oracle.mul_into(16, &a, &b, &mut want);
+            assert_eq!(got, want, "{}", d.name());
+        }
+        for d in DivDesign::table2_rows() {
+            let eng = Engine::batched(MulDesign::Accurate, d);
+            let oracle = Engine::reference(MulDesign::Accurate, d);
+            eng.div_into(16, &a, &b, &mut got);
+            oracle.div_into(16, &a, &b, &mut want);
+            assert_eq!(got, want, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn batched_stream_matches_reference() {
+        let mut rng = Rng::new(0xE17);
+        let reqs: Vec<Request> = (0..800u64)
+            .map(|i| {
+                let bits = [8u32, 8, 16, 32][rng.below(4) as usize];
+                Request {
+                    id: i,
+                    op: if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
+                    bits,
+                    w: rng.below(crate::arith::W_MAX as u64 + 1) as u32,
+                    a: rng.operand(bits),
+                    b: rng.operand(bits),
+                }
+            })
+            .collect();
+        // Designs are irrelevant to streams (each request carries its
+        // own `{op, bits, w}`): only the backend matters.
+        let oracle = Engine::reference(MulDesign::Accurate, DivDesign::Accurate);
+        assert_eq!(Engine::default().execute_stream(&reqs), oracle.execute_stream(&reqs));
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        let eng = Engine::default();
+        let mut out = Vec::new();
+        eng.mul_into(16, &[], &[], &mut out);
+        assert!(out.is_empty());
+        assert!(eng.execute_stream(&[]).is_empty());
+    }
+
+    #[test]
+    fn scalar_convenience_matches_batch() {
+        let eng = Engine::simdive(8);
+        let mut out = Vec::new();
+        eng.mul_into(8, &[43], &[10], &mut out);
+        assert_eq!(out[0], eng.mul(8, 43, 10));
+        eng.div_into(8, &[43], &[10], &mut out);
+        assert_eq!(out[0], eng.div(8, 43, 10));
+    }
+}

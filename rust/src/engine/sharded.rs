@@ -1,0 +1,482 @@
+//! The sharded execution backend: N independent worker shards, each owning
+//! its own word [`Assembler`] and its own bank of rescaled correction
+//! tables ([`batch::MultiKernel`]), fed round-robin with request chunks
+//! (DESIGN.md §10).
+//!
+//! This replaces the coordinator-v2 layout of one central batcher thread
+//! plus an execution-only worker pool: the serial assembly stage is gone,
+//! every shard assembles *and* executes, so packing work scales with the
+//! shard count instead of bottlenecking on one thread. RAPID
+//! (arXiv 2206.13970) makes the same move in hardware — replicate the
+//! unit rather than widen one instance.
+//!
+//! Invariants preserved from the single-pool coordinator:
+//!
+//! * **Bit-exactness, invariant under shard count.** Every request is
+//!   executed independently through the multi-accuracy batched kernel, so
+//!   results are identical to the scalar models for any shard count
+//!   (property-tested in `tests/engine_props.rs`).
+//! * **Lane-aligned response routing.** Routes ride in the assembled
+//!   words' payload slots ([`Assembled::payload`]); every route lookup is
+//!   a direct index, never a scan.
+//! * **Residue handling.** Partial words merge with later same-`{bits,w}`
+//!   arrivals, flush the instant a shard's queue idles, and are force-
+//!   flushed after [`MAX_HELD_ROUNDS`] full-word rounds under saturation.
+//! * **Drain-on-shutdown.** Dropping the pool disconnects the shard
+//!   queues; each shard finishes every buffered message, flushes its
+//!   residues, and delivers every response before its thread is joined.
+
+use crate::arith::batch;
+use crate::coordinator::packer::{lane_value, Assembled, Assembler, Request};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A completed request.
+#[derive(Clone, Copy, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub value: u64,
+}
+
+/// Where a completed request's response goes. Routes are attached
+/// lane-aligned to the assembled words, so delivery is a direct index.
+#[derive(Clone)]
+pub enum Route {
+    /// Dedicated per-request channel.
+    Single(Sender<Response>),
+    /// Shared channel + caller-chosen slot (batch and streaming callers).
+    Slot(Sender<(u32, Response)>, u32),
+}
+
+impl Route {
+    #[inline]
+    fn send(&self, resp: Response) {
+        match self {
+            Route::Single(tx) => {
+                let _ = tx.send(resp);
+            }
+            Route::Slot(tx, slot) => {
+                let _ = tx.send((*slot, resp));
+            }
+        }
+    }
+}
+
+/// Aggregate statistics of a shard pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub requests: u64,
+    pub words: u64,
+    pub active_lanes: u64,
+    pub total_lanes: u64,
+    /// Estimated energy (pJ) from the calibrated per-word figure, with
+    /// idle lanes power-gated to ~10% of their share.
+    pub energy_pj: f64,
+}
+
+impl Stats {
+    pub fn lane_utilization(&self) -> f64 {
+        if self.total_lanes == 0 {
+            0.0
+        } else {
+            self.active_lanes as f64 / self.total_lanes as f64
+        }
+    }
+
+    /// Fold another snapshot into this one (aggregation across pools,
+    /// e.g. in multi-process roll-ups).
+    pub fn merge(&mut self, other: &Stats) {
+        self.requests += other.requests;
+        self.words += other.words;
+        self.active_lanes += other.active_lanes;
+        self.total_lanes += other.total_lanes;
+        self.energy_pj += other.energy_pj;
+    }
+}
+
+#[derive(Default)]
+struct Shared {
+    requests: AtomicU64,
+    words: AtomicU64,
+    active_lanes: AtomicU64,
+    total_lanes: AtomicU64,
+    energy_mpj: AtomicU64, // milli-pJ, to keep atomic integer math
+}
+
+/// A cloneable read handle on a pool's counters that stays valid after the
+/// pool itself is shut down (the front ends read final stats through it).
+#[derive(Clone)]
+pub struct StatsHandle(Arc<Shared>);
+
+impl StatsHandle {
+    pub fn snapshot(&self) -> Stats {
+        Stats {
+            requests: self.0.requests.load(Ordering::Relaxed),
+            words: self.0.words.load(Ordering::Relaxed),
+            active_lanes: self.0.active_lanes.load(Ordering::Relaxed),
+            total_lanes: self.0.total_lanes.load(Ordering::Relaxed),
+            energy_pj: self.0.energy_mpj.load(Ordering::Relaxed) as f64 / 1000.0,
+        }
+    }
+}
+
+/// Shard-pool configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedConfig {
+    /// Number of worker shards.
+    pub shards: usize,
+    /// Bounded per-shard queue depth (backpressure: submission blocks when
+    /// a shard's queue is full).
+    pub queue_depth: usize,
+    /// Requests folded into a shard's assembler between full-word
+    /// emission rounds.
+    pub batch: usize,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        let shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ShardedConfig { shards, queue_depth: 1024, batch: 64 }
+    }
+}
+
+enum ShardMsg {
+    /// A chunk of routed requests (one queue slot per chunk, so the
+    /// bounded queue's backpressure applies per chunk).
+    Batch(Vec<(Request, Route)>),
+    /// Flush held partial words now.
+    Flush,
+}
+
+/// Residues survive at most this many consecutive full-word emission
+/// rounds under sustained traffic before being force-flushed — a rare
+/// `{bits, w}` tier must not be starved by a shard queue that never goes
+/// empty. (When the queue *does* go empty, everything flushes
+/// immediately — residues never wait on traffic that may not come.)
+const MAX_HELD_ROUNDS: u32 = 4;
+
+/// Per-word energy estimate (pJ) with power gating: idle lanes of a word
+/// consume `IDLE_FRACTION` of their proportional share.
+pub const IDLE_FRACTION: f64 = 0.1;
+
+fn word_energy_pj(per_word_pj: f64, active: u32, lanes: u32) -> f64 {
+    let share = per_word_pj / lanes as f64;
+    share * active as f64 + share * (lanes - active) as f64 * IDLE_FRACTION
+}
+
+/// Milli-pJ increment added to the shared energy counter for a round's
+/// energy. Rounds to nearest — truncation would floor every round's
+/// fractional milli-pJ and drift `Stats::energy_pj` low over millions of
+/// words.
+#[inline]
+fn energy_increment_mpj(energy_pj: f64) -> u64 {
+    (energy_pj * 1000.0).round() as u64
+}
+
+/// Calibrated energy per packed word (pJ), cached.
+pub fn simd_word_energy_pj() -> f64 {
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<f64> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        let nl = crate::circuits::simdive::simd32(8);
+        let cal = crate::fabric::calibrate::fitted();
+        let t = crate::fabric::timing::analyze(&nl, cal);
+        let p = crate::fabric::power::estimate_at(&nl, cal, 0x51D, 2048, t.critical_ns);
+        p.total_mw * t.critical_ns
+    })
+}
+
+/// One shard's working state: its own assembler, its own kernel (all nine
+/// accuracy knobs' coefficient rescales hoisted once per shard thread),
+/// and reusable execution scratch.
+struct ShardCtx {
+    kernel: batch::MultiKernel,
+    asm: Assembler<Route>,
+    words: Vec<Assembled<Route>>,
+    ws: Vec<u32>,
+    ops: Vec<crate::arith::SimdOp>,
+    operands: Vec<crate::arith::SimdWord>,
+    results: Vec<u64>,
+    held_rounds: u32,
+    shared: Arc<Shared>,
+    per_word_pj: f64,
+}
+
+impl ShardCtx {
+    fn new(shared: Arc<Shared>, per_word_pj: f64) -> Self {
+        ShardCtx {
+            kernel: batch::MultiKernel::new(),
+            asm: Assembler::new(),
+            words: Vec::new(),
+            ws: Vec::new(),
+            ops: Vec::new(),
+            operands: Vec::new(),
+            results: Vec::new(),
+            held_rounds: 0,
+            shared,
+            per_word_pj,
+        }
+    }
+
+    /// Queue a chunk of routed requests; returns how many were folded.
+    fn fold(&mut self, chunk: Vec<(Request, Route)>) -> usize {
+        let n = chunk.len();
+        for (req, route) in chunk {
+            self.asm.push(req, route);
+        }
+        n
+    }
+
+    /// One emission round: emit words (full words only while residues may
+    /// still merge, everything when `flush` or the round cap hits),
+    /// execute them through the batched kernel, and route every response
+    /// lane-aligned.
+    fn run(&mut self, flush: bool) {
+        self.words.clear();
+        if flush || self.held_rounds >= MAX_HELD_ROUNDS {
+            self.asm.emit_all(&mut self.words);
+        } else {
+            self.asm.emit_full(&mut self.words);
+        }
+        self.held_rounds = if self.asm.is_empty() { 0 } else { self.held_rounds + 1 };
+        if self.words.is_empty() {
+            return;
+        }
+
+        self.ws.clear();
+        self.ws.extend(self.words.iter().map(|j| j.pw.w));
+        self.ops.clear();
+        self.ops.extend(self.words.iter().map(|j| j.pw.op));
+        self.operands.clear();
+        self.operands.extend(self.words.iter().map(|j| j.pw.word));
+        self.results.clear();
+        self.results.resize(self.words.len(), 0);
+        self.kernel.execute_mixed_into(&self.ws, &self.ops, &self.operands, &mut self.results);
+
+        let (mut active, mut total) = (0u64, 0u64);
+        let mut energy = 0.0f64;
+        for (job, &packed) in self.words.iter().zip(self.results.iter()) {
+            let pw = &job.pw;
+            active += pw.active_lanes as u64;
+            total += pw.lane_count() as u64;
+            energy += word_energy_pj(self.per_word_pj, pw.active_lanes, pw.lane_count() as u32);
+            for (l, route) in job.payload.iter().enumerate().take(pw.lane_count()) {
+                if let Some(route) = route {
+                    let id = pw.lane_req[l].expect("routed lane carries an id");
+                    route.send(Response { id, value: lane_value(pw, packed, l) });
+                }
+            }
+        }
+        self.shared.words.fetch_add(self.words.len() as u64, Ordering::Relaxed);
+        self.shared.active_lanes.fetch_add(active, Ordering::Relaxed);
+        self.shared.total_lanes.fetch_add(total, Ordering::Relaxed);
+        self.shared.energy_mpj.fetch_add(energy_increment_mpj(energy), Ordering::Relaxed);
+    }
+}
+
+/// One shard thread: drain bursts from the shard queue into the local
+/// assembler, emit full words every `batch` requests, and flush everything
+/// the instant the queue goes empty (or on Flush / disconnect) — a partial
+/// residue never waits on traffic that may not come.
+fn shard_loop(rx: Receiver<ShardMsg>, shared: Arc<Shared>, batch_size: usize, per_word_pj: f64) {
+    let mut ctx = ShardCtx::new(shared, per_word_pj);
+    loop {
+        // Between bursts the assembler is empty (every burst ends in a
+        // flush), so blocking indefinitely strands nothing.
+        let mut folded = 0usize;
+        match rx.recv() {
+            Ok(ShardMsg::Batch(chunk)) => folded += ctx.fold(chunk),
+            Ok(ShardMsg::Flush) => {}
+            Err(_) => break,
+        }
+        // Drain the burst.
+        loop {
+            if folded >= batch_size {
+                folded = 0;
+                ctx.run(false);
+            }
+            match rx.try_recv() {
+                Ok(ShardMsg::Batch(chunk)) => folded += ctx.fold(chunk),
+                Ok(ShardMsg::Flush) => ctx.run(true),
+                // Empty (burst over) or disconnected — either way flush
+                // below; a disconnect also ends the outer loop at its
+                // next recv.
+                Err(_) => break,
+            }
+        }
+        // Burst over (idle queue or disconnect): flush everything held.
+        ctx.run(true);
+    }
+    // Defensive final flush — unreachable residues would otherwise strand
+    // their routes (the loop above always flushes before looping back).
+    ctx.run(true);
+}
+
+/// The sharded backend: N shard threads behind bounded queues, dispatched
+/// round-robin at chunk granularity.
+pub struct Sharded {
+    txs: Vec<SyncSender<ShardMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    rr: AtomicUsize,
+    shared: Arc<Shared>,
+}
+
+impl Sharded {
+    /// Spawn the shard pool.
+    pub fn start(cfg: ShardedConfig) -> Sharded {
+        let n = cfg.shards.max(1);
+        let batch = cfg.batch.max(1);
+        let per_word_pj = simd_word_energy_pj();
+        let shared = Arc::new(Shared::default());
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = sync_channel::<ShardMsg>(cfg.queue_depth.max(16));
+            txs.push(tx);
+            let shared = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || shard_loop(rx, shared, batch, per_word_pj)));
+        }
+        Sharded { txs, handles, rr: AtomicUsize::new(0), shared }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit one chunk of routed requests to the next shard round-robin.
+    /// Chunks stay contiguous (they assemble together on one shard — the
+    /// packing quality of a submission tracks its chunk size). Blocks when
+    /// that shard's bounded queue is full (backpressure).
+    pub fn submit(&self, chunk: Vec<(Request, Route)>) {
+        if chunk.is_empty() {
+            return;
+        }
+        self.shared.requests.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+        let shard = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        self.txs[shard].send(ShardMsg::Batch(chunk)).expect("engine shards stopped");
+    }
+
+    /// Ask every shard to flush its held partial words now.
+    pub fn flush(&self) {
+        for tx in &self.txs {
+            let _ = tx.send(ShardMsg::Flush);
+        }
+    }
+
+    /// A read handle on the pool counters that survives shutdown.
+    pub fn stats_handle(&self) -> StatsHandle {
+        StatsHandle(Arc::clone(&self.shared))
+    }
+
+    /// Current statistics snapshot.
+    pub fn stats(&self) -> Stats {
+        self.stats_handle().snapshot()
+    }
+
+    /// Stop the pool and return final statistics. Chunks submitted before
+    /// the shutdown are fully executed (their responses delivered) and
+    /// every shard thread is joined before this returns.
+    pub fn shutdown(mut self) -> Stats {
+        self.join_shards();
+        self.stats()
+    }
+
+    fn join_shards(&mut self) {
+        self.txs.clear(); // disconnect: shards drain their queues and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sharded {
+    fn drop(&mut self) {
+        self.join_shards();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::simdive::simdive_mul_w;
+    use crate::coordinator::packer::ReqOp;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn power_gating_reduces_energy_of_partial_words() {
+        let full = word_energy_pj(100.0, 4, 4);
+        let one = word_energy_pj(100.0, 1, 4);
+        assert!((full - 100.0).abs() < 1e-9);
+        assert!(one < 0.4 * full, "gated {one} vs full {full}");
+    }
+
+    #[test]
+    fn word_energy_is_positive_and_sane() {
+        let e = simd_word_energy_pj();
+        assert!(e > 1.0 && e < 100_000.0, "per-word energy {e} pJ");
+    }
+
+    #[test]
+    fn energy_accumulation_rounds_not_floors() {
+        // The increment actually used by the shard loop must round to the
+        // nearest milli-pJ; truncation (`as u64` on the raw product) would
+        // floor 0.4999 pJ to 499 and 0.0006 pJ to 0.
+        assert_eq!(energy_increment_mpj(0.4999), 500);
+        assert_eq!(energy_increment_mpj(0.0006), 1);
+        assert_eq!(energy_increment_mpj(0.0004), 0);
+        assert!(energy_increment_mpj(0.4999) > (0.4999f64 * 1000.0) as u64);
+    }
+
+    #[test]
+    fn routed_submission_executes_and_counts() {
+        let pool = Sharded::start(ShardedConfig { shards: 2, queue_depth: 64, batch: 8 });
+        let (tx, rx) = channel();
+        let reqs: Vec<Request> = (0..100u64)
+            .map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, w: 8, a: 1 + i % 200, b: 3 })
+            .collect();
+        let chunk: Vec<(Request, Route)> = reqs
+            .iter()
+            .enumerate()
+            .map(|(k, r)| (*r, Route::Slot(tx.clone(), k as u32)))
+            .collect();
+        pool.submit(chunk);
+        let mut got = vec![None; reqs.len()];
+        for _ in 0..reqs.len() {
+            let (slot, resp) = rx.recv().unwrap();
+            assert!(got[slot as usize].replace(resp).is_none(), "slot {slot} twice");
+        }
+        for (k, r) in reqs.iter().enumerate() {
+            let resp = got[k].unwrap();
+            assert_eq!(resp.id, r.id);
+            assert_eq!(resp.value, simdive_mul_w(8, r.a, r.b, 8));
+        }
+        let s = pool.shutdown();
+        assert_eq!(s.requests, 100);
+        assert!(s.energy_pj > 0.0);
+        assert!(s.words > 0 && s.words <= 100);
+    }
+
+    #[test]
+    fn empty_submit_is_a_no_op() {
+        let pool = Sharded::start(ShardedConfig { shards: 1, queue_depth: 16, batch: 4 });
+        pool.submit(Vec::new());
+        let s = pool.shutdown();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.words, 0);
+    }
+
+    #[test]
+    fn single_route_delivers() {
+        let pool = Sharded::start(ShardedConfig { shards: 1, queue_depth: 16, batch: 4 });
+        let (tx, rx) = channel();
+        let req = Request { id: 7, op: ReqOp::Mul, bits: 8, w: 8, a: 43, b: 10 };
+        pool.submit(vec![(req, Route::Single(tx))]);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.value, simdive_mul_w(8, 43, 10, 8));
+        pool.shutdown();
+    }
+}

@@ -155,8 +155,14 @@ mod tests {
         let dmd = analyze(&crate::circuits::mitchell::div(16, 8), cal).critical_ns;
         assert!((dm - TARGET_MUL.1).abs() / TARGET_MUL.1 < 0.7, "mul delay {dm} vs 6.4");
         assert!((dd - TARGET_DIV.1).abs() / TARGET_DIV.1 < 0.7, "div delay {dd} vs 21.4");
-        assert!((dmm - TARGET_MIT_MUL.0).abs() / TARGET_MIT_MUL.0 < 1.2, "mitchell mul {dmm} vs 4.7");
-        assert!((dmd - TARGET_MIT_DIV.0).abs() / TARGET_MIT_DIV.0 < 1.2, "mitchell div {dmd} vs 5.3");
+        assert!(
+            (dmm - TARGET_MIT_MUL.0).abs() / TARGET_MIT_MUL.0 < 1.2,
+            "mitchell mul {dmm} vs 4.7"
+        );
+        assert!(
+            (dmd - TARGET_MIT_DIV.0).abs() / TARGET_MIT_DIV.0 < 1.2,
+            "mitchell div {dmd} vs 5.3"
+        );
         assert!(dmd < dd, "mitchell div must beat the accurate divider");
         let pm = estimate(&array_mul(16), cal, 0xCA11B, 4096).total_mw;
         let pd = estimate(&restoring_div(16, 8), cal, 0xCA11B, 4096).total_mw;

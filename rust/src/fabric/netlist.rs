@@ -149,7 +149,13 @@ impl Netlist {
         }
         let out5 = self.fresh();
         let out6 = self.fresh();
-        self.cells.push(Cell::Lut52 { inputs: inputs.to_vec(), truth5: t5, truth6: t6, out5, out6 });
+        self.cells.push(Cell::Lut52 {
+            inputs: inputs.to_vec(),
+            truth5: t5,
+            truth6: t6,
+            out5,
+            out6,
+        });
         (out5, out6)
     }
 

@@ -10,6 +10,7 @@
 
 use super::Image;
 use crate::arith::{DivDesign, MulDesign};
+use crate::engine::Engine;
 
 /// Pluggable arithmetic backend for the applications.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,31 +48,13 @@ impl ArithKind {
         }
     }
 
-    /// 16-bit multiply (operands must fit 16 bits).
-    #[inline]
-    pub fn mul16(self, a: u64, b: u64) -> u64 {
-        self.mul_design().mul(16, a, b)
-    }
-
-    /// Division of a ≤ 24-bit dividend by a ≤ 16-bit divisor (wider
-    /// Mitchell-family units handle the accumulator widths of the 5×5
-    /// kernel; the hardware analogue is a 32-bit SIMDive lane).
-    #[inline]
-    pub fn div32(self, a: u64, b: u64) -> u64 {
-        self.div_design().div(32, a, b)
-    }
-
-    /// Batched 16-bit multiply into a reusable buffer, bit-identical to
-    /// per-element [`Self::mul16`] (SIMDive routes through the batched
-    /// slice kernel with tables resolved once per call).
-    pub fn mul16_batch_into(self, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
-        self.mul_design().mul_batch_into(16, a, b, out)
-    }
-
-    /// Batched wide divide into a reusable buffer, bit-identical to
-    /// per-element [`Self::div32`].
-    pub fn div32_batch_into(self, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
-        self.div_design().div_batch_into(32, a, b, out)
+    /// The engine handle executing this arithmetic kind: the batched
+    /// backend with this kind's `{mul, div}` design pair (DESIGN.md §10).
+    /// The pipelines call this once per image and route every multiply
+    /// (16-bit lanes) and normalization divide (a 32-bit lane — wide
+    /// enough for the 5×5 kernel's accumulators) through the one seam.
+    pub fn engine(self) -> Engine {
+        Engine::batched(self.mul_design(), self.div_design())
     }
 
     pub fn name(self) -> &'static str {
@@ -87,12 +70,13 @@ impl ArithKind {
 /// Multiply-blend two images: `out = A·B / 256` with the multiplier from
 /// `kind` (the divide-by-256 is a shift in all variants, as in the paper's
 /// multiplier-only experiment). Pixels are processed in tiles through the
-/// batched multiplier kernel — one table resolution per tile, not per
+/// engine's batched multiplier — one table resolution per tile, not per
 /// pixel — with bit-identical results.
 pub fn blend(a: &Image, b: &Image, kind: ArithKind) -> Image {
     assert_eq!(a.width, b.width);
     assert_eq!(a.height, b.height);
     const TILE: usize = 4096;
+    let engine = kind.engine();
     let mut out = Image::new(a.width, a.height);
     let mut ops_a: Vec<u64> = Vec::with_capacity(TILE);
     let mut ops_b: Vec<u64> = Vec::with_capacity(TILE);
@@ -104,7 +88,7 @@ pub fn blend(a: &Image, b: &Image, kind: ArithKind) -> Image {
         ops_a.extend(a.data[offset..end].iter().map(|&p| p as u64));
         ops_b.clear();
         ops_b.extend(b.data[offset..end].iter().map(|&p| p as u64));
-        kind.mul16_batch_into(&ops_a, &ops_b, &mut prods);
+        engine.mul_into(16, &ops_a, &ops_b, &mut prods);
         for (dst, &p) in out.data[offset..end].iter_mut().zip(&prods) {
             *dst = (p >> 8).min(255) as u8;
         }
@@ -127,13 +111,14 @@ pub const GAUSS5_SUM: u64 = 273;
 /// multiplies also approximate); the ÷273 normalization always uses
 /// `kind`'s divider (the div-only arm passes `approx_mul = false`).
 ///
-/// Evaluation is row-batched through the slice kernels: in the hybrid arm
+/// Evaluation is row-batched through the engine seam: in the hybrid arm
 /// the 25 weight multiplies of every pixel in a row form one batched
 /// multiply (width·25 products per call), and the ÷273 normalizations of
 /// the row form one batched divide. Tap order and accumulation are
 /// unchanged, so output is bit-identical to the per-pixel path.
 pub fn gaussian_smooth(img: &Image, kind: ArithKind, approx_mul: bool) -> Image {
     const TAPS: usize = 25;
+    let engine = kind.engine();
     let mut out = Image::new(img.width, img.height);
     // The weight pattern of a row is the same for every row: width copies
     // of the flattened 5×5 kernel. Build it once.
@@ -160,7 +145,7 @@ pub fn gaussian_smooth(img: &Image, kind: ArithKind, approx_mul: bool) -> Image 
                     }
                 }
             }
-            kind.mul16_batch_into(&ops_w, &ops_px, &mut prods);
+            engine.mul_into(16, &ops_w, &ops_px, &mut prods);
             for chunk in prods.chunks_exact(TAPS) {
                 accs.push(chunk.iter().sum());
             }
@@ -179,7 +164,7 @@ pub fn gaussian_smooth(img: &Image, kind: ArithKind, approx_mul: bool) -> Image 
                 accs.push(acc);
             }
         }
-        kind.div32_batch_into(&accs, &divisors, &mut quots);
+        engine.div_into(32, &accs, &divisors, &mut quots);
         for (x, &v) in quots.iter().enumerate() {
             out.set(x, y, v.min(255) as u8);
         }
@@ -246,17 +231,20 @@ mod tests {
     }
 
     /// Per-pixel reference of the batched [`blend`]/[`gaussian_smooth`]
-    /// paths, used as the bit-equality oracle.
+    /// paths, used as the bit-equality oracle (one scalar engine dispatch
+    /// per pixel — the seam's scalar convenience form).
     fn blend_scalar(a: &Image, b: &Image, kind: ArithKind) -> Image {
+        let engine = kind.engine();
         let mut out = Image::new(a.width, a.height);
         for i in 0..a.data.len() {
-            let p = kind.mul16(a.data[i] as u64, b.data[i] as u64);
+            let p = engine.mul(16, a.data[i] as u64, b.data[i] as u64);
             out.data[i] = (p >> 8).min(255) as u8;
         }
         out
     }
 
     fn gaussian_scalar(img: &Image, kind: ArithKind, approx_mul: bool) -> Image {
+        let engine = kind.engine();
         let mut out = Image::new(img.width, img.height);
         for y in 0..img.height {
             for x in 0..img.width {
@@ -266,10 +254,10 @@ mod tests {
                         let px = img
                             .at_clamped(x as isize + dx as isize - 2, y as isize + dy as isize - 2)
                             as u64;
-                        acc += if approx_mul { kind.mul16(w, px) } else { w * px };
+                        acc += if approx_mul { engine.mul(16, w, px) } else { w * px };
                     }
                 }
-                let v = kind.div32(acc, GAUSS5_SUM);
+                let v = engine.div(32, acc, GAUSS5_SUM);
                 out.set(x, y, v.min(255) as u8);
             }
         }

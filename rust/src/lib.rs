@@ -12,8 +12,12 @@
 //! * [`metrics`] — ARE/PRE/NED/CF/PSNR evaluators for the paper's tables.
 //! * [`image`], [`ann`], [`datasets`] — the application substrates of the
 //!   paper's §4.3 (image blending, Gaussian smoothing, quantized MLP).
-//! * [`coordinator`] — the L3 SIMD dispatch engine (lane packing, batching,
-//!   power gating).
+//! * [`engine`] — the unified execution seam: one [`engine::Backend`]
+//!   trait (reference / batched / sharded) from the scalar models to the
+//!   serve path. New callers should hold an [`engine::Engine`] handle
+//!   rather than dispatching designs by hand.
+//! * [`coordinator`] — the L3 SIMD dispatch front end (lane packing,
+//!   batching, power gating) over the sharded engine.
 //! * [`serve`] — the network serving subsystem: SIMD-wire protocol, TCP
 //!   server over the coordinator, pipelined client, load generator.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
@@ -25,6 +29,7 @@ pub mod arith;
 pub mod ann;
 pub mod circuits;
 pub mod datasets;
+pub mod engine;
 pub mod fabric;
 pub mod image;
 pub mod coordinator;

@@ -4,8 +4,17 @@
 //! reals — `|accurate − approx| / accurate` — over uniformly distributed
 //! random operands (10^6 for SISD). NED is the mean error distance divided
 //! by the maximum error distance observed.
+//!
+//! Evaluation goes through the batched engine seam (DESIGN.md §10):
+//! operands are drawn in chunks and evaluated with one
+//! [`Engine::mul_real_into`]/[`Engine::div_real_into`] call per chunk, so
+//! SIMDive's correction tables are resolved once per chunk instead of
+//! once per sample. The draw order and accumulation order are identical
+//! to the historical per-element loop, so every statistic is
+//! bit-for-bit unchanged.
 
 use crate::arith::{DivDesign, MulDesign};
+use crate::engine::Engine;
 use crate::util::Rng;
 
 /// Error statistics for one design.
@@ -19,28 +28,67 @@ pub struct ErrorReport {
     pub ned: f64,
 }
 
-/// Evaluate a multiplier over `samples` uniform non-zero pairs at `bits`.
-pub fn mul_error(design: MulDesign, bits: u32, samples: u64, seed: u64) -> ErrorReport {
-    let mut rng = Rng::new(seed);
-    let (mut sum_rel, mut peak_rel) = (0.0f64, 0.0f64);
-    let (mut sum_ed, mut max_ed) = (0.0f64, 0.0f64);
-    for _ in 0..samples {
-        let a = rng.operand(bits);
-        let b = rng.operand(bits);
-        let exact = (a as f64) * (b as f64);
-        let approx = design.mul_real(bits, a, b);
+/// Operand pairs evaluated per engine call.
+const CHUNK: usize = 8192;
+
+/// Streaming ARE/PRE/NED accumulator (one `add` per accepted sample, in
+/// draw order — float summation order matches the pre-engine loop).
+#[derive(Default)]
+struct ErrAcc {
+    sum_rel: f64,
+    peak_rel: f64,
+    sum_ed: f64,
+    max_ed: f64,
+}
+
+impl ErrAcc {
+    #[inline]
+    fn add(&mut self, exact: f64, approx: f64) {
         let ed = (exact - approx).abs();
         let rel = ed / exact;
-        sum_rel += rel;
-        peak_rel = peak_rel.max(rel);
-        sum_ed += ed;
-        max_ed = max_ed.max(ed);
+        self.sum_rel += rel;
+        self.peak_rel = self.peak_rel.max(rel);
+        self.sum_ed += ed;
+        self.max_ed = self.max_ed.max(ed);
     }
-    ErrorReport {
-        are_pct: sum_rel / samples as f64 * 100.0,
-        pre_pct: peak_rel * 100.0,
-        ned: if max_ed == 0.0 { 0.0 } else { sum_ed / samples as f64 / max_ed },
+
+    fn report(&self, samples: u64) -> ErrorReport {
+        ErrorReport {
+            are_pct: self.sum_rel / samples as f64 * 100.0,
+            pre_pct: self.peak_rel * 100.0,
+            ned: if self.max_ed == 0.0 {
+                0.0
+            } else {
+                self.sum_ed / samples as f64 / self.max_ed
+            },
+        }
     }
+}
+
+/// Evaluate a multiplier over `samples` uniform non-zero pairs at `bits`.
+pub fn mul_error(design: MulDesign, bits: u32, samples: u64, seed: u64) -> ErrorReport {
+    let engine = Engine::from_mul(design);
+    let mut rng = Rng::new(seed);
+    let mut acc = ErrAcc::default();
+    let mut a: Vec<u64> = Vec::with_capacity(CHUNK);
+    let mut b: Vec<u64> = Vec::with_capacity(CHUNK);
+    let mut approx: Vec<f64> = Vec::new();
+    let mut done = 0u64;
+    while done < samples {
+        let n = ((samples - done) as usize).min(CHUNK);
+        a.clear();
+        b.clear();
+        for _ in 0..n {
+            a.push(rng.operand(bits));
+            b.push(rng.operand(bits));
+        }
+        engine.mul_real_into(bits, &a, &b, &mut approx);
+        for ((&x, &y), &ap) in a.iter().zip(b.iter()).zip(approx.iter()) {
+            acc.add((x as f64) * (y as f64), ap);
+        }
+        done += n as u64;
+    }
+    acc.report(samples)
 }
 
 /// Evaluate a divider over the paper's 16/8-style scenario: `bits`-wide
@@ -52,31 +100,34 @@ pub fn div_error(
     samples: u64,
     seed: u64,
 ) -> ErrorReport {
+    let engine = Engine::batched(MulDesign::Accurate, design);
     let mut rng = Rng::new(seed);
-    let (mut sum_rel, mut peak_rel) = (0.0f64, 0.0f64);
-    let (mut sum_ed, mut max_ed) = (0.0f64, 0.0f64);
-    let mut n = 0u64;
-    while n < samples {
-        let a = rng.operand(bits);
-        let b = rng.operand(divisor_bits);
-        if a < b {
-            continue;
+    let mut acc = ErrAcc::default();
+    let mut a: Vec<u64> = Vec::with_capacity(CHUNK);
+    let mut b: Vec<u64> = Vec::with_capacity(CHUNK);
+    let mut approx: Vec<f64> = Vec::new();
+    let mut done = 0u64;
+    while done < samples {
+        // Draw a chunk, keeping only a ≥ b pairs (the quotient ≥ 1 use
+        // case) in draw order — the accepted sequence is identical to the
+        // historical rejection loop's.
+        a.clear();
+        b.clear();
+        while a.len() < CHUNK && done + (a.len() as u64) < samples {
+            let x = rng.operand(bits);
+            let y = rng.operand(divisor_bits);
+            if x >= y {
+                a.push(x);
+                b.push(y);
+            }
         }
-        let exact = a as f64 / b as f64;
-        let approx = design.div_real(bits, a, b);
-        let ed = (exact - approx).abs();
-        let rel = ed / exact;
-        sum_rel += rel;
-        peak_rel = peak_rel.max(rel);
-        sum_ed += ed;
-        max_ed = max_ed.max(ed);
-        n += 1;
+        engine.div_real_into(bits, &a, &b, &mut approx);
+        for ((&x, &y), &ap) in a.iter().zip(b.iter()).zip(approx.iter()) {
+            acc.add(x as f64 / y as f64, ap);
+        }
+        done += a.len() as u64;
     }
-    ErrorReport {
-        are_pct: sum_rel / samples as f64 * 100.0,
-        pre_pct: peak_rel * 100.0,
-        ned: if max_ed == 0.0 { 0.0 } else { sum_ed / samples as f64 / max_ed },
-    }
+    acc.report(samples)
 }
 
 #[cfg(test)]
@@ -148,5 +199,46 @@ mod tests {
         let b = mul_error(MulDesign::Mitchell, 16, 10_000, 3);
         assert_eq!(a.are_pct, b.are_pct);
         assert_eq!(a.ned, b.ned);
+    }
+
+    #[test]
+    fn chunked_sweep_matches_per_element_loop() {
+        // The engine-routed sweep must reproduce the historical
+        // per-element rejection loop bit-for-bit (same draws, same
+        // accumulation order). Re-derive both statistics the slow way and
+        // compare exactly.
+        let (bits, divisor_bits, samples, seed) = (16u32, 8u32, 20_000u64, 5u64);
+        let design = DivDesign::Simdive { w: 8 };
+        let mut rng = Rng::new(seed);
+        let mut acc = ErrAcc::default();
+        let mut n = 0u64;
+        while n < samples {
+            let a = rng.operand(bits);
+            let b = rng.operand(divisor_bits);
+            if a < b {
+                continue;
+            }
+            acc.add(a as f64 / b as f64, design.div_real(bits, a, b));
+            n += 1;
+        }
+        let slow = acc.report(samples);
+        let fast = div_error(design, bits, divisor_bits, samples, seed);
+        assert_eq!(slow.are_pct, fast.are_pct);
+        assert_eq!(slow.pre_pct, fast.pre_pct);
+        assert_eq!(slow.ned, fast.ned);
+
+        let mdesign = MulDesign::Simdive { w: 8 };
+        let mut rng = Rng::new(seed);
+        let mut acc = ErrAcc::default();
+        for _ in 0..samples {
+            let a = rng.operand(bits);
+            let b = rng.operand(bits);
+            acc.add((a as f64) * (b as f64), mdesign.mul_real(bits, a, b));
+        }
+        let slow = acc.report(samples);
+        let fast = mul_error(mdesign, bits, samples, seed);
+        assert_eq!(slow.are_pct, fast.are_pct);
+        assert_eq!(slow.pre_pct, fast.pre_pct);
+        assert_eq!(slow.ned, fast.ned);
     }
 }

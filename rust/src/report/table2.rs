@@ -192,8 +192,16 @@ pub fn render(samples: u64) -> String {
             format!("{:.2}", r.cf),
         ]
     };
-    let headers =
-        ["SISD Circuit", "Area(6-LUT)", "Delay(ns)", "Power(mW)", "Energy(uJ)", "ARE(%)", "PRE(%)", "CF"];
+    let headers = [
+        "SISD Circuit",
+        "Area(6-LUT)",
+        "Delay(ns)",
+        "Power(mW)",
+        "Energy(uJ)",
+        "ARE(%)",
+        "PRE(%)",
+        "CF",
+    ];
     let mut out = String::from("== Table 2 — SISD multipliers (16x16) ==\n");
     out += &super::render_table(&headers, &muls.iter().map(to_cells).collect::<Vec<_>>());
     out += "\n== Table 2 — SISD dividers (16/8) ==\n";

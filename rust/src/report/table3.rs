@@ -56,7 +56,8 @@ pub fn rows() -> Vec<Row> {
 /// Render Table 3 as text.
 pub fn render() -> String {
     let rows = rows();
-    let headers = ["SIMD Basic Block", "Area(LUT)", "Thru(us/1e6w)", "Power(mW)", "Energy(uJ)", "Lanes"];
+    let headers =
+        ["SIMD Basic Block", "Area(LUT)", "Thru(us/1e6w)", "Power(mW)", "Energy(uJ)", "Lanes"];
     let cells: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {

@@ -7,6 +7,7 @@ use crate::ann::{Mlp, QuantMlp};
 use crate::arith::MulDesign;
 use crate::circuits::{baselines, simdive};
 use crate::datasets::{generate, Family};
+use crate::engine::Engine;
 use crate::fabric::{calibrate, power, timing};
 
 #[derive(Clone, Debug)]
@@ -44,7 +45,9 @@ fn run_config(family: Family, name: &'static str, layers: usize, scale: Scale) -
     let lr = if layers >= 3 { 0.02 } else { 0.04 };
     net.train(&train, scale.epochs, lr, 77);
     let q = QuantMlp::from_float(&net, &train[..scale.train.min(500)]);
-    let eval = |d: MulDesign| q.accuracy(&test, d) * 100.0;
+    // Each design runs through one batched engine handle (the seam the
+    // serving path uses too — DESIGN.md §10).
+    let eval = |d: MulDesign| q.accuracy(&test, &Engine::from_mul(d)) * 100.0;
     Row {
         dataset: name,
         hidden_layers: layers,

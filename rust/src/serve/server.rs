@@ -35,7 +35,8 @@ use std::time::Instant;
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
-    /// Worker threads of the shared coordinator.
+    /// Worker shards of the shared coordinator's execution pool
+    /// (`engine::Sharded` — DESIGN.md §10).
     pub workers: usize,
     /// Coordinator packing-batch size.
     pub batch: usize,

@@ -46,8 +46,8 @@ fn drop_joins_threads_and_delivers_pending_singles() {
         for r in &reqs {
             receivers.push(coord.submit(*r));
         }
-        // `coord` dropped here: Drop sends Stop and joins the batcher,
-        // which in turn joins every worker.
+        // `coord` dropped here: dropping the shard pool disconnects the
+        // shard queues, which drain fully before every thread is joined.
     }
     for (rx, req) in receivers.into_iter().zip(&reqs) {
         let resp = rx.recv().expect("response must have been delivered before the join");

@@ -1,0 +1,211 @@
+//! Engine-seam properties (DESIGN.md §10): every backend is bit-identical
+//! to the scalar reference for every `{op, bits, w}`, the sharded backend
+//! is invariant under shard count, and shard shutdown drains in-flight
+//! words before joining.
+
+use simdive::arith::{DivDesign, MulDesign, W_MAX, WIDTHS};
+use simdive::coordinator::{ReqOp, Request};
+use simdive::engine::{Engine, Route, Sharded, ShardedConfig};
+use simdive::util::Rng;
+use std::sync::mpsc::channel;
+
+/// Deterministic seeds, one per property (replayable from a failure).
+const SEED_SLICES: u64 = 0x5EA1;
+const SEED_STREAM: u64 = 0x5EA2;
+const SEED_DRAIN: u64 = 0x5EA3;
+
+fn mixed_requests(rng: &mut Rng, n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|i| {
+            let bits = [8u32, 8, 16, 32][rng.below(4) as usize];
+            Request {
+                id: i,
+                op: if rng.below(3) == 0 { ReqOp::Div } else { ReqOp::Mul },
+                bits,
+                w: rng.below(W_MAX as u64 + 1) as u32,
+                a: rng.operand(bits),
+                b: rng.operand(bits),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn all_backends_agree_on_batched_slices() {
+    let mut rng = Rng::new(SEED_SLICES);
+    for &bits in &WIDTHS {
+        for w in [0u32, 4, 8] {
+            let a: Vec<u64> = (0..300).map(|_| rng.below(1u64 << bits)).collect();
+            let b: Vec<u64> = (0..300).map(|_| rng.below(1u64 << bits)).collect();
+            let reference = Engine::reference(MulDesign::Simdive { w }, DivDesign::Simdive { w });
+            let batched = Engine::simdive(w);
+            let sharded = Engine::sharded(
+                MulDesign::Simdive { w },
+                DivDesign::Simdive { w },
+                ShardedConfig { shards: 3, queue_depth: 128, batch: 32 },
+            );
+            let (mut want, mut got) = (Vec::new(), Vec::new());
+            reference.mul_into(bits, &a, &b, &mut want);
+            batched.mul_into(bits, &a, &b, &mut got);
+            assert_eq!(got, want, "batched mul bits={bits} w={w}");
+            sharded.mul_into(bits, &a, &b, &mut got);
+            assert_eq!(got, want, "sharded mul bits={bits} w={w}");
+            reference.div_into(bits, &a, &b, &mut want);
+            batched.div_into(bits, &a, &b, &mut got);
+            assert_eq!(got, want, "batched div bits={bits} w={w}");
+            sharded.div_into(bits, &a, &b, &mut got);
+            assert_eq!(got, want, "sharded div bits={bits} w={w}");
+        }
+    }
+}
+
+#[test]
+fn sharded_stream_bit_identical_across_shard_counts() {
+    // The tentpole invariant: for mixed {op, bits, w} traffic the sharded
+    // backend returns exactly the reference results at any shard count.
+    let mut rng = Rng::new(SEED_STREAM);
+    let reqs = mixed_requests(&mut rng, 4_000);
+    let oracle = Engine::reference(MulDesign::Accurate, DivDesign::Accurate);
+    let want = oracle.execute_stream(&reqs);
+    for shards in [1usize, 2, 4, 8] {
+        let eng = Engine::sharded(
+            MulDesign::Accurate,
+            DivDesign::Accurate,
+            ShardedConfig { shards, queue_depth: 256, batch: 64 },
+        );
+        assert_eq!(eng.execute_stream(&reqs), want, "shards={shards}");
+    }
+    // The batched one-shot assembler agrees too.
+    assert_eq!(Engine::default().execute_stream(&reqs), want);
+}
+
+#[test]
+fn non_simdive_designs_fall_back_bit_exactly_on_sharded() {
+    // Designs without a word form (MBM, Mitchell, truncated…) route to
+    // the batched slice path inside the sharded backend — same numbers.
+    let mut rng = Rng::new(SEED_SLICES ^ 1);
+    let a: Vec<u64> = (0..200).map(|_| rng.below(1 << 16)).collect();
+    let b: Vec<u64> = (0..200).map(|_| rng.below(1 << 16)).collect();
+    let sharded = Engine::sharded(
+        MulDesign::Mbm,
+        DivDesign::Inzed,
+        ShardedConfig { shards: 2, queue_depth: 64, batch: 16 },
+    );
+    let reference = Engine::reference(MulDesign::Mbm, DivDesign::Inzed);
+    let (mut want, mut got) = (Vec::new(), Vec::new());
+    reference.mul_into(16, &a, &b, &mut want);
+    sharded.mul_into(16, &a, &b, &mut got);
+    assert_eq!(got, want, "mbm mul fallback");
+    reference.div_into(16, &a, &b, &mut want);
+    sharded.div_into(16, &a, &b, &mut got);
+    assert_eq!(got, want, "inzed div fallback");
+}
+
+#[test]
+fn non_simd_widths_fall_back_bit_exactly_on_sharded() {
+    // SIMDive at a width with no word form (e.g. 12-bit) must route to
+    // the slice kernels on every backend — same numbers, no panic in a
+    // shard thread.
+    let mut rng = Rng::new(SEED_SLICES ^ 2);
+    let a: Vec<u64> = (0..100).map(|_| 1 + rng.below((1 << 12) - 1)).collect();
+    let b: Vec<u64> = (0..100).map(|_| 1 + rng.below((1 << 12) - 1)).collect();
+    let sharded = Engine::sharded(
+        MulDesign::Simdive { w: 8 },
+        DivDesign::Simdive { w: 8 },
+        ShardedConfig { shards: 2, queue_depth: 64, batch: 16 },
+    );
+    let reference = Engine::reference(MulDesign::Simdive { w: 8 }, DivDesign::Simdive { w: 8 });
+    let (mut want, mut got) = (Vec::new(), Vec::new());
+    reference.mul_into(12, &a, &b, &mut want);
+    sharded.mul_into(12, &a, &b, &mut got);
+    assert_eq!(got, want, "12-bit mul fallback");
+    reference.div_into(12, &a, &b, &mut want);
+    sharded.div_into(12, &a, &b, &mut got);
+    assert_eq!(got, want, "12-bit div fallback");
+}
+
+#[test]
+fn shard_shutdown_drains_in_flight_words() {
+    // Lifecycle: chunks submitted right before shutdown must be fully
+    // assembled, executed and routed — shutdown joins only after every
+    // in-flight word has drained.
+    let mut rng = Rng::new(SEED_DRAIN);
+    let reqs = mixed_requests(&mut rng, 2_000);
+    let pool = Sharded::start(ShardedConfig { shards: 4, queue_depth: 64, batch: 16 });
+    let (tx, rx) = channel();
+    for (base, piece) in reqs.chunks(50).enumerate() {
+        let chunk: Vec<(Request, Route)> = piece
+            .iter()
+            .enumerate()
+            .map(|(k, r)| (*r, Route::Slot(tx.clone(), (base * 50 + k) as u32)))
+            .collect();
+        pool.submit(chunk);
+    }
+    drop(tx);
+    // Shut down immediately: everything above is still in flight.
+    let stats = pool.shutdown();
+    assert_eq!(stats.requests, 2_000, "in-flight chunks must be drained, not dropped");
+    let oracle = Engine::reference(MulDesign::Accurate, DivDesign::Accurate);
+    let want = oracle.execute_stream(&reqs);
+    let mut got: Vec<Option<u64>> = vec![None; reqs.len()];
+    while let Ok((slot, resp)) = rx.recv() {
+        assert_eq!(resp.id, reqs[slot as usize].id, "slot {slot} routed a different request");
+        assert!(got[slot as usize].replace(resp.value).is_none(), "slot {slot} twice");
+    }
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(*v, Some(want[i]), "slot {i}");
+    }
+}
+
+#[test]
+fn sharded_drop_joins_and_delivers() {
+    // Dropping the pool (not calling shutdown) behaves identically.
+    let (tx, rx) = channel();
+    let reqs: Vec<Request> = (0..64u64)
+        .map(|i| Request { id: i, op: ReqOp::Mul, bits: 8, w: 8, a: 1 + i % 200, b: 7 })
+        .collect();
+    {
+        let pool = Sharded::start(ShardedConfig { shards: 2, queue_depth: 32, batch: 8 });
+        let chunk: Vec<(Request, Route)> = reqs
+            .iter()
+            .enumerate()
+            .map(|(k, r)| (*r, Route::Slot(tx.clone(), k as u32)))
+            .collect();
+        pool.submit(chunk);
+        // `pool` dropped here: Drop disconnects the shard queues and
+        // joins every shard thread after it drains.
+    }
+    drop(tx);
+    let mut n = 0usize;
+    while let Ok((slot, resp)) = rx.recv() {
+        let req = &reqs[slot as usize];
+        assert_eq!(
+            resp.value,
+            simdive::arith::simdive::simdive_mul_w(8, req.a, req.b, 8),
+            "slot {slot}"
+        );
+        n += 1;
+    }
+    assert_eq!(n, reqs.len(), "every response delivered before the join");
+}
+
+#[test]
+fn stream_results_invariant_under_chunked_submission() {
+    // Submitting one big stream or many small ones must not change any
+    // value (packing differs; results cannot).
+    let mut rng = Rng::new(SEED_STREAM ^ 7);
+    let reqs = mixed_requests(&mut rng, 1_000);
+    let eng = Engine::sharded(
+        MulDesign::Accurate,
+        DivDesign::Accurate,
+        ShardedConfig { shards: 4, queue_depth: 128, batch: 32 },
+    );
+    let whole = eng.execute_stream(&reqs);
+    let mut pieced = Vec::new();
+    let mut buf = Vec::new();
+    for piece in reqs.chunks(37) {
+        eng.execute_stream_into(piece, &mut buf);
+        pieced.extend_from_slice(&buf);
+    }
+    assert_eq!(pieced, whole);
+}

@@ -36,8 +36,8 @@ fn ann_pipeline_end_to_end() {
     let mut net = Mlp::new(&[32], 5);
     net.train(&train, 4, 0.1, 6);
     let q = QuantMlp::from_float(&net, &train[..200]);
-    let qa = q.accuracy(&test, MulDesign::Accurate);
-    let qs = q.accuracy(&test, MulDesign::Simdive { w: 8 });
+    let qa = q.accuracy(&test, &simdive::engine::Engine::from_mul(MulDesign::Accurate));
+    let qs = q.accuracy(&test, &simdive::engine::Engine::simdive(8));
     assert!(qa > 0.6, "accurate quantized {qa}");
     assert!((qa - qs).abs() < 0.06, "simdive {qs} vs accurate {qa}");
 }

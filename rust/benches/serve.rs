@@ -1,11 +1,15 @@
 //! Network serving throughput: a loopback SIMD-wire server driven by the
 //! in-crate load generator, reported next to the in-process coordinator
-//! batched figure so the cost of the network boundary is visible.
+//! batched figure so the cost of the network boundary is visible, plus a
+//! degraded-mode sweep — the chaos scenario at fault rates
+//! {0, 0.1%, 1%} — appended as the `"chaos"` section (DESIGN.md §11).
 //!
 //! Results go to stdout and to `BENCH_serve.json` at the repository root
 //! (schema `simdive-serve-v1`, documented in CHANGES.md alongside the
-//! hotpath schema).
+//! hotpath schema; the chaos section is append-only).
 
+use simdive::faults::{silence_injected_panics, FaultConfig};
+use simdive::serve::chaos::{self, ChaosConfig};
 use simdive::serve::loadgen::{self, LoadgenConfig};
 use simdive::serve::{ServeConfig, Server};
 
@@ -14,6 +18,14 @@ const REQUESTS: u64 = 100_000;
 
 /// In-process coordinator comparison requests (matches hotpath's figure).
 const COORD_REQUESTS: u64 = 40_000;
+
+/// Verified requests per chaos sweep point.
+const CHAOS_REQUESTS: u64 = 20_000;
+
+/// Fault rates swept (ppm per decision point): none, 0.1%, 1%.
+const FAULT_PPM: [u64; 3] = [0, 1_000, 10_000];
+
+const FAULT_SEED: u64 = 0xC4A05;
 
 fn main() {
     let server = Server::start("127.0.0.1:0", ServeConfig::default())
@@ -41,7 +53,46 @@ fn main() {
     );
     server.shutdown();
 
-    let json = loadgen::to_json(&report, COORD_REQUESTS, coord_rps);
+    // Degraded-mode sweep: one fresh fault-injected server per rate, the
+    // chaos scenario's invariants asserted at every point.
+    silence_injected_panics();
+    let mut sweep = Vec::new();
+    for ppm in FAULT_PPM {
+        let faults = (ppm > 0).then(|| FaultConfig::server_chaos(FAULT_SEED, ppm as u32));
+        let server = Server::start("127.0.0.1:0", ServeConfig { faults, ..ServeConfig::default() })
+            .expect("cannot bind chaos loopback server");
+        let addr = server.local_addr().to_string();
+        let ccfg = ChaosConfig { requests: CHAOS_REQUESTS, seed: FAULT_SEED, ..ChaosConfig::default() };
+        let c = chaos::run(&addr, &ccfg).expect("chaos run failed");
+        println!(
+            "[bench] chaos @ {ppm} ppm: {} completed / {} failed / {} reconnects — \
+             {:.1} kreq/s (shed {}, unavailable {}, mismatches {}, unresolved {}, \
+             connections {} -> {})",
+            c.completed,
+            c.failed,
+            c.reconnects,
+            c.rps / 1e3,
+            c.server.shed_overload,
+            c.server.failed_unavailable,
+            c.mismatches,
+            c.unresolved,
+            c.baseline_connections,
+            c.final_connections,
+        );
+        assert!(
+            c.invariants_hold(),
+            "chaos invariants violated at {ppm} ppm: mismatches {}, unresolved {}, \
+             connections {} -> {}",
+            c.mismatches,
+            c.unresolved,
+            c.baseline_connections,
+            c.final_connections,
+        );
+        server.shutdown();
+        sweep.push((ppm, c));
+    }
+
+    let json = loadgen::to_json_with_chaos(&report, COORD_REQUESTS, coord_rps, &sweep);
     let path = simdive::util::repo_root().join("BENCH_serve.json");
     match std::fs::write(&path, &json) {
         Ok(()) => println!("[bench] wrote {}", path.display()),

@@ -22,7 +22,9 @@
 
 use super::packer::Request;
 use crate::engine::sharded::{Route, Sharded, ShardedConfig, StatsHandle};
+use crate::faults::FaultInjector;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 // Re-exported so the serve layer and external callers keep one import
 // path for the coordinator surface.
@@ -89,11 +91,20 @@ impl BatchHandle {
 
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Self {
-        let pool = Sharded::start(ShardedConfig {
-            shards: cfg.workers.max(1),
-            queue_depth: cfg.queue_depth,
-            batch: cfg.batch.max(1),
-        });
+        Coordinator::start_with_faults(cfg, None)
+    }
+
+    /// Start with a chaos-harness fault injector threaded into the shard
+    /// pool (`None` behaves exactly like [`Coordinator::start`]).
+    pub fn start_with_faults(cfg: CoordinatorConfig, faults: Option<Arc<FaultInjector>>) -> Self {
+        let pool = Sharded::start_with_faults(
+            ShardedConfig {
+                shards: cfg.workers.max(1),
+                queue_depth: cfg.queue_depth,
+                batch: cfg.batch.max(1),
+            },
+            faults,
+        );
         let stats = pool.stats_handle();
         Coordinator { pool, stats, batch_chunk: cfg.batch.max(1) }
     }

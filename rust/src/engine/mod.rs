@@ -298,7 +298,19 @@ impl Backend for Sharded {
         drop(tx);
         for _ in 0..reqs.len() {
             let (s, resp) = rx.recv().expect("engine shards stopped");
-            out[s as usize] = resp.value;
+            out[s as usize] = if resp.err == 0 {
+                resp.value
+            } else {
+                // Shard supervision gave the request up (double fault).
+                // In-process callers have the scalar models right here, so
+                // the seam contract (bit-exact, always answers) holds even
+                // under injected chaos.
+                let r = reqs[s as usize];
+                match r.op {
+                    ReqOp::Mul => simdive_mul_w(r.bits, r.a, r.b, r.w),
+                    ReqOp::Div => simdive_div_w(r.bits, r.a, r.b, r.w),
+                }
+            };
         }
     }
 }

@@ -25,19 +25,39 @@
 //! * **Drain-on-shutdown.** Dropping the pool disconnects the shard
 //!   queues; each shard finishes every buffered message, flushes its
 //!   residues, and delivers every response before its thread is joined.
+//! * **Supervision (DESIGN.md §11).** A panic during a shard's emission
+//!   round — injected by the chaos harness or genuine — is caught at the
+//!   round boundary; the emitted-but-unrouted words are re-executed
+//!   through a freshly built kernel, and only a *double* fault (recovery
+//!   panics too) fails the affected requests with
+//!   [`RESP_ERR_UNAVAILABLE`] instead of stranding their writers. The
+//!   shard thread itself never dies, so shutdown always joins. All
+//!   injected faults fire *before* response routing, so recovery can
+//!   never deliver a response twice.
 
 use crate::arith::batch;
 use crate::coordinator::packer::{lane_value, Assembled, Assembler, Request};
+use crate::faults::FaultInjector;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+
+/// `Response::err` value for a request that shard supervision gave up on
+/// (the round panicked and recovery failed too). The serve layer maps any
+/// non-zero `err` to `wire::ERR_UNAVAILABLE`; engine-level callers fall
+/// back to the scalar models.
+pub const RESP_ERR_UNAVAILABLE: u8 = 1;
 
 /// A completed request.
 #[derive(Clone, Copy, Debug)]
 pub struct Response {
     pub id: u64,
     pub value: u64,
+    /// `0` = success; non-zero = the request could not be executed
+    /// ([`RESP_ERR_UNAVAILABLE`]) and `value` is meaningless.
+    pub err: u8,
 }
 
 /// Where a completed request's response goes. Routes are attached
@@ -202,10 +222,13 @@ struct ShardCtx {
     held_rounds: u32,
     shared: Arc<Shared>,
     per_word_pj: f64,
+    /// Chaos-harness injector; `None` in production (zero overhead beyond
+    /// the Option check per round).
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl ShardCtx {
-    fn new(shared: Arc<Shared>, per_word_pj: f64) -> Self {
+    fn new(shared: Arc<Shared>, per_word_pj: f64, faults: Option<Arc<FaultInjector>>) -> Self {
         ShardCtx {
             kernel: batch::MultiKernel::new(),
             asm: Assembler::new(),
@@ -217,6 +240,7 @@ impl ShardCtx {
             held_rounds: 0,
             shared,
             per_word_pj,
+            faults,
         }
     }
 
@@ -233,6 +257,11 @@ impl ShardCtx {
     /// still merge, everything when `flush` or the round cap hits),
     /// execute them through the batched kernel, and route every response
     /// lane-aligned.
+    ///
+    /// Supervision contract: every panic this round can raise — injected
+    /// or genuine — fires *before* [`ShardCtx::route_words`] sends the
+    /// first response, so [`ShardCtx::recover`] re-executes the emitted
+    /// words without ever double-delivering.
     fn run(&mut self, flush: bool) {
         self.words.clear();
         if flush || self.held_rounds >= MAX_HELD_ROUNDS {
@@ -245,6 +274,15 @@ impl ShardCtx {
             return;
         }
 
+        if let Some(inj) = &self.faults {
+            if inj.shard_slow() {
+                std::thread::sleep(inj.slow_delay());
+            }
+            if inj.shard_panic() {
+                panic!("injected shard fault");
+            }
+        }
+
         self.ws.clear();
         self.ws.extend(self.words.iter().map(|j| j.pw.w));
         self.ops.clear();
@@ -255,6 +293,20 @@ impl ShardCtx {
         self.results.resize(self.words.len(), 0);
         self.kernel.execute_mixed_into(&self.ws, &self.ops, &self.operands, &mut self.results);
 
+        if let Some(inj) = &self.faults {
+            if inj.delay_completion() {
+                std::thread::sleep(inj.completion_delay());
+            }
+        }
+
+        self.route_words();
+    }
+
+    /// Deliver one executed round: route every lane's response, fold the
+    /// round into the shared counters, and mark the words routed (the
+    /// cleared buffer is what tells [`ShardCtx::recover`] there is
+    /// nothing left to re-execute).
+    fn route_words(&mut self) {
         let (mut active, mut total) = (0u64, 0u64);
         let mut energy = 0.0f64;
         for (job, &packed) in self.words.iter().zip(self.results.iter()) {
@@ -265,14 +317,78 @@ impl ShardCtx {
             for (l, route) in job.payload.iter().enumerate().take(pw.lane_count()) {
                 if let Some(route) = route {
                     let id = pw.lane_req[l].expect("routed lane carries an id");
-                    route.send(Response { id, value: lane_value(pw, packed, l) });
+                    route.send(Response { id, value: lane_value(pw, packed, l), err: 0 });
                 }
             }
         }
-        self.shared.words.fetch_add(self.words.len() as u64, Ordering::Relaxed);
+        let words = self.words.len() as u64;
+        self.count_round(words, active, total, energy);
+        self.words.clear();
+    }
+
+    fn count_round(&self, words: u64, active: u64, total: u64, energy: f64) {
+        self.shared.words.fetch_add(words, Ordering::Relaxed);
         self.shared.active_lanes.fetch_add(active, Ordering::Relaxed);
         self.shared.total_lanes.fetch_add(total, Ordering::Relaxed);
         self.shared.energy_mpj.fetch_add(energy_increment_mpj(energy), Ordering::Relaxed);
+    }
+
+    /// Recover from a panicked round: the emitted words still hold every
+    /// route, so re-execute each word through a *freshly built* kernel —
+    /// independent of whatever state the panicking one was left in — and
+    /// deliver its lanes. A word whose re-execution panics too (a double
+    /// fault: the kernel itself is broken for this input, or the chaos
+    /// harness forces it via `recover_panic_ppm`) fails its requests with
+    /// [`RESP_ERR_UNAVAILABLE`] rather than stranding their writers.
+    /// Either way every routed lane gets exactly one response and the
+    /// shard thread survives.
+    fn recover(&mut self) {
+        if self.words.is_empty() {
+            return; // the panic predated emission: nothing in flight
+        }
+        let fresh = catch_unwind(batch::MultiKernel::new).ok();
+        let (mut active, mut total) = (0u64, 0u64);
+        let mut energy = 0.0f64;
+        for job in &self.words {
+            let pw = &job.pw;
+            let forced = self.faults.as_ref().is_some_and(|f| f.recover_panic());
+            let packed: Option<u64> = if forced {
+                None
+            } else {
+                fresh
+                    .as_ref()
+                    .and_then(|k| catch_unwind(AssertUnwindSafe(|| k.execute(pw.w, pw.op, pw.word))).ok())
+            };
+            active += pw.active_lanes as u64;
+            total += pw.lane_count() as u64;
+            energy += word_energy_pj(self.per_word_pj, pw.active_lanes, pw.lane_count() as u32);
+            for (l, route) in job.payload.iter().enumerate().take(pw.lane_count()) {
+                if let Some(route) = route {
+                    let id = pw.lane_req[l].expect("routed lane carries an id");
+                    match packed {
+                        Some(p) => route.send(Response { id, value: lane_value(pw, p, l), err: 0 }),
+                        None => {
+                            route.send(Response { id, value: 0, err: RESP_ERR_UNAVAILABLE })
+                        }
+                    }
+                }
+            }
+        }
+        let words = self.words.len() as u64;
+        self.count_round(words, active, total, energy);
+        self.words.clear();
+        if let Some(k) = fresh {
+            self.kernel = k; // replace the possibly-poisoned kernel
+        }
+    }
+}
+
+/// Run one round under supervision: a panic (injected or genuine) is
+/// caught at the round boundary and handed to recovery. The shard thread
+/// itself never unwinds away — shutdown always joins.
+fn run_supervised(ctx: &mut ShardCtx, flush: bool) {
+    if catch_unwind(AssertUnwindSafe(|| ctx.run(flush))).is_err() {
+        ctx.recover();
     }
 }
 
@@ -280,8 +396,14 @@ impl ShardCtx {
 /// assembler, emit full words every `batch` requests, and flush everything
 /// the instant the queue goes empty (or on Flush / disconnect) — a partial
 /// residue never waits on traffic that may not come.
-fn shard_loop(rx: Receiver<ShardMsg>, shared: Arc<Shared>, batch_size: usize, per_word_pj: f64) {
-    let mut ctx = ShardCtx::new(shared, per_word_pj);
+fn shard_loop(
+    rx: Receiver<ShardMsg>,
+    shared: Arc<Shared>,
+    batch_size: usize,
+    per_word_pj: f64,
+    faults: Option<Arc<FaultInjector>>,
+) {
+    let mut ctx = ShardCtx::new(shared, per_word_pj, faults);
     loop {
         // Between bursts the assembler is empty (every burst ends in a
         // flush), so blocking indefinitely strands nothing.
@@ -295,11 +417,11 @@ fn shard_loop(rx: Receiver<ShardMsg>, shared: Arc<Shared>, batch_size: usize, pe
         loop {
             if folded >= batch_size {
                 folded = 0;
-                ctx.run(false);
+                run_supervised(&mut ctx, false);
             }
             match rx.try_recv() {
                 Ok(ShardMsg::Batch(chunk)) => folded += ctx.fold(chunk),
-                Ok(ShardMsg::Flush) => ctx.run(true),
+                Ok(ShardMsg::Flush) => run_supervised(&mut ctx, true),
                 // Empty (burst over) or disconnected — either way flush
                 // below; a disconnect also ends the outer loop at its
                 // next recv.
@@ -307,11 +429,11 @@ fn shard_loop(rx: Receiver<ShardMsg>, shared: Arc<Shared>, batch_size: usize, pe
             }
         }
         // Burst over (idle queue or disconnect): flush everything held.
-        ctx.run(true);
+        run_supervised(&mut ctx, true);
     }
     // Defensive final flush — unreachable residues would otherwise strand
     // their routes (the loop above always flushes before looping back).
-    ctx.run(true);
+    run_supervised(&mut ctx, true);
 }
 
 /// The sharded backend: N shard threads behind bounded queues, dispatched
@@ -326,6 +448,12 @@ pub struct Sharded {
 impl Sharded {
     /// Spawn the shard pool.
     pub fn start(cfg: ShardedConfig) -> Sharded {
+        Sharded::start_with_faults(cfg, None)
+    }
+
+    /// Spawn the shard pool with a chaos-harness fault injector threaded
+    /// into every shard (`None` behaves exactly like [`Sharded::start`]).
+    pub fn start_with_faults(cfg: ShardedConfig, faults: Option<Arc<FaultInjector>>) -> Sharded {
         let n = cfg.shards.max(1);
         let batch = cfg.batch.max(1);
         let per_word_pj = simd_word_energy_pj();
@@ -336,7 +464,10 @@ impl Sharded {
             let (tx, rx) = sync_channel::<ShardMsg>(cfg.queue_depth.max(16));
             txs.push(tx);
             let shared = Arc::clone(&shared);
-            handles.push(std::thread::spawn(move || shard_loop(rx, shared, batch, per_word_pj)));
+            let faults = faults.clone();
+            handles.push(
+                std::thread::spawn(move || shard_loop(rx, shared, batch, per_word_pj, faults)),
+            );
         }
         Sharded { txs, handles, rr: AtomicUsize::new(0), shared }
     }

@@ -1,0 +1,535 @@
+//! Deterministic, seeded fault injection — the chaos harness behind the
+//! fault-tolerant serving work (DESIGN.md §11).
+//!
+//! Faults here are *scheduled*, not random: every injection site draws
+//! from a per-site atomic counter hashed with the configured seed
+//! (splitmix64), so the k-th decision at a site is a pure function of
+//! `(seed, site, k)`. Two runs with the same seed and the same per-site
+//! traffic volume inject the same number of faults at the same relative
+//! points, regardless of thread interleaving — which is what makes the
+//! chaos invariants (`serve::chaos`) reproducible enough to assert on.
+//!
+//! The harness threads into every layer of the serving stack:
+//!
+//! * **wire** — [`ChaosStream`] wraps any `Read + Write` transport and
+//!   injects byte corruption, one-byte dribble stalls (short reads and
+//!   writes that exercise every `read_exact` resumption path), and sticky
+//!   connection resets. Used by `tests/wire_fuzz.rs` and the saboteur
+//!   connections of the chaos load scenario.
+//! * **engine** — [`FaultyBackend`] wraps any [`Backend`] and injects
+//!   panics, slow calls and delayed completions at the seam;
+//!   `engine::Sharded` accepts an injector directly
+//!   (`Sharded::start_with_faults`) so shard threads can panic *inside*
+//!   the execution loop, where supervision has to catch them.
+//! * **server** — `serve::Server` drops accepted connections at the door
+//!   and injects shard faults via its coordinator when
+//!   `ServeConfig::faults` is set.
+//!
+//! Rates are parts-per-million per decision point (a decision is one
+//! read/write call, one shard emission round, one accepted connection —
+//! not one request), so 10_000 ppm = 1% of decisions fault.
+
+use crate::arith::{DivDesign, MulDesign};
+use crate::coordinator::packer::Request;
+use crate::engine::Backend;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fault rates and magnitudes. All rates are parts-per-million per
+/// decision point; a zero rate disables that fault entirely (and a
+/// default-constructed config injects nothing).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the deterministic schedule.
+    pub seed: u64,
+    /// Flip one bit of one byte per faulted read/write call.
+    pub wire_corrupt_ppm: u32,
+    /// Dribble: serve the faulted read/write one byte at a time.
+    pub wire_stall_ppm: u32,
+    /// Inject a sticky `ConnectionReset` (the stream is dead afterwards).
+    pub wire_reset_ppm: u32,
+    /// Panic a shard emission round (or a `FaultyBackend` call).
+    pub shard_panic_ppm: u32,
+    /// Sleep `slow_ms` before a shard emission round executes.
+    pub shard_slow_ppm: u32,
+    pub slow_ms: u64,
+    /// Sleep `delay_ms` between execution and response routing.
+    pub delay_ppm: u32,
+    pub delay_ms: u64,
+    /// Drop an accepted connection before the hello exchange.
+    pub accept_drop_ppm: u32,
+    /// Test hook for the double-fault path: make shard *recovery* fail
+    /// too, so the request is answered `ERR_UNAVAILABLE` instead of
+    /// re-executed (DESIGN.md §11).
+    pub recover_panic_ppm: u32,
+}
+
+impl FaultConfig {
+    /// Server-side fault mix at an aggregate rate: shard panics at the
+    /// full rate, slow shards and delayed completions at half, accept
+    /// drops at a quarter. The shape the chaos bench sweep uses.
+    pub fn server_chaos(seed: u64, rate_ppm: u32) -> FaultConfig {
+        FaultConfig {
+            seed,
+            shard_panic_ppm: rate_ppm,
+            shard_slow_ppm: rate_ppm / 2,
+            slow_ms: 2,
+            delay_ppm: rate_ppm / 2,
+            delay_ms: 1,
+            accept_drop_ppm: rate_ppm / 4,
+            ..FaultConfig::default()
+        }
+    }
+
+    /// Wire-level fault mix: corruption, stalls and resets all at
+    /// `rate_ppm`. Used by the fuzz schedules and saboteur connections.
+    pub fn wire_chaos(seed: u64, rate_ppm: u32) -> FaultConfig {
+        FaultConfig {
+            seed,
+            wire_corrupt_ppm: rate_ppm,
+            wire_stall_ppm: rate_ppm,
+            wire_reset_ppm: rate_ppm,
+            ..FaultConfig::default()
+        }
+    }
+
+    /// Does any rate inject at all?
+    pub fn is_active(&self) -> bool {
+        self.wire_corrupt_ppm > 0
+            || self.wire_stall_ppm > 0
+            || self.wire_reset_ppm > 0
+            || self.shard_panic_ppm > 0
+            || self.shard_slow_ppm > 0
+            || self.delay_ppm > 0
+            || self.accept_drop_ppm > 0
+            || self.recover_panic_ppm > 0
+    }
+}
+
+/// Injection sites, one deterministic counter each.
+#[derive(Clone, Copy)]
+enum Site {
+    WireCorrupt = 0,
+    WireStall,
+    WireReset,
+    ShardPanic,
+    ShardSlow,
+    Delay,
+    AcceptDrop,
+    RecoverPanic,
+}
+
+const SITE_COUNT: usize = 8;
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The shared decision engine: one per server / pool / stream family.
+/// Cheap enough to consult on every I/O call (one relaxed fetch_add and
+/// a hash when the site's rate is non-zero; a load-free early-out when
+/// it is zero).
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    counters: [AtomicU64; SITE_COUNT],
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector { cfg, counters: std::array::from_fn(|_| AtomicU64::new(0)) })
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// The k-th decision at `site` faults iff
+    /// `splitmix64(seed ⊕ splitmix64(site ≪ 32 ⊕ k)) mod 1e6 < ppm`.
+    fn decide(&self, site: Site, ppm: u32) -> bool {
+        if ppm == 0 {
+            return false;
+        }
+        let k = self.counters[site as usize].fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.cfg.seed ^ splitmix64(((site as u64 + 1) << 32) ^ k));
+        h % 1_000_000 < ppm as u64
+    }
+
+    /// Derive a deterministic value from the seed and a caller salt
+    /// (corruption positions, saboteur choices).
+    pub fn derive(&self, salt: u64) -> u64 {
+        splitmix64(self.cfg.seed ^ splitmix64(salt))
+    }
+
+    pub fn wire_corrupt(&self) -> bool {
+        self.decide(Site::WireCorrupt, self.cfg.wire_corrupt_ppm)
+    }
+
+    pub fn wire_stall(&self) -> bool {
+        self.decide(Site::WireStall, self.cfg.wire_stall_ppm)
+    }
+
+    pub fn wire_reset(&self) -> bool {
+        self.decide(Site::WireReset, self.cfg.wire_reset_ppm)
+    }
+
+    pub fn shard_panic(&self) -> bool {
+        self.decide(Site::ShardPanic, self.cfg.shard_panic_ppm)
+    }
+
+    pub fn shard_slow(&self) -> bool {
+        self.decide(Site::ShardSlow, self.cfg.shard_slow_ppm)
+    }
+
+    pub fn delay_completion(&self) -> bool {
+        self.decide(Site::Delay, self.cfg.delay_ppm)
+    }
+
+    pub fn accept_drop(&self) -> bool {
+        self.decide(Site::AcceptDrop, self.cfg.accept_drop_ppm)
+    }
+
+    pub fn recover_panic(&self) -> bool {
+        self.decide(Site::RecoverPanic, self.cfg.recover_panic_ppm)
+    }
+
+    pub fn slow_delay(&self) -> Duration {
+        Duration::from_millis(self.cfg.slow_ms)
+    }
+
+    pub fn completion_delay(&self) -> Duration {
+        Duration::from_millis(self.cfg.delay_ms)
+    }
+}
+
+/// A `Read + Write` transport with scheduled wire faults: bit flips,
+/// one-byte dribble stalls, and sticky connection resets. Wrap a
+/// `TcpStream` (saboteur connections) or a `Cursor` (fuzz schedules).
+pub struct ChaosStream<S> {
+    inner: S,
+    inj: Arc<FaultInjector>,
+    /// Count of corrupted calls so far — the decoder must have rejected
+    /// or errored on something if this is non-zero.
+    corruptions: u64,
+    /// Salt counter for deterministic corruption positions.
+    events: u64,
+    /// A reset fired; every subsequent call fails.
+    reset: bool,
+}
+
+impl<S> ChaosStream<S> {
+    pub fn new(inner: S, inj: Arc<FaultInjector>) -> ChaosStream<S> {
+        ChaosStream { inner, inj, corruptions: 0, events: 0, reset: false }
+    }
+
+    /// How many read/write calls were corrupted so far.
+    pub fn corruptions(&self) -> u64 {
+        self.corruptions
+    }
+
+    /// Whether a sticky reset has fired.
+    pub fn is_reset(&self) -> bool {
+        self.reset
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    fn reset_err(&mut self) -> io::Error {
+        self.reset = true;
+        io::Error::new(io::ErrorKind::ConnectionReset, "injected connection reset")
+    }
+
+    /// Deterministic (position, xor-mask) for the next corruption.
+    fn corruption(&mut self, len: usize) -> (usize, u8) {
+        self.events += 1;
+        let h = self.inj.derive(0xC0_44 ^ self.events);
+        let pos = (h as usize) % len;
+        let mask = 1u8 << ((h >> 32) % 8);
+        (pos, mask)
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.read(buf);
+        }
+        if self.reset || self.inj.wire_reset() {
+            return Err(self.reset_err());
+        }
+        // Stall: dribble one byte per call — a short read every caller
+        // must resume from (read_exact loops; a decoder that assumed one
+        // read per frame would corrupt here).
+        let take = if self.inj.wire_stall() { 1 } else { buf.len() };
+        let n = self.inner.read(&mut buf[..take])?;
+        if n > 0 && self.inj.wire_corrupt() {
+            let (pos, mask) = self.corruption(n);
+            buf[pos] ^= mask;
+            self.corruptions += 1;
+        }
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        if self.reset || self.inj.wire_reset() {
+            return Err(self.reset_err());
+        }
+        let take = if self.inj.wire_stall() { 1 } else { buf.len() };
+        if self.inj.wire_corrupt() {
+            let mut owned = buf[..take].to_vec();
+            let (pos, mask) = self.corruption(owned.len());
+            owned[pos] ^= mask;
+            self.corruptions += 1;
+            // A partial write of the corrupted prefix is fine: write_all
+            // retries the (uncorrupted) tail, leaving exactly one flipped
+            // bit on the wire.
+            return self.inner.write(&owned);
+        }
+        self.inner.write(&buf[..take])
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.reset {
+            return Err(self.reset_err());
+        }
+        self.inner.flush()
+    }
+}
+
+/// A [`Backend`] decorator injecting engine-seam faults: panics and slow
+/// calls before delegation, delayed completions after. With an all-zero
+/// config it is a transparent pass-through (bit-identical by the seam
+/// contract — asserted in `tests/serve_faults.rs`).
+pub struct FaultyBackend {
+    inner: Arc<dyn Backend>,
+    inj: Arc<FaultInjector>,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Arc<dyn Backend>, inj: Arc<FaultInjector>) -> FaultyBackend {
+        FaultyBackend { inner, inj }
+    }
+
+    fn before(&self) {
+        if self.inj.shard_slow() {
+            std::thread::sleep(self.inj.slow_delay());
+        }
+        if self.inj.shard_panic() {
+            panic!("injected backend fault");
+        }
+    }
+
+    fn after(&self) {
+        if self.inj.delay_completion() {
+            std::thread::sleep(self.inj.completion_delay());
+        }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn mul_batch(&self, design: MulDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        self.before();
+        self.inner.mul_batch(design, bits, a, b, out);
+        self.after();
+    }
+
+    fn div_batch(&self, design: DivDesign, bits: u32, a: &[u64], b: &[u64], out: &mut Vec<u64>) {
+        self.before();
+        self.inner.div_batch(design, bits, a, b, out);
+        self.after();
+    }
+
+    fn mul_real_batch(
+        &self,
+        design: MulDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        self.before();
+        self.inner.mul_real_batch(design, bits, a, b, out);
+        self.after();
+    }
+
+    fn div_real_batch(
+        &self,
+        design: DivDesign,
+        bits: u32,
+        a: &[u64],
+        b: &[u64],
+        out: &mut Vec<f64>,
+    ) {
+        self.before();
+        self.inner.div_real_batch(design, bits, a, b, out);
+        self.after();
+    }
+
+    fn execute_stream(&self, reqs: &[Request], out: &mut Vec<u64>) {
+        self.before();
+        self.inner.execute_stream(reqs, out);
+        self.after();
+    }
+}
+
+/// Keep the default panic hook from spamming stderr with *injected*
+/// panics ("injected" in the payload) during chaos runs; every other
+/// panic still reaches the previous hook. Installed once per process —
+/// safe to call repeatedly and from concurrent tests.
+pub fn silence_injected_panics() {
+    use std::sync::OnceLock;
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let injected = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected"))
+                .or_else(|| payload.downcast_ref::<String>().map(|s| s.contains("injected")))
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn default_config_injects_nothing() {
+        let inj = FaultInjector::new(FaultConfig::default());
+        assert!(!inj.config().is_active());
+        for _ in 0..1000 {
+            assert!(!inj.wire_corrupt());
+            assert!(!inj.shard_panic());
+            assert!(!inj.accept_drop());
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_rate_shaped() {
+        let cfg = FaultConfig { seed: 42, shard_panic_ppm: 100_000, ..FaultConfig::default() };
+        let a = FaultInjector::new(cfg);
+        let b = FaultInjector::new(cfg);
+        let fire_a: Vec<bool> = (0..10_000).map(|_| a.shard_panic()).collect();
+        let fire_b: Vec<bool> = (0..10_000).map(|_| b.shard_panic()).collect();
+        assert_eq!(fire_a, fire_b, "same seed → same schedule");
+        let hits = fire_a.iter().filter(|&&f| f).count();
+        // 10% nominal over 10k decisions; 3σ ≈ ±90.
+        assert!((700..=1300).contains(&hits), "hit rate {hits}/10000 off nominal");
+        let other_seed = FaultInjector::new(FaultConfig { seed: 43, ..cfg });
+        let fire_c: Vec<bool> = (0..10_000).map(|_| other_seed.shard_panic()).collect();
+        assert_ne!(fire_a, fire_c, "different seed → different schedule");
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let cfg = FaultConfig {
+            seed: 7,
+            shard_panic_ppm: 1_000_000,
+            shard_slow_ppm: 0,
+            ..FaultConfig::default()
+        };
+        let inj = FaultInjector::new(cfg);
+        for _ in 0..100 {
+            assert!(inj.shard_panic());
+            assert!(!inj.shard_slow(), "zero-rate site must never fire");
+        }
+    }
+
+    #[test]
+    fn chaos_stream_passthrough_when_inactive() {
+        let inj = FaultInjector::new(FaultConfig::default());
+        let data = b"hello chaos".to_vec();
+        let mut cs = ChaosStream::new(Cursor::new(data.clone()), inj);
+        let mut out = Vec::new();
+        cs.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(cs.corruptions(), 0);
+        assert!(!cs.is_reset());
+    }
+
+    #[test]
+    fn chaos_stream_stall_dribbles_but_preserves_bytes() {
+        let cfg = FaultConfig { seed: 9, wire_stall_ppm: 1_000_000, ..FaultConfig::default() };
+        let inj = FaultInjector::new(cfg);
+        let data: Vec<u8> = (0..=255).collect();
+        let mut cs = ChaosStream::new(Cursor::new(data.clone()), inj);
+        let mut out = vec![0u8; data.len()];
+        cs.read_exact(&mut out).unwrap();
+        assert_eq!(out, data, "stalls must never change content");
+    }
+
+    #[test]
+    fn chaos_stream_corruption_flips_exactly_one_bit_per_event() {
+        let cfg = FaultConfig { seed: 11, wire_corrupt_ppm: 1_000_000, ..FaultConfig::default() };
+        let inj = FaultInjector::new(cfg);
+        let data = vec![0u8; 64];
+        let mut cs = ChaosStream::new(Cursor::new(data), inj);
+        let mut out = vec![0u8; 64];
+        cs.read_exact(&mut out).unwrap();
+        assert!(cs.corruptions() >= 1);
+        let flipped: u32 = out.iter().map(|b| b.count_ones()).sum();
+        assert_eq!(flipped as u64, cs.corruptions(), "one bit per corrupted read");
+    }
+
+    #[test]
+    fn chaos_stream_reset_is_sticky() {
+        let cfg = FaultConfig { seed: 13, wire_reset_ppm: 1_000_000, ..FaultConfig::default() };
+        let inj = FaultInjector::new(cfg);
+        let mut cs = ChaosStream::new(Cursor::new(vec![1u8, 2, 3]), inj);
+        let mut buf = [0u8; 1];
+        let e = cs.read(&mut buf).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::ConnectionReset);
+        assert!(cs.is_reset());
+        assert!(cs.read(&mut buf).is_err(), "reset streams stay dead");
+        assert!(cs.write(&[0]).is_err());
+    }
+
+    #[test]
+    fn faulty_backend_is_transparent_when_inactive() {
+        use crate::engine::{Backend, Batched};
+        let inj = FaultInjector::new(FaultConfig::default());
+        let fb = FaultyBackend::new(Arc::new(Batched::new()), inj);
+        let inner = Batched::new();
+        let a: Vec<u64> = (1..=64).collect();
+        let b: Vec<u64> = (1..=64).rev().collect();
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        fb.mul_batch(MulDesign::Simdive { w: 8 }, 8, &a, &b, &mut got);
+        inner.mul_batch(MulDesign::Simdive { w: 8 }, 8, &a, &b, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn faulty_backend_panics_on_schedule() {
+        use crate::engine::Batched;
+        silence_injected_panics();
+        let cfg = FaultConfig { seed: 3, shard_panic_ppm: 1_000_000, ..FaultConfig::default() };
+        let fb = FaultyBackend::new(Arc::new(Batched::new()), FaultInjector::new(cfg));
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = Vec::new();
+            fb.mul_batch(MulDesign::Accurate, 8, &[1], &[2], &mut out);
+        }));
+        assert!(caught.is_err(), "100% panic rate must panic");
+    }
+}

@@ -20,6 +20,9 @@
 //!   batching, power gating) over the sharded engine.
 //! * [`serve`] — the network serving subsystem: SIMD-wire protocol, TCP
 //!   server over the coordinator, pipelined client, load generator.
+//! * [`faults`] — deterministic, seeded fault injection (wire, engine,
+//!   server) behind the fault-tolerant serving defenses and the chaos
+//!   load scenario.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs on the request path).
 //!
@@ -31,6 +34,7 @@ pub mod circuits;
 pub mod datasets;
 pub mod engine;
 pub mod fabric;
+pub mod faults;
 pub mod image;
 pub mod coordinator;
 pub mod metrics;

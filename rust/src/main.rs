@@ -21,10 +21,17 @@ fn usage() -> ! {
          \tdemo                   quick SIMD coordinator demo\n\
          \tprofile                error-profile table driving the budget router (§9)\n\
          \tserve --listen ADDR [--workers N] [--window K] [--batch B]\n\
+         \t      [--deadline-ms D] [--io-timeout-ms T]\n\
+         \t      [--fault-ppm P --fault-seed S]\n\
          \t                       SIMD-wire TCP server over the shared coordinator\n\
+         \t                       (--fault-ppm enables the chaos injector, §11)\n\
          \tloadgen --addr ADDR [--connections C] [--requests N] [--chunk B]\n\
          \t        [--mix 8,8,16,32] [--w N | --budget-ppm E] [--out PATH]\n\
          \t                       drive a server; writes BENCH_serve.json\n\
+         \tloadgen --chaos --addr ADDR [--connections C] [--requests N]\n\
+         \t        [--chunk B] [--seed S]\n\
+         \t                       chaos scenario: verified traffic + saboteur;\n\
+         \t                       exits non-zero on any invariant violation\n\
          \tall                    every table + figure in sequence"
     );
     std::process::exit(2)
@@ -192,12 +199,25 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     use simdive::serve::{ServeConfig, Server};
     let listen = arg_str(args, "--listen", "127.0.0.1:7171");
     let defaults = ServeConfig::default();
+    let fault_ppm = arg_u64_strict(args, "--fault-ppm", 0)?;
+    anyhow::ensure!(fault_ppm <= 1_000_000, "--fault-ppm must be 0..=1000000");
+    let fault_seed = arg_u64_strict(args, "--fault-seed", 0xC4A05)?;
+    let faults = (fault_ppm > 0)
+        .then(|| simdive::faults::FaultConfig::server_chaos(fault_seed, fault_ppm as u32));
     let cfg = ServeConfig {
         workers: arg_u64_strict(args, "--workers", defaults.workers as u64)? as usize,
         window: arg_u64_strict(args, "--window", defaults.window as u64)? as usize,
         batch: arg_u64_strict(args, "--batch", defaults.batch as u64)? as usize,
         queue_depth: arg_u64_strict(args, "--queue-depth", defaults.queue_depth as u64)? as usize,
+        deadline_ms: arg_u64_strict(args, "--deadline-ms", defaults.deadline_ms)?,
+        io_timeout_ms: arg_u64_strict(args, "--io-timeout-ms", defaults.io_timeout_ms)?,
+        faults,
     };
+    if faults.is_some() {
+        // Injected shard panics are part of the plan — keep them off
+        // stderr (genuine panics still print).
+        simdive::faults::silence_injected_panics();
+    }
     // Warm the error-profile table before accepting traffic, so the first
     // budget-routed request doesn't stall its connection on the one-time
     // ~2M-evaluation measurement (DESIGN.md §9).
@@ -205,11 +225,15 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let server = Server::start(listen, cfg)
         .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
     println!(
-        "simdive serve: listening on {} (workers/w {}, window {}, batch {})",
+        "simdive serve: listening on {} (workers/w {}, window {}, batch {}, \
+         deadline {} ms, io timeout {} ms, fault {} ppm)",
         server.local_addr(),
         cfg.workers,
         cfg.window,
-        cfg.batch
+        cfg.batch,
+        cfg.deadline_ms,
+        cfg.io_timeout_ms,
+        fault_ppm
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -221,6 +245,9 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
 fn loadgen(args: &[String]) -> anyhow::Result<()> {
     use simdive::serve::loadgen::{self, LoadgenConfig};
     let addr = arg_str(args, "--addr", "127.0.0.1:7171").to_string();
+    if args.iter().any(|a| a == "--chaos") {
+        return loadgen_chaos(args, &addr);
+    }
     let defaults = LoadgenConfig::default();
     let mix = arg_str(args, "--mix", "8,8,8,16,16,32");
     let widths: Vec<u32> = mix
@@ -290,5 +317,47 @@ fn loadgen(args: &[String]) -> anyhow::Result<()> {
     std::fs::write(&out_path, &json)
         .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", out_path.display()))?;
     println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// `loadgen --chaos`: run the fault-injection scenario (DESIGN.md §11)
+/// and fail loudly — non-zero exit — if any robustness invariant breaks.
+fn loadgen_chaos(args: &[String], addr: &str) -> anyhow::Result<()> {
+    use simdive::serve::chaos::{self, ChaosConfig};
+    let defaults = ChaosConfig::default();
+    let cfg = ChaosConfig {
+        connections: arg_u64_strict(args, "--connections", defaults.connections as u64)? as usize,
+        requests: arg_u64_strict(args, "--requests", defaults.requests)?,
+        chunk: arg_u64_strict(args, "--chunk", defaults.chunk as u64)? as usize,
+        seed: arg_u64_strict(args, "--seed", defaults.seed)?,
+        ..defaults
+    };
+    let c = chaos::run(addr, &cfg).map_err(|e| anyhow::anyhow!("chaos run: {e}"))?;
+    println!(
+        "chaos: {} requests — {} completed, {} failed, {} reconnects, \
+         {} saboteur rounds, {:.1} kreq/s in {:.3}s\n\
+         server: shed {} (overload), failed {} (unavailable), \
+         connections {} -> {} (baseline -> final)",
+        c.requests,
+        c.completed,
+        c.failed,
+        c.reconnects,
+        c.saboteur_rounds,
+        c.rps / 1e3,
+        c.wall_s,
+        c.server.shed_overload,
+        c.server.failed_unavailable,
+        c.baseline_connections,
+        c.final_connections,
+    );
+    anyhow::ensure!(c.mismatches == 0, "invariant violated: {} bit-mismatched responses", c.mismatches);
+    anyhow::ensure!(c.unresolved == 0, "invariant violated: {} requests never resolved", c.unresolved);
+    anyhow::ensure!(
+        c.final_connections <= c.baseline_connections,
+        "invariant violated: connection leak ({} -> {})",
+        c.baseline_connections,
+        c.final_connections
+    );
+    println!("chaos: all invariants hold (no wrong answer, no hang, no leak)");
     Ok(())
 }

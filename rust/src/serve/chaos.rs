@@ -1,0 +1,344 @@
+//! The chaos load scenario (`simdive loadgen --chaos`, DESIGN.md §11):
+//! drive a (possibly fault-injected) server with verified traffic while a
+//! saboteur connection speaks deliberately corrupted/stalled/reset wire
+//! at it, then check the three robustness invariants:
+//!
+//! 1. **No hang** — every request resolves (success or definitive
+//!    failure) within the retry budget; the scenario itself terminates.
+//! 2. **No wrong answer** — every successful response is bit-identical
+//!    to the scalar models (`simdive_mul_w`/`simdive_div_w`). Faults may
+//!    fail a request, never silently corrupt one: the saboteur's
+//!    corruption rides a *separate* connection, so verified traffic is
+//!    only ever exposed to server-side faults, which are answer-preserving
+//!    by the supervision contract.
+//! 3. **No leak** — once the storm ends, the server's open-connection
+//!    count returns to the pre-storm baseline (threads and window slots
+//!    are reclaimed, not stranded).
+//!
+//! Everything is deterministic per `seed` on the injection side; wall
+//! clock (and thus retry interleavings) of course are not.
+
+use super::client::{Client, RetryPolicy};
+use super::wire::{self, WireRequest, WireStats};
+use crate::arith::simdive::{simdive_div_w, simdive_mul_w};
+use crate::arith::W_MAX;
+use crate::coordinator::ReqOp;
+use crate::faults::{ChaosStream, FaultConfig, FaultInjector};
+use crate::util::Rng;
+use std::io::{self, Read};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// Chaos-scenario configuration.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Verified-traffic connections.
+    pub connections: usize,
+    /// Total verified requests across all connections.
+    pub requests: u64,
+    /// Client pipeline chunk.
+    pub chunk: usize,
+    /// Seed for the traffic generators and the saboteur's wire chaos.
+    pub seed: u64,
+    /// Retry policy every traffic connection uses.
+    pub retry: RetryPolicy,
+    /// Saboteur connections opened in sequence, each speaking corrupted
+    /// wire until the server (rightly) kills it.
+    pub saboteur_rounds: u32,
+    /// Wire-fault rate (ppm per decision) of the saboteur's stream.
+    pub saboteur_ppm: u32,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            connections: 4,
+            requests: 20_000,
+            chunk: 128,
+            seed: 0xC4A05,
+            retry: RetryPolicy::default(),
+            saboteur_rounds: 32,
+            saboteur_ppm: 50_000,
+        }
+    }
+}
+
+/// What one chaos run observed.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// Verified requests submitted.
+    pub requests: u64,
+    /// Responses with `err == 0` (all value-checked).
+    pub completed: u64,
+    /// Definitive per-request failures (`ERR_OVERLOAD`/`ERR_UNAVAILABLE`
+    /// surviving the retry budget).
+    pub failed: u64,
+    /// Successful responses whose value differed from the scalar models.
+    /// **Any non-zero value is an invariant violation.**
+    pub mismatches: u64,
+    /// Requests with no definitive outcome (transport failure exhausted
+    /// the retry budget). **Any non-zero value is an invariant violation**
+    /// (at the fault rates the bench sweeps — a saturated retry budget is
+    /// a hang in disguise).
+    pub unresolved: u64,
+    /// Reconnects performed by the traffic clients' retry layer.
+    pub reconnects: u64,
+    /// Saboteur rounds actually completed.
+    pub saboteur_rounds: u32,
+    pub wall_s: f64,
+    /// Completed verified requests per second (degraded-mode throughput).
+    pub rps: f64,
+    /// Server snapshot after the storm.
+    pub server: WireStats,
+    /// Open connections before the storm (includes the monitor itself).
+    pub baseline_connections: u64,
+    /// Open connections once the post-storm drain poll converged.
+    pub final_connections: u64,
+}
+
+impl ChaosReport {
+    /// The three invariants: no wrong answer, no hang (every request got
+    /// a definitive outcome), no connection leak.
+    pub fn invariants_hold(&self) -> bool {
+        self.mismatches == 0
+            && self.unresolved == 0
+            && self.final_connections <= self.baseline_connections
+    }
+}
+
+/// The scalar-model oracle for one wire request (fixed-`w` mode only).
+fn expected(r: &WireRequest) -> u64 {
+    match r.op {
+        ReqOp::Mul => simdive_mul_w(r.bits, r.a, r.b, r.w),
+        ReqOp::Div => simdive_div_w(r.bits, r.a, r.b, r.w),
+    }
+}
+
+/// Generate one verifiable request: always fixed-`w` (never error-budget
+/// mode, whose routed `w` the client cannot know), so the oracle above is
+/// exact.
+fn make_request(rng: &mut Rng, id: u64) -> WireRequest {
+    let bits = [8u32, 8, 16, 32][rng.below(4) as usize];
+    WireRequest {
+        id,
+        op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
+        bits,
+        w: rng.below(W_MAX as u64 + 1) as u32,
+        budget_ppm: 0,
+        a: rng.operand(bits),
+        b: rng.operand(bits),
+    }
+}
+
+/// Per-traffic-thread tally.
+#[derive(Default)]
+struct Tally {
+    completed: u64,
+    failed: u64,
+    mismatches: u64,
+    unresolved: u64,
+    reconnects: u64,
+}
+
+fn traffic_thread(
+    addr: &str,
+    cfg: &ChaosConfig,
+    conn_index: usize,
+    quota: u64,
+    barrier: &Barrier,
+) -> io::Result<Tally> {
+    let client = if quota == 0 {
+        None
+    } else {
+        Some(Client::connect_retry(addr, Duration::from_secs(5)))
+    };
+    barrier.wait();
+    let mut tally = Tally::default();
+    let Some(client) = client else { return Ok(tally) };
+    let mut client = client?.with_chunk(cfg.chunk.max(1));
+    let mut rng = Rng::new(cfg.seed ^ (0x9E37_79B9 * (conn_index as u64 + 1)));
+    let window = cfg.chunk.max(1) as u64 * 4;
+    let mut done = 0u64;
+    while done < quota {
+        let n = (quota - done).min(window);
+        let reqs: Vec<WireRequest> =
+            (0..n).map(|k| make_request(&mut rng, done + k)).collect();
+        match client.exchange_with_retry(&reqs, &cfg.retry) {
+            Ok(resps) => {
+                for (resp, req) in resps.iter().zip(&reqs) {
+                    if resp.err != 0 {
+                        tally.failed += 1;
+                    } else if resp.value != expected(req) {
+                        tally.mismatches += 1;
+                    } else {
+                        tally.completed += 1;
+                    }
+                }
+            }
+            Err(_) => {
+                // The whole window ran out its retry budget: a definitive
+                // scenario failure, recorded, never a hang.
+                tally.unresolved += n;
+            }
+        }
+        done += n;
+    }
+    tally.reconnects = client.reconnects();
+    Ok(tally)
+}
+
+/// One saboteur connection: clean hello (so the server commits a
+/// connection), then batch frames pushed through a [`ChaosStream`] that
+/// corrupts, stalls and resets them. Every outcome is fine — the point is
+/// that the *server* survives it; all errors here are swallowed.
+fn saboteur_round(addr: &str, inj: &Arc<FaultInjector>, rng: &mut Rng) {
+    let Ok(stream) = TcpStream::connect(addr) else { return };
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    stream.set_write_timeout(Some(Duration::from_millis(500))).ok();
+    // Hello goes out clean: a corrupted hello is rejected before the
+    // server even spawns the per-connection threads, which would leave
+    // the interesting reader/writer paths unexercised.
+    if wire::write_hello(&mut (&stream)).is_err() || wire::read_hello(&mut (&stream)).is_err() {
+        return;
+    }
+    let mut chaotic = ChaosStream::new(&stream, Arc::clone(inj));
+    for _ in 0..4 {
+        let reqs: Vec<WireRequest> = (0..16).map(|k| make_request(rng, k)).collect();
+        if wire::write_batch(&mut chaotic, &reqs).is_err() {
+            return; // injected reset or server closed on us — both fine
+        }
+        let mut sink = [0u8; 512];
+        let _ = chaotic.read(&mut sink);
+        if chaotic.is_reset() {
+            return;
+        }
+    }
+}
+
+/// Run the chaos scenario against `addr`. Blocks until the verified
+/// traffic and the saboteur both finish and the post-storm connection
+/// drain converges (bounded poll, ≤10 s).
+pub fn run(addr: &str, cfg: &ChaosConfig) -> io::Result<ChaosReport> {
+    let connections = cfg.connections.max(1);
+    // The monitor connects first: its stats view defines the baseline.
+    let mut monitor = Client::connect_retry(addr, Duration::from_secs(5))?;
+    let baseline_connections = monitor.stats()?.connections;
+
+    let per = cfg.requests / connections as u64;
+    let remainder = cfg.requests % connections as u64;
+    let barrier = Arc::new(Barrier::new(connections + 1));
+    let mut handles = Vec::with_capacity(connections);
+    for c in 0..connections {
+        let addr = addr.to_string();
+        let cfg = cfg.clone();
+        let barrier = Arc::clone(&barrier);
+        let quota = per + if (c as u64) < remainder { 1 } else { 0 };
+        handles.push(std::thread::spawn(move || {
+            traffic_thread(&addr, &cfg, c, quota, &barrier)
+        }));
+    }
+    let saboteur = {
+        let addr = addr.to_string();
+        let inj = FaultInjector::new(FaultConfig::wire_chaos(cfg.seed, cfg.saboteur_ppm));
+        let rounds = cfg.saboteur_rounds;
+        let seed = cfg.seed;
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ 0x5AB0);
+            let mut done = 0u32;
+            for _ in 0..rounds {
+                saboteur_round(&addr, &inj, &mut rng);
+                done += 1;
+            }
+            done
+        })
+    };
+    barrier.wait();
+    let t0 = Instant::now();
+
+    let mut tally = Tally::default();
+    let mut first_err: Option<io::Error> = None;
+    for h in handles {
+        match h.join().expect("chaos traffic thread panicked") {
+            Ok(t) => {
+                tally.completed += t.completed;
+                tally.failed += t.failed;
+                tally.mismatches += t.mismatches;
+                tally.unresolved += t.unresolved;
+                tally.reconnects += t.reconnects;
+            }
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    let saboteur_rounds = saboteur.join().expect("saboteur thread panicked");
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Leak check: bounded convergence poll (never a correctness sleep —
+    // the bound only caps how long we wait for TCP close propagation).
+    let drain_deadline = Instant::now() + Duration::from_secs(10);
+    let mut final_connections = monitor.stats()?.connections;
+    while final_connections > baseline_connections && Instant::now() < drain_deadline {
+        std::thread::sleep(Duration::from_millis(20));
+        final_connections = monitor.stats()?.connections;
+    }
+    let server = monitor.stats()?;
+
+    Ok(ChaosReport {
+        requests: cfg.requests,
+        completed: tally.completed,
+        failed: tally.failed,
+        mismatches: tally.mismatches,
+        unresolved: tally.unresolved,
+        reconnects: tally.reconnects,
+        saboteur_rounds,
+        wall_s,
+        rps: tally.completed as f64 / wall_s.max(1e-9),
+        server,
+        baseline_connections,
+        final_connections,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_matches_scalar_models() {
+        let mut rng = Rng::new(7);
+        for i in 0..500 {
+            let r = make_request(&mut rng, i);
+            assert_eq!(r.budget_ppm, 0, "chaos traffic must stay verifiable");
+            assert!(r.w <= W_MAX);
+            let e = expected(&r);
+            let again = expected(&r);
+            assert_eq!(e, again, "oracle is a pure function");
+        }
+    }
+
+    #[test]
+    fn invariants_gate_on_the_three_clauses() {
+        let ok = ChaosReport {
+            requests: 10,
+            completed: 8,
+            failed: 2,
+            mismatches: 0,
+            unresolved: 0,
+            reconnects: 3,
+            saboteur_rounds: 4,
+            wall_s: 1.0,
+            rps: 8.0,
+            server: WireStats::default(),
+            baseline_connections: 1,
+            final_connections: 1,
+        };
+        assert!(ok.invariants_hold(), "failures alone do not violate invariants");
+        assert!(!ChaosReport { mismatches: 1, ..ok.clone() }.invariants_hold());
+        assert!(!ChaosReport { unresolved: 1, ..ok.clone() }.invariants_hold());
+        assert!(!ChaosReport { final_connections: 2, ..ok.clone() }.invariants_hold());
+    }
+}

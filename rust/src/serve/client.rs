@@ -1,4 +1,4 @@
-//! Pipelined SIMD-wire client (DESIGN.md §8).
+//! Pipelined SIMD-wire client (DESIGN.md §8, fault tolerance §11).
 //!
 //! [`Client::exchange`] is the throughput path: it keeps up to two
 //! pipeline chunks of requests in flight (writing chunk *k+1* before the
@@ -7,11 +7,20 @@
 //! size is capped so the worst-case unread response backlog always fits
 //! kernel socket buffers — the client can therefore never deadlock
 //! against a server whose admission window is smaller than the pipeline.
+//!
+//! Fault tolerance: connections carry default read/write socket timeouts
+//! ([`DEFAULT_IO_TIMEOUT`], overridable via [`Client::with_io_timeout`]),
+//! so a silent peer yields a timeout error instead of a hang. Per-request
+//! `RESP_ERR` failures (`ERR_OVERLOAD`/`ERR_UNAVAILABLE`) surface as
+//! ordinary [`WireResponse`]s with `err != 0`. [`Client::exchange_with_retry`]
+//! layers idempotent retry on top: transport errors reconnect, retriable
+//! per-request failures resubmit, both under capped exponential backoff
+//! and a hard deadline — safe because every SIMD-wire computation is pure.
 
 use super::wire::{self, ServerFrame, WireRequest, WireResponse, WireStats};
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 /// Default pipeline chunk (requests per `BATCH` frame).
@@ -22,18 +31,86 @@ pub const DEFAULT_CHUNK: usize = 256;
 /// ≈ 52 KB, below the smallest kernel socket buffers.
 pub const MAX_CHUNK: usize = 1024;
 
+/// Default read/write socket timeout: long enough for any healthy
+/// exchange, short enough that a dead server surfaces as an error in
+/// seconds, not never.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Is this error a blocked-socket timeout? `SO_RCVTIMEO`/`SO_SNDTIMEO`
+/// expiry surfaces as `WouldBlock` on Unix and `TimedOut` on Windows.
+pub fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Retry policy for [`Client::exchange_with_retry`]: capped exponential
+/// backoff under a hard wall-clock deadline. Retry is idempotent-safe —
+/// every SIMD-wire request is a pure computation, so re-executing one
+/// after an ambiguous transport failure can only repeat the same answer.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Maximum attempts charged against transport failures, reconnects
+    /// and retriable per-request failures combined.
+    pub max_attempts: u32,
+    /// First backoff; doubles per attempt up to `max_backoff`.
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+    /// Hard wall-clock budget for the whole call.
+    pub deadline: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(250),
+            deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+impl RetryPolicy {
+    fn backoff(&self, attempt: u32) -> Duration {
+        self.base_backoff.saturating_mul(1u32 << attempt.min(16)).min(self.max_backoff)
+    }
+}
+
+/// Is a per-request failure worth retrying? Overload and shard
+/// unavailability are transient by design; protocol errors are not.
+pub fn retriable(err: u8) -> bool {
+    matches!(err, wire::ERR_OVERLOAD | wire::ERR_UNAVAILABLE)
+}
+
 /// A SIMD-wire connection.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     chunk: usize,
+    /// Resolved peer address, kept for reconnects.
+    addr: SocketAddr,
+    io_timeout: Option<Duration>,
+    /// Reconnects performed by `exchange_with_retry` over this client's
+    /// lifetime (chaos-report observability).
+    reconnects: u64,
 }
 
 impl Client {
-    /// Connect and perform the hello exchange.
+    /// Connect and perform the hello exchange. The connection starts with
+    /// [`DEFAULT_IO_TIMEOUT`] on both socket directions.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        Client::handshake(stream, Some(DEFAULT_IO_TIMEOUT), DEFAULT_CHUNK)
+    }
+
+    fn handshake(
+        stream: TcpStream,
+        io_timeout: Option<Duration>,
+        chunk: usize,
+    ) -> io::Result<Client> {
         stream.set_nodelay(true).ok();
+        stream.set_read_timeout(io_timeout)?;
+        stream.set_write_timeout(io_timeout)?;
+        let addr = stream.peer_addr()?;
         let mut writer = BufWriter::new(stream.try_clone()?);
         let mut reader = BufReader::new(stream);
         wire::write_hello(&mut writer)?;
@@ -45,7 +122,7 @@ impl Client {
                 format!("server speaks SIMD-wire v{version}, client v{}", wire::VERSION),
             ));
         }
-        Ok(Client { reader, writer, chunk: DEFAULT_CHUNK })
+        Ok(Client { reader, writer, chunk, addr, io_timeout, reconnects: 0 })
     }
 
     /// Connect, retrying while the server is still coming up (used by the
@@ -74,7 +151,38 @@ impl Client {
         self
     }
 
-    /// One synchronous round trip.
+    /// Override the read/write socket timeout (`None` = block forever,
+    /// the pre-v3 behavior). Applies to the live connection and to every
+    /// reconnect made by [`Client::exchange_with_retry`].
+    pub fn with_io_timeout(mut self, timeout: Option<Duration>) -> io::Result<Client> {
+        let stream = self.reader.get_ref();
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+        self.io_timeout = timeout;
+        Ok(self)
+    }
+
+    /// Reconnects performed by [`Client::exchange_with_retry`] so far.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Tear down the (possibly wedged) connection and build a fresh one
+    /// to the same peer, preserving chunk and timeout settings. Any
+    /// responses still in flight on the old connection are abandoned —
+    /// the server frees their window slots when it observes the close.
+    fn reconnect(&mut self) -> io::Result<()> {
+        let stream = TcpStream::connect(self.addr)?;
+        let fresh = Client::handshake(stream, self.io_timeout, self.chunk)?;
+        self.reader = fresh.reader;
+        self.writer = fresh.writer;
+        self.reconnects += 1;
+        Ok(())
+    }
+
+    /// One synchronous round trip. The response may carry `err != 0` (a
+    /// per-request server failure); transport and protocol problems are
+    /// `Err`.
     pub fn call(&mut self, req: WireRequest) -> io::Result<WireResponse> {
         wire::write_request(&mut self.writer, &req)?;
         self.writer.flush()?;
@@ -84,7 +192,10 @@ impl Client {
     /// Pipelined exchange: submit every request, return the responses in
     /// **submission order** (responses arrive out of order; correlation is
     /// by id, so ids must be unique within one call — duplicates are
-    /// rejected up front rather than silently mis-associated).
+    /// rejected up front rather than silently mis-associated). Per-request
+    /// server failures come back as responses with `err != 0`; a response
+    /// for an id never submitted (or submitted and already answered) is a
+    /// protocol error, never a panic.
     pub fn exchange(&mut self, reqs: &[WireRequest]) -> io::Result<Vec<WireResponse>> {
         let n = reqs.len();
         if n == 0 {
@@ -117,7 +228,7 @@ impl Client {
                 let pos = by_id.remove(&resp.id).ok_or_else(|| {
                     io::Error::new(
                         io::ErrorKind::InvalidData,
-                        format!("response for unknown id {}", resp.id),
+                        format!("response for unknown or duplicate id {}", resp.id),
                     )
                 })?;
                 out[pos] = Some(resp);
@@ -132,7 +243,94 @@ impl Client {
                 }
             }
         }
-        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+        out.into_iter()
+            .map(|o| {
+                o.ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "exchange bookkeeping lost a response",
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// [`Client::exchange`] with idempotent retry: transport failures
+    /// reconnect and resubmit every unresolved request; per-request
+    /// failures with a [`retriable`] code resubmit just those requests.
+    /// Backoff doubles per attempt (capped), and the whole call observes
+    /// `policy.deadline`. When the budget runs out with retriable
+    /// failures still outstanding, the last failed responses are returned
+    /// (`err != 0`) — a definitive failure, never a hang; a transport
+    /// failure that exhausts the budget is `Err`.
+    pub fn exchange_with_retry(
+        &mut self,
+        reqs: &[WireRequest],
+        policy: &RetryPolicy,
+    ) -> io::Result<Vec<WireResponse>> {
+        let t0 = Instant::now();
+        let mut out: Vec<Option<WireResponse>> = vec![None; reqs.len()];
+        // Submission positions still needing a (successful or final) answer.
+        let mut todo: Vec<usize> = (0..reqs.len()).collect();
+        let mut attempt = 0u32;
+        while !todo.is_empty() {
+            let batch: Vec<WireRequest> = todo.iter().map(|&i| reqs[i]).collect();
+            match self.exchange(&batch) {
+                Ok(resps) => {
+                    let mut still = Vec::new();
+                    for (k, resp) in resps.into_iter().enumerate() {
+                        let i = todo[k];
+                        out[i] = Some(resp);
+                        if resp.err != 0 && retriable(resp.err) {
+                            still.push(i);
+                        }
+                    }
+                    todo = still;
+                    if todo.is_empty() {
+                        break;
+                    }
+                    // Retriable failures left: back off, then resubmit.
+                    attempt += 1;
+                    if attempt >= policy.max_attempts || t0.elapsed() >= policy.deadline {
+                        break; // deliver the recorded failures
+                    }
+                    std::thread::sleep(policy.backoff(attempt));
+                }
+                Err(e) => {
+                    // Transport fault: the connection state is unknown, so
+                    // reconnect before resubmitting the unresolved tail.
+                    attempt += 1;
+                    if attempt >= policy.max_attempts || t0.elapsed() >= policy.deadline {
+                        return Err(io::Error::new(
+                            e.kind(),
+                            format!(
+                                "retry budget exhausted after {attempt} attempts \
+                                 ({} requests unresolved): {e}",
+                                todo.len()
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(policy.backoff(attempt));
+                    while let Err(re) = self.reconnect() {
+                        attempt += 1;
+                        if attempt >= policy.max_attempts || t0.elapsed() >= policy.deadline {
+                            return Err(re);
+                        }
+                        std::thread::sleep(policy.backoff(attempt));
+                    }
+                }
+            }
+        }
+        out.into_iter()
+            .map(|o| {
+                o.ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "request unresolved within the retry budget",
+                    )
+                })
+            })
+            .collect()
     }
 
     /// Fetch a server stats snapshot. Must not be called with requests in
@@ -162,12 +360,52 @@ impl Client {
     }
 }
 
+/// Human-readable error for a connection-fatal `ERR` code. Unknown codes
+/// (a newer server) map to a generic message, never a panic.
 fn server_err(code: u8) -> io::Error {
     let what = match code {
         wire::ERR_BAD_FRAME => "bad frame",
         wire::ERR_BAD_REQUEST => "bad request",
         wire::ERR_BAD_VERSION => "unsupported protocol version",
+        wire::ERR_OVERLOAD => "overloaded (admission deadline exceeded)",
+        wire::ERR_UNAVAILABLE => "shard unavailable",
         _ => "unknown error",
     };
     io::Error::new(io::ErrorKind::InvalidData, format!("server error {code} ({what})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_backoff_is_capped_exponential() {
+        let p = RetryPolicy {
+            base_backoff: Duration::from_millis(4),
+            max_backoff: Duration::from_millis(50),
+            ..RetryPolicy::default()
+        };
+        assert_eq!(p.backoff(0), Duration::from_millis(4));
+        assert_eq!(p.backoff(1), Duration::from_millis(8));
+        assert_eq!(p.backoff(2), Duration::from_millis(16));
+        assert_eq!(p.backoff(4), Duration::from_millis(50), "cap binds");
+        assert_eq!(p.backoff(60), Duration::from_millis(50), "huge attempts stay capped");
+    }
+
+    #[test]
+    fn retriable_codes_are_exactly_the_transient_ones() {
+        assert!(retriable(wire::ERR_OVERLOAD));
+        assert!(retriable(wire::ERR_UNAVAILABLE));
+        assert!(!retriable(wire::ERR_BAD_FRAME));
+        assert!(!retriable(wire::ERR_BAD_REQUEST));
+        assert!(!retriable(wire::ERR_BAD_VERSION));
+        assert!(!retriable(0));
+        assert!(!retriable(200), "unknown codes are final, not retried blind");
+    }
+
+    #[test]
+    fn unknown_err_codes_do_not_panic() {
+        let e = server_err(250);
+        assert!(e.to_string().contains("unknown error"), "{e}");
+    }
 }

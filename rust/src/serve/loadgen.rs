@@ -186,6 +186,18 @@ pub fn coordinator_batched_rps(n: u64) -> f64 {
 
 /// Render the `simdive-serve-v1` JSON document.
 pub fn to_json(report: &LoadgenReport, coord_requests: u64, coord_batched_rps: f64) -> String {
+    to_json_with_chaos(report, coord_requests, coord_batched_rps, &[])
+}
+
+/// [`to_json`] plus a `"chaos"` array: degraded-mode throughput at each
+/// swept fault rate (same schema name — the section is append-only, so
+/// consumers of the fault-free document keep parsing unchanged).
+pub fn to_json_with_chaos(
+    report: &LoadgenReport,
+    coord_requests: u64,
+    coord_batched_rps: f64,
+    chaos: &[(u64, super::chaos::ChaosReport)],
+) -> String {
     let mut widths = String::from("[");
     for (i, w) in report.widths.iter().enumerate() {
         if i > 0 {
@@ -194,13 +206,40 @@ pub fn to_json(report: &LoadgenReport, coord_requests: u64, coord_batched_rps: f
         write!(widths, "{w}").unwrap();
     }
     widths.push(']');
+    let mut chaos_section = String::new();
+    if !chaos.is_empty() {
+        chaos_section.push_str(",\n  \"chaos\": [");
+        for (i, (ppm, c)) in chaos.iter().enumerate() {
+            if i > 0 {
+                chaos_section.push(',');
+            }
+            write!(
+                chaos_section,
+                "\n    {{\"fault_ppm\": {ppm}, \"requests\": {}, \"completed\": {}, \
+                 \"failed\": {}, \"mismatches\": {}, \"unresolved\": {}, \
+                 \"reconnects\": {}, \"rps\": {:.1}, \"shed_overload\": {}, \
+                 \"failed_unavailable\": {}}}",
+                c.requests,
+                c.completed,
+                c.failed,
+                c.mismatches,
+                c.unresolved,
+                c.reconnects,
+                c.rps,
+                c.server.shed_overload,
+                c.server.failed_unavailable,
+            )
+            .unwrap();
+        }
+        chaos_section.push_str("\n  ]");
+    }
     let s = &report.server;
     format!(
         "{{\n  \"schema\": \"simdive-serve-v1\",\n  \"connections\": {},\n  \"requests\": {},\n  \
          \"chunk\": {},\n  \"widths\": {widths},\n  \"wall_s\": {:.4},\n  \"rps\": {:.1},\n  \
          \"server\": {{\"requests\": {}, \"words\": {}, \"lane_utilization\": {:.4}, \
          \"energy_pj\": {:.1}, \"p50_us\": {}, \"p99_us\": {}}},\n  \
-         \"coordinator\": {{\"requests\": {coord_requests}, \"batched_rps\": {:.1}}}\n}}\n",
+         \"coordinator\": {{\"requests\": {coord_requests}, \"batched_rps\": {:.1}}}{chaos_section}\n}}\n",
         report.connections,
         report.requests,
         report.chunk,
@@ -269,6 +308,41 @@ mod tests {
         assert!(j.contains("\"schema\": \"simdive-serve-v1\""));
         assert!(j.contains("\"widths\": [8, 16]"));
         assert!(j.contains("\"batched_rps\": 1234.5"));
+        assert!(!j.contains("\"chaos\""), "no chaos section without a sweep");
         assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn chaos_section_is_appended_and_balanced() {
+        let report = LoadgenReport {
+            connections: 1,
+            requests: 10,
+            chunk: 4,
+            widths: vec![8],
+            wall_s: 0.1,
+            rps: 100.0,
+            server: WireStats::default(),
+        };
+        let c = crate::serve::chaos::ChaosReport {
+            requests: 10,
+            completed: 9,
+            failed: 1,
+            mismatches: 0,
+            unresolved: 0,
+            reconnects: 2,
+            saboteur_rounds: 4,
+            wall_s: 0.2,
+            rps: 45.0,
+            server: WireStats { shed_overload: 3, failed_unavailable: 1, ..WireStats::default() },
+            baseline_connections: 1,
+            final_connections: 1,
+        };
+        let j = to_json_with_chaos(&report, 10, 99.9, &[(0, c.clone()), (10_000, c)]);
+        assert!(j.contains("\"schema\": \"simdive-serve-v1\""), "schema name must not change");
+        assert!(j.contains("\"chaos\": ["));
+        assert!(j.contains("\"fault_ppm\": 10000"));
+        assert!(j.contains("\"shed_overload\": 3"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

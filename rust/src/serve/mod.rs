@@ -23,7 +23,11 @@
 //!   latency histograms, exposed via the `STATS` wire op.
 //! * [`loadgen`] — multi-connection load generator writing
 //!   `BENCH_serve.json` (schema `simdive-serve-v1`).
+//! * [`chaos`] — the fault-injection load scenario (`loadgen --chaos`,
+//!   DESIGN.md §11): verified traffic plus a saboteur connection, with
+//!   no-hang / no-wrong-answer / no-leak invariant checks.
 
+pub mod chaos;
 pub mod client;
 pub mod loadgen;
 pub mod server;

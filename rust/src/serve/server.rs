@@ -18,19 +18,30 @@
 //! resolved at admission through the error-budget router
 //! ([`ErrorProfile::pick_w`]): the cheapest `w` whose profiled MRED fits
 //! the stated budget.
+//!
+//! Fault tolerance (DESIGN.md §11): admission carries a deadline — a
+//! request that cannot get a window slot within `deadline_ms` is shed
+//! per-request with `ERR_OVERLOAD` (the connection stays open); sockets
+//! carry read/write timeouts so a stalled peer errors out instead of
+//! wedging its threads; and a request that shard supervision gave up on
+//! fails per-request with `ERR_UNAVAILABLE`. With `cfg.faults` set, the
+//! deterministic chaos injector drops accepted connections and is
+//! threaded into the shard pool (injected panics / slow shards / delayed
+//! completions).
 
 use super::stats::ServeCounters;
 use super::wire::{self, ClientFrame, WireStats};
 use crate::coordinator::{
     Coordinator, CoordinatorConfig, ErrorProfile, Request, Response, Stats,
 };
+use crate::faults::{FaultConfig, FaultInjector};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
@@ -45,11 +56,32 @@ pub struct ServeConfig {
     /// Per-connection admission window: maximum in-flight requests before
     /// the reader stops draining the socket.
     pub window: usize,
+    /// Admission deadline (ms): how long a request may wait for a window
+    /// slot before it is shed with `ERR_OVERLOAD` instead of blocking the
+    /// connection forever. `0` = wait indefinitely (the pre-deadline
+    /// behavior).
+    pub deadline_ms: u64,
+    /// Per-connection socket read/write timeout (ms). A peer that stalls
+    /// mid-frame — or a socket whose send buffer a dead peer never drains —
+    /// errors out instead of wedging the reader/writer thread. `0` =
+    /// disabled.
+    pub io_timeout_ms: u64,
+    /// Chaos-harness fault plan. `None` (the default) injects nothing and
+    /// adds nothing to the hot path beyond an `Option` check.
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 4, batch: 64, queue_depth: 1024, window: 1024 }
+        ServeConfig {
+            workers: 4,
+            batch: 64,
+            queue_depth: 1024,
+            window: 1024,
+            deadline_ms: 2_000,
+            io_timeout_ms: 10_000,
+            faults: None,
+        }
     }
 }
 
@@ -63,6 +95,13 @@ struct Inner {
     /// Server-wide completed requests + latency.
     global: ServeCounters,
     connections: AtomicU64,
+    /// Requests shed with `ERR_OVERLOAD` (admission deadline expired).
+    shed: AtomicU64,
+    /// Requests failed with `ERR_UNAVAILABLE` (shard supervision gave up).
+    unavailable: AtomicU64,
+    /// Chaos-harness injector shared with the coordinator's shard pool;
+    /// `None` in production.
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl Inner {
@@ -84,6 +123,9 @@ impl Inner {
             conn_requests: conn.requests(),
             conn_p50_us: conn.hist.percentile_us(0.50),
             conn_p99_us: conn.hist.percentile_us(0.99),
+            connections: self.connections.load(Ordering::Relaxed),
+            shed_overload: self.shed.load(Ordering::Relaxed),
+            failed_unavailable: self.unavailable.load(Ordering::Relaxed),
         }
     }
 }
@@ -102,16 +144,23 @@ impl Server {
     pub fn start<A: ToSocketAddrs>(listen: A, cfg: ServeConfig) -> io::Result<Server> {
         let listener = TcpListener::bind(listen)?;
         let addr = listener.local_addr()?;
+        let injector = cfg.faults.filter(|f| f.is_active()).map(FaultInjector::new);
         let inner = Arc::new(Inner {
             cfg,
             stop: AtomicBool::new(false),
-            coordinator: Coordinator::start(CoordinatorConfig {
-                workers: cfg.workers,
-                queue_depth: cfg.queue_depth,
-                batch: cfg.batch,
-            }),
+            coordinator: Coordinator::start_with_faults(
+                CoordinatorConfig {
+                    workers: cfg.workers,
+                    queue_depth: cfg.queue_depth,
+                    batch: cfg.batch,
+                },
+                injector.clone(),
+            ),
             global: ServeCounters::new(),
             connections: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            unavailable: AtomicU64::new(0),
+            injector,
         });
         let accept = {
             let inner = Arc::clone(&inner);
@@ -163,6 +212,13 @@ fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
         }
         match conn {
             Ok(stream) => {
+                // Chaos harness: drop a freshly accepted connection before
+                // the hello (the client sees an immediate reset/EOF and
+                // must reconnect).
+                if inner.injector.as_ref().is_some_and(|i| i.accept_drop()) {
+                    drop(stream);
+                    continue;
+                }
                 let inner = Arc::clone(&inner);
                 std::thread::spawn(move || {
                     let _ = handle_conn(stream, inner);
@@ -210,13 +266,32 @@ impl Inflight {
 
     /// Block until a slot frees, then take it.
     fn acquire(&self, wire_id: u64) -> u32 {
+        self.acquire_deadline(wire_id, None).expect("unbounded acquire cannot time out")
+    }
+
+    /// Block until a slot frees or `deadline` elapses. `None` deadline =
+    /// wait indefinitely (always returns `Some`). A `None` return is the
+    /// shedding signal: the request waited its whole admission budget and
+    /// never got a slot.
+    fn acquire_deadline(&self, wire_id: u64, deadline: Option<Duration>) -> Option<u32> {
+        let start = Instant::now();
         let mut t = self.slots.lock().unwrap();
         loop {
             if let Some(slot) = t.free.pop() {
                 t.entries[slot as usize] = (wire_id, Instant::now());
-                return slot;
+                return Some(slot);
             }
-            t = self.freed.wait(t).unwrap();
+            match deadline {
+                None => t = self.freed.wait(t).unwrap(),
+                Some(d) => {
+                    let left = d.checked_sub(start.elapsed())?;
+                    let (guard, timeout) = self.freed.wait_timeout(t, left).unwrap();
+                    t = guard;
+                    if timeout.timed_out() && t.free.is_empty() {
+                        return None;
+                    }
+                }
+            }
         }
     }
 
@@ -238,6 +313,14 @@ type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
 
 fn handle_conn(stream: TcpStream, inner: Arc<Inner>) -> io::Result<()> {
     stream.set_nodelay(true).ok();
+    // Socket timeouts: a peer that stalls mid-frame (or never drains its
+    // receive buffer) errors this connection out instead of wedging its
+    // reader/writer threads forever.
+    if inner.cfg.io_timeout_ms > 0 {
+        let t = Some(Duration::from_millis(inner.cfg.io_timeout_ms));
+        stream.set_read_timeout(t)?;
+        stream.set_write_timeout(t)?;
+    }
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
 
@@ -332,6 +415,8 @@ fn reader_loop(
                 w.flush()?;
             }
             ClientFrame::Requests(reqs) => {
+                let deadline =
+                    (inner.cfg.deadline_ms > 0).then(|| Duration::from_millis(inner.cfg.deadline_ms));
                 for r in &reqs {
                     // Admission control: take a window slot, submitting
                     // buffered work before blocking so slots can free.
@@ -339,7 +424,20 @@ fn reader_loop(
                         Some(s) => s,
                         None => {
                             submit_pending(inner, &mut pending, resp_tx);
-                            inflight.acquire(r.id)
+                            match inflight.acquire_deadline(r.id, deadline) {
+                                Some(s) => s,
+                                None => {
+                                    // Admission deadline expired: shed this
+                                    // request per-request (`RESP_ERR`, the
+                                    // connection stays open) rather than
+                                    // stalling every request behind it.
+                                    inner.shed.fetch_add(1, Ordering::Relaxed);
+                                    let mut w = writer.lock().unwrap();
+                                    wire::write_response_err(&mut *w, r.id, wire::ERR_OVERLOAD)?;
+                                    w.flush()?;
+                                    continue;
+                                }
+                            }
                         }
                     };
                     // The coordinator-side id is the window slot; the wire
@@ -399,7 +497,15 @@ fn writer_loop(
             conn_stats.record(latency_ns);
             inner.global.record(latency_ns);
             dead = dead || closed.load(Ordering::SeqCst);
-            if !dead && wire::write_response(&mut *w, wire_id, resp.value).is_err() {
+            if resp.err != 0 {
+                // Shard supervision gave this request up (double fault):
+                // fail it per-request; the connection survives.
+                inner.unavailable.fetch_add(1, Ordering::Relaxed);
+                if !dead && wire::write_response_err(&mut *w, wire_id, wire::ERR_UNAVAILABLE).is_err()
+                {
+                    dead = true;
+                }
+            } else if !dead && wire::write_response(&mut *w, wire_id, resp.value).is_err() {
                 dead = true;
             }
             if let Ok(m) = rx.try_recv() {

@@ -20,13 +20,22 @@
 //! with the field (`FLAG_BUDGET` ⟺ `budget_ppm > 0`) — a frame violating
 //! either is malformed, never silently reinterpreted.
 //!
+//! Wire v3 (fault tolerance — DESIGN.md §11): a *per-request* error frame
+//! `RESP_ERR` joins the connection-fatal `ERR`. The server answers a
+//! request it sheds under overload ([`ERR_OVERLOAD`]) or fails after
+//! shard supervision gives up ([`ERR_UNAVAILABLE`]) with a `RESP_ERR`
+//! carrying the request's id — the connection stays open and every other
+//! in-flight request is unaffected. `STATS_RESP` appends three counters
+//! (open connections, shed requests, unavailable-failed requests).
+//!
 //! | kind | dir | body |
 //! |------|-----|------|
 //! | `REQ` (0x01)        | c→s | 32 B: `id:u64, a:u64, b:u64, op:u8, bits:u8, w:u8, flags:u8, budget_ppm:u32` |
 //! | `BATCH` (0x02)      | c→s | `count:u16` then `count` request bodies |
 //! | `STATS` (0x03)      | c→s | empty |
 //! | `RESP` (0x81)       | s→c | 16 B: `id:u64, value:u64` |
-//! | `STATS_RESP` (0x82) | s→c | 80 B: ten `u64` counters ([`WireStats`]) |
+//! | `STATS_RESP` (0x82) | s→c | 104 B: thirteen `u64` counters ([`WireStats`]) |
+//! | `RESP_ERR` (0x83)   | s→c | 9 B: `id:u64, code:u8` — per-request failure, connection stays open |
 //! | `ERR` (0xEE)        | s→c | 1 B error code, then the server closes |
 //!
 //! Responses arrive **out of order** (as SIMD lanes complete); the `id` is
@@ -40,8 +49,9 @@ use std::io::{self, Read, Write};
 pub const MAGIC: [u8; 4] = *b"SDIV";
 
 /// Protocol version carried in the hello. v2 widened the request body by
-/// an appended `budget_ppm:u32` and defined [`FLAG_BUDGET`].
-pub const VERSION: u16 = 2;
+/// an appended `budget_ppm:u32` and defined [`FLAG_BUDGET`]; v3 added the
+/// per-request `RESP_ERR` frame and three appended stats counters.
+pub const VERSION: u16 = 3;
 
 /// Frame kinds (client → server).
 pub const FRAME_REQ: u8 = 0x01;
@@ -51,12 +61,22 @@ pub const FRAME_STATS: u8 = 0x03;
 /// Frame kinds (server → client).
 pub const FRAME_RESP: u8 = 0x81;
 pub const FRAME_STATS_RESP: u8 = 0x82;
+/// Per-request failure (wire v3); unlike `ERR` the connection stays open.
+pub const FRAME_RESP_ERR: u8 = 0x83;
 pub const FRAME_ERR: u8 = 0xEE;
 
-/// Error codes carried by an `ERR` frame.
+/// Error codes carried by an `ERR` frame (connection-fatal) or a
+/// `RESP_ERR` frame (per-request, wire v3).
 pub const ERR_BAD_FRAME: u8 = 1;
 pub const ERR_BAD_REQUEST: u8 = 2;
 pub const ERR_BAD_VERSION: u8 = 3;
+/// The admission window stayed full past the request's deadline; the
+/// server shed the request instead of queueing it unboundedly. Safe to
+/// retry after backoff (the computation is pure/idempotent).
+pub const ERR_OVERLOAD: u8 = 4;
+/// Shard supervision gave up on the request (double fault: the executing
+/// shard panicked and recovery failed too). Safe to retry.
+pub const ERR_UNAVAILABLE: u8 = 5;
 
 /// Fixed size of a request body (v2: v1's 28 bytes + `budget_ppm:u32`).
 pub const REQ_BODY_LEN: usize = 32;
@@ -70,6 +90,9 @@ pub const FLAG_BUDGET: u8 = 0x01;
 
 /// Fixed size of a response body.
 pub const RESP_BODY_LEN: usize = 16;
+
+/// Fixed size of a `RESP_ERR` body: `id:u64, code:u8`.
+pub const RESP_ERR_BODY_LEN: usize = 9;
 
 /// Maximum request bodies in one `BATCH` frame (`count` is a `u16`).
 pub const MAX_BATCH: usize = u16::MAX as usize;
@@ -150,15 +173,29 @@ impl WireRequest {
     }
 }
 
-/// One response as it travels on the wire.
+/// One response as it travels on the wire. A successful `RESP` carries
+/// `err == 0` and the value; a per-request `RESP_ERR` (wire v3) decodes
+/// to `err != 0` with `value == 0` — one type, so the client's pipeline
+/// reassembly treats failures as ordinary out-of-order completions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WireResponse {
     pub id: u64,
     pub value: u64,
+    /// `0` for success, else the `ERR_*` code the server failed this
+    /// request with (`ERR_OVERLOAD`, `ERR_UNAVAILABLE`, or a future code —
+    /// clients must tolerate unknown values).
+    pub err: u8,
 }
 
-/// The `STATS_RESP` payload: server-wide counters (first seven fields) plus
-/// the requesting connection's own view (last three). Fixed ten-`u64`
+impl WireResponse {
+    pub fn is_ok(&self) -> bool {
+        self.err == 0
+    }
+}
+
+/// The `STATS_RESP` payload: server-wide counters (first seven fields),
+/// the requesting connection's own view (next three), and the v3
+/// fault-tolerance counters (last three). Fixed thirteen-`u64`
 /// little-endian layout; new fields are append-only with a version bump.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WireStats {
@@ -177,10 +214,16 @@ pub struct WireStats {
     pub conn_requests: u64,
     pub conn_p50_us: u64,
     pub conn_p99_us: u64,
+    /// Currently open connections (wire v3).
+    pub connections: u64,
+    /// Requests shed with `ERR_OVERLOAD` (wire v3).
+    pub shed_overload: u64,
+    /// Requests failed with `ERR_UNAVAILABLE` (wire v3).
+    pub failed_unavailable: u64,
 }
 
 impl WireStats {
-    pub const BODY_LEN: usize = 80;
+    pub const BODY_LEN: usize = 104;
 
     pub fn lane_utilization(&self) -> f64 {
         if self.total_lanes == 0 {
@@ -194,7 +237,7 @@ impl WireStats {
         self.energy_mpj as f64 / 1000.0
     }
 
-    fn fields(&self) -> [u64; 10] {
+    fn fields(&self) -> [u64; 13] {
         [
             self.requests,
             self.words,
@@ -206,10 +249,13 @@ impl WireStats {
             self.conn_requests,
             self.conn_p50_us,
             self.conn_p99_us,
+            self.connections,
+            self.shed_overload,
+            self.failed_unavailable,
         ]
     }
 
-    fn from_fields(f: [u64; 10]) -> WireStats {
+    fn from_fields(f: [u64; 13]) -> WireStats {
         WireStats {
             requests: f[0],
             words: f[1],
@@ -221,6 +267,9 @@ impl WireStats {
             conn_requests: f[7],
             conn_p50_us: f[8],
             conn_p99_us: f[9],
+            connections: f[10],
+            shed_overload: f[11],
+            failed_unavailable: f[12],
         }
     }
 }
@@ -275,6 +324,17 @@ pub fn write_response<W: Write>(w: &mut W, id: u64, value: u64) -> io::Result<()
     buf[0] = FRAME_RESP;
     buf[1..9].copy_from_slice(&id.to_le_bytes());
     buf[9..17].copy_from_slice(&value.to_le_bytes());
+    w.write_all(&buf)
+}
+
+/// Write a per-request error frame (wire v3). Unlike [`write_err`] the
+/// connection stays open; the failure only resolves the one request.
+pub fn write_response_err<W: Write>(w: &mut W, id: u64, code: u8) -> io::Result<()> {
+    debug_assert_ne!(code, 0, "RESP_ERR code 0 would decode as success");
+    let mut buf = [0u8; 1 + RESP_ERR_BODY_LEN];
+    buf[0] = FRAME_RESP_ERR;
+    buf[1..9].copy_from_slice(&id.to_le_bytes());
+    buf[9] = code;
     w.write_all(&buf)
 }
 
@@ -363,12 +423,29 @@ pub fn read_server_frame<R: Read>(r: &mut R) -> io::Result<ServerFrame> {
             Ok(ServerFrame::Resp(WireResponse {
                 id: u64::from_le_bytes(body[0..8].try_into().unwrap()),
                 value: u64::from_le_bytes(body[8..16].try_into().unwrap()),
+                err: 0,
+            }))
+        }
+        FRAME_RESP_ERR => {
+            let mut body = [0u8; RESP_ERR_BODY_LEN];
+            r.read_exact(&mut body)?;
+            let code = body[8];
+            if code == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "RESP_ERR frame with code 0",
+                ));
+            }
+            Ok(ServerFrame::Resp(WireResponse {
+                id: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                value: 0,
+                err: code,
             }))
         }
         FRAME_STATS_RESP => {
             let mut body = [0u8; WireStats::BODY_LEN];
             r.read_exact(&mut body)?;
-            let mut fields = [0u64; 10];
+            let mut fields = [0u64; 13];
             for (i, f) in fields.iter_mut().enumerate() {
                 *f = u64::from_le_bytes(body[i * 8..i * 8 + 8].try_into().unwrap());
             }
@@ -508,12 +585,15 @@ mod tests {
             conn_requests: 8,
             conn_p50_us: 9,
             conn_p99_us: 10,
+            connections: 11,
+            shed_overload: 12,
+            failed_unavailable: 13,
         };
         write_stats_resp(&mut buf, &stats).unwrap();
         write_err(&mut buf, ERR_BAD_FRAME).unwrap();
         let mut cur = Cursor::new(&buf);
         match read_server_frame(&mut cur).unwrap() {
-            ServerFrame::Resp(r) => assert_eq!(r, WireResponse { id: 99, value: 430 }),
+            ServerFrame::Resp(r) => assert_eq!(r, WireResponse { id: 99, value: 430, err: 0 }),
             other => panic!("unexpected frame {other:?}"),
         }
         match read_server_frame(&mut cur).unwrap() {
@@ -524,6 +604,40 @@ mod tests {
             ServerFrame::Err(code) => assert_eq!(code, ERR_BAD_FRAME),
             other => panic!("unexpected frame {other:?}"),
         }
+    }
+
+    #[test]
+    fn response_err_frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_response_err(&mut buf, 7, ERR_OVERLOAD).unwrap();
+        write_response_err(&mut buf, u64::MAX, ERR_UNAVAILABLE).unwrap();
+        assert_eq!(buf.len(), 2 * (1 + RESP_ERR_BODY_LEN));
+        let mut cur = Cursor::new(&buf);
+        match read_server_frame(&mut cur).unwrap() {
+            ServerFrame::Resp(r) => {
+                assert_eq!(r, WireResponse { id: 7, value: 0, err: ERR_OVERLOAD });
+                assert!(!r.is_ok());
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+        match read_server_frame(&mut cur).unwrap() {
+            ServerFrame::Resp(r) => {
+                assert_eq!(r.id, u64::MAX);
+                assert_eq!(r.err, ERR_UNAVAILABLE);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_err_with_zero_code_is_rejected() {
+        // A RESP_ERR whose code byte is 0 would masquerade as success if
+        // decoded permissively; the decoder must reject it instead.
+        let mut buf = vec![FRAME_RESP_ERR];
+        buf.extend_from_slice(&42u64.to_le_bytes());
+        buf.push(0);
+        let e = read_server_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
     }
 
     #[test]

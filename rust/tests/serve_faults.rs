@@ -1,0 +1,318 @@
+//! Fault-path integration tests (DESIGN.md §11): dead/silent servers,
+//! shard-panic supervision, double-fault failure, overload shedding, the
+//! engine-seam scalar fallback, connection-count reclamation, and the
+//! in-process chaos scenario.
+//!
+//! No test relies on a sleep for *correctness*: waits are bounded
+//! `recv_timeout`s / convergence polls, and the timing-sensitive shed
+//! test keeps a 7× margin between its admission deadline (20 ms) and the
+//! injected shard slowdown (150 ms).
+
+use simdive::arith::simdive::{simdive_div_w, simdive_mul_w};
+use simdive::arith::W_MAX;
+use simdive::coordinator::{ReqOp, Request};
+use simdive::engine::{Backend, Reference, Route, Sharded, ShardedConfig};
+use simdive::faults::{silence_injected_panics, FaultConfig, FaultInjector};
+use simdive::serve::chaos::{self, ChaosConfig};
+use simdive::serve::client::{is_timeout, RetryPolicy};
+use simdive::serve::wire::{self, WireRequest};
+use simdive::serve::{Client, ServeConfig, Server};
+use simdive::util::Rng;
+use std::io::Read as _;
+use std::net::TcpListener;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+fn expected_wire(r: &WireRequest) -> u64 {
+    match r.op {
+        ReqOp::Mul => simdive_mul_w(r.bits, r.a, r.b, r.w),
+        ReqOp::Div => simdive_div_w(r.bits, r.a, r.b, r.w),
+    }
+}
+
+fn expected_req(r: &Request) -> u64 {
+    match r.op {
+        ReqOp::Mul => simdive_mul_w(r.bits, r.a, r.b, r.w),
+        ReqOp::Div => simdive_div_w(r.bits, r.a, r.b, r.w),
+    }
+}
+
+fn mixed_requests(seed: u64, n: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let bits = [8u32, 8, 16, 32][rng.below(4) as usize];
+            Request {
+                id: i,
+                op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
+                bits,
+                w: rng.below(W_MAX as u64 + 1) as u32,
+                a: rng.operand(bits),
+                b: rng.operand(bits),
+            }
+        })
+        .collect()
+}
+
+fn wire_request(id: u64, a: u64, b: u64) -> WireRequest {
+    WireRequest { id, op: ReqOp::Mul, bits: 8, w: 8, budget_ppm: 0, a, b }
+}
+
+#[test]
+fn client_errors_cleanly_when_server_dies_mid_exchange() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut hello = [0u8; 8];
+        s.read_exact(&mut hello).unwrap();
+        wire::write_hello(&mut s).unwrap();
+        // Swallow the first ~100 request bytes, then die mid-exchange.
+        let mut sink = [0u8; 100];
+        let _ = s.read_exact(&mut sink);
+    });
+    let mut client = Client::connect(addr).unwrap();
+    let reqs: Vec<WireRequest> =
+        (0..1000).map(|i| wire_request(i, 1 + i % 200, 3)).collect();
+    let t0 = Instant::now();
+    assert!(client.exchange(&reqs).is_err(), "a dead server must be an error, not a hang");
+    // The default socket timeout bounds every blocking call; the whole
+    // exchange must fail well inside it.
+    assert!(t0.elapsed() < Duration::from_secs(30), "took {:?}", t0.elapsed());
+    fake.join().unwrap();
+}
+
+#[test]
+fn silent_server_yields_timeout_not_hang() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (done_tx, done_rx) = channel::<()>();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut hello = [0u8; 8];
+        s.read_exact(&mut hello).unwrap();
+        wire::write_hello(&mut s).unwrap();
+        // Hold the connection open, never answering a request.
+        let _ = done_rx.recv();
+    });
+    let client = Client::connect(addr).unwrap();
+    let mut client = client.with_io_timeout(Some(Duration::from_millis(200))).unwrap();
+    let e = client.call(wire_request(1, 43, 10)).unwrap_err();
+    assert!(is_timeout(&e), "expected a socket timeout, got {e}");
+    done_tx.send(()).unwrap();
+    fake.join().unwrap();
+}
+
+#[test]
+fn shard_panic_supervision_recovers_in_flight_words() {
+    silence_injected_panics();
+    // 40% of emission rounds panic after emitting; recovery re-executes
+    // every emitted word, so every request still gets its exact answer.
+    let inj = FaultInjector::new(FaultConfig {
+        seed: 0x5117,
+        shard_panic_ppm: 400_000,
+        ..FaultConfig::default()
+    });
+    let pool = Sharded::start_with_faults(
+        ShardedConfig { shards: 2, queue_depth: 64, batch: 8 },
+        Some(inj),
+    );
+    let reqs = mixed_requests(0xFA01, 1000);
+    let (tx, rx) = channel();
+    for (base, piece) in reqs.chunks(50).enumerate() {
+        let chunk: Vec<(Request, Route)> = piece
+            .iter()
+            .enumerate()
+            .map(|(k, r)| (*r, Route::Slot(tx.clone(), (base * 50 + k) as u32)))
+            .collect();
+        pool.submit(chunk);
+    }
+    let mut got = vec![None; reqs.len()];
+    for _ in 0..reqs.len() {
+        let (slot, resp) = rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("supervision must deliver every response");
+        assert!(got[slot as usize].replace(resp).is_none(), "slot {slot} answered twice");
+    }
+    for (k, r) in reqs.iter().enumerate() {
+        let resp = got[k].unwrap();
+        assert_eq!(resp.err, 0, "req {k} failed under recoverable faults");
+        assert_eq!(resp.value, expected_req(r), "req {k} not bit-exact after recovery");
+    }
+    let s = pool.shutdown();
+    assert_eq!(s.requests, 1000);
+}
+
+#[test]
+fn unrecoverable_shard_fault_fails_requests_instead_of_hanging() {
+    silence_injected_panics();
+    // Every round panics AND every recovery is forced to fail: requests
+    // must still resolve — with ERR_UNAVAILABLE — and shutdown must join.
+    let inj = FaultInjector::new(FaultConfig {
+        seed: 0xDEAD,
+        shard_panic_ppm: 1_000_000,
+        recover_panic_ppm: 1_000_000,
+        ..FaultConfig::default()
+    });
+    let pool = Sharded::start_with_faults(
+        ShardedConfig { shards: 2, queue_depth: 32, batch: 8 },
+        Some(inj),
+    );
+    let reqs = mixed_requests(0xFA02, 200);
+    let (tx, rx) = channel();
+    let chunk: Vec<(Request, Route)> = reqs
+        .iter()
+        .enumerate()
+        .map(|(k, r)| (*r, Route::Slot(tx.clone(), k as u32)))
+        .collect();
+    pool.submit(chunk);
+    for _ in 0..reqs.len() {
+        let (_, resp) = rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("a double fault must fail the request, not strand it");
+        assert_eq!(
+            resp.err,
+            simdive::engine::sharded::RESP_ERR_UNAVAILABLE,
+            "double-faulted requests must carry the unavailable code"
+        );
+    }
+    pool.shutdown(); // must join: the shard threads survived every panic
+}
+
+#[test]
+fn engine_stream_falls_back_to_scalar_when_shards_fail() {
+    silence_injected_panics();
+    let inj = FaultInjector::new(FaultConfig {
+        seed: 3,
+        shard_panic_ppm: 1_000_000,
+        recover_panic_ppm: 1_000_000,
+        ..FaultConfig::default()
+    });
+    let pool = Sharded::start_with_faults(
+        ShardedConfig { shards: 2, queue_depth: 64, batch: 8 },
+        Some(inj),
+    );
+    let reqs = mixed_requests(0xFA03, 500);
+    let (mut out, mut want) = (Vec::new(), Vec::new());
+    // Even with every shard round double-faulting, the Backend seam
+    // contract holds: in-process callers get scalar-model answers.
+    Backend::execute_stream(&pool, &reqs, &mut out);
+    Reference.execute_stream(&reqs, &mut want);
+    assert_eq!(out, want, "seam contract must survive total shard failure");
+    pool.shutdown();
+}
+
+#[test]
+fn overload_is_shed_with_deadline_and_recovered_by_retry() {
+    silence_injected_panics();
+    // Window of 1 + 150 ms shard slowdown vs a 20 ms admission deadline:
+    // the first request of a burst is admitted, the rest shed. The 7×
+    // margin between deadline and slowdown keeps this deterministic.
+    let cfg = ServeConfig {
+        workers: 2,
+        batch: 8,
+        queue_depth: 64,
+        window: 1,
+        deadline_ms: 20,
+        io_timeout_ms: 10_000,
+        faults: Some(FaultConfig {
+            seed: 7,
+            shard_slow_ppm: 1_000_000,
+            slow_ms: 150,
+            ..FaultConfig::default()
+        }),
+    };
+    let server = Server::start("127.0.0.1:0", cfg).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let reqs: Vec<WireRequest> = (0..8).map(|i| wire_request(i, 10 + i, 3)).collect();
+    let resps = client.exchange(&reqs).unwrap();
+    let (mut ok, mut shed) = (0u32, 0u32);
+    for (resp, req) in resps.iter().zip(&reqs) {
+        if resp.err == 0 {
+            assert_eq!(resp.value, expected_wire(req));
+            ok += 1;
+        } else {
+            assert_eq!(resp.err, wire::ERR_OVERLOAD, "unexpected error {}", resp.err);
+            shed += 1;
+        }
+    }
+    assert!(ok >= 1, "the admitted request must succeed");
+    assert!(shed >= 1, "a full window past its deadline must shed");
+    let stats = client.stats().unwrap();
+    assert!(stats.shed_overload >= shed as u64, "server must count what it shed");
+
+    // Retry recovers everything: overload is transient by design.
+    let policy = RetryPolicy {
+        max_attempts: 30,
+        base_backoff: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(5),
+        deadline: Duration::from_secs(60),
+    };
+    let reqs: Vec<WireRequest> = (100..108).map(|i| wire_request(i, 1 + i % 200, 7)).collect();
+    let resps = client.exchange_with_retry(&reqs, &policy).unwrap();
+    for (resp, req) in resps.iter().zip(&reqs) {
+        assert_eq!(resp.err, 0, "retry must eventually land every request");
+        assert_eq!(resp.value, expected_wire(req));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn connections_return_to_baseline_after_a_client_storm() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    assert_eq!(server.connections(), 0);
+    let addr = server.local_addr();
+    let mut handles = Vec::new();
+    for c in 0..8u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr)?;
+            let reqs: Vec<WireRequest> =
+                (0..200).map(|i| wire_request(i, 1 + (c * 37 + i) % 200, 3)).collect();
+            let resps = client.exchange(&reqs)?;
+            assert_eq!(resps.len(), reqs.len());
+            Ok::<(), std::io::Error>(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    // Bounded convergence poll: TCP close propagation, not correctness.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.connections() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(server.connections(), 0, "connection slots must be reclaimed");
+    server.shutdown();
+}
+
+#[test]
+fn chaos_scenario_invariants_hold_under_server_faults() {
+    silence_injected_panics();
+    let cfg = ServeConfig {
+        faults: Some(FaultConfig::server_chaos(0xAB, 10_000)),
+        ..ServeConfig::default()
+    };
+    let server = Server::start("127.0.0.1:0", cfg).unwrap();
+    let ccfg = ChaosConfig {
+        connections: 2,
+        requests: 2_000,
+        chunk: 64,
+        saboteur_rounds: 4,
+        ..ChaosConfig::default()
+    };
+    let report = chaos::run(&server.local_addr().to_string(), &ccfg).unwrap();
+    assert!(
+        report.invariants_hold(),
+        "chaos invariants violated: mismatches {}, unresolved {}, connections {} -> {}",
+        report.mismatches,
+        report.unresolved,
+        report.baseline_connections,
+        report.final_connections
+    );
+    assert_eq!(
+        report.completed + report.failed,
+        report.requests,
+        "every request needs a definitive outcome"
+    );
+    server.shutdown();
+}

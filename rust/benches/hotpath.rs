@@ -251,6 +251,59 @@ fn bench_sharded(n: u64) -> Vec<(usize, f64)> {
     results
 }
 
+/// Observability overhead probe (DESIGN.md §12): the same mixed-w
+/// workload through two otherwise-identical 4-shard pools, one detached
+/// (`Sharded::start`) and one with the full metrics registry attached
+/// (`Sharded::start_observed` — tier counters, stage histograms, queue
+/// gauges, span stamping). The acceptance budget is < 3% throughput loss;
+/// the measured figure lands in `BENCH_hotpath.json` under `obs`.
+fn bench_obs_overhead(n: u64) -> (f64, f64, f64) {
+    use simdive::engine::{Engine, Sharded, ShardedConfig};
+    use simdive::obs::Registry;
+    use std::sync::Arc;
+    let reqs: Vec<Request> = (0..n).map(make_mixed).collect();
+    let cfg = ShardedConfig { shards: 4, queue_depth: 1024, batch: 64 };
+    let registry = Registry::new();
+    let time_pool = |pool: Sharded| -> f64 {
+        let eng = Engine::with_backend(
+            Arc::new(pool),
+            MulDesign::Simdive { w: 8 },
+            DivDesign::Simdive { w: 8 },
+        );
+        let mut out: Vec<u64> = Vec::new();
+        for chunk in reqs.chunks(4096) {
+            eng.execute_stream_into(chunk, &mut out); // warm up
+        }
+        let t0 = Instant::now();
+        let mut passes = 0u32;
+        while t0.elapsed().as_millis() < 300 {
+            for chunk in reqs.chunks(4096) {
+                eng.execute_stream_into(chunk, &mut out);
+                black_box(&out);
+            }
+            passes += 1;
+        }
+        (n * passes as u64) as f64 / t0.elapsed().as_secs_f64()
+    };
+    let bare_rps = time_pool(Sharded::start(cfg));
+    let observed_rps = time_pool(Sharded::start_observed(cfg, None, &registry));
+    // The registry must have tier counters registered by the observed pool
+    // — an empty registry would mean the "observed" run timed nothing.
+    let snap = registry.snapshot();
+    assert!(
+        snap.entries.iter().any(|(name, _)| name.starts_with("tier.")),
+        "observed pool registered no tier counters"
+    );
+    let overhead_pct = (1.0 - observed_rps / bare_rps) * 100.0;
+    println!(
+        "[bench] obs overhead: bare {:.1} kreq/s, observed {:.1} kreq/s ({:+.2}%)",
+        bare_rps / 1e3,
+        observed_rps / 1e3,
+        overhead_pct
+    );
+    (bare_rps, observed_rps, overhead_pct)
+}
+
 fn json_op_section(results: &[&OpResult]) -> String {
     let mut s = String::from("{");
     for (k, r) in results.iter().enumerate() {
@@ -282,6 +335,7 @@ fn main() {
     let (coord_scalar_rps, coord_batched_rps, coord_mixed_rps, coord_mixed_util) =
         bench_coordinator();
     let sharded = bench_sharded(COORD_REQUESTS);
+    let (obs_bare, obs_observed, obs_overhead) = bench_obs_overhead(COORD_REQUESTS);
 
     // JSON fragments for the shard sweep (`shards` lists the swept
     // counts; `sharded_rps` maps each count to its throughput).
@@ -296,14 +350,18 @@ fn main() {
     sharded_rps.push('}');
 
     // Schema note: `batched_mixed_w_rps`/`mixed_w_lane_utilization`
-    // (coordinator v2) and `shards`/`sharded_rps` (engine sharding) are
-    // append-only additions; the schema name is unchanged (CHANGES.md).
+    // (coordinator v2), `shards`/`sharded_rps` (engine sharding) and the
+    // `obs` block (observability overhead, DESIGN.md §12) are append-only
+    // additions; the schema name is unchanged (CHANGES.md).
     let json = format!(
         "{{\n  \"schema\": \"simdive-hotpath-v1\",\n  \"elements_per_pass\": {N},\n  \
          \"mul\": {},\n  \"div\": {},\n  \"coordinator\": {{\"requests\": {COORD_REQUESTS}, \
          \"per_request_rps\": {:.1}, \"batched_rps\": {:.1}, \
          \"batched_mixed_w_rps\": {:.1}, \"mixed_w_lane_utilization\": {:.4}, \
-         \"shards\": [{}], \"sharded_rps\": {}}}\n}}\n",
+         \"shards\": [{}], \"sharded_rps\": {}}},\n  \
+         \"obs\": {{\"sharded_rps_bare\": {obs_bare:.1}, \
+         \"sharded_rps_observed\": {obs_observed:.1}, \
+         \"overhead_pct\": {obs_overhead:.2}}}\n}}\n",
         json_op_section(&muls.iter().collect::<Vec<_>>()),
         json_op_section(&divs.iter().collect::<Vec<_>>()),
         coord_scalar_rps,

@@ -65,12 +65,22 @@ fn mred_over(op: ReqOp, bits: u32, w: u32, pairs: impl Iterator<Item = (u64, u64
     sum / n as f64
 }
 
+/// The process-wide profile singleton, shared by [`ErrorProfile::get`]
+/// and [`ErrorProfile::try_get`].
+static CACHE: OnceLock<ErrorProfile> = OnceLock::new();
+
 impl ErrorProfile {
     /// The process-wide profile, computed on first use (~2M behavioral
     /// evaluations, sub-second in release).
     pub fn get() -> &'static ErrorProfile {
-        static CACHE: OnceLock<ErrorProfile> = OnceLock::new();
         CACHE.get_or_init(ErrorProfile::compute)
+    }
+
+    /// The cached profile if some caller already forced it, else `None`.
+    /// Observability snapshots use this so reading stats never pays (or
+    /// blocks on) the multi-second debug-build profile computation.
+    pub fn try_get() -> Option<&'static ErrorProfile> {
+        CACHE.get()
     }
 
     fn compute() -> ErrorProfile {

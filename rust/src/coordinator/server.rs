@@ -23,6 +23,7 @@
 use super::packer::Request;
 use crate::engine::sharded::{Route, Sharded, ShardedConfig, StatsHandle};
 use crate::faults::FaultInjector;
+use crate::obs::{Registry, Span};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
@@ -97,16 +98,31 @@ impl Coordinator {
     /// Start with a chaos-harness fault injector threaded into the shard
     /// pool (`None` behaves exactly like [`Coordinator::start`]).
     pub fn start_with_faults(cfg: CoordinatorConfig, faults: Option<Arc<FaultInjector>>) -> Self {
-        let pool = Sharded::start_with_faults(
-            ShardedConfig {
-                shards: cfg.workers.max(1),
-                queue_depth: cfg.queue_depth,
-                batch: cfg.batch.max(1),
-            },
-            faults,
-        );
+        let pool = Sharded::start_with_faults(Coordinator::pool_config(cfg), faults);
         let stats = pool.stats_handle();
         Coordinator { pool, stats, batch_chunk: cfg.batch.max(1) }
+    }
+
+    /// Start with observability attached: the shard pool registers its
+    /// engine counters, tier counters, per-shard gauges and stage
+    /// histograms in `registry`, and every response carries a stamped
+    /// lifecycle [`Span`]. The serve layer's constructor (DESIGN.md §12).
+    pub fn start_observed(
+        cfg: CoordinatorConfig,
+        faults: Option<Arc<FaultInjector>>,
+        registry: &Registry,
+    ) -> Self {
+        let pool = Sharded::start_observed(Coordinator::pool_config(cfg), faults, registry);
+        let stats = pool.stats_handle();
+        Coordinator { pool, stats, batch_chunk: cfg.batch.max(1) }
+    }
+
+    fn pool_config(cfg: CoordinatorConfig) -> ShardedConfig {
+        ShardedConfig {
+            shards: cfg.workers.max(1),
+            queue_depth: cfg.queue_depth,
+            batch: cfg.batch.max(1),
+        }
     }
 
     /// Number of execution shards.
@@ -149,14 +165,30 @@ impl Coordinator {
         base_slot: u32,
         tx: &Sender<(u32, Response)>,
     ) {
+        self.submit_batch_streaming_spanned(
+            reqs.into_iter().map(|r| (r, Span::disabled())).collect(),
+            base_slot,
+            tx,
+        );
+    }
+
+    /// As [`Coordinator::submit_batch_streaming`], with caller-stamped
+    /// lifecycle spans (the serve layer stamps `t_admit` and the sampling
+    /// decision at admission). Spans ride the responses back out.
+    pub fn submit_batch_streaming_spanned(
+        &self,
+        reqs: Vec<(Request, Span)>,
+        base_slot: u32,
+        tx: &Sender<(u32, Response)>,
+    ) {
         let mut slot = base_slot;
         let mut iter = reqs.into_iter();
         loop {
-            let chunk: Vec<(Request, Route)> = iter
+            let chunk: Vec<(Request, Route, Span)> = iter
                 .by_ref()
                 .take(self.batch_chunk)
-                .map(|r| {
-                    let routed = (r, Route::Slot(tx.clone(), slot));
+                .map(|(r, span)| {
+                    let routed = (r, Route::Slot(tx.clone(), slot), span);
                     slot += 1;
                     routed
                 })
@@ -164,7 +196,7 @@ impl Coordinator {
             if chunk.is_empty() {
                 break;
             }
-            self.pool.submit(chunk);
+            self.pool.submit_spanned(chunk);
         }
     }
 

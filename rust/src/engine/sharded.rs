@@ -36,10 +36,12 @@
 //!   never deliver a response twice.
 
 use crate::arith::batch;
-use crate::coordinator::packer::{lane_value, Assembled, Assembler, Request};
+use crate::arith::simd::LaneMode;
+use crate::coordinator::packer::{lane_value, Assembled, Assembler, ReqOp, Request};
 use crate::faults::FaultInjector;
+use crate::obs::{self, Counter, Gauge, Hist, Registry, Span, Tiers};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -58,6 +60,9 @@ pub struct Response {
     /// `0` = success; non-zero = the request could not be executed
     /// ([`RESP_ERR_UNAVAILABLE`]) and `value` is meaningless.
     pub err: u8,
+    /// Lifecycle span, stamped through submit → fold → emit → done. All
+    /// zeros (and never sampled) on unobserved pools.
+    pub span: Span,
 }
 
 /// Where a completed request's response goes. Routes are attached
@@ -116,13 +121,83 @@ impl Stats {
     }
 }
 
-#[derive(Default)]
+/// One shard's observability handles. On an observed pool these are
+/// registry-backed (`shard.{i}.*` names, `stage.*` per-shard instances
+/// merged on snapshot); on an unobserved pool they are detached atomics
+/// that nothing ever records into.
+#[derive(Clone)]
+struct ShardObs {
+    queue_depth: Arc<Gauge>,
+    residue_flushes: Arc<Counter>,
+    stage_queue: Arc<Hist>,
+    stage_assemble: Arc<Hist>,
+    stage_execute: Arc<Hist>,
+}
+
+impl ShardObs {
+    fn detached() -> ShardObs {
+        ShardObs {
+            queue_depth: Arc::new(Gauge::new()),
+            residue_flushes: Arc::new(Counter::new()),
+            stage_queue: Arc::new(Hist::new()),
+            stage_assemble: Arc::new(Hist::new()),
+            stage_execute: Arc::new(Hist::new()),
+        }
+    }
+
+    fn registered(shard: usize, reg: &Registry) -> ShardObs {
+        ShardObs {
+            queue_depth: reg.gauge(&format!("shard.{shard}.queue_depth")),
+            residue_flushes: reg.counter(&format!("shard.{shard}.residue_flushes")),
+            stage_queue: reg.hist_instance("stage.queue"),
+            stage_assemble: reg.hist_instance("stage.assemble"),
+            stage_execute: reg.hist_instance("stage.execute"),
+        }
+    }
+}
+
+/// Pool-wide counters. The aggregate `Stats` API reads these whether or
+/// not a registry is attached; the stage/tier/gauge recording on the hot
+/// path only runs when `enabled` (i.e. [`Sharded::start_observed`]).
 struct Shared {
-    requests: AtomicU64,
-    words: AtomicU64,
-    active_lanes: AtomicU64,
-    total_lanes: AtomicU64,
-    energy_mpj: AtomicU64, // milli-pJ, to keep atomic integer math
+    requests: Arc<Counter>,
+    words: Arc<Counter>,
+    active_lanes: Arc<Counter>,
+    total_lanes: Arc<Counter>,
+    energy_mpj: Arc<Counter>, // milli-pJ, to keep atomic integer math
+    /// Observability on: spans are stamped, stage histograms, tier
+    /// counters and queue-depth gauges are recorded.
+    enabled: bool,
+    tiers: Option<Tiers>,
+    shards: Vec<ShardObs>,
+}
+
+impl Shared {
+    fn detached(shards: usize) -> Shared {
+        Shared {
+            requests: Arc::new(Counter::new()),
+            words: Arc::new(Counter::new()),
+            active_lanes: Arc::new(Counter::new()),
+            total_lanes: Arc::new(Counter::new()),
+            energy_mpj: Arc::new(Counter::new()),
+            enabled: false,
+            tiers: None,
+            shards: (0..shards).map(|_| ShardObs::detached()).collect(),
+        }
+    }
+
+    fn registered(shards: usize, reg: &Registry) -> Shared {
+        Shared {
+            requests: reg.counter("engine.requests"),
+            words: reg.counter("engine.words"),
+            active_lanes: reg.counter("engine.active_lanes"),
+            total_lanes: reg.counter("engine.total_lanes"),
+            energy_mpj: reg.counter("engine.energy_mpj"),
+            enabled: true,
+            tiers: Some(Tiers::register(reg)),
+            shards: (0..shards).map(|i| ShardObs::registered(i, reg)).collect(),
+        }
+    }
 }
 
 /// A cloneable read handle on a pool's counters that stays valid after the
@@ -133,11 +208,11 @@ pub struct StatsHandle(Arc<Shared>);
 impl StatsHandle {
     pub fn snapshot(&self) -> Stats {
         Stats {
-            requests: self.0.requests.load(Ordering::Relaxed),
-            words: self.0.words.load(Ordering::Relaxed),
-            active_lanes: self.0.active_lanes.load(Ordering::Relaxed),
-            total_lanes: self.0.total_lanes.load(Ordering::Relaxed),
-            energy_pj: self.0.energy_mpj.load(Ordering::Relaxed) as f64 / 1000.0,
+            requests: self.0.requests.get(),
+            words: self.0.words.get(),
+            active_lanes: self.0.active_lanes.get(),
+            total_lanes: self.0.total_lanes.get(),
+            energy_pj: self.0.energy_mpj.get() as f64 / 1000.0,
         }
     }
 }
@@ -163,9 +238,10 @@ impl Default for ShardedConfig {
 }
 
 enum ShardMsg {
-    /// A chunk of routed requests (one queue slot per chunk, so the
-    /// bounded queue's backpressure applies per chunk).
-    Batch(Vec<(Request, Route)>),
+    /// A chunk of routed requests with their lifecycle spans (one queue
+    /// slot per chunk, so the bounded queue's backpressure applies per
+    /// chunk).
+    Batch(Vec<(Request, Route, Span)>),
     /// Flush held partial words now.
     Flush,
 }
@@ -180,6 +256,15 @@ const MAX_HELD_ROUNDS: u32 = 4;
 /// Per-word energy estimate (pJ) with power gating: idle lanes of a word
 /// consume `IDLE_FRACTION` of their proportional share.
 pub const IDLE_FRACTION: f64 = 0.1;
+
+/// Tier-counter coordinate of a lane's mode.
+#[inline]
+fn lane_op(mode: LaneMode) -> ReqOp {
+    match mode {
+        LaneMode::Mul => ReqOp::Mul,
+        LaneMode::Div => ReqOp::Div,
+    }
+}
 
 fn word_energy_pj(per_word_pj: f64, active: u32, lanes: u32) -> f64 {
     let share = per_word_pj / lanes as f64;
@@ -213,8 +298,8 @@ pub fn simd_word_energy_pj() -> f64 {
 /// and reusable execution scratch.
 struct ShardCtx {
     kernel: batch::MultiKernel,
-    asm: Assembler<Route>,
-    words: Vec<Assembled<Route>>,
+    asm: Assembler<(Route, Span)>,
+    words: Vec<Assembled<(Route, Span)>>,
     ws: Vec<u32>,
     ops: Vec<crate::arith::SimdOp>,
     operands: Vec<crate::arith::SimdWord>,
@@ -225,10 +310,23 @@ struct ShardCtx {
     /// Chaos-harness injector; `None` in production (zero overhead beyond
     /// the Option check per round).
     faults: Option<Arc<FaultInjector>>,
+    /// Observability on ([`Shared::enabled`], hoisted out of the Arc).
+    enabled: bool,
+    /// This shard's gauge/counter/histogram handles.
+    obs: ShardObs,
+    tiers: Option<Tiers>,
 }
 
 impl ShardCtx {
-    fn new(shared: Arc<Shared>, per_word_pj: f64, faults: Option<Arc<FaultInjector>>) -> Self {
+    fn new(
+        shared: Arc<Shared>,
+        shard: usize,
+        per_word_pj: f64,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Self {
+        let enabled = shared.enabled;
+        let obs = shared.shards[shard].clone();
+        let tiers = shared.tiers.clone();
         ShardCtx {
             kernel: batch::MultiKernel::new(),
             asm: Assembler::new(),
@@ -241,14 +339,32 @@ impl ShardCtx {
             shared,
             per_word_pj,
             faults,
+            enabled,
+            obs,
+            tiers,
         }
     }
 
     /// Queue a chunk of routed requests; returns how many were folded.
-    fn fold(&mut self, chunk: Vec<(Request, Route)>) -> usize {
+    fn fold(&mut self, chunk: Vec<(Request, Route, Span)>) -> usize {
         let n = chunk.len();
-        for (req, route) in chunk {
-            self.asm.push(req, route);
+        if self.enabled && n > 0 {
+            // One clock read per chunk: every request in the chunk shares
+            // t_submit (stamped once at submission) and t_fold, so the
+            // queue stage records n samples of one duration in a single
+            // bucket increment.
+            let t_fold = obs::now_ns();
+            self.obs.queue_depth.sub(n as i64);
+            let t_submit = chunk[0].2.t_submit_ns;
+            self.obs.stage_queue.record_ns_n(t_fold.saturating_sub(t_submit), n as u64);
+            for (req, route, mut span) in chunk {
+                span.t_fold_ns = t_fold;
+                self.asm.push(req, (route, span));
+            }
+        } else {
+            for (req, route, span) in chunk {
+                self.asm.push(req, (route, span));
+            }
         }
         n
     }
@@ -264,7 +380,8 @@ impl ShardCtx {
     /// words without ever double-delivering.
     fn run(&mut self, flush: bool) {
         self.words.clear();
-        if flush || self.held_rounds >= MAX_HELD_ROUNDS {
+        let emit_all = flush || self.held_rounds >= MAX_HELD_ROUNDS;
+        if emit_all {
             self.asm.emit_all(&mut self.words);
         } else {
             self.asm.emit_full(&mut self.words);
@@ -273,6 +390,7 @@ impl ShardCtx {
         if self.words.is_empty() {
             return;
         }
+        let t_emit = self.stamp_emitted(emit_all);
 
         if let Some(inj) = &self.faults {
             if inj.shard_slow() {
@@ -299,27 +417,69 @@ impl ShardCtx {
             }
         }
 
-        self.route_words();
+        self.route_words(t_emit);
     }
 
-    /// Deliver one executed round: route every lane's response, fold the
+    /// Stamp `t_emit` on every routed lane of the emitted words, record
+    /// the assemble stage (fold → emit: how long each request waited in
+    /// the assembler — this is the one per-lane recording, because
+    /// residue lanes genuinely wait extra rounds), and count the partial
+    /// words an emit-everything round releases as residue flushes.
+    /// Returns the round's emit timestamp (0 when observability is off).
+    fn stamp_emitted(&mut self, emit_all: bool) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let t_emit = obs::now_ns();
+        let mut residues = 0u64;
+        for job in &mut self.words {
+            if emit_all && (job.pw.active_lanes as usize) < job.pw.lane_count() {
+                residues += 1;
+            }
+            for slot in job.payload.iter_mut() {
+                if let Some((_, span)) = slot {
+                    span.t_emit_ns = t_emit;
+                    self.obs.stage_assemble.record_ns(t_emit.saturating_sub(span.t_fold_ns));
+                }
+            }
+        }
+        if residues > 0 {
+            self.obs.residue_flushes.add(residues);
+        }
+        t_emit
+    }
+
+    /// Deliver one executed round: route every lane's response (span
+    /// stamped `t_done`, its `{op, bits, w}` tier counted), fold the
     /// round into the shared counters, and mark the words routed (the
     /// cleared buffer is what tells [`ShardCtx::recover`] there is
     /// nothing left to re-execute).
-    fn route_words(&mut self) {
+    fn route_words(&mut self, t_emit_ns: u64) {
         let (mut active, mut total) = (0u64, 0u64);
         let mut energy = 0.0f64;
+        let t_done = if self.enabled { obs::now_ns() } else { 0 };
+        let mut routed = 0u64;
         for (job, &packed) in self.words.iter().zip(self.results.iter()) {
             let pw = &job.pw;
             active += pw.active_lanes as u64;
             total += pw.lane_count() as u64;
             energy += word_energy_pj(self.per_word_pj, pw.active_lanes, pw.lane_count() as u32);
-            for (l, route) in job.payload.iter().enumerate().take(pw.lane_count()) {
-                if let Some(route) = route {
+            for (l, slot) in job.payload.iter().enumerate().take(pw.lane_count()) {
+                if let Some((route, span)) = slot {
                     let id = pw.lane_req[l].expect("routed lane carries an id");
-                    route.send(Response { id, value: lane_value(pw, packed, l), err: 0 });
+                    let mut span = *span;
+                    span.t_done_ns = t_done;
+                    if let Some(tiers) = &self.tiers {
+                        tiers.add(lane_op(pw.op.modes[l]), pw.op.cfg.lanes()[l].1, pw.w, 1);
+                    }
+                    route.send(Response { id, value: lane_value(pw, packed, l), err: 0, span });
+                    routed += 1;
                 }
             }
+        }
+        if self.enabled {
+            // All lanes of a round share emit → done; one bucket add.
+            self.obs.stage_execute.record_ns_n(t_done.saturating_sub(t_emit_ns), routed);
         }
         let words = self.words.len() as u64;
         self.count_round(words, active, total, energy);
@@ -327,10 +487,10 @@ impl ShardCtx {
     }
 
     fn count_round(&self, words: u64, active: u64, total: u64, energy: f64) {
-        self.shared.words.fetch_add(words, Ordering::Relaxed);
-        self.shared.active_lanes.fetch_add(active, Ordering::Relaxed);
-        self.shared.total_lanes.fetch_add(total, Ordering::Relaxed);
-        self.shared.energy_mpj.fetch_add(energy_increment_mpj(energy), Ordering::Relaxed);
+        self.shared.words.add(words);
+        self.shared.active_lanes.add(active);
+        self.shared.total_lanes.add(total);
+        self.shared.energy_mpj.add(energy_increment_mpj(energy));
     }
 
     /// Recover from a panicked round: the emitted words still hold every
@@ -349,6 +509,7 @@ impl ShardCtx {
         let fresh = catch_unwind(batch::MultiKernel::new).ok();
         let (mut active, mut total) = (0u64, 0u64);
         let mut energy = 0.0f64;
+        let t_done = if self.enabled { obs::now_ns() } else { 0 };
         for job in &self.words {
             let pw = &job.pw;
             let forced = self.faults.as_ref().is_some_and(|f| f.recover_panic());
@@ -362,13 +523,26 @@ impl ShardCtx {
             active += pw.active_lanes as u64;
             total += pw.lane_count() as u64;
             energy += word_energy_pj(self.per_word_pj, pw.active_lanes, pw.lane_count() as u32);
-            for (l, route) in job.payload.iter().enumerate().take(pw.lane_count()) {
-                if let Some(route) = route {
+            for (l, slot) in job.payload.iter().enumerate().take(pw.lane_count()) {
+                if let Some((route, span)) = slot {
                     let id = pw.lane_req[l].expect("routed lane carries an id");
+                    let mut span = *span;
+                    span.t_done_ns = t_done;
+                    // Recovered (or failed) lanes count in the same tier
+                    // and stage accounting as clean rounds, so Σ tier ==
+                    // requests holds whether or not supervision fired.
+                    if let Some(tiers) = &self.tiers {
+                        tiers.add(lane_op(pw.op.modes[l]), pw.op.cfg.lanes()[l].1, pw.w, 1);
+                    }
+                    if self.enabled && span.t_emit_ns > 0 {
+                        self.obs.stage_execute.record_ns(t_done.saturating_sub(span.t_emit_ns));
+                    }
                     match packed {
-                        Some(p) => route.send(Response { id, value: lane_value(pw, p, l), err: 0 }),
+                        Some(p) => {
+                            route.send(Response { id, value: lane_value(pw, p, l), err: 0, span })
+                        }
                         None => {
-                            route.send(Response { id, value: 0, err: RESP_ERR_UNAVAILABLE })
+                            route.send(Response { id, value: 0, err: RESP_ERR_UNAVAILABLE, span })
                         }
                     }
                 }
@@ -399,11 +573,12 @@ fn run_supervised(ctx: &mut ShardCtx, flush: bool) {
 fn shard_loop(
     rx: Receiver<ShardMsg>,
     shared: Arc<Shared>,
+    shard: usize,
     batch_size: usize,
     per_word_pj: f64,
     faults: Option<Arc<FaultInjector>>,
 ) {
-    let mut ctx = ShardCtx::new(shared, per_word_pj, faults);
+    let mut ctx = ShardCtx::new(shared, shard, per_word_pj, faults);
     loop {
         // Between bursts the assembler is empty (every burst ends in a
         // flush), so blocking indefinitely strands nothing.
@@ -454,19 +629,43 @@ impl Sharded {
     /// Spawn the shard pool with a chaos-harness fault injector threaded
     /// into every shard (`None` behaves exactly like [`Sharded::start`]).
     pub fn start_with_faults(cfg: ShardedConfig, faults: Option<Arc<FaultInjector>>) -> Sharded {
+        let shared = Shared::detached(cfg.shards.max(1));
+        Sharded::start_inner(cfg, faults, shared)
+    }
+
+    /// Spawn the shard pool with observability attached: engine counters,
+    /// per-`{op, bits, w}` tier counters, per-shard queue-depth gauges and
+    /// residue-flush counters, and `stage.{queue,assemble,execute}`
+    /// histogram instances all register in `registry`, and every response
+    /// carries a stamped [`Span`]. The unobserved constructors pay none of
+    /// this (one `bool` test per round).
+    pub fn start_observed(
+        cfg: ShardedConfig,
+        faults: Option<Arc<FaultInjector>>,
+        registry: &Registry,
+    ) -> Sharded {
+        let shared = Shared::registered(cfg.shards.max(1), registry);
+        Sharded::start_inner(cfg, faults, shared)
+    }
+
+    fn start_inner(
+        cfg: ShardedConfig,
+        faults: Option<Arc<FaultInjector>>,
+        shared: Shared,
+    ) -> Sharded {
         let n = cfg.shards.max(1);
         let batch = cfg.batch.max(1);
         let per_word_pj = simd_word_energy_pj();
-        let shared = Arc::new(Shared::default());
+        let shared = Arc::new(shared);
         let mut txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
-        for _ in 0..n {
+        for i in 0..n {
             let (tx, rx) = sync_channel::<ShardMsg>(cfg.queue_depth.max(16));
             txs.push(tx);
             let shared = Arc::clone(&shared);
             let faults = faults.clone();
             handles.push(
-                std::thread::spawn(move || shard_loop(rx, shared, batch, per_word_pj, faults)),
+                std::thread::spawn(move || shard_loop(rx, shared, i, batch, per_word_pj, faults)),
             );
         }
         Sharded { txs, handles, rr: AtomicUsize::new(0), shared }
@@ -482,11 +681,30 @@ impl Sharded {
     /// packing quality of a submission tracks its chunk size). Blocks when
     /// that shard's bounded queue is full (backpressure).
     pub fn submit(&self, chunk: Vec<(Request, Route)>) {
+        self.submit_spanned(
+            chunk.into_iter().map(|(req, route)| (req, route, Span::disabled())).collect(),
+        );
+    }
+
+    /// As [`Sharded::submit`], with caller-stamped lifecycle spans (the
+    /// serve path stamps `t_admit` at admission). On an observed pool the
+    /// chunk's spans get `t_submit` and the target shard stamped here —
+    /// one clock read per chunk — and the shard's queue-depth gauge rises
+    /// until the shard folds the chunk.
+    pub fn submit_spanned(&self, mut chunk: Vec<(Request, Route, Span)>) {
         if chunk.is_empty() {
             return;
         }
-        self.shared.requests.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+        self.shared.requests.add(chunk.len() as u64);
         let shard = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        if self.shared.enabled {
+            let t_submit = obs::now_ns();
+            for (_, _, span) in chunk.iter_mut() {
+                span.t_submit_ns = t_submit;
+                span.shard = shard as u8;
+            }
+            self.shared.shards[shard].queue_depth.add(chunk.len() as i64);
+        }
         self.txs[shard].send(ShardMsg::Batch(chunk)).expect("engine shards stopped");
     }
 
@@ -608,6 +826,71 @@ mod tests {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.value, simdive_mul_w(8, 43, 10, 8));
+        assert!(!resp.span.sampled, "unobserved pools never sample");
         pool.shutdown();
+    }
+
+    #[test]
+    fn observed_pool_records_stages_tiers_and_spans() {
+        let reg = Registry::new();
+        let pool = Sharded::start_observed(
+            ShardedConfig { shards: 2, queue_depth: 64, batch: 8 },
+            None,
+            &reg,
+        );
+        let (tx, rx) = channel();
+        let chunk: Vec<(Request, Route, Span)> = (0..40u64)
+            .map(|i| {
+                let req = Request { id: i, op: ReqOp::Mul, bits: 8, w: 4, a: 1 + i, b: 3 };
+                (req, Route::Slot(tx.clone(), i as u32), Span::admitted(false, 0, 8, 4))
+            })
+            .collect();
+        pool.submit_spanned(chunk);
+        let mut spans = Vec::new();
+        for _ in 0..40 {
+            let (_, resp) = rx.recv().unwrap();
+            assert_eq!(resp.err, 0);
+            spans.push(resp.span);
+        }
+        pool.shutdown();
+        for s in &spans {
+            assert!(s.t_admit_ns > 0, "admission stamp survives the pipeline");
+            assert!(s.t_submit_ns >= s.t_admit_ns);
+            assert!(s.t_fold_ns >= s.t_submit_ns);
+            assert!(s.t_emit_ns >= s.t_fold_ns);
+            assert!(s.t_done_ns >= s.t_emit_ns);
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("engine.requests"), Some(40));
+        assert_eq!(snap.counter("tier.mul8.w4"), Some(40), "every lane counted in its tier");
+        assert_eq!(snap.hist("stage.queue").unwrap().count(), 40);
+        assert_eq!(snap.hist("stage.assemble").unwrap().count(), 40);
+        assert_eq!(snap.hist("stage.execute").unwrap().count(), 40);
+        assert_eq!(snap.gauge("shard.0.queue_depth"), Some(0), "drained after shutdown");
+        assert_eq!(snap.gauge("shard.1.queue_depth"), Some(0));
+    }
+
+    #[test]
+    fn residue_flush_is_counted_and_tiered() {
+        let reg = Registry::new();
+        let pool = Sharded::start_observed(
+            ShardedConfig { shards: 1, queue_depth: 16, batch: 4 },
+            None,
+            &reg,
+        );
+        let (tx, rx) = channel();
+        let req = Request { id: 1, op: ReqOp::Div, bits: 8, w: 0, a: 200, b: 7 };
+        pool.submit_spanned(vec![(req, Route::Single(tx), Span::admitted(true, 1, 8, 0))]);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.err, 0);
+        assert!(resp.span.sampled, "the sampling decision rides the span");
+        pool.shutdown();
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.counter("shard.0.residue_flushes"),
+            Some(1),
+            "a lone 8-bit request flushes as a partial word"
+        );
+        assert_eq!(snap.counter("tier.div8.w0"), Some(1));
     }
 }

@@ -121,7 +121,22 @@ enum Site {
     RecoverPanic,
 }
 
-const SITE_COUNT: usize = 8;
+/// Number of injection sites (length of [`SITE_NAMES`] and of the
+/// per-site counter arrays).
+pub const SITE_COUNT: usize = 8;
+
+/// Site names in discriminant order — the observability layer exports
+/// fired-fault counts as `faults.<site name>`.
+pub const SITE_NAMES: [&str; SITE_COUNT] = [
+    "wire_corrupt",
+    "wire_stall",
+    "wire_reset",
+    "shard_panic",
+    "shard_slow",
+    "delay",
+    "accept_drop",
+    "recover_panic",
+];
 
 fn splitmix64(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -137,11 +152,18 @@ fn splitmix64(mut z: u64) -> u64 {
 pub struct FaultInjector {
     cfg: FaultConfig,
     counters: [AtomicU64; SITE_COUNT],
+    /// Decisions that actually fired, per site — the injector's own
+    /// observation channel, exported as `faults.*` counters.
+    fired: [AtomicU64; SITE_COUNT],
 }
 
 impl FaultInjector {
     pub fn new(cfg: FaultConfig) -> Arc<FaultInjector> {
-        Arc::new(FaultInjector { cfg, counters: std::array::from_fn(|_| AtomicU64::new(0)) })
+        Arc::new(FaultInjector {
+            cfg,
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            fired: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
     }
 
     pub fn config(&self) -> &FaultConfig {
@@ -156,7 +178,16 @@ impl FaultInjector {
         }
         let k = self.counters[site as usize].fetch_add(1, Ordering::Relaxed);
         let h = splitmix64(self.cfg.seed ^ splitmix64(((site as u64 + 1) << 32) ^ k));
-        h % 1_000_000 < ppm as u64
+        let fire = h % 1_000_000 < ppm as u64;
+        if fire {
+            self.fired[site as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Faults actually injected so far, indexed like [`SITE_NAMES`].
+    pub fn fired_counts(&self) -> [u64; SITE_COUNT] {
+        std::array::from_fn(|i| self.fired[i].load(Ordering::Relaxed))
     }
 
     /// Derive a deterministic value from the seed and a caller salt
@@ -440,6 +471,18 @@ mod tests {
         let other_seed = FaultInjector::new(FaultConfig { seed: 43, ..cfg });
         let fire_c: Vec<bool> = (0..10_000).map(|_| other_seed.shard_panic()).collect();
         assert_ne!(fire_a, fire_c, "different seed → different schedule");
+    }
+
+    #[test]
+    fn fired_counts_track_injections_per_site() {
+        let cfg = FaultConfig { seed: 42, shard_panic_ppm: 100_000, ..FaultConfig::default() };
+        let inj = FaultInjector::new(cfg);
+        let hits = (0..10_000).filter(|_| inj.shard_panic()).count() as u64;
+        assert!(hits > 0);
+        let counts = inj.fired_counts();
+        let site = SITE_NAMES.iter().position(|&n| n == "shard_panic").unwrap();
+        assert_eq!(counts[site], hits);
+        assert_eq!(counts.iter().sum::<u64>(), hits, "no other site fired");
     }
 
     #[test]

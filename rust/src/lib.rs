@@ -23,6 +23,9 @@
 //! * [`faults`] — deterministic, seeded fault injection (wire, engine,
 //!   server) behind the fault-tolerant serving defenses and the chaos
 //!   load scenario.
+//! * [`obs`] — the dependency-free observability layer: lock-free
+//!   metrics registry (counters/gauges/log2 histograms), request
+//!   lifecycle tracing, and the `STATS2` snapshot source.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs on the request path).
 //!
@@ -38,6 +41,7 @@ pub mod faults;
 pub mod image;
 pub mod coordinator;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

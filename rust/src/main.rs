@@ -32,6 +32,13 @@ fn usage() -> ! {
          \t        [--chunk B] [--seed S]\n\
          \t                       chaos scenario: verified traffic + saboteur;\n\
          \t                       exits non-zero on any invariant violation\n\
+         \tstats --addr ADDR [--watch SECS] [--check]\n\
+         \t                       STATS2 registry snapshot: stage histograms,\n\
+         \t                       shard gauges, tier counters (--check exits\n\
+         \t                       non-zero unless every stage/shard reported)\n\
+         \ttrace --addr ADDR [--chrome] [--out PATH]\n\
+         \t                       drain the sampled trace ring as JSONL\n\
+         \t                       (or chrome://tracing JSON with --chrome)\n\
          \tall                    every table + figure in sequence"
     );
     std::process::exit(2)
@@ -100,6 +107,8 @@ fn main() -> anyhow::Result<()> {
         "profile" => profile(),
         "serve" => serve(&args)?,
         "loadgen" => loadgen(&args)?,
+        "stats" => stats_cmd(&args)?,
+        "trace" => trace_cmd(&args)?,
         "all" => {
             let samples = arg_u64(&args, "--samples", report::table2::ERROR_SAMPLES);
             println!("{}", report::table2::render(samples));
@@ -317,6 +326,86 @@ fn loadgen(args: &[String]) -> anyhow::Result<()> {
     std::fs::write(&out_path, &json)
         .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", out_path.display()))?;
     println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// `stats --addr ADDR`: fetch the wire-v4 `STATS2` registry snapshot and
+/// render it — counters and gauges one per line, histograms as
+/// `count/p50/p99` (DESIGN.md §12). `--watch SECS` re-polls forever;
+/// `--check` exits non-zero unless every request stage histogram is
+/// populated and at least one shard reported its gauges (the CI stats
+/// smoke step calls this against a freshly loaded server).
+fn stats_cmd(args: &[String]) -> anyhow::Result<()> {
+    use simdive::obs::trace::STAGE_NAMES;
+    use simdive::obs::Value;
+    use simdive::serve::Client;
+    use std::time::Duration;
+    let addr = arg_str(args, "--addr", "127.0.0.1:7171").to_string();
+    let check = args.iter().any(|a| a == "--check");
+    let watch = arg_u64_opt(args, "--watch")?;
+    let mut client = Client::connect_retry(addr.as_str(), Duration::from_secs(5))
+        .map_err(|e| anyhow::anyhow!("cannot connect to {addr}: {e}"))?;
+    loop {
+        let snap = client.stats2().map_err(|e| anyhow::anyhow!("STATS2 fetch failed: {e}"))?;
+        for (name, value) in &snap.entries {
+            match value {
+                Value::Counter(v) => println!("{name} = {v}"),
+                Value::Gauge(v) => println!("{name} = {v}"),
+                Value::Hist(h) => println!(
+                    "{name} = count {} p50 {} µs p99 {} µs",
+                    h.count(),
+                    h.percentile_us(0.50),
+                    h.percentile_us(0.99)
+                ),
+            }
+        }
+        if check {
+            for stage in STAGE_NAMES {
+                let populated = snap.hist(&format!("stage.{stage}")).is_some_and(|h| h.count() > 0);
+                anyhow::ensure!(
+                    populated,
+                    "stats --check: stage.{stage} histogram missing or empty"
+                );
+            }
+            anyhow::ensure!(
+                snap.gauge("shard.0.queue_depth").is_some(),
+                "stats --check: shard.0.queue_depth gauge missing"
+            );
+            println!("stats --check: all stage histograms populated, shard gauges present");
+        }
+        match watch {
+            Some(secs) => {
+                println!();
+                std::thread::sleep(Duration::from_secs(secs.max(1)));
+            }
+            None => return Ok(()),
+        }
+    }
+}
+
+/// `trace --addr ADDR`: drain the server's sampled trace ring and render
+/// it as JSONL (one event per line) or, with `--chrome`, as a
+/// chrome://tracing JSON document (DESIGN.md §12).
+fn trace_cmd(args: &[String]) -> anyhow::Result<()> {
+    use simdive::obs::trace::{render_chrome, render_jsonl};
+    use simdive::serve::Client;
+    use std::time::Duration;
+    let addr = arg_str(args, "--addr", "127.0.0.1:7171").to_string();
+    let mut client = Client::connect_retry(addr.as_str(), Duration::from_secs(5))
+        .map_err(|e| anyhow::anyhow!("cannot connect to {addr}: {e}"))?;
+    let events = client.trace_events().map_err(|e| anyhow::anyhow!("TRACE fetch failed: {e}"))?;
+    let rendered = if args.iter().any(|a| a == "--chrome") {
+        render_chrome(&events)
+    } else {
+        render_jsonl(&events)
+    };
+    match arg_str(args, "--out", "") {
+        "" => print!("{rendered}"),
+        p => {
+            std::fs::write(p, &rendered).map_err(|e| anyhow::anyhow!("cannot write {p}: {e}"))?;
+            eprintln!("trace: {} sampled events -> {p}", events.len());
+        }
+    }
     Ok(())
 }
 

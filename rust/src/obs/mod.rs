@@ -1,0 +1,70 @@
+//! Observability: a dependency-free metrics registry and request
+//! lifecycle tracing (DESIGN.md §12).
+//!
+//! The serving stack needs to *see* what it delivers — live per-stage
+//! latency, shard queue depth, and which `{op, bits, w}` accuracy tiers
+//! traffic actually lands on — before any closed-loop accuracy control
+//! (ROADMAP item 3) can exist. This module is that sensor layer:
+//!
+//! * [`registry`] — named counters, gauges and log2 histograms behind one
+//!   [`Registry`]. Recording is a relaxed atomic op; the registry lock is
+//!   taken only at registration and snapshot time. Per-shard histogram
+//!   *instances* share one name and are merged (bucket-wise summed) on
+//!   snapshot, so shard threads never contend on a shared cache line.
+//! * [`trace`] — the request lifecycle [`Span`] (admission → submit →
+//!   fold → emit → done → write timestamps against one process-wide
+//!   monotonic epoch), per-stage duration recording, and a seeded-sampled
+//!   bounded [`TraceRing`] of structured [`TraceEvent`]s exportable as
+//!   JSONL or Chrome trace format (`simdive trace`).
+//!
+//! Metric naming: dot-separated lowercase paths, `<subsystem>.<what>`
+//! (`serve.requests`, `stage.queue`, `shard.3.queue_depth`,
+//! `tier.mul8.w4`, `route.budget_w2`, `delivered.mred_ppm`,
+//! `faults.shard_panic`). Stage histograms record nanoseconds; the wire
+//! and CLI surface microsecond percentiles.
+//!
+//! Everything here is `std`-only and engine-agnostic: the wire layer
+//! encodes a [`Snapshot`] as the `STATS2` op, but `obs` itself knows
+//! nothing about serving.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Hist, HistSnapshot, Registry, Snapshot, Tiers, Value};
+pub use trace::{Span, TraceEvent, TraceRing};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The process-wide monotonic epoch every span timestamp is measured
+/// against. Fixed at first use, so timestamps from different threads are
+/// directly comparable and fit in a `u64` of nanoseconds.
+pub fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process [`epoch`]. Two calls from any threads
+/// are ordered; the cost is one `Instant::now()`.
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotone_and_shared() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+        std::thread::spawn(|| {
+            let c = now_ns();
+            assert!(c > 0, "other threads share the same epoch");
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -1,0 +1,522 @@
+//! The lock-free metrics registry: named [`Counter`]s, [`Gauge`]s and
+//! log2 [`Hist`]ograms (DESIGN.md §12).
+//!
+//! Recording never takes a lock — every primitive is one (or a few)
+//! relaxed atomic ops on an `Arc` handle the hot path holds directly.
+//! The registry's own mutex guards only the name → slot map, touched at
+//! registration and snapshot time.
+//!
+//! A name can hold *multiple instances* of the same primitive
+//! ([`Registry::hist_instance`] / [`Registry::counter_instance`]): each
+//! shard records into its own cache-line-private instance and the
+//! snapshot merges them (bucket-wise / sum). `counter`/`gauge`/`hist`
+//! are get-or-create on the first instance, so independent subsystems
+//! naming the same metric share one handle.
+
+use crate::coordinator::packer::ReqOp;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of log2 histogram buckets: bucket `i` counts samples in
+/// `[2^i, 2^{i+1})` nanoseconds, the top bucket absorbing ≥ 2^47 ns.
+pub const HIST_BUCKETS: usize = 48;
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed instantaneous level (queue depths, derived ppm estimates).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free log2-bucketed histogram over nanosecond samples.
+///
+/// There is deliberately **no separate count field**: the sample count is
+/// the bucket sum, and percentiles are derived from one consistent local
+/// copy of the bucket array — so a reader racing concurrent writers can
+/// never observe a rank larger than the buckets it scans (the snapshot
+/// race the old `serve::stats::LatencyHist` had).
+pub struct Hist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+/// Index of the bucket holding an `ns` sample.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        (63 - ns.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist::default()
+    }
+
+    /// Record one sample: one relaxed increment.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` samples of the same value in one increment — the
+    /// amortized form the shard hot path uses for chunk/round-granular
+    /// stage durations.
+    #[inline]
+    pub fn record_ns_n(&self, ns: u64, n: u64) {
+        if n > 0 {
+            self.buckets[bucket_of(ns)].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// One consistent read of the buckets.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot { buckets }
+    }
+
+    /// Percentile `p` in `(0, 1]` in microseconds, from one consistent
+    /// bucket read (rank is derived from the *observed* bucket sum, never
+    /// a separately-maintained count).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.snapshot().percentile_us(p)
+    }
+}
+
+/// An owned copy of a histogram's buckets: mergeable, encodable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Bucket-wise sum (per-shard instance merging).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Percentile `p` in `(0, 1]`, reported as the upper bound of the
+    /// holding bucket in microseconds (at most 2× off). Returns 0 when
+    /// empty. The rank comes from this snapshot's own sum, so the scan
+    /// can never walk past the last non-empty bucket.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                // Upper bound of bucket i is 2^{i+1} − 1 ns.
+                return ((1u64 << (i + 1)) - 1) / 1000;
+            }
+        }
+        unreachable!("rank {rank} exceeds observed bucket sum {n}")
+    }
+}
+
+/// A metric's value in a [`Snapshot`] (and on the wire as `STATS2`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Counter(u64),
+    Gauge(i64),
+    Hist(HistSnapshot),
+}
+
+/// A point-in-time copy of every registered metric, name-sorted.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub entries: Vec<(String, Value)>,
+}
+
+impl Snapshot {
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        match self.get(name)? {
+            Value::Counter(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        match self.get(name)? {
+            Value::Gauge(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        match self.get(name)? {
+            Value::Hist(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, value: Value) {
+        self.entries.push((name.into(), value));
+    }
+}
+
+enum Slot {
+    Counter(Vec<Arc<Counter>>),
+    Gauge(Vec<Arc<Gauge>>),
+    Hist(Vec<Arc<Hist>>),
+}
+
+/// The name → metric map. One per server (or per test); handles are
+/// `Arc`s, so recording never touches the registry again.
+#[derive(Default)]
+pub struct Registry {
+    slots: Mutex<BTreeMap<String, Slot>>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    /// Get-or-create the first counter instance under `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.entry(name.to_string()).or_insert_with(|| Slot::Counter(Vec::new())) {
+            Slot::Counter(v) => {
+                if v.is_empty() {
+                    v.push(Arc::new(Counter::new()));
+                }
+                Arc::clone(&v[0])
+            }
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Always append a fresh counter instance under `name` (merged on
+    /// snapshot) — per-shard private counting.
+    pub fn counter_instance(&self, name: &str) -> Arc<Counter> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.entry(name.to_string()).or_insert_with(|| Slot::Counter(Vec::new())) {
+            Slot::Counter(v) => {
+                let c = Arc::new(Counter::new());
+                v.push(Arc::clone(&c));
+                c
+            }
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Get-or-create the gauge under `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.entry(name.to_string()).or_insert_with(|| Slot::Gauge(Vec::new())) {
+            Slot::Gauge(v) => {
+                if v.is_empty() {
+                    v.push(Arc::new(Gauge::new()));
+                }
+                Arc::clone(&v[0])
+            }
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Get-or-create the first histogram instance under `name`.
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.entry(name.to_string()).or_insert_with(|| Slot::Hist(Vec::new())) {
+            Slot::Hist(v) => {
+                if v.is_empty() {
+                    v.push(Arc::new(Hist::new()));
+                }
+                Arc::clone(&v[0])
+            }
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Always append a fresh histogram instance under `name` (bucket-wise
+    /// merged on snapshot) — each shard records into its own instance.
+    pub fn hist_instance(&self, name: &str) -> Arc<Hist> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.entry(name.to_string()).or_insert_with(|| Slot::Hist(Vec::new())) {
+            Slot::Hist(v) => {
+                let h = Arc::new(Hist::new());
+                v.push(Arc::clone(&h));
+                h
+            }
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Snapshot every metric, merging same-name instances (counters and
+    /// gauges sum; histograms sum bucket-wise). Entries come back sorted
+    /// by name (the map is a `BTreeMap`).
+    pub fn snapshot(&self) -> Snapshot {
+        let slots = self.slots.lock().unwrap();
+        let mut out = Snapshot::default();
+        for (name, slot) in slots.iter() {
+            let value = match slot {
+                Slot::Counter(v) => Value::Counter(v.iter().map(|c| c.get()).sum()),
+                Slot::Gauge(v) => Value::Gauge(v.iter().map(|g| g.get()).sum()),
+                Slot::Hist(v) => {
+                    let mut merged = HistSnapshot::default();
+                    for h in v {
+                        merged.merge(&h.snapshot());
+                    }
+                    Value::Hist(merged)
+                }
+            };
+            out.push(name.clone(), value);
+        }
+        out
+    }
+}
+
+/// The per-`{op, bits, w}` accuracy-tier counters (`tier.mul8.w4` …):
+/// 2 ops × 3 widths × 9 knobs = 54 counters, indexed without hashing.
+/// Registration is get-or-create, so the engine (which records) and the
+/// serve snapshot (which reads them for delivered-MRED estimates) share
+/// the same handles.
+#[derive(Clone)]
+pub struct Tiers {
+    counters: Vec<Arc<Counter>>,
+}
+
+/// Supported operand widths, in tier-index order.
+const TIER_WIDTHS: [u32; 3] = [8, 16, 32];
+/// Accuracy knobs per `{op, width}` (`w` in `0..=8`).
+const TIER_KNOBS: usize = 9;
+
+impl Tiers {
+    pub fn register(reg: &Registry) -> Tiers {
+        let mut counters = Vec::with_capacity(2 * TIER_WIDTHS.len() * TIER_KNOBS);
+        for op in ["mul", "div"] {
+            for bits in TIER_WIDTHS {
+                for w in 0..TIER_KNOBS {
+                    counters.push(reg.counter(&format!("tier.{op}{bits}.w{w}")));
+                }
+            }
+        }
+        Tiers { counters }
+    }
+
+    fn index(op: ReqOp, bits: u32, w: u32) -> Option<usize> {
+        let oi = match op {
+            ReqOp::Mul => 0,
+            ReqOp::Div => 1,
+        };
+        let bi = TIER_WIDTHS.iter().position(|&b| b == bits)?;
+        let w = w as usize;
+        if w >= TIER_KNOBS {
+            return None;
+        }
+        Some((oi * TIER_WIDTHS.len() + bi) * TIER_KNOBS + w)
+    }
+
+    /// Count `n` completed requests on tier `{op, bits, w}`; out-of-range
+    /// coordinates are ignored (they cannot come from validated traffic).
+    #[inline]
+    pub fn add(&self, op: ReqOp, bits: u32, w: u32, n: u64) {
+        if let Some(i) = Tiers::index(op, bits, w) {
+            self.counters[i].add(n);
+        }
+    }
+
+    pub fn get(&self, op: ReqOp, bits: u32, w: u32) -> u64 {
+        Tiers::index(op, bits, w).map(|i| self.counters[i].get()).unwrap_or(0)
+    }
+
+    /// Every `(op, bits, w, count)` with a non-zero count.
+    pub fn nonzero(&self) -> Vec<(ReqOp, u32, u32, u64)> {
+        let mut out = Vec::new();
+        for (oi, op) in [ReqOp::Mul, ReqOp::Div].into_iter().enumerate() {
+            for (bi, &bits) in TIER_WIDTHS.iter().enumerate() {
+                for w in 0..TIER_KNOBS {
+                    let n = self.counters[(oi * TIER_WIDTHS.len() + bi) * TIER_KNOBS + w].get();
+                    if n > 0 {
+                        out.push((op, bits, w as u32, n));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_record() {
+        let reg = Registry::new();
+        let c = reg.counter("a.count");
+        c.inc();
+        c.add(4);
+        let g = reg.gauge("a.level");
+        g.add(10);
+        g.sub(3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("a.count"), Some(5));
+        assert_eq!(snap.gauge("a.level"), Some(7));
+    }
+
+    #[test]
+    fn get_or_create_shares_one_handle() {
+        let reg = Registry::new();
+        let a = reg.counter("shared");
+        let b = reg.counter("shared");
+        a.inc();
+        b.inc();
+        assert_eq!(reg.snapshot().counter("shared"), Some(2));
+    }
+
+    #[test]
+    fn instances_merge_on_snapshot() {
+        let reg = Registry::new();
+        let h0 = reg.hist_instance("stage.x");
+        let h1 = reg.hist_instance("stage.x");
+        h0.record_ns(1_000);
+        h1.record_ns_n(1_000_000, 3);
+        let c0 = reg.counter_instance("n");
+        let c1 = reg.counter_instance("n");
+        c0.add(2);
+        c1.add(3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.hist("stage.x").unwrap().count(), 4);
+        assert_eq!(snap.counter("n"), Some(5));
+    }
+
+    #[test]
+    fn snapshot_entries_are_name_sorted() {
+        let reg = Registry::new();
+        reg.counter("z.last");
+        reg.counter("a.first");
+        reg.gauge("m.middle");
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.entries.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a.first", "m.middle", "z.last"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "another type")]
+    fn type_conflicts_are_loud() {
+        let reg = Registry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+
+    #[test]
+    fn hist_percentiles_derive_rank_from_observed_sum() {
+        let h = Hist::new();
+        for _ in 0..99 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(1_000_000);
+        let p50 = h.percentile_us(0.50);
+        let p100 = h.percentile_us(1.0);
+        assert!((1..=2).contains(&p50), "p50 = {p50}");
+        assert!((1_000..=2_100).contains(&p100), "p100 = {p100}");
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn empty_hist_is_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(0.5), 0);
+        assert_eq!(h.percentile_us(1.0), 0);
+    }
+
+    #[test]
+    fn tiers_index_and_accumulate() {
+        let reg = Registry::new();
+        let t = Tiers::register(&reg);
+        t.add(ReqOp::Mul, 8, 4, 10);
+        t.add(ReqOp::Div, 32, 8, 2);
+        t.add(ReqOp::Mul, 24, 0, 99); // unsupported width: ignored
+        assert_eq!(t.get(ReqOp::Mul, 8, 4), 10);
+        assert_eq!(t.get(ReqOp::Div, 32, 8), 2);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("tier.mul8.w4"), Some(10));
+        assert_eq!(snap.counter("tier.div32.w8"), Some(2));
+        assert_eq!(t.nonzero().len(), 2);
+        // A second registration against the same registry shares handles.
+        let t2 = Tiers::register(&reg);
+        assert_eq!(t2.get(ReqOp::Mul, 8, 4), 10);
+    }
+}

@@ -1,0 +1,359 @@
+//! Request lifecycle tracing: the [`Span`] every request carries through
+//! the serving pipeline, and the seeded-sampled bounded [`TraceRing`] of
+//! finished [`TraceEvent`]s behind `simdive trace` (DESIGN.md §12).
+//!
+//! A span is five timestamps against the process [`epoch`](super::epoch):
+//!
+//! ```text
+//! t_admit ─ admission accepted, budget route resolved (serve)
+//! t_submit ─ chunk handed to a shard channel (coordinator/engine)
+//! t_fold ─ shard pulled the chunk and folded it into SIMD words
+//! t_emit ─ the word holding this lane was released for execution
+//! t_done ─ results unpacked, response routed back
+//! ```
+//!
+//! plus `t_write` stamped by the connection writer when the response hits
+//! the socket. Stage durations are the deltas:
+//! `admit = submit−admit`, `queue = fold−submit`, `assemble = emit−fold`
+//! (residue lanes wait extra rounds here), `execute = done−emit`,
+//! `write = write−done`.
+//!
+//! Every request feeds the per-stage histograms; only a seeded 1-in-N
+//! sample (decided at admission, deterministic for a fixed seed and
+//! arrival index) is retained as a full event in the bounded ring, so
+//! trace memory is O(capacity) regardless of load.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default bounded ring capacity (events, not requests).
+pub const DEFAULT_TRACE_CAP: usize = 4096;
+
+/// Default sampling rate: one traced request in this many admissions.
+pub const DEFAULT_SAMPLE_RATE: u64 = 64;
+
+/// SplitMix64 — the same seeded mixer `faults` uses, duplicated here so
+/// `obs` stays dependency-free of the fault layer.
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Per-request lifecycle timestamps, carried alongside the request from
+/// admission to response routing. `Copy` and 5×8+4+1 bytes so threading
+/// it through the shard channels costs a move, not an allocation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    /// Whether this request was selected for the trace ring. Stage
+    /// histograms are recorded regardless.
+    pub sampled: bool,
+    /// Request shape: 0 = mul, 1 = div.
+    pub op: u8,
+    /// Operand width in bits (8/16/32).
+    pub bits: u8,
+    /// Accuracy knob `w`.
+    pub w: u8,
+    /// Executing shard index (stamped by the engine).
+    pub shard: u8,
+    pub t_admit_ns: u64,
+    pub t_submit_ns: u64,
+    pub t_fold_ns: u64,
+    pub t_emit_ns: u64,
+    pub t_done_ns: u64,
+}
+
+impl Span {
+    /// A span stamped at admission time.
+    pub fn admitted(sampled: bool, op: u8, bits: u8, w: u8) -> Span {
+        Span { sampled, op, bits, w, shard: 0, t_admit_ns: super::now_ns(), ..Span::default() }
+    }
+
+    /// The inert span used when observability is disabled: never sampled,
+    /// all timestamps zero, costs nothing to carry.
+    pub fn disabled() -> Span {
+        Span::default()
+    }
+}
+
+/// A completed, sampled request: its span plus the socket-write stamp.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub id: u64,
+    pub op: u8,
+    pub bits: u8,
+    pub w: u8,
+    pub shard: u8,
+    pub t_admit_ns: u64,
+    pub t_submit_ns: u64,
+    pub t_fold_ns: u64,
+    pub t_emit_ns: u64,
+    pub t_done_ns: u64,
+    pub t_write_ns: u64,
+}
+
+/// Stage names, in pipeline order, matching `stage.*` histogram names.
+pub const STAGE_NAMES: [&str; 5] = ["admit", "queue", "assemble", "execute", "write"];
+
+impl TraceEvent {
+    pub fn from_span(id: u64, span: &Span, t_write_ns: u64) -> TraceEvent {
+        TraceEvent {
+            id,
+            op: span.op,
+            bits: span.bits,
+            w: span.w,
+            shard: span.shard,
+            t_admit_ns: span.t_admit_ns,
+            t_submit_ns: span.t_submit_ns,
+            t_fold_ns: span.t_fold_ns,
+            t_emit_ns: span.t_emit_ns,
+            t_done_ns: span.t_done_ns,
+            t_write_ns,
+        }
+    }
+
+    /// `(start_ns, duration_ns)` per stage, in [`STAGE_NAMES`] order.
+    /// Durations saturate at zero so a racy or disabled stamp can never
+    /// produce a wrap-around duration.
+    pub fn stages(&self) -> [(u64, u64); 5] {
+        let ts = [
+            self.t_admit_ns,
+            self.t_submit_ns,
+            self.t_fold_ns,
+            self.t_emit_ns,
+            self.t_done_ns,
+            self.t_write_ns,
+        ];
+        let mut out = [(0u64, 0u64); 5];
+        for i in 0..5 {
+            out[i] = (ts[i], ts[i + 1].saturating_sub(ts[i]));
+        }
+        out
+    }
+
+    pub fn op_name(&self) -> &'static str {
+        if self.op == 0 {
+            "mul"
+        } else {
+            "div"
+        }
+    }
+
+    /// End-to-end latency (admission → socket write).
+    pub fn total_ns(&self) -> u64 {
+        self.t_write_ns.saturating_sub(self.t_admit_ns)
+    }
+}
+
+/// Seeded-sampled bounded ring of trace events. `sample()` is lock-free;
+/// `push`/`events` take a mutex, acceptable because only the sampled
+/// 1-in-N requests ever reach it.
+pub struct TraceRing {
+    cap: usize,
+    rate: u64,
+    seed: u64,
+    admissions: AtomicU64,
+    ring: Mutex<VecDeque<TraceEvent>>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize, rate: u64, seed: u64) -> Arc<TraceRing> {
+        Arc::new(TraceRing {
+            cap: cap.max(1),
+            rate: rate.max(1),
+            seed,
+            admissions: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        })
+    }
+
+    pub fn with_seed(seed: u64) -> Arc<TraceRing> {
+        TraceRing::new(DEFAULT_TRACE_CAP, DEFAULT_SAMPLE_RATE, seed)
+    }
+
+    /// Decide (at admission) whether the next request is traced. The
+    /// decision is a pure function of `(seed, arrival index)`, so a fixed
+    /// seed yields a reproducible sample regardless of thread timing.
+    #[inline]
+    pub fn sample(&self) -> bool {
+        let k = self.admissions.fetch_add(1, Ordering::Relaxed);
+        self.rate == 1 || splitmix64(self.seed ^ k) % self.rate == 0
+    }
+
+    /// Retain a finished event, evicting the oldest past capacity.
+    pub fn push(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+
+    /// Copy out the retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.ring.lock().unwrap().iter().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One JSON object per event, one event per line — grep/jq-friendly.
+pub fn render_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let [(_, admit), (_, queue), (_, assemble), (_, execute), (_, write)] = e.stages();
+        out.push_str(&format!(
+            "{{\"id\":{},\"op\":\"{}\",\"bits\":{},\"w\":{},\"shard\":{},\
+             \"t_admit_ns\":{},\"admit_ns\":{},\"queue_ns\":{},\"assemble_ns\":{},\
+             \"execute_ns\":{},\"write_ns\":{},\"total_ns\":{}}}\n",
+            e.id,
+            e.op_name(),
+            e.bits,
+            e.w,
+            e.shard,
+            e.t_admit_ns,
+            admit,
+            queue,
+            assemble,
+            execute,
+            write,
+            e.total_ns(),
+        ));
+    }
+    out
+}
+
+/// Chrome trace format (`chrome://tracing`, Perfetto): one complete-phase
+/// (`"X"`) slice per stage, `pid` = shard, `tid` = request id, µs units.
+pub fn render_chrome(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for e in events {
+        for (name, (start, dur)) in STAGE_NAMES.iter().zip(e.stages()) {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}{}w{}\",\"ph\":\"X\",\
+                 \"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{}}}",
+                name,
+                e.op_name(),
+                e.bits,
+                e.w,
+                start as f64 / 1e3,
+                dur as f64 / 1e3,
+                e.shard,
+                e.id,
+            ));
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(id: u64) -> TraceEvent {
+        TraceEvent {
+            id,
+            op: (id % 2) as u8,
+            bits: 8,
+            w: 4,
+            shard: 1,
+            t_admit_ns: 100,
+            t_submit_ns: 150,
+            t_fold_ns: 300,
+            t_emit_ns: 900,
+            t_done_ns: 1_000,
+            t_write_ns: 1_500,
+        }
+    }
+
+    #[test]
+    fn stage_durations_partition_the_span() {
+        let e = event(7);
+        let stages = e.stages();
+        let sum: u64 = stages.iter().map(|(_, d)| d).sum();
+        assert_eq!(sum, e.total_ns());
+        assert_eq!(stages[1], (150, 150), "queue = fold − submit");
+        assert_eq!(stages[4], (1_000, 500), "write = write − done");
+    }
+
+    #[test]
+    fn unstamped_spans_saturate_to_zero_durations() {
+        let e = TraceEvent { id: 1, t_admit_ns: 500, ..TraceEvent::default() };
+        for (_, d) in e.stages() {
+            assert_eq!(d, 0);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_near_rate() {
+        let a = TraceRing::new(64, 16, 0xD15C0);
+        let b = TraceRing::new(64, 16, 0xD15C0);
+        let pa: Vec<bool> = (0..4_096).map(|_| a.sample()).collect();
+        let pb: Vec<bool> = (0..4_096).map(|_| b.sample()).collect();
+        assert_eq!(pa, pb, "same seed, same arrival order, same picks");
+        let hits = pa.iter().filter(|&&s| s).count();
+        assert!((128..=512).contains(&hits), "1-in-16 of 4096 ≈ 256, got {hits}");
+        let c = TraceRing::new(64, 16, 0xBEEF);
+        let pc: Vec<bool> = (0..4_096).map(|_| c.sample()).collect();
+        assert_ne!(pa, pc, "a different seed picks a different sample");
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_newest() {
+        let ring = TraceRing::new(8, 1, 0);
+        for id in 0..20 {
+            ring.push(event(id));
+        }
+        let events = ring.events();
+        assert_eq!(events.len(), 8);
+        assert_eq!(events[0].id, 12);
+        assert_eq!(events[7].id, 19);
+    }
+
+    #[test]
+    fn rate_one_samples_everything() {
+        let ring = TraceRing::new(4, 1, 99);
+        assert!((0..100).all(|_| ring.sample()));
+    }
+
+    #[test]
+    fn jsonl_is_one_balanced_object_per_line() {
+        let out = render_jsonl(&[event(1), event(2)]);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            assert!(line.starts_with('{') && line.ends_with('}'));
+            assert_eq!(
+                line.matches('{').count(),
+                line.matches('}').count(),
+                "balanced braces in {line}"
+            );
+            assert!(line.contains("\"queue_ns\":150"));
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_balanced_and_has_five_slices_per_event() {
+        let out = render_chrome(&[event(1)]);
+        assert!(out.starts_with("{\"traceEvents\":["));
+        assert!(out.ends_with("]}"));
+        assert_eq!(out.matches("\"ph\":\"X\"").count(), 5);
+        assert_eq!(out.matches('{').count(), out.matches('}').count());
+        assert!(render_chrome(&[]).contains("[]"));
+    }
+}

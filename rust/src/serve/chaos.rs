@@ -24,6 +24,7 @@ use crate::arith::simdive::{simdive_div_w, simdive_mul_w};
 use crate::arith::W_MAX;
 use crate::coordinator::ReqOp;
 use crate::faults::{ChaosStream, FaultConfig, FaultInjector};
+use crate::obs::Snapshot;
 use crate::util::Rng;
 use std::io::{self, Read};
 use std::net::TcpStream;
@@ -91,6 +92,9 @@ pub struct ChaosReport {
     pub rps: f64,
     /// Server snapshot after the storm.
     pub server: WireStats,
+    /// The server's `STATS2` registry snapshot after the storm — includes
+    /// the `faults.*` observation counters of every injected-fault site.
+    pub stats2: Snapshot,
     /// Open connections before the storm (includes the monitor itself).
     pub baseline_connections: u64,
     /// Open connections once the post-storm drain poll converged.
@@ -286,6 +290,7 @@ pub fn run(addr: &str, cfg: &ChaosConfig) -> io::Result<ChaosReport> {
         final_connections = monitor.stats()?.connections;
     }
     let server = monitor.stats()?;
+    let stats2 = monitor.stats2()?;
 
     Ok(ChaosReport {
         requests: cfg.requests,
@@ -298,6 +303,7 @@ pub fn run(addr: &str, cfg: &ChaosConfig) -> io::Result<ChaosReport> {
         wall_s,
         rps: tally.completed as f64 / wall_s.max(1e-9),
         server,
+        stats2,
         baseline_connections,
         final_connections,
     })
@@ -333,6 +339,7 @@ mod tests {
             wall_s: 1.0,
             rps: 8.0,
             server: WireStats::default(),
+            stats2: Snapshot::default(),
             baseline_connections: 1,
             final_connections: 1,
         };

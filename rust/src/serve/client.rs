@@ -18,6 +18,7 @@
 //! and a hard deadline — safe because every SIMD-wire computation is pure.
 
 use super::wire::{self, ServerFrame, WireRequest, WireResponse, WireStats};
+use crate::obs::{Snapshot, TraceEvent};
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -340,24 +341,59 @@ impl Client {
         self.writer.flush()?;
         match wire::read_server_frame(&mut self.reader)? {
             ServerFrame::Stats(s) => Ok(s),
-            ServerFrame::Resp(r) => Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("unexpected response frame (id {}) while awaiting stats", r.id),
-            )),
             ServerFrame::Err(code) => Err(server_err(code)),
+            other => Err(unexpected_frame(&other, "legacy stats")),
+        }
+    }
+
+    /// Fetch the `STATS2` registry snapshot (wire v4): every counter,
+    /// gauge and stage/latency histogram under its dotted name. Same
+    /// no-requests-in-flight contract as [`Client::stats`].
+    pub fn stats2(&mut self) -> io::Result<Snapshot> {
+        wire::write_stats2_req(&mut self.writer)?;
+        self.writer.flush()?;
+        match wire::read_server_frame(&mut self.reader)? {
+            ServerFrame::Stats2(s) => Ok(s),
+            ServerFrame::Err(code) => Err(server_err(code)),
+            other => Err(unexpected_frame(&other, "stats2")),
+        }
+    }
+
+    /// Drain the server's sampled trace ring (wire v4), oldest event
+    /// first. Same no-requests-in-flight contract as [`Client::stats`].
+    pub fn trace_events(&mut self) -> io::Result<Vec<TraceEvent>> {
+        wire::write_trace_req(&mut self.writer)?;
+        self.writer.flush()?;
+        match wire::read_server_frame(&mut self.reader)? {
+            ServerFrame::Trace(events) => Ok(events),
+            ServerFrame::Err(code) => Err(server_err(code)),
+            other => Err(unexpected_frame(&other, "trace")),
         }
     }
 
     fn read_response(&mut self) -> io::Result<WireResponse> {
         match wire::read_server_frame(&mut self.reader)? {
             ServerFrame::Resp(r) => Ok(r),
-            ServerFrame::Stats(_) => Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                "unexpected stats frame while awaiting responses",
-            )),
             ServerFrame::Err(code) => Err(server_err(code)),
+            other => Err(unexpected_frame(&other, "responses")),
         }
     }
+}
+
+/// Protocol-confusion error: the server answered with a frame kind the
+/// client wasn't awaiting.
+fn unexpected_frame(frame: &ServerFrame, awaiting: &str) -> io::Error {
+    let kind = match frame {
+        ServerFrame::Resp(_) => "response",
+        ServerFrame::Stats(_) => "stats",
+        ServerFrame::Stats2(_) => "stats2",
+        ServerFrame::Trace(_) => "trace",
+        ServerFrame::Err(_) => "error",
+    };
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!("unexpected {kind} frame while awaiting {awaiting}"),
+    )
 }
 
 /// Human-readable error for a connection-fatal `ERR` code. Unknown codes

@@ -10,6 +10,8 @@ use super::client::Client;
 use super::wire::{WireRequest, WireStats};
 use crate::arith::W_MAX;
 use crate::coordinator::ReqOp;
+use crate::obs::trace::STAGE_NAMES;
+use crate::obs::Snapshot;
 use crate::util::Rng;
 use std::fmt::Write as _;
 use std::io;
@@ -67,6 +69,9 @@ pub struct LoadgenReport {
     pub rps: f64,
     /// Server-side snapshot taken after the run.
     pub server: WireStats,
+    /// The server's `STATS2` registry snapshot (wire v4): per-stage
+    /// histograms, per-shard gauges, per-tier counters.
+    pub stats2: Snapshot,
 }
 
 /// Generate one request deterministically from a connection's RNG.
@@ -144,8 +149,10 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> io::Result<LoadgenReport> {
         return Err(e);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    // Final server-side snapshot over a fresh connection.
-    let server = Client::connect_retry(addr, Duration::from_secs(5))?.stats()?;
+    // Final server-side snapshots over a fresh connection.
+    let mut probe = Client::connect_retry(addr, Duration::from_secs(5))?;
+    let server = probe.stats()?;
+    let stats2 = probe.stats2()?;
     Ok(LoadgenReport {
         connections,
         requests: total,
@@ -154,6 +161,7 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> io::Result<LoadgenReport> {
         wall_s,
         rps: total as f64 / wall_s,
         server,
+        stats2,
     })
 }
 
@@ -233,13 +241,55 @@ pub fn to_json_with_chaos(
         }
         chaos_section.push_str("\n  ]");
     }
+    // Observability sections (append-only additions to the v1 schema):
+    // per-stage latency breakdown and per-shard state from the server's
+    // `STATS2` snapshot. Omitted entirely when the snapshot is empty, so
+    // pre-v4 consumers and synthetic reports render unchanged.
+    let mut obs_section = String::new();
+    let snap = &report.stats2;
+    if !snap.entries.is_empty() {
+        obs_section.push_str(",\n  \"stages\": {");
+        let mut first = true;
+        for name in STAGE_NAMES {
+            if let Some(h) = snap.hist(&format!("stage.{name}")) {
+                if !first {
+                    obs_section.push_str(", ");
+                }
+                first = false;
+                write!(
+                    obs_section,
+                    "\"{name}\": {{\"count\": {}, \"p50_us\": {}, \"p99_us\": {}}}",
+                    h.count(),
+                    h.percentile_us(0.50),
+                    h.percentile_us(0.99),
+                )
+                .unwrap();
+            }
+        }
+        obs_section.push('}');
+        obs_section.push_str(",\n  \"shards\": [");
+        let mut shard = 0usize;
+        while let Some(depth) = snap.gauge(&format!("shard.{shard}.queue_depth")) {
+            if shard > 0 {
+                obs_section.push_str(", ");
+            }
+            write!(
+                obs_section,
+                "{{\"shard\": {shard}, \"queue_depth\": {depth}, \"residue_flushes\": {}}}",
+                snap.counter(&format!("shard.{shard}.residue_flushes")).unwrap_or(0),
+            )
+            .unwrap();
+            shard += 1;
+        }
+        obs_section.push(']');
+    }
     let s = &report.server;
     format!(
         "{{\n  \"schema\": \"simdive-serve-v1\",\n  \"connections\": {},\n  \"requests\": {},\n  \
          \"chunk\": {},\n  \"widths\": {widths},\n  \"wall_s\": {:.4},\n  \"rps\": {:.1},\n  \
          \"server\": {{\"requests\": {}, \"words\": {}, \"lane_utilization\": {:.4}, \
          \"energy_pj\": {:.1}, \"p50_us\": {}, \"p99_us\": {}}},\n  \
-         \"coordinator\": {{\"requests\": {coord_requests}, \"batched_rps\": {:.1}}}{chaos_section}\n}}\n",
+         \"coordinator\": {{\"requests\": {coord_requests}, \"batched_rps\": {:.1}}}{obs_section}{chaos_section}\n}}\n",
         report.connections,
         report.requests,
         report.chunk,
@@ -303,13 +353,48 @@ mod tests {
             wall_s: 0.5,
             rps: 200.0,
             server: WireStats { requests: 100, words: 30, ..WireStats::default() },
+            stats2: Snapshot::default(),
         };
         let j = to_json(&report, 40_000, 1234.5);
         assert!(j.contains("\"schema\": \"simdive-serve-v1\""));
         assert!(j.contains("\"widths\": [8, 16]"));
         assert!(j.contains("\"batched_rps\": 1234.5"));
         assert!(!j.contains("\"chaos\""), "no chaos section without a sweep");
+        assert!(!j.contains("\"stages\""), "no stage section without a stats2 snapshot");
         assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn stage_and_shard_sections_render_from_stats2() {
+        use crate::obs::{HistSnapshot, Value};
+        let mut snap = Snapshot::default();
+        let mut h = HistSnapshot::default();
+        h.buckets[10] = 50;
+        snap.push("stage.queue", Value::Hist(h));
+        snap.push("stage.execute", Value::Hist(h));
+        snap.push("shard.0.queue_depth", Value::Gauge(0));
+        snap.push("shard.0.residue_flushes", Value::Counter(7));
+        snap.push("shard.1.queue_depth", Value::Gauge(2));
+        let report = LoadgenReport {
+            connections: 1,
+            requests: 50,
+            chunk: 8,
+            widths: vec![8],
+            wall_s: 0.1,
+            rps: 500.0,
+            server: WireStats::default(),
+            stats2: snap,
+        };
+        let j = to_json(&report, 0, 0.0);
+        assert!(j.contains("\"stages\": {"));
+        assert!(j.contains("\"queue\": {\"count\": 50"));
+        assert!(j.contains("\"execute\": {\"count\": 50"));
+        assert!(!j.contains("\"admit\""), "absent stages are omitted, not zero-filled");
+        assert!(j.contains("\"shards\": ["));
+        assert!(j.contains("{\"shard\": 0, \"queue_depth\": 0, \"residue_flushes\": 7}"));
+        assert!(j.contains("{\"shard\": 1, \"queue_depth\": 2, \"residue_flushes\": 0}"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 
     #[test]
@@ -322,6 +407,7 @@ mod tests {
             wall_s: 0.1,
             rps: 100.0,
             server: WireStats::default(),
+            stats2: Snapshot::default(),
         };
         let c = crate::serve::chaos::ChaosReport {
             requests: 10,
@@ -334,6 +420,7 @@ mod tests {
             wall_s: 0.2,
             rps: 45.0,
             server: WireStats { shed_overload: 3, failed_unavailable: 1, ..WireStats::default() },
+            stats2: Snapshot::default(),
             baseline_connections: 1,
             final_connections: 1,
         };

@@ -21,6 +21,9 @@
 //!   generator.
 //! * [`stats`] — per-connection and server-wide counters with log2
 //!   latency histograms, exposed via the `STATS` wire op.
+//!   Since wire v4 the server also carries a full metrics registry and a
+//!   sampled trace ring ([`crate::obs`], DESIGN.md §12), exported over
+//!   the `STATS2`/`TRACE` ops behind `simdive stats` / `simdive trace`.
 //! * [`loadgen`] — multi-connection load generator writing
 //!   `BENCH_serve.json` (schema `simdive-serve-v1`).
 //! * [`chaos`] — the fault-injection load scenario (`loadgen --chaos`,

@@ -34,7 +34,10 @@ use super::wire::{self, ClientFrame, WireStats};
 use crate::coordinator::{
     Coordinator, CoordinatorConfig, ErrorProfile, Request, Response, Stats,
 };
-use crate::faults::{FaultConfig, FaultInjector};
+use crate::faults::{FaultConfig, FaultInjector, SITE_NAMES};
+use crate::obs::{
+    self, Counter, Hist, Registry, Snapshot, Span, Tiers, TraceEvent, TraceRing, Value,
+};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -42,6 +45,11 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Fixed seed of the server's trace-sampling ring: the 1-in-N sampling
+/// decision is a pure function of `(seed, arrival index)`, so a given
+/// arrival order traces the same requests run-to-run.
+const TRACE_SEED: u64 = 0x51D1_7E0B_5EED;
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
@@ -102,6 +110,24 @@ struct Inner {
     /// Chaos-harness injector shared with the coordinator's shard pool;
     /// `None` in production.
     injector: Option<Arc<FaultInjector>>,
+    /// The metrics registry behind `STATS2` (DESIGN.md §12). The shard
+    /// pool records its stage/tier/shard metrics into it directly.
+    registry: Arc<Registry>,
+    /// Seeded-sampled bounded ring of completed request traces.
+    ring: Arc<TraceRing>,
+    /// Serve-side stage histograms (`admit` = admission→shard-submit,
+    /// `write` = response-routed→socket-write); the engine records the
+    /// `queue`/`assemble`/`execute` stages.
+    stage_admit: Arc<Hist>,
+    stage_write: Arc<Hist>,
+    /// Budget-routing decision counters.
+    route_budget: Arc<Counter>,
+    route_fixed: Arc<Counter>,
+    /// `route.budget_w{w}`: which knob the budget router resolved to.
+    route_budget_w: Vec<Arc<Counter>>,
+    /// Per-`{op, bits, w}` tier counters — the same handles the shard
+    /// pool increments (get-or-create registration shares them).
+    tiers: Tiers,
 }
 
 impl Inner {
@@ -128,6 +154,42 @@ impl Inner {
             failed_unavailable: self.unavailable.load(Ordering::Relaxed),
         }
     }
+
+    /// Build the `STATS2` payload: the full registry snapshot plus the
+    /// serve-level counters that live outside the registry (legacy
+    /// atomics kept for `STATS` bit-compatibility), fault-injection
+    /// observation counters, and the delivered-MRED estimate.
+    fn snapshot2(&self) -> Snapshot {
+        let mut snap = self.registry.snapshot();
+        snap.push("conn.open", Value::Gauge(self.connections.load(Ordering::Relaxed) as i64));
+        snap.push("serve.requests", Value::Counter(self.global.requests()));
+        snap.push("serve.shed_overload", Value::Counter(self.shed.load(Ordering::Relaxed)));
+        snap.push(
+            "serve.failed_unavailable",
+            Value::Counter(self.unavailable.load(Ordering::Relaxed)),
+        );
+        if let Some(inj) = &self.injector {
+            for (name, n) in SITE_NAMES.iter().zip(inj.fired_counts()) {
+                snap.push(format!("faults.{name}"), Value::Counter(n));
+            }
+        }
+        // Delivered-MRED estimate: the tier-count-weighted mean of the
+        // profiled MRED of every tier actually served. Only computed when
+        // some budget-routed request already forced the profile — a stats
+        // read must never pay the multi-second profile computation itself.
+        if let Some(profile) = ErrorProfile::try_get() {
+            let (mut total, mut weighted) = (0u64, 0u128);
+            for (op, bits, w, n) in self.tiers.nonzero() {
+                total += n;
+                weighted += n as u128 * profile.mred_ppm(op, bits, w) as u128;
+            }
+            if total > 0 {
+                snap.push("delivered.mred_ppm", Value::Gauge((weighted / total as u128) as i64));
+            }
+        }
+        snap.entries.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
 }
 
 /// The serving front end. Dropping (or [`Server::shutdown`]) stops the
@@ -145,22 +207,34 @@ impl Server {
         let listener = TcpListener::bind(listen)?;
         let addr = listener.local_addr()?;
         let injector = cfg.faults.filter(|f| f.is_active()).map(FaultInjector::new);
+        let registry = Registry::new();
         let inner = Arc::new(Inner {
             cfg,
             stop: AtomicBool::new(false),
-            coordinator: Coordinator::start_with_faults(
+            coordinator: Coordinator::start_observed(
                 CoordinatorConfig {
                     workers: cfg.workers,
                     queue_depth: cfg.queue_depth,
                     batch: cfg.batch,
                 },
                 injector.clone(),
+                &registry,
             ),
             global: ServeCounters::new(),
             connections: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             unavailable: AtomicU64::new(0),
             injector,
+            ring: TraceRing::with_seed(TRACE_SEED),
+            stage_admit: registry.hist("stage.admit"),
+            stage_write: registry.hist("stage.write"),
+            route_budget: registry.counter("route.budget_requests"),
+            route_fixed: registry.counter("route.fixed_requests"),
+            route_budget_w: (0..=crate::arith::W_MAX)
+                .map(|w| registry.counter(&format!("route.budget_w{w}")))
+                .collect(),
+            tiers: Tiers::register(&registry),
+            registry,
         });
         let accept = {
             let inner = Arc::clone(&inner);
@@ -177,6 +251,16 @@ impl Server {
     /// Server-wide stats snapshot (connection-local fields are zero).
     pub fn stats(&self) -> WireStats {
         self.inner.snapshot(&ServeCounters::new())
+    }
+
+    /// The `STATS2` registry snapshot (what a v4 client receives).
+    pub fn stats2(&self) -> Snapshot {
+        self.inner.snapshot2()
+    }
+
+    /// The retained sampled trace events, oldest first.
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        self.inner.ring.events()
     }
 
     /// Currently open connections.
@@ -371,11 +455,17 @@ fn handle_conn(stream: TcpStream, inner: Arc<Inner>) -> io::Result<()> {
 
 /// Resolve a wire request's effective accuracy knob: the stated `w`, or —
 /// with an error budget on the wire — the cheapest `w` whose profiled
-/// MRED fits the budget (DESIGN.md §9).
-fn resolve_w(r: &wire::WireRequest) -> u32 {
+/// MRED fits the budget (DESIGN.md §9). Counts the routing decision.
+fn resolve_w(inner: &Inner, r: &wire::WireRequest) -> u32 {
     if r.budget_ppm > 0 {
-        ErrorProfile::get().pick_w(r.op, r.bits, r.budget_ppm)
+        let w = ErrorProfile::get().pick_w(r.op, r.bits, r.budget_ppm);
+        inner.route_budget.inc();
+        if let Some(c) = inner.route_budget_w.get(w as usize) {
+            c.inc();
+        }
+        w
     } else {
+        inner.route_fixed.inc();
         r.w
     }
 }
@@ -391,7 +481,7 @@ fn reader_loop(
 ) -> io::Result<()> {
     // Admitted requests buffered for one streaming submission; the shared
     // coordinator's assembler does the per-{bits, w} sub-queueing.
-    let mut pending: Vec<Request> = Vec::new();
+    let mut pending: Vec<(Request, Span)> = Vec::new();
     loop {
         match wire::read_client_frame(reader)? {
             ClientFrame::Eof => return Ok(()),
@@ -412,6 +502,19 @@ fn reader_loop(
                 let snap = inner.snapshot(conn_stats);
                 let mut w = writer.lock().unwrap();
                 wire::write_stats_resp(&mut *w, &snap)?;
+                w.flush()?;
+            }
+            ClientFrame::Stats2 => {
+                submit_pending(inner, &mut pending, resp_tx);
+                let snap = inner.snapshot2();
+                let mut w = writer.lock().unwrap();
+                wire::write_stats2_resp(&mut *w, &snap)?;
+                w.flush()?;
+            }
+            ClientFrame::Trace => {
+                let events = inner.ring.events();
+                let mut w = writer.lock().unwrap();
+                wire::write_trace_resp(&mut *w, &events)?;
                 w.flush()?;
             }
             ClientFrame::Requests(reqs) => {
@@ -442,14 +545,16 @@ fn reader_loop(
                     };
                     // The coordinator-side id is the window slot; the wire
                     // id is recovered from the slot table on completion.
-                    pending.push(Request {
-                        id: slot as u64,
-                        op: r.op,
-                        bits: r.bits,
-                        w: resolve_w(r),
-                        a: r.a,
-                        b: r.b,
-                    });
+                    let w = resolve_w(inner, r);
+                    let op_byte = match r.op {
+                        crate::coordinator::ReqOp::Mul => 0u8,
+                        crate::coordinator::ReqOp::Div => 1u8,
+                    };
+                    let span = Span::admitted(inner.ring.sample(), op_byte, r.bits as u8, w as u8);
+                    pending.push((
+                        Request { id: slot as u64, op: r.op, bits: r.bits, w, a: r.a, b: r.b },
+                        span,
+                    ));
                     if pending.len() >= inner.cfg.batch {
                         submit_pending(inner, &mut pending, resp_tx);
                     }
@@ -463,11 +568,11 @@ fn reader_loop(
 /// Stream the buffered admissions into the shared coordinator.
 fn submit_pending(
     inner: &Arc<Inner>,
-    pending: &mut Vec<Request>,
+    pending: &mut Vec<(Request, Span)>,
     resp_tx: &Sender<(u32, Response)>,
 ) {
     if !pending.is_empty() {
-        inner.coordinator.submit_batch_streaming(std::mem::take(pending), 0, resp_tx);
+        inner.coordinator.submit_batch_streaming_spanned(std::mem::take(pending), 0, resp_tx);
     }
 }
 
@@ -496,6 +601,19 @@ fn writer_loop(
             let (wire_id, latency_ns) = inflight.release(resp.id as u32);
             conn_stats.record(latency_ns);
             inner.global.record(latency_ns);
+            // Serve-side stage stamps: `admit` covers admission→shard
+            // submission, `write` covers response-routed→socket-write.
+            // Sampled spans become full trace events at this point — the
+            // request's last stop in the pipeline.
+            let span = resp.span;
+            if span.t_admit_ns > 0 {
+                let t_write = obs::now_ns();
+                inner.stage_admit.record_ns(span.t_submit_ns.saturating_sub(span.t_admit_ns));
+                inner.stage_write.record_ns(t_write.saturating_sub(span.t_done_ns));
+                if span.sampled {
+                    inner.ring.push(TraceEvent::from_span(wire_id, &span, t_write));
+                }
+            }
             dead = dead || closed.load(Ordering::SeqCst);
             if resp.err != 0 {
                 // Shard supervision gave this request up (double fault):

@@ -4,65 +4,51 @@
 //! completion time (admission → response write), so the percentiles
 //! include queueing under the admission window — the number a client
 //! actually experiences.
+//!
+//! The histogram itself lives in [`crate::obs::registry`]; this module
+//! keeps the serving-flavored wrappers ([`LatencyHist`], [`ServeCounters`])
+//! so the serve layer's call sites and the wire-stats assembly stay
+//! unchanged. Moving onto [`obs::Hist`](crate::obs::Hist) also fixed a
+//! snapshot race the old standalone histogram had: it kept a separate
+//! total-count atomic next to the buckets, so a percentile read racing a
+//! recorder could observe `count` ahead of the bucket it targets and walk
+//! off the end of the populated buckets, over-reporting the percentile.
+//! `obs::Hist` stores buckets only and derives the rank from the observed
+//! bucket sum of one consistent local copy.
 
+use crate::obs::Hist;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Number of log2 buckets: bucket `i` counts samples in `[2^i, 2^{i+1})`
-/// nanoseconds, with the top bucket absorbing everything ≥ 2^47 ns (~39 h).
-const BUCKETS: usize = 48;
-
-/// Lock-free latency histogram over log2-spaced nanosecond buckets.
+/// Lock-free latency histogram over log2-spaced nanosecond buckets:
+/// bucket `i` counts samples in `[2^i, 2^{i+1})` ns, with the top bucket
+/// absorbing everything ≥ 2^47 ns (~39 h).
 ///
 /// Percentiles are read as the *upper bound* of the bucket holding the
 /// requested rank — at most 2× off, which is plenty for p50/p99 serving
 /// telemetry and costs one relaxed increment per sample.
+#[derive(Default)]
 pub struct LatencyHist {
-    buckets: [AtomicU64; BUCKETS],
-    count: AtomicU64,
+    inner: Hist,
 }
 
 impl LatencyHist {
     pub fn new() -> Self {
-        LatencyHist {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            count: AtomicU64::new(0),
-        }
+        LatencyHist { inner: Hist::new() }
     }
 
     /// Record one latency sample in nanoseconds.
     pub fn record_ns(&self, ns: u64) {
-        let idx = if ns == 0 { 0 } else { (63 - ns.leading_zeros() as usize).min(BUCKETS - 1) };
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.record_ns(ns);
     }
 
     pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.inner.count()
     }
 
     /// Percentile `p` in `(0, 1]`, reported in microseconds (upper bound of
     /// the holding bucket). Returns 0 when no samples were recorded.
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let n = self.count();
-        if n == 0 {
-            return 0;
-        }
-        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= rank {
-                // Upper bound of bucket i is 2^{i+1} − 1 ns.
-                return ((1u64 << (i + 1)) - 1) / 1000;
-            }
-        }
-        ((1u64 << BUCKETS) - 1) / 1000
-    }
-}
-
-impl Default for LatencyHist {
-    fn default() -> Self {
-        Self::new()
+        self.inner.percentile_us(p)
     }
 }
 

@@ -28,21 +28,35 @@
 //! in-flight request is unaffected. `STATS_RESP` appends three counters
 //! (open connections, shed requests, unavailable-failed requests).
 //!
+//! Wire v4 (observability — DESIGN.md §12): two new request/response
+//! pairs. `STATS2` answers with a **tagged key–value** snapshot of the
+//! server's metrics registry — counters, gauges and log2 histograms under
+//! stable dotted names — so the stats surface grows by adding entries,
+//! never by re-laying-out a fixed struct. `TRACE` drains the server's
+//! sampled trace ring as fixed 60-byte lifecycle events. The legacy
+//! `STATS`/`STATS_RESP` pair is untouched and stays bit-identical to v3.
+//!
 //! | kind | dir | body |
 //! |------|-----|------|
-//! | `REQ` (0x01)        | c→s | 32 B: `id:u64, a:u64, b:u64, op:u8, bits:u8, w:u8, flags:u8, budget_ppm:u32` |
-//! | `BATCH` (0x02)      | c→s | `count:u16` then `count` request bodies |
-//! | `STATS` (0x03)      | c→s | empty |
-//! | `RESP` (0x81)       | s→c | 16 B: `id:u64, value:u64` |
-//! | `STATS_RESP` (0x82) | s→c | 104 B: thirteen `u64` counters ([`WireStats`]) |
-//! | `RESP_ERR` (0x83)   | s→c | 9 B: `id:u64, code:u8` — per-request failure, connection stays open |
-//! | `ERR` (0xEE)        | s→c | 1 B error code, then the server closes |
+//! | `REQ` (0x01)         | c→s | 32 B: `id:u64, a:u64, b:u64, op:u8, bits:u8, w:u8, flags:u8, budget_ppm:u32` |
+//! | `BATCH` (0x02)       | c→s | `count:u16` then `count` request bodies |
+//! | `STATS` (0x03)       | c→s | empty |
+//! | `STATS2` (0x04)      | c→s | empty (wire v4) |
+//! | `TRACE` (0x05)       | c→s | empty (wire v4) |
+//! | `RESP` (0x81)        | s→c | 16 B: `id:u64, value:u64` |
+//! | `STATS_RESP` (0x82)  | s→c | 104 B: thirteen `u64` counters ([`WireStats`]) |
+//! | `RESP_ERR` (0x83)    | s→c | 9 B: `id:u64, code:u8` — per-request failure, connection stays open |
+//! | `STATS2_RESP` (0x84) | s→c | `count:u32` then `count` × (`key_len:u16, key, tag:u8, value`) — tag 0 counter `u64`, 1 gauge `i64`, 2 histogram (`nbuckets:u8` then `nbuckets` × `u64`) |
+//! | `TRACE_RESP` (0x85)  | s→c | `count:u32` then `count` × 60 B events (`id:u64, op:u8, bits:u8, w:u8, shard:u8`, six `u64` timestamps) |
+//! | `ERR` (0xEE)         | s→c | 1 B error code, then the server closes |
 //!
 //! Responses arrive **out of order** (as SIMD lanes complete); the `id` is
 //! the correlation key and is echoed verbatim.
 
 use crate::arith::W_MAX;
 use crate::coordinator::ReqOp;
+use crate::obs::registry::HIST_BUCKETS;
+use crate::obs::{HistSnapshot, Snapshot, TraceEvent, Value};
 use std::io::{self, Read, Write};
 
 /// Connection magic, first bytes on the wire in both directions.
@@ -50,19 +64,28 @@ pub const MAGIC: [u8; 4] = *b"SDIV";
 
 /// Protocol version carried in the hello. v2 widened the request body by
 /// an appended `budget_ppm:u32` and defined [`FLAG_BUDGET`]; v3 added the
-/// per-request `RESP_ERR` frame and three appended stats counters.
-pub const VERSION: u16 = 3;
+/// per-request `RESP_ERR` frame and three appended stats counters; v4
+/// added the `STATS2` tagged key–value snapshot and `TRACE` frames.
+pub const VERSION: u16 = 4;
 
 /// Frame kinds (client → server).
 pub const FRAME_REQ: u8 = 0x01;
 pub const FRAME_BATCH: u8 = 0x02;
 pub const FRAME_STATS: u8 = 0x03;
+/// Registry snapshot request (wire v4); empty body.
+pub const FRAME_STATS2: u8 = 0x04;
+/// Trace-ring drain request (wire v4); empty body.
+pub const FRAME_TRACE: u8 = 0x05;
 
 /// Frame kinds (server → client).
 pub const FRAME_RESP: u8 = 0x81;
 pub const FRAME_STATS_RESP: u8 = 0x82;
 /// Per-request failure (wire v3); unlike `ERR` the connection stays open.
 pub const FRAME_RESP_ERR: u8 = 0x83;
+/// Tagged key–value registry snapshot (wire v4).
+pub const FRAME_STATS2_RESP: u8 = 0x84;
+/// Sampled lifecycle trace events (wire v4).
+pub const FRAME_TRACE_RESP: u8 = 0x85;
 pub const FRAME_ERR: u8 = 0xEE;
 
 /// Error codes carried by an `ERR` frame (connection-fatal) or a
@@ -96,6 +119,18 @@ pub const RESP_ERR_BODY_LEN: usize = 9;
 
 /// Maximum request bodies in one `BATCH` frame (`count` is a `u16`).
 pub const MAX_BATCH: usize = u16::MAX as usize;
+
+/// Decode caps for the variable-length v4 frames: a corrupted or hostile
+/// length prefix must never drive an unbounded allocation. Far above any
+/// real snapshot (the registry carries ~100 names) or trace ring.
+pub const MAX_STATS2_ENTRIES: usize = 4096;
+/// Longest metric name accepted on the wire.
+pub const MAX_STATS2_KEY_LEN: usize = 256;
+/// Fixed encoded size of one trace event: `id:u64` + four shape bytes +
+/// six `u64` timestamps.
+pub const TRACE_EVENT_LEN: usize = 60;
+/// Maximum events in one `TRACE_RESP` frame.
+pub const MAX_TRACE_EVENTS: usize = 65_536;
 
 /// One request as it travels on the wire: the coordinator request fields
 /// plus the per-request accuracy knob `w`.
@@ -347,6 +382,161 @@ pub fn write_stats_resp<W: Write>(w: &mut W, s: &WireStats) -> io::Result<()> {
     Ok(())
 }
 
+/// Write a `STATS2` request frame (wire v4).
+pub fn write_stats2_req<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(&[FRAME_STATS2])
+}
+
+/// Write a `TRACE` request frame (wire v4).
+pub fn write_trace_req<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(&[FRAME_TRACE])
+}
+
+/// Value type tags in a `STATS2_RESP` entry.
+const TAG_COUNTER: u8 = 0;
+const TAG_GAUGE: u8 = 1;
+const TAG_HIST: u8 = 2;
+
+/// Write a `STATS2_RESP` frame: the registry snapshot as tagged
+/// key–value entries (wire v4). Entries past [`MAX_STATS2_ENTRIES`] are
+/// dropped (never reached by the real registry).
+pub fn write_stats2_resp<W: Write>(w: &mut W, snap: &Snapshot) -> io::Result<()> {
+    let n = snap.entries.len().min(MAX_STATS2_ENTRIES);
+    let mut buf = Vec::with_capacity(8 + n * 32);
+    buf.push(FRAME_STATS2_RESP);
+    buf.extend_from_slice(&(n as u32).to_le_bytes());
+    for (name, value) in snap.entries.iter().take(n) {
+        let key = name.as_bytes();
+        assert!(
+            !key.is_empty() && key.len() <= MAX_STATS2_KEY_LEN,
+            "metric name '{name}' violates the wire key bounds"
+        );
+        buf.extend_from_slice(&(key.len() as u16).to_le_bytes());
+        buf.extend_from_slice(key);
+        match value {
+            Value::Counter(v) => {
+                buf.push(TAG_COUNTER);
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            Value::Gauge(v) => {
+                buf.push(TAG_GAUGE);
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            Value::Hist(h) => {
+                buf.push(TAG_HIST);
+                buf.push(HIST_BUCKETS as u8);
+                for b in h.buckets {
+                    buf.extend_from_slice(&b.to_le_bytes());
+                }
+            }
+        }
+    }
+    w.write_all(&buf)
+}
+
+/// Write a `TRACE_RESP` frame (wire v4). Events past [`MAX_TRACE_EVENTS`]
+/// are dropped (the server's ring is far smaller).
+pub fn write_trace_resp<W: Write>(w: &mut W, events: &[TraceEvent]) -> io::Result<()> {
+    let n = events.len().min(MAX_TRACE_EVENTS);
+    let mut buf = Vec::with_capacity(8 + n * TRACE_EVENT_LEN);
+    buf.push(FRAME_TRACE_RESP);
+    buf.extend_from_slice(&(n as u32).to_le_bytes());
+    for e in &events[..n] {
+        buf.extend_from_slice(&e.id.to_le_bytes());
+        buf.extend_from_slice(&[e.op, e.bits, e.w, e.shard]);
+        for t in [e.t_admit_ns, e.t_submit_ns, e.t_fold_ns, e.t_emit_ns, e.t_done_ns, e.t_write_ns]
+        {
+            buf.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    w.write_all(&buf)
+}
+
+fn bad_data(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Decode a `STATS2_RESP` body. Every length prefix is validated against
+/// its cap before allocation; unknown tags are errors (a v4 client never
+/// sees them from a v4 server — silent skipping would hide corruption).
+fn read_stats2_body<R: Read>(r: &mut R) -> io::Result<Snapshot> {
+    let mut cnt = [0u8; 4];
+    r.read_exact(&mut cnt)?;
+    let count = u32::from_le_bytes(cnt) as usize;
+    if count > MAX_STATS2_ENTRIES {
+        return Err(bad_data(format!("STATS2 entry count {count} exceeds cap")));
+    }
+    let mut snap = Snapshot::default();
+    for _ in 0..count {
+        let mut kl = [0u8; 2];
+        r.read_exact(&mut kl)?;
+        let key_len = u16::from_le_bytes(kl) as usize;
+        if key_len == 0 || key_len > MAX_STATS2_KEY_LEN {
+            return Err(bad_data(format!("STATS2 key length {key_len} out of bounds")));
+        }
+        let mut key = vec![0u8; key_len];
+        r.read_exact(&mut key)?;
+        let name = String::from_utf8(key).map_err(|_| bad_data("STATS2 key is not valid UTF-8"))?;
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        let value = match tag[0] {
+            TAG_COUNTER => Value::Counter(read_u64(r)?),
+            TAG_GAUGE => Value::Gauge(read_u64(r)? as i64),
+            TAG_HIST => {
+                let mut nb = [0u8; 1];
+                r.read_exact(&mut nb)?;
+                let n = nb[0] as usize;
+                if n > HIST_BUCKETS {
+                    return Err(bad_data(format!("STATS2 histogram has {n} buckets")));
+                }
+                let mut h = HistSnapshot::default();
+                for b in h.buckets.iter_mut().take(n) {
+                    *b = read_u64(r)?;
+                }
+                Value::Hist(h)
+            }
+            other => return Err(bad_data(format!("unknown STATS2 value tag {other}"))),
+        };
+        snap.push(name, value);
+    }
+    Ok(snap)
+}
+
+/// Decode a `TRACE_RESP` body.
+fn read_trace_body<R: Read>(r: &mut R) -> io::Result<Vec<TraceEvent>> {
+    let mut cnt = [0u8; 4];
+    r.read_exact(&mut cnt)?;
+    let count = u32::from_le_bytes(cnt) as usize;
+    if count > MAX_TRACE_EVENTS {
+        return Err(bad_data(format!("TRACE event count {count} exceeds cap")));
+    }
+    let mut events = Vec::with_capacity(count.min(4096));
+    let mut body = [0u8; TRACE_EVENT_LEN];
+    for _ in 0..count {
+        r.read_exact(&mut body)?;
+        events.push(TraceEvent {
+            id: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+            op: body[8],
+            bits: body[9],
+            w: body[10],
+            shard: body[11],
+            t_admit_ns: u64::from_le_bytes(body[12..20].try_into().unwrap()),
+            t_submit_ns: u64::from_le_bytes(body[20..28].try_into().unwrap()),
+            t_fold_ns: u64::from_le_bytes(body[28..36].try_into().unwrap()),
+            t_emit_ns: u64::from_le_bytes(body[36..44].try_into().unwrap()),
+            t_done_ns: u64::from_le_bytes(body[44..52].try_into().unwrap()),
+            t_write_ns: u64::from_le_bytes(body[52..60].try_into().unwrap()),
+        });
+    }
+    Ok(events)
+}
+
 /// Write an error frame (the server closes the connection after this).
 pub fn write_err<W: Write>(w: &mut W, code: u8) -> io::Result<()> {
     w.write_all(&[FRAME_ERR, code])
@@ -358,6 +548,10 @@ pub enum ClientFrame {
     /// One `REQ` or the contents of one `BATCH`.
     Requests(Vec<WireRequest>),
     Stats,
+    /// Registry snapshot request (wire v4).
+    Stats2,
+    /// Trace-ring drain request (wire v4).
+    Trace,
     /// Clean end of stream (the client closed the connection).
     Eof,
     /// Protocol violation; the payload is the `ERR_*` code to answer with.
@@ -399,6 +593,8 @@ pub fn read_client_frame<R: Read>(r: &mut R) -> io::Result<ClientFrame> {
             Ok(ClientFrame::Requests(reqs))
         }
         FRAME_STATS => Ok(ClientFrame::Stats),
+        FRAME_STATS2 => Ok(ClientFrame::Stats2),
+        FRAME_TRACE => Ok(ClientFrame::Trace),
         _ => Ok(ClientFrame::Bad(ERR_BAD_FRAME)),
     }
 }
@@ -408,6 +604,10 @@ pub fn read_client_frame<R: Read>(r: &mut R) -> io::Result<ClientFrame> {
 pub enum ServerFrame {
     Resp(WireResponse),
     Stats(WireStats),
+    /// Registry snapshot (wire v4).
+    Stats2(Snapshot),
+    /// Sampled lifecycle trace events (wire v4).
+    Trace(Vec<TraceEvent>),
     /// Server-reported protocol error code; the connection is closing.
     Err(u8),
 }
@@ -451,6 +651,8 @@ pub fn read_server_frame<R: Read>(r: &mut R) -> io::Result<ServerFrame> {
             }
             Ok(ServerFrame::Stats(WireStats::from_fields(fields)))
         }
+        FRAME_STATS2_RESP => Ok(ServerFrame::Stats2(read_stats2_body(r)?)),
+        FRAME_TRACE_RESP => Ok(ServerFrame::Trace(read_trace_body(r)?)),
         FRAME_ERR => {
             let mut code = [0u8; 1];
             r.read_exact(&mut code)?;
@@ -638,6 +840,103 @@ mod tests {
         buf.push(0);
         let e = read_server_frame(&mut Cursor::new(&buf)).unwrap_err();
         assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn stats2_roundtrip_preserves_every_value_kind() {
+        let mut snap = Snapshot::default();
+        snap.push("engine.requests", Value::Counter(12_345));
+        snap.push("shard.0.queue_depth", Value::Gauge(-3));
+        let mut h = HistSnapshot::default();
+        h.buckets[10] = 99;
+        h.buckets[20] = 1;
+        snap.push("stage.execute", Value::Hist(h));
+        let mut buf = Vec::new();
+        write_stats2_resp(&mut buf, &snap).unwrap();
+        match read_server_frame(&mut Cursor::new(&buf)).unwrap() {
+            ServerFrame::Stats2(got) => {
+                assert_eq!(got, snap);
+                assert_eq!(got.counter("engine.requests"), Some(12_345));
+                assert_eq!(got.gauge("shard.0.queue_depth"), Some(-3));
+                assert_eq!(got.hist("stage.execute").unwrap().count(), 100);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats2_and_trace_requests_decode() {
+        let mut buf = Vec::new();
+        write_stats2_req(&mut buf).unwrap();
+        write_trace_req(&mut buf).unwrap();
+        let mut cur = Cursor::new(&buf);
+        assert!(matches!(read_client_frame(&mut cur).unwrap(), ClientFrame::Stats2));
+        assert!(matches!(read_client_frame(&mut cur).unwrap(), ClientFrame::Trace));
+    }
+
+    #[test]
+    fn trace_roundtrip_is_byte_exact() {
+        let events: Vec<TraceEvent> = (0..5)
+            .map(|i| TraceEvent {
+                id: i,
+                op: (i % 2) as u8,
+                bits: 16,
+                w: 3,
+                shard: (i % 4) as u8,
+                t_admit_ns: 100 * i,
+                t_submit_ns: 100 * i + 10,
+                t_fold_ns: 100 * i + 20,
+                t_emit_ns: 100 * i + 40,
+                t_done_ns: 100 * i + 70,
+                t_write_ns: 100 * i + 90,
+            })
+            .collect();
+        let mut buf = Vec::new();
+        write_trace_resp(&mut buf, &events).unwrap();
+        assert_eq!(buf.len(), 5 + events.len() * TRACE_EVENT_LEN);
+        match read_server_frame(&mut Cursor::new(&buf)).unwrap() {
+            ServerFrame::Trace(got) => assert_eq!(got, events),
+            other => panic!("unexpected frame {other:?}"),
+        }
+        // An empty ring round-trips too.
+        let mut empty = Vec::new();
+        write_trace_resp(&mut empty, &[]).unwrap();
+        match read_server_frame(&mut Cursor::new(&empty)).unwrap() {
+            ServerFrame::Trace(got) => assert!(got.is_empty()),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats2_decoder_rejects_hostile_lengths() {
+        // Entry count beyond the cap: rejected before any allocation.
+        let mut buf = vec![FRAME_STATS2_RESP];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_server_frame(&mut Cursor::new(&buf)).is_err());
+        // Zero-length key.
+        let mut buf = vec![FRAME_STATS2_RESP];
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        assert!(read_server_frame(&mut Cursor::new(&buf)).is_err());
+        // Unknown value tag.
+        let mut buf = vec![FRAME_STATS2_RESP];
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.push(9); // tag
+        assert!(read_server_frame(&mut Cursor::new(&buf)).is_err());
+        // Histogram with too many buckets.
+        let mut buf = vec![FRAME_STATS2_RESP];
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.push(2); // TAG_HIST
+        buf.push((HIST_BUCKETS + 1) as u8);
+        assert!(read_server_frame(&mut Cursor::new(&buf)).is_err());
+        // Trace count beyond the cap.
+        let mut buf = vec![FRAME_TRACE_RESP];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_server_frame(&mut Cursor::new(&buf)).is_err());
     }
 
     #[test]

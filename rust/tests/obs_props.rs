@@ -1,0 +1,198 @@
+//! Property tests for the observability layer (DESIGN.md §12): log2
+//! histogram percentile invariants over randomized sample sets, the
+//! snapshot-vs-writer race the bucket-sum rank derivation fixes,
+//! registry instance merging, and trace-ring sampling determinism.
+
+use simdive::obs::registry::{bucket_of, HIST_BUCKETS};
+use simdive::obs::{Hist, HistSnapshot, Registry, TraceRing, Value};
+use simdive::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Random sample set spanning ns..ms magnitudes (log-uniform-ish: a
+/// random bit width, then a random value at that width).
+fn random_samples(rng: &mut Rng, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| {
+            let width = 1 + rng.below(40);
+            rng.below(1u64 << width)
+        })
+        .collect()
+}
+
+#[test]
+fn percentiles_are_monotone_in_p() {
+    let mut rng = Rng::new(0x0B5_0001);
+    for case in 0..50 {
+        let h = Hist::new();
+        for s in random_samples(&mut rng, 1 + case * 7) {
+            h.record_ns(s);
+        }
+        let ps = [0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999, 1.0];
+        for pair in ps.windows(2) {
+            let (lo, hi) = (h.percentile_us(pair[0]), h.percentile_us(pair[1]));
+            assert!(lo <= hi, "case {case}: p{} = {lo} > p{} = {hi}", pair[0], pair[1]);
+        }
+    }
+}
+
+#[test]
+fn percentile_is_bounded_by_twice_the_true_max() {
+    let mut rng = Rng::new(0x0B5_0002);
+    for case in 0..50 {
+        let samples = random_samples(&mut rng, 1 + case * 11);
+        let max_ns = *samples.iter().max().unwrap();
+        let h = Hist::new();
+        for &s in &samples {
+            h.record_ns(s);
+        }
+        for p in [0.5, 0.99, 1.0] {
+            let reported_us = h.percentile_us(p);
+            // Bucket upper bound is 2^{i+1} − 1 < 2 × sample, and floor
+            // division to µs preserves ≤.
+            assert!(
+                reported_us <= (2 * max_ns) / 1000,
+                "case {case}: p{p} reported {reported_us} µs, true max {max_ns} ns"
+            );
+        }
+    }
+}
+
+#[test]
+fn p100_lands_in_the_max_samples_bucket() {
+    let mut rng = Rng::new(0x0B5_0003);
+    for case in 0..50 {
+        let samples = random_samples(&mut rng, 1 + case * 5);
+        let max_ns = *samples.iter().max().unwrap();
+        let h = Hist::new();
+        for &s in &samples {
+            h.record_ns(s);
+        }
+        let i = bucket_of(max_ns);
+        let bucket_upper_us = ((1u64 << (i + 1)) - 1) / 1000;
+        assert_eq!(
+            h.percentile_us(1.0),
+            bucket_upper_us,
+            "case {case}: p100 must report the max sample's bucket (max {max_ns} ns, bucket {i})"
+        );
+    }
+}
+
+#[test]
+fn empty_hist_reports_zero_everywhere() {
+    let h = Hist::new();
+    assert_eq!(h.count(), 0);
+    for p in [0.01, 0.5, 1.0] {
+        assert_eq!(h.percentile_us(p), 0);
+    }
+}
+
+/// The race the bucket-sum rank derivation fixes: percentile reads
+/// concurrent with relaxed-atomic writers must never hit the
+/// `unreachable!` (a rank beyond the observed sum) and never panic. With
+/// a separately-maintained total count, a reader could observe the count
+/// increment before the bucket increment and walk off the end.
+#[test]
+fn percentile_never_panics_under_concurrent_writers() {
+    let h = Arc::new(Hist::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (0..4u64)
+        .map(|t| {
+            let h = Arc::clone(&h);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0x0B5_1000 + t);
+                while !stop.load(Ordering::Relaxed) {
+                    h.record_ns(rng.below(1u64 << 30));
+                }
+            })
+        })
+        .collect();
+    for _ in 0..20_000 {
+        let snap = h.snapshot();
+        let p100 = snap.percentile_us(1.0);
+        assert!(p100 >= snap.percentile_us(0.5));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for w in writers {
+        w.join().unwrap();
+    }
+    assert!(h.count() > 0);
+}
+
+#[test]
+fn snapshot_merge_is_bucketwise_and_percentile_agrees_with_pooled() {
+    let mut rng = Rng::new(0x0B5_0004);
+    let (a, b) = (Hist::new(), Hist::new());
+    let pooled = Hist::new();
+    for _ in 0..500 {
+        let s = rng.below(1u64 << 34);
+        if rng.below(2) == 0 {
+            a.record_ns(s);
+        } else {
+            b.record_ns(s);
+        }
+        pooled.record_ns(s);
+    }
+    let mut merged = a.snapshot();
+    merged.merge(&b.snapshot());
+    assert_eq!(merged, pooled.snapshot());
+    assert_eq!(merged.count(), 500);
+    for p in [0.5, 0.99, 1.0] {
+        assert_eq!(merged.percentile_us(p), pooled.percentile_us(p));
+    }
+}
+
+#[test]
+fn registry_merges_instances_and_sorts_entries() {
+    let reg = Registry::new();
+    // Two per-shard counter instances plus the shared get-or-create
+    // handle; the snapshot must report one summed entry.
+    let c0 = reg.counter_instance("pool.requests");
+    let c1 = reg.counter_instance("pool.requests");
+    c0.add(7);
+    c1.add(5);
+    let h0 = reg.hist_instance("pool.stage");
+    let h1 = reg.hist_instance("pool.stage");
+    h0.record_ns(10);
+    h1.record_ns(1 << 20);
+    reg.gauge("a.depth").set(3);
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter("pool.requests"), Some(12));
+    assert_eq!(snap.gauge("a.depth"), Some(3));
+    let merged = snap.hist("pool.stage").expect("hist entry");
+    assert_eq!(merged.count(), 2);
+    assert_eq!(merged.buckets[bucket_of(10)], 1);
+    assert_eq!(merged.buckets[bucket_of(1 << 20)], 1);
+    let names: Vec<&str> = snap.entries.iter().map(|(n, _)| n.as_str()).collect();
+    let mut sorted = names.clone();
+    sorted.sort();
+    assert_eq!(names, sorted, "snapshot entries must be name-sorted");
+}
+
+#[test]
+fn histsnapshot_value_roundtrips_through_snapshot_accessors() {
+    let mut snap = simdive::obs::Snapshot::default();
+    let mut h = HistSnapshot::default();
+    h.buckets[HIST_BUCKETS - 1] = 3;
+    snap.push("x.hist", Value::Hist(h));
+    snap.push("x.counter", Value::Counter(9));
+    assert_eq!(snap.hist("x.hist").unwrap().count(), 3);
+    assert_eq!(snap.counter("x.hist"), None, "type-mismatched accessor must return None");
+    assert_eq!(snap.counter("x.counter"), Some(9));
+}
+
+#[test]
+fn trace_ring_sampling_is_seed_deterministic() {
+    let a = TraceRing::new(64, 16, 0xDECADE);
+    let b = TraceRing::new(64, 16, 0xDECADE);
+    let c = TraceRing::new(64, 16, 0xDECADE + 1);
+    let decisions_a: Vec<bool> = (0..4096).map(|_| a.sample()).collect();
+    let decisions_b: Vec<bool> = (0..4096).map(|_| b.sample()).collect();
+    let decisions_c: Vec<bool> = (0..4096).map(|_| c.sample()).collect();
+    assert_eq!(decisions_a, decisions_b, "same seed must sample identically");
+    assert_ne!(decisions_a, decisions_c, "different seed must diverge");
+    let hits = decisions_a.iter().filter(|&&s| s).count();
+    // 1-in-16 seeded sampling over 4096 admissions: loosely around 256.
+    assert!((64..=1024).contains(&hits), "sampling rate wildly off: {hits}/4096");
+}

@@ -254,6 +254,67 @@ fn loadgen_loopback_reports_and_renders_json() {
 }
 
 #[test]
+fn stats2_reports_stages_shards_and_tiers_on_a_loaded_server() {
+    use simdive::obs::trace::STAGE_NAMES;
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap().with_chunk(256);
+    let mut rng = Rng::new(0x57A7_5200);
+    let n = 8_000u64;
+    let reqs: Vec<WireRequest> = (0..n).map(|i| random_request(&mut rng, i)).collect();
+    let resps = client.exchange(&reqs).unwrap();
+    assert_eq!(resps.len(), reqs.len());
+    for (req, resp) in reqs.iter().zip(&resps) {
+        assert_eq!(resp.value, expect_one(req));
+    }
+
+    let snap = client.stats2().unwrap();
+    // Every lifecycle stage must have recorded samples: admit/write on the
+    // serve side, queue/assemble/execute merged across shard instances.
+    for stage in STAGE_NAMES {
+        let h = snap
+            .hist(&format!("stage.{stage}"))
+            .unwrap_or_else(|| panic!("stage.{stage} histogram missing"));
+        assert!(h.count() > 0, "stage.{stage} recorded nothing under load");
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.99), "stage.{stage} not monotone");
+    }
+    // Per-shard gauges and counters exist for shard 0 (and whatever other
+    // shards the default config spawned).
+    assert!(snap.gauge("shard.0.queue_depth").is_some(), "shard 0 queue-depth gauge missing");
+    assert!(snap.counter("shard.0.residue_flushes").is_some(), "shard 0 residue counter missing");
+    // Tier accounting is exact: every request occupies exactly one lane,
+    // and the per-lane tier add happens before the response is routed, so
+    // with all n responses in hand the tier counters must sum to n.
+    let tier_sum: u64 = snap
+        .entries
+        .iter()
+        .filter(|(name, _)| name.starts_with("tier."))
+        .filter_map(|(name, _)| snap.counter(name))
+        .sum();
+    assert_eq!(tier_sum, n, "tier counters must account for every request lane");
+    // All requests here carry a fixed w (budget_ppm = 0), and the engine
+    // saw exactly n requests.
+    assert_eq!(snap.counter("route.fixed_requests"), Some(n));
+    assert_eq!(snap.counter("route.budget_requests"), Some(0));
+    assert_eq!(snap.counter("engine.requests"), Some(n));
+    assert_eq!(snap.counter("serve.requests"), Some(n));
+
+    // The seeded 1-in-64 sampler must have captured traces, and every
+    // span's timestamps must be monotone through the pipeline.
+    let events = client.trace_events().unwrap();
+    assert!(!events.is_empty(), "no sampled trace events after {n} requests");
+    for e in &events {
+        assert!(e.t_admit_ns > 0, "trace event missing admission stamp");
+        assert!(e.t_admit_ns <= e.t_submit_ns, "admit after submit: {e:?}");
+        assert!(e.t_submit_ns <= e.t_fold_ns, "submit after fold: {e:?}");
+        assert!(e.t_fold_ns <= e.t_emit_ns, "fold after emit: {e:?}");
+        assert!(e.t_emit_ns <= e.t_done_ns, "emit after done: {e:?}");
+        assert!(e.t_done_ns <= e.t_write_ns, "done after write: {e:?}");
+        assert!(matches!(e.bits, 8 | 16 | 32), "trace event bits {}", e.bits);
+    }
+    server.shutdown();
+}
+
+#[test]
 fn bad_frame_answered_with_err_and_close() {
     let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
     let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();

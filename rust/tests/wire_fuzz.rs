@@ -62,7 +62,8 @@ fn check_mutated_client_bytes(buf: &[u8]) {
                 "unknown error code {code}"
             );
         }
-        Ok(ClientFrame::Stats) | Ok(ClientFrame::Eof) => {}
+        Ok(ClientFrame::Stats) | Ok(ClientFrame::Stats2) | Ok(ClientFrame::Trace)
+        | Ok(ClientFrame::Eof) => {}
         Err(_) => {} // truncated/garbled I/O surfaces as a clean error
     }
 }
@@ -123,7 +124,10 @@ fn truncated_frames_are_clean_errors() {
                     }
                 }
                 Ok(ClientFrame::Eof) => break,
-                Ok(ClientFrame::Stats) | Ok(ClientFrame::Bad(_)) => {}
+                Ok(ClientFrame::Stats)
+                | Ok(ClientFrame::Stats2)
+                | Ok(ClientFrame::Trace)
+                | Ok(ClientFrame::Bad(_)) => {}
                 Err(e) => {
                     assert_eq!(
                         e.kind(),
@@ -404,12 +408,142 @@ fn corruption_schedules_decode_cleanly_or_reject() {
                     }
                 }
                 Ok(ClientFrame::Eof) => break,
-                Ok(ClientFrame::Stats) | Ok(ClientFrame::Bad(_)) => {}
+                Ok(ClientFrame::Stats)
+                | Ok(ClientFrame::Stats2)
+                | Ok(ClientFrame::Trace)
+                | Ok(ClientFrame::Bad(_)) => {}
                 Err(_) => break, // desynced mid-frame: a clean error
             }
         }
         if ppm == 1_000_000 {
             assert!(chaotic.corruptions() > 0, "full-rate corruption must fire");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-compat regression pins (v4): the bytes every earlier version put on
+// the wire must be reproduced exactly — the new STATS2/TRACE ops are pure
+// additions, never a re-encoding of what v1–v3 peers already speak.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hello_bytes_are_pinned_and_every_version_decodes() {
+    // The 8-byte hello has been `[S, D, I, V, ver:u16 LE, 0, 0]` since v1.
+    let mut buf = Vec::new();
+    wire::write_hello(&mut buf).unwrap();
+    assert_eq!(wire::VERSION, 4, "bump this pin alongside the version");
+    assert_eq!(buf, [b'S', b'D', b'I', b'V', 4, 0, 0, 0], "v4 hello bytes moved");
+    // Decoding stays version-agnostic: hellos from every historical
+    // version parse to that version number (rejection is server policy,
+    // not a parse failure — a cross-version client must be able to read
+    // which version the server speaks).
+    for ver in 1u16..=4 {
+        let h = [b'S', b'D', b'I', b'V', ver as u8, 0, 0, 0];
+        assert_eq!(wire::read_hello(&mut Cursor::new(&h)).unwrap(), ver, "hello v{ver}");
+    }
+}
+
+#[test]
+fn legacy_stats_resp_bytes_are_pinned_after_v4() {
+    // The v1 STATS_RESP: kind byte 0x82 + thirteen u64 LE fields in
+    // declaration order — 105 bytes, byte-identical under v4.
+    let stats = WireStats {
+        requests: 0x0102_0304_0506_0708,
+        words: 2,
+        active_lanes: 3,
+        total_lanes: 4,
+        energy_mpj: 5,
+        p50_us: 6,
+        p99_us: 7,
+        conn_requests: 8,
+        conn_p50_us: 9,
+        conn_p99_us: 10,
+        connections: 11,
+        shed_overload: 12,
+        failed_unavailable: 13,
+    };
+    let mut buf = Vec::new();
+    wire::write_stats_resp(&mut buf, &stats).unwrap();
+    let mut want = vec![0x82u8];
+    for v in [0x0102_0304_0506_0708u64, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13] {
+        want.extend_from_slice(&v.to_le_bytes());
+    }
+    assert_eq!(buf.len(), 105, "legacy STATS_RESP frame length moved");
+    assert_eq!(buf, want, "legacy STATS_RESP encoding moved");
+    match wire::read_server_frame(&mut Cursor::new(&buf)).unwrap() {
+        ServerFrame::Stats(s) => assert_eq!(s, stats),
+        other => panic!("unexpected frame {other:?}"),
+    }
+}
+
+#[test]
+fn stats2_and_trace_request_frames_are_single_pinned_bytes() {
+    let mut s2 = Vec::new();
+    wire::write_stats2_req(&mut s2).unwrap();
+    assert_eq!(s2, [0x04], "STATS2 request byte moved");
+    let mut tr = Vec::new();
+    wire::write_trace_req(&mut tr).unwrap();
+    assert_eq!(tr, [0x05], "TRACE request byte moved");
+    // And the legacy client kinds keep their v1 bytes.
+    let mut st = Vec::new();
+    wire::write_stats_req(&mut st).unwrap();
+    assert_eq!(st, [0x03], "STATS request byte moved");
+}
+
+#[test]
+fn server_rejects_pre_v4_hellos_with_bad_version_and_closes() {
+    use std::io::{Read, Write};
+    for ver in 1u16..=3 {
+        let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+        let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+        let mut hello = [0u8; 8];
+        hello[0..4].copy_from_slice(b"SDIV");
+        hello[4..6].copy_from_slice(&ver.to_le_bytes());
+        stream.write_all(&hello).unwrap();
+        // The server answers with its own hello (so the old client can
+        // see which version it speaks), then ERR_BAD_VERSION, then EOF.
+        let mut ack = [0u8; 8];
+        stream.read_exact(&mut ack).unwrap();
+        assert_eq!(&ack[0..4], b"SDIV");
+        assert_eq!(u16::from_le_bytes(ack[4..6].try_into().unwrap()), wire::VERSION);
+        let mut err = [0u8; 2];
+        stream.read_exact(&mut err).unwrap();
+        assert_eq!((err[0], err[1]), (wire::FRAME_ERR, wire::ERR_BAD_VERSION), "hello v{ver}");
+        let mut rest = Vec::new();
+        stream.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "server must close after rejecting v{ver}");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn mutated_stats2_and_trace_responses_never_panic_the_decoder() {
+    use simdive::obs::registry::HIST_BUCKETS;
+    use simdive::obs::{HistSnapshot, Snapshot, TraceEvent, Value};
+    let mut rng = Rng::new(0xF022_0005);
+    let mut snap = Snapshot::default();
+    snap.push("engine.requests", Value::Counter(41));
+    snap.push("shard.0.queue_depth", Value::Gauge(-3));
+    let mut h = HistSnapshot::default();
+    h.buckets[0] = 1;
+    h.buckets[HIST_BUCKETS - 1] = 2;
+    snap.push("stage.queue", Value::Hist(h));
+    let events = vec![TraceEvent { id: 7, ..TraceEvent::default() }];
+    for _ in 0..4_000 {
+        let mut buf = Vec::new();
+        if rng.below(2) == 0 {
+            wire::write_stats2_resp(&mut buf, &snap).unwrap();
+        } else {
+            wire::write_trace_resp(&mut buf, &events).unwrap();
+        }
+        let mutations = 1 + rng.below(4) as usize;
+        for _ in 0..mutations {
+            let pos = rng.below(buf.len() as u64) as usize;
+            buf[pos] ^= (1 + rng.below(255)) as u8;
+        }
+        // Any outcome but a panic: decoded, rejected as InvalidData, or a
+        // short read — hostile length fields must hit the decode caps.
+        let _ = wire::read_server_frame(&mut Cursor::new(&buf));
     }
 }

@@ -10,8 +10,11 @@
 //! "Scalar" is the pre-batching hot path exactly as the substrates used
 //! it: one `MulDesign`/`DivDesign` dispatch per element, which resolves
 //! the correction tables and rescales the coefficient per call. "Batched"
-//! is one `arith::batch` kernel call per slice. Both compute bit-identical
-//! results (asserted here before timing).
+//! is one `arith::batch` kernel call per slice — at 8 bits that entry
+//! point routes through the packed 4-lane SWAR kernel (DESIGN.md §13),
+//! so the 8-bit rows also time the pre-SWAR lane-wise form
+//! (`*_batch_lanewise_into`) to isolate the SWAR payoff. All paths
+//! compute bit-identical results (asserted here before timing).
 
 use simdive::arith::{batch, table, DivDesign, MulDesign};
 use simdive::coordinator::{ReqOp, Request};
@@ -43,6 +46,9 @@ struct OpResult {
     bits: u32,
     scalar_mops: f64,
     batched_mops: f64,
+    /// Lane-wise batch throughput — measured only at 8 bits, where the
+    /// default batch entry takes the SWAR path instead (DESIGN.md §13).
+    lanewise_mops: Option<f64>,
 }
 
 impl OpResult {
@@ -105,13 +111,36 @@ fn bench_op(bits: u32, is_div: bool, rng: &mut Rng) -> OpResult {
         })
     };
 
+    // At 8 bits the default entry point above went through the SWAR
+    // kernel; time the pre-SWAR lane-wise form too so the packed-lane
+    // payoff is tracked separately from the table-hoisting payoff.
+    let lanewise_secs = (bits == 8).then(|| {
+        let (aa, bb) = (black_box(&a), black_box(&b));
+        if is_div {
+            time_secs(|| {
+                batch::div_batch_lanewise_into(tables, bits, aa, bb, &mut out);
+                black_box(&out);
+            })
+        } else {
+            time_secs(|| {
+                batch::mul_batch_lanewise_into(tables, bits, aa, bb, &mut out);
+                black_box(&out);
+            })
+        }
+    });
+
     let r = OpResult {
         bits,
         scalar_mops: N as f64 / scalar_secs / 1e6,
         batched_mops: N as f64 / batched_secs / 1e6,
+        lanewise_mops: lanewise_secs.map(|s| N as f64 / s / 1e6),
+    };
+    let swar_note = match r.lanewise_mops {
+        Some(l) => format!(", lanewise {:.1} Mops/s (SWAR {:.2}x)", l, r.batched_mops / l),
+        None => String::new(),
     };
     println!(
-        "[bench] {}{:<2}: scalar {:.1} Mops/s, batched {:.1} Mops/s ({:.2}x)",
+        "[bench] {}{:<2}: scalar {:.1} Mops/s, batched {:.1} Mops/s ({:.2}x){swar_note}",
         if is_div { "div" } else { "mul" },
         bits,
         r.scalar_mops,
@@ -312,13 +341,18 @@ fn json_op_section(results: &[&OpResult]) -> String {
         }
         write!(
             s,
-            "\"{}\": {{\"scalar_mops\": {:.2}, \"batched_mops\": {:.2}, \"speedup\": {:.3}}}",
+            "\"{}\": {{\"scalar_mops\": {:.2}, \"batched_mops\": {:.2}, \"speedup\": {:.3}",
             r.bits,
             r.scalar_mops,
             r.batched_mops,
             r.speedup()
         )
         .unwrap();
+        if let Some(l) = r.lanewise_mops {
+            write!(s, ", \"lanewise_mops\": {l:.2}, \"swar_speedup\": {:.3}", r.batched_mops / l)
+                .unwrap();
+        }
+        s.push('}');
     }
     s.push('}');
     s
@@ -350,9 +384,11 @@ fn main() {
     sharded_rps.push('}');
 
     // Schema note: `batched_mixed_w_rps`/`mixed_w_lane_utilization`
-    // (coordinator v2), `shards`/`sharded_rps` (engine sharding) and the
-    // `obs` block (observability overhead, DESIGN.md §12) are append-only
-    // additions; the schema name is unchanged (CHANGES.md).
+    // (coordinator v2), `shards`/`sharded_rps` (engine sharding), the
+    // `obs` block (observability overhead, DESIGN.md §12), and the
+    // per-op `lanewise_mops`/`swar_speedup` fields on the 8-bit rows
+    // (SWAR kernels, DESIGN.md §13) are append-only additions; the
+    // schema name is unchanged (CHANGES.md).
     let json = format!(
         "{{\n  \"schema\": \"simdive-hotpath-v1\",\n  \"elements_per_pass\": {N},\n  \
          \"mul\": {},\n  \"div\": {},\n  \"coordinator\": {{\"requests\": {COORD_REQUESTS}, \

@@ -5,6 +5,8 @@
 //! divide the small values exactly, and shift the quotient back. The paper
 //! evaluates AAXD(12/6) and AAXD(8/4) as divider baselines in Table 2.
 
+use std::num::NonZeroU64;
+
 use super::mitchell::lod;
 
 /// AAXD approximate division keeping `m` dividend / `n` divisor bits.
@@ -12,14 +14,14 @@ use super::mitchell::lod;
 pub fn aaxd_div(bits: u32, m: u32, n: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
     debug_assert!(m >= 1 && n >= 1 && m <= bits && n <= bits);
-    if b == 0 {
+    let Some(nb) = NonZeroU64::new(b) else {
         return super::max_val(bits);
-    }
-    if a == 0 {
+    };
+    let Some(na) = NonZeroU64::new(a) else {
         return 0;
-    }
-    let ka = lod(a);
-    let kb = lod(b);
+    };
+    let ka = lod(na);
+    let kb = lod(nb);
     // Keep the top m (n) bits starting at the leading one; sa/sb are the
     // number of truncated low bits.
     let sa = (ka as i64 + 1 - m as i64).max(0);
@@ -41,14 +43,14 @@ pub fn aaxd_div(bits: u32, m: u32, n: u32, a: u64, b: u64) -> u64 {
 /// evaluated in the reals, matching the paper's behavioral error models).
 #[inline]
 pub fn aaxd_div_real(bits: u32, m: u32, n: u32, a: u64, b: u64) -> f64 {
-    if b == 0 {
+    let Some(nb) = NonZeroU64::new(b) else {
         return super::max_val(bits) as f64;
-    }
-    if a == 0 {
+    };
+    let Some(na) = NonZeroU64::new(a) else {
         return 0.0;
-    }
-    let ka = lod(a);
-    let kb = lod(b);
+    };
+    let ka = lod(na);
+    let kb = lod(nb);
     let sa = (ka as i64 + 1 - m as i64).max(0);
     let sb = (kb as i64 + 1 - n as i64).max(0);
     let at = (a >> sa) as f64;

@@ -21,12 +21,26 @@
 //!   of `lzcnt`/shift/add per element that LLVM can unroll and schedule
 //!   (and partially vectorize) freely.
 //!
+//! At 8-bit width the integer batch entries go one step further: whenever
+//! the rescaled correction grid fits the SWAR guard-bit budget
+//! ([`swar::Swar8::try_new`] — always true for the generated tables), the
+//! slice is processed four lanes per `u64` through [`swar`], and
+//! [`WordKernel`]/[`MultiKernel`] route whole
+//! [`LaneCfg::Four8`](super::simd::LaneCfg::Four8) words through
+//! [`swar::Swar8::exec4`]. The lane-wise loops remain as
+//! [`mul_batch_lanewise_into`]/[`div_batch_lanewise_into`] — the fallback
+//! for off-budget tables and the baseline the benches and property tests
+//! compare against.
+//!
 //! Every kernel is **bit-identical** to the scalar path: the per-element
 //! arithmetic is the same [`frac_aligned`] → correction → decode pipeline,
 //! verified by the property tests below and in `tests/batch_props.rs`.
 
+use std::num::NonZeroU64;
+
 use super::mitchell::{div_decode, div_decode_real, frac_aligned, mul_decode, mul_decode_real};
-use super::simd::{LaneMode, SimdOp, SimdWord};
+use super::simd::{LaneCfg, LaneMode, SimdOp, SimdWord};
+use super::swar;
 use super::table::{tables_for, CorrectionTables, W_MAX};
 
 /// Per-call context for one operation kind at one width: the flat
@@ -59,9 +73,9 @@ fn pair_index(region_shift: u32, f1: u64, f2: u64) -> usize {
 #[inline(always)]
 fn mul_one(rc: &Rescaled, bits: u32, region_shift: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = rc.corr[pair_index(region_shift, f1, f2)];
@@ -73,12 +87,12 @@ fn mul_one(rc: &Rescaled, bits: u32, region_shift: u32, a: u64, b: u64) -> u64 {
 #[inline(always)]
 fn div_one(rc: &Rescaled, bits: u32, region_shift: u32, max: u64, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return max;
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = rc.corr[pair_index(region_shift, f1, f2)];
@@ -88,7 +102,41 @@ fn div_one(rc: &Rescaled, bits: u32, region_shift: u32, max: u64, a: u64, b: u64
 /// Batched SIMDive multiply: `out[i] = simdive_mul_with(t, bits, a[i],
 /// b[i])`, bit-exactly, with all table/width resolution hoisted out of the
 /// loop. Slices must have equal length.
+///
+/// At `bits == 8` with an in-budget table this runs four lanes per `u64`
+/// through the [`swar`] kernel (lane-wise tail for the last `len % 4`
+/// elements); otherwise it is [`mul_batch_lanewise_into`].
 pub fn mul_batch_into(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    if bits == 8 {
+        if let Some(k) = swar::Swar8::try_new(t) {
+            let main = a.len() - a.len() % 4;
+            for ((o, ac), bc) in out[..main]
+                .chunks_exact_mut(4)
+                .zip(a[..main].chunks_exact(4))
+                .zip(b[..main].chunks_exact(4))
+            {
+                swar::unpack4(k.mul4(swar::pack4(ac), swar::pack4(bc)), o);
+            }
+            mul_batch_lanewise_into(t, bits, &a[main..], &b[main..], &mut out[main..]);
+            return;
+        }
+    }
+    mul_batch_lanewise_into(t, bits, a, b, out);
+}
+
+/// Lane-wise form of [`mul_batch_into`]: one [`frac_aligned`] → correct →
+/// decode chain per element, at any width. Public as the SWAR fallback and
+/// as the baseline `benches/hotpath.rs` measures the packed speedup
+/// against.
+pub fn mul_batch_lanewise_into(
+    t: &CorrectionTables,
+    bits: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
     let rc = Rescaled::new(&t.mul_flat, bits);
@@ -108,7 +156,38 @@ pub fn mul_batch(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64]) -> Vec<u
 /// Batched SIMDive divide: `out[i] = simdive_div_with(t, bits, a[i],
 /// b[i])`, bit-exactly (`b == 0 → max_val(bits)`, `a == 0 → 0`). Slices
 /// must have equal length.
+///
+/// At `bits == 8` with an in-budget table this runs four lanes per `u64`
+/// through the [`swar`] kernel, like [`mul_batch_into`].
 pub fn div_batch_into(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    if bits == 8 {
+        if let Some(k) = swar::Swar8::try_new(t) {
+            let main = a.len() - a.len() % 4;
+            for ((o, ac), bc) in out[..main]
+                .chunks_exact_mut(4)
+                .zip(a[..main].chunks_exact(4))
+                .zip(b[..main].chunks_exact(4))
+            {
+                swar::unpack4(k.div4(swar::pack4(ac), swar::pack4(bc)), o);
+            }
+            div_batch_lanewise_into(t, bits, &a[main..], &b[main..], &mut out[main..]);
+            return;
+        }
+    }
+    div_batch_lanewise_into(t, bits, a, b, out);
+}
+
+/// Lane-wise form of [`div_batch_into`]: the SWAR fallback and the bench
+/// baseline, like [`mul_batch_lanewise_into`].
+pub fn div_batch_lanewise_into(
+    t: &CorrectionTables,
+    bits: u32,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
     let rc = Rescaled::new(&t.div_flat, bits);
@@ -132,9 +211,9 @@ pub fn div_batch(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64]) -> Vec<u
 #[inline(always)]
 fn mul_one_real(rc: &Rescaled, bits: u32, region_shift: u32, a: u64, b: u64) -> f64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = rc.corr[pair_index(region_shift, f1, f2)];
@@ -146,12 +225,12 @@ fn mul_one_real(rc: &Rescaled, bits: u32, region_shift: u32, a: u64, b: u64) -> 
 #[inline(always)]
 fn div_one_real(rc: &Rescaled, bits: u32, region_shift: u32, max: f64, a: u64, b: u64) -> f64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return max;
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = rc.corr[pair_index(region_shift, f1, f2)];
@@ -188,10 +267,14 @@ pub fn div_real_batch_into(t: &CorrectionTables, bits: u32, a: &[u64], b: &[u64]
 }
 
 /// Rescaled mul+div coefficient grids for every lane width, computed once
-/// per batch (widths are 8/16/32 → index `log2(width) - 3`).
+/// per batch (widths are 8/16/32 → index `log2(width) - 3`), plus the
+/// packed 4×8-bit kernel when the table fits its guard-bit budget.
 struct WordContext {
     mul: [Rescaled; 3],
     div: [Rescaled; 3],
+    /// `Some` whenever the rescaled grids fit the SWAR budget — always,
+    /// for generated tables. `Four8` words then execute packed.
+    swar8: Option<swar::Swar8>,
 }
 
 impl WordContext {
@@ -207,13 +290,31 @@ impl WordContext {
                 Rescaled::new(&t.div_flat, 16),
                 Rescaled::new(&t.div_flat, 32),
             ],
+            swar8: swar::Swar8::try_new(t),
         }
     }
 
     /// Execute one packed word; bit-identical to
-    /// [`simd::execute_with`](super::simd::execute_with).
+    /// [`simd::execute_with`](super::simd::execute_with). `Four8` words
+    /// take the packed SWAR datapath when available; everything else (and
+    /// the off-budget fallback) is the lane-wise loop.
     #[inline]
     fn execute(&self, op: SimdOp, word: SimdWord) -> u64 {
+        if op.cfg == LaneCfg::Four8 {
+            if let Some(k) = &self.swar8 {
+                return k.exec4(
+                    swar::mul_lane_mask(&op.modes),
+                    swar::spread_bytes(word.a),
+                    swar::spread_bytes(word.b),
+                );
+            }
+        }
+        self.execute_lanewise(op, word)
+    }
+
+    /// The per-lane reference loop behind [`WordContext::execute`].
+    #[inline]
+    fn execute_lanewise(&self, op: SimdOp, word: SimdWord) -> u64 {
         let mut out = 0u64;
         for (i, &(off, width)) in op.cfg.lanes().iter().enumerate() {
             let (a, b) = word.lane(op.cfg, i);
@@ -288,6 +389,16 @@ impl MultiKernel {
     pub fn execute(&self, w: u32, op: SimdOp, word: SimdWord) -> u64 {
         debug_assert!(w <= W_MAX);
         self.ctxs[w as usize].execute(op, word)
+    }
+
+    /// The packed 4×8-bit kernel at accuracy knob `w`, when the table fits
+    /// the SWAR budget. The sharded engine uses this to stage `Four8`
+    /// words through the decode → approx → correct → assemble pipeline;
+    /// `None` means the word must go through [`MultiKernel::execute`].
+    #[inline]
+    pub fn swar8(&self, w: u32) -> Option<&swar::Swar8> {
+        debug_assert!(w <= W_MAX);
+        self.ctxs[w as usize].swar8.as_ref()
     }
 
     /// Execute a chunk of packed words with per-word accuracy knobs into
@@ -406,6 +517,26 @@ mod tests {
             assert_eq!(d[1], crate::arith::max_val(bits), "x/0 must saturate");
             assert_eq!(d[2], crate::arith::max_val(bits), "0/0 follows b==0 first");
             assert_eq!(d[3], crate::arith::max_val(bits));
+        }
+    }
+
+    #[test]
+    fn swar_batch_tail_and_lanewise_agree() {
+        let mut rng = Rng::new(0x51AA);
+        for w in 0..=crate::arith::W_MAX {
+            let t = tables_for(w);
+            for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 63] {
+                let a: Vec<u64> = (0..len).map(|_| rng.below(256)).collect();
+                let b: Vec<u64> = (0..len).map(|_| rng.below(256)).collect();
+                let mut fast = vec![0u64; len];
+                let mut lane = vec![0u64; len];
+                mul_batch_into(t, 8, &a, &b, &mut fast);
+                mul_batch_lanewise_into(t, 8, &a, &b, &mut lane);
+                assert_eq!(fast, lane, "mul w={w} len={len}");
+                div_batch_into(t, 8, &a, &b, &mut fast);
+                div_batch_lanewise_into(t, 8, &a, &b, &mut lane);
+                assert_eq!(fast, lane, "div w={w} len={len}");
+            }
         }
     }
 

@@ -5,20 +5,29 @@
 //! Fixed-point layout: for an `N`-bit operand the aligned fraction has
 //! `F = N - 1` bits. With `k = ⌊log2 a⌋` and `f = (a - 2^k) << (F - k)`,
 //! the real fraction is `x = f / 2^F ∈ [0, 1)`.
+//!
+//! Zero never enters the log domain: [`lod`] and [`frac_aligned`] take
+//! [`NonZeroU64`], so every caller must resolve its zero convention
+//! (`0 · b = 0`, `a / 0 = max`, …) *before* alignment. The guard used to be
+//! a `debug_assert!`, which release builds compiled away — `lod(0)` then
+//! returned `63 - 64` wrapped to a huge shift count downstream. With packed
+//! SWAR lanes feeding these helpers the guard has to be structural, not
+//! advisory.
 
-/// Position of the leading one (`⌊log2 a⌋`). `a` must be non-zero.
+use std::num::NonZeroU64;
+
+/// Position of the leading one (`⌊log2 a⌋`).
 #[inline]
-pub fn lod(a: u64) -> u32 {
-    debug_assert!(a != 0);
+pub fn lod(a: NonZeroU64) -> u32 {
     63 - a.leading_zeros()
 }
 
 /// Fraction bits of `a`, left-aligned to `F = bits - 1` fractional places.
 #[inline]
-pub fn frac_aligned(bits: u32, a: u64) -> (u32, u64) {
+pub fn frac_aligned(bits: u32, a: NonZeroU64) -> (u32, u64) {
     let f = bits - 1;
     let k = lod(a);
-    let frac = (a - (1u64 << k)) << (f - k);
+    let frac = (a.get() - (1u64 << k)) << (f - k);
     (k, frac)
 }
 
@@ -29,6 +38,11 @@ pub fn frac_aligned(bits: u32, a: u64) -> (u32, u64) {
 /// Shared by Mitchell, MBM and SIMDive so the overflow handling is identical
 /// across all Mitchell-family designs (this is exactly the paper's decode:
 /// carry-out of the fraction adder selects the `x1+x2 ≥ 1` case).
+///
+/// The shift clamps mirror [`div_decode`]: any in-contract `{bits, k, t}`
+/// stays far inside them, but an out-of-contract exponent saturates through
+/// the `2N`-bit cap instead of shifting a `u128` by ≥ 128 bits (a panic in
+/// debug, wrapped garbage in release).
 #[inline]
 pub fn mul_decode(bits: u32, k1: u32, k2: u32, t: i64) -> u64 {
     let f = bits - 1;
@@ -41,7 +55,13 @@ pub fn mul_decode(bits: u32, k1: u32, k2: u32, t: i64) -> u64 {
         // Carry out of the fraction adder: 2^(k1+k2+1) · t / 2^F.
         (t, ksum as i64 + 1 - f as i64)
     };
-    let v = if exp >= 0 { mant << exp } else { mant >> (-exp) };
+    let v = if exp >= 0 {
+        mant << exp.min(63)
+    } else if -exp >= 128 {
+        0
+    } else {
+        mant >> (-exp)
+    };
     let cap = if bits == 32 { u64::MAX as u128 } else { (1u128 << (2 * bits)) - 1 };
     v.min(cap) as u64
 }
@@ -108,9 +128,9 @@ pub fn div_decode_real(bits: u32, k1: u32, k2: u32, t: i64) -> f64 {
 /// Real-valued Mitchell multiply (error-analysis form).
 #[inline]
 pub fn mul_real(bits: u32, a: u64, b: u64) -> f64 {
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     mul_decode_real(bits, k1, k2, (f1 + f2) as i64)
@@ -119,12 +139,12 @@ pub fn mul_real(bits: u32, a: u64, b: u64) -> f64 {
 /// Real-valued Mitchell divide (error-analysis form).
 #[inline]
 pub fn div_real(bits: u32, a: u64, b: u64) -> f64 {
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return super::max_val(bits) as f64;
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     div_decode_real(bits, k1, k2, f1 as i64 - f2 as i64)
@@ -134,9 +154,9 @@ pub fn div_real(bits: u32, a: u64, b: u64) -> f64 {
 #[inline]
 pub fn mul(bits: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     mul_decode(bits, k1, k2, (f1 + f2) as i64)
@@ -146,12 +166,12 @@ pub fn mul(bits: u32, a: u64, b: u64) -> u64 {
 #[inline]
 pub fn div(bits: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return super::max_val(bits);
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     div_decode(bits, k1, k2, f1 as i64 - f2 as i64)
@@ -162,6 +182,10 @@ mod tests {
     use super::*;
     use crate::arith::exact;
 
+    fn nz(v: u64) -> NonZeroU64 {
+        NonZeroU64::new(v).expect("test operand must be non-zero")
+    }
+
     #[test]
     fn paper_running_example() {
         // Paper §3.1: 43 × 10 → Mitchell 408 (accurate 430); 43 / 10 → 4.
@@ -171,21 +195,33 @@ mod tests {
 
     #[test]
     fn lod_basics() {
-        assert_eq!(lod(1), 0);
-        assert_eq!(lod(2), 1);
-        assert_eq!(lod(3), 1);
-        assert_eq!(lod(255), 7);
-        assert_eq!(lod(1 << 31), 31);
+        assert_eq!(lod(nz(1)), 0);
+        assert_eq!(lod(nz(2)), 1);
+        assert_eq!(lod(nz(3)), 1);
+        assert_eq!(lod(nz(255)), 7);
+        assert_eq!(lod(nz(1 << 31)), 31);
+    }
+
+    #[test]
+    fn zero_is_unrepresentable_in_the_log_domain() {
+        // The structural guard: there is no `lod(0)` to call. The only way
+        // to manufacture an argument is through `NonZeroU64`, which rejects
+        // zero — in release builds too, where the old `debug_assert!` was
+        // compiled away and `lod(0)` wrapped to `u32::MAX`.
+        assert!(NonZeroU64::new(0).is_none());
+        for v in 1..=u8::MAX as u64 {
+            assert_eq!(lod(nz(v)), v.ilog2());
+        }
     }
 
     #[test]
     fn frac_alignment() {
         // 43 = 2^5 (1 + 0.01011b): fraction 0b01011 aligned to 7 bits = 0b0101100.
-        let (k, f) = frac_aligned(8, 43);
+        let (k, f) = frac_aligned(8, nz(43));
         assert_eq!(k, 5);
         assert_eq!(f, 0b0101100);
         // 10 = 2^3 (1 + 0.01b).
-        let (k, f) = frac_aligned(8, 10);
+        let (k, f) = frac_aligned(8, nz(10));
         assert_eq!(k, 3);
         assert_eq!(f, 0b0100000);
     }
@@ -241,6 +277,28 @@ mod tests {
     }
 
     #[test]
+    fn zero_operand_conventions_exhaustive() {
+        // Every zero convention, every width, integer and real forms —
+        // exercised in release as well as debug, now that the guard
+        // underneath is structural rather than a debug assertion.
+        for &bits in &crate::arith::WIDTHS {
+            let max = crate::arith::max_val(bits);
+            for x in [0u64, 1, 2, 97, max] {
+                assert_eq!(mul(bits, 0, x), 0, "0·{x} at {bits}-bit");
+                assert_eq!(mul(bits, x, 0), 0, "{x}·0 at {bits}-bit");
+                assert_eq!(div(bits, x, 0), max, "{x}/0 at {bits}-bit");
+                assert_eq!(mul_real(bits, 0, x), 0.0);
+                assert_eq!(mul_real(bits, x, 0), 0.0);
+                assert_eq!(div_real(bits, x, 0), max as f64);
+            }
+            assert_eq!(div(bits, 0, 5), 0, "0/5 at {bits}-bit");
+            assert_eq!(div(bits, 0, 0), max, "0/0 follows b==0 first");
+            assert_eq!(div_real(bits, 0, 5), 0.0);
+            assert_eq!(div_real(bits, 0, 0), max as f64);
+        }
+    }
+
+    #[test]
     fn wide_widths_consistent_with_narrow() {
         // The same (a, b) evaluated at wider widths must give the same
         // result: alignment is width-independent in value terms.
@@ -260,5 +318,43 @@ mod tests {
         let v = mul(32, m, m);
         assert!(v <= u64::MAX);
         assert!(v as u128 <= (m as u128) * (m as u128));
+    }
+
+    #[test]
+    fn mul_decode_max_exponent_pinned() {
+        // Max k1+k2 at 32-bit: a = b = u32::MAX → k1 = k2 = 31 and the
+        // maximal fraction sum t = 2·(2^31 − 1) carries out of the fraction
+        // adder, so exp = 32 and the decode is (2^32 − 2) · 2^32.
+        let fmax = (1i64 << 31) - 1;
+        let want = u64::MAX - (1u64 << 33) + 1; // 2^64 − 2^33
+        assert_eq!(mul_decode(32, 31, 31, 2 * fmax), want);
+        assert_eq!(mul(32, u32::MAX as u64, u32::MAX as u64), want);
+        // Mitchell never overestimates: stays under the exact product.
+        assert!((want as u128) <= (u32::MAX as u128) * (u32::MAX as u128));
+    }
+
+    #[test]
+    fn mul_decode_max_correction_saturates() {
+        // A correction pushing the fraction sum to its i64 ceiling must
+        // saturate through the 2N-bit cap, not shift past 128 bits.
+        assert_eq!(mul_decode(32, 31, 31, i64::MAX), u64::MAX);
+        assert_eq!(mul_decode(8, 7, 7, i64::MAX), crate::arith::max_val(16));
+    }
+
+    #[test]
+    fn mul_decode_out_of_contract_exponent_clamps() {
+        // Out-of-contract LOD pairs used to compute `mant << exp` with
+        // exp ≥ 128 — a panic in debug, wrapped garbage in release. Now
+        // they clamp symmetrically with div_decode and saturate.
+        assert_eq!(mul_decode(8, 63, 63, 0), crate::arith::max_val(16));
+        assert_eq!(mul_decode(16, 63, 63, 1), crate::arith::max_val(32));
+    }
+
+    #[test]
+    fn div_decode_clamps_stay_pinned() {
+        // The divider-side clamps mul_decode now mirrors: huge positive
+        // exponents saturate to max_val, mant ≤ 0 floors to zero.
+        assert_eq!(div_decode(8, 63, 0, 0), crate::arith::max_val(8));
+        assert_eq!(div_decode(8, 0, 0, -(1i64 << 8)), 0);
     }
 }

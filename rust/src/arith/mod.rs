@@ -23,12 +23,13 @@ pub mod models;
 pub mod saadat;
 pub mod simd;
 pub mod simdive;
+pub mod swar;
 pub mod table;
 pub mod trunc;
 
 pub use batch::{
-    div_batch, div_batch_into, execute_words, execute_words_into, mul_batch, mul_batch_into,
-    MultiKernel, WordKernel,
+    div_batch, div_batch_into, div_batch_lanewise_into, execute_words, execute_words_into,
+    mul_batch, mul_batch_into, mul_batch_lanewise_into, MultiKernel, WordKernel,
 };
 pub use mitchell::{frac_aligned, lod};
 pub use models::{DivDesign, MulDesign};

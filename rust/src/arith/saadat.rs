@@ -16,6 +16,7 @@
 
 use super::mitchell::{div_decode, frac_aligned, mul_decode};
 use super::table::TABLE_RESOLUTION_BITS;
+use std::num::NonZeroU64;
 use std::sync::OnceLock;
 
 /// MBM's correction constant: exactly 1/16 (see module docs).
@@ -65,9 +66,9 @@ fn to_f_units(c: f64, bits: u32) -> i64 {
 #[inline]
 pub fn mbm_mul(bits: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = to_f_units(MBM_COEFF, bits);
@@ -77,9 +78,9 @@ pub fn mbm_mul(bits: u32, a: u64, b: u64) -> u64 {
 /// Real-valued MBM multiply (error-analysis form).
 #[inline]
 pub fn mbm_mul_real(bits: u32, a: u64, b: u64) -> f64 {
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = to_f_units(MBM_COEFF, bits);
@@ -89,12 +90,12 @@ pub fn mbm_mul_real(bits: u32, a: u64, b: u64) -> f64 {
 /// Real-valued INZeD divide (error-analysis form).
 #[inline]
 pub fn inzed_div_real(bits: u32, a: u64, b: u64) -> f64 {
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return super::max_val(bits) as f64;
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = to_f_units(inzed_coeff(), bits);
@@ -105,12 +106,12 @@ pub fn inzed_div_real(bits: u32, a: u64, b: u64) -> f64 {
 #[inline]
 pub fn inzed_div(bits: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return super::max_val(bits);
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let corr = to_f_units(inzed_coeff(), bits);

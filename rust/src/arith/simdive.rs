@@ -8,6 +8,8 @@
 //! do. Verified bit-exactly against the gate-level netlists in
 //! `circuits::simdive` and against the Pallas kernel via golden vectors.
 
+use std::num::NonZeroU64;
+
 use super::mitchell::{div_decode, frac_aligned, mul_decode};
 use super::table::{default_tables, tables_for, CorrectionTables};
 
@@ -39,9 +41,9 @@ pub fn simdive_div(bits: u32, a: u64, b: u64) -> u64 {
 #[inline]
 pub fn simdive_mul_with(t: &CorrectionTables, bits: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let c = t.mul[CorrectionTables::region(bits, f1)][CorrectionTables::region(bits, f2)];
@@ -53,12 +55,12 @@ pub fn simdive_mul_with(t: &CorrectionTables, bits: u32, a: u64, b: u64) -> u64 
 #[inline]
 pub fn simdive_div_with(t: &CorrectionTables, bits: u32, a: u64, b: u64) -> u64 {
     debug_assert!(super::fits(a, bits) && super::fits(b, bits));
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return super::max_val(bits);
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let c = t.div[CorrectionTables::region(bits, f1)][CorrectionTables::region(bits, f2)];
@@ -71,9 +73,9 @@ pub fn simdive_div_with(t: &CorrectionTables, bits: u32, a: u64, b: u64) -> u64 
 #[inline]
 pub fn simdive_mul_real_w(bits: u32, a: u64, b: u64, w: u32) -> f64 {
     let t = tables_for(w);
-    if a == 0 || b == 0 {
+    let (Some(a), Some(b)) = (NonZeroU64::new(a), NonZeroU64::new(b)) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let c = t.mul[CorrectionTables::region(bits, f1)][CorrectionTables::region(bits, f2)];
@@ -85,12 +87,12 @@ pub fn simdive_mul_real_w(bits: u32, a: u64, b: u64, w: u32) -> f64 {
 #[inline]
 pub fn simdive_div_real_w(bits: u32, a: u64, b: u64, w: u32) -> f64 {
     let t = tables_for(w);
-    if b == 0 {
+    let Some(b) = NonZeroU64::new(b) else {
         return super::max_val(bits) as f64;
-    }
-    if a == 0 {
+    };
+    let Some(a) = NonZeroU64::new(a) else {
         return 0.0;
-    }
+    };
     let (k1, f1) = frac_aligned(bits, a);
     let (k2, f2) = frac_aligned(bits, b);
     let c = t.div[CorrectionTables::region(bits, f1)][CorrectionTables::region(bits, f2)];

@@ -1,0 +1,500 @@
+//! True software-SIMD (SWAR) kernels for the 8-bit SIMDive tier.
+//!
+//! Everything else in [`arith`](super) simulates the paper's sub-word
+//! parallelism lane by lane; this module actually packs the four 8-bit
+//! lanes of a [`LaneCfg::Four8`](super::simd::LaneCfg::Four8) word into one
+//! `u64` and runs LOD, log-approximation, correction lookup and antilog
+//! assembly on all lanes per instruction. The word layout, the guard-bit
+//! budget of every stage, and the carry/borrow-freedom argument are
+//! documented in DESIGN.md §13; the kernel is bit-identical to the scalar
+//! [`simdive`](super::simdive) path (exhaustively property-tested in
+//! `tests/swar_props.rs` and gated through `tests/engine_props.rs`).
+//!
+//! # Word layout
+//!
+//! Four 8-bit lanes live in four 16-bit fields of a `u64` (lane `i` at bits
+//! `[16i, 16i + 8)`), leaving 8 guard bits above each lane. The guard bits
+//! absorb every intermediate the datapath produces — corrected fraction
+//! sums (≤ 9 bits), borrow sentinels (bit 8), shift counts — so no stage
+//! ever carries into a neighbouring lane. The one place a lane needs more
+//! than 16 bits, the multiplier's antilog shift (`mant · 2^e` is up to 24
+//! bits wide), the word is split into even/odd lanes across two `u64`s
+//! with 32-bit fields, shifted, saturated to 16 bits and re-interleaved —
+//! which lands each lane's `2N`-bit product exactly where the packed
+//! result layout of [`simd::execute`](super::simd::execute) wants it.
+//!
+//! # Stages
+//!
+//! The kernel is factored into the four pipeline stages the sharded engine
+//! overlaps across consecutive words (decode → approx → correct →
+//! assemble); [`Swar8::exec4`] is *defined as* their composition, so the
+//! staged path in `engine::sharded` and the monolithic word path here
+//! cannot diverge.
+//!
+//! # Fallback contract
+//!
+//! [`Swar8::try_new`] admits a table only when every rescaled coefficient
+//! fits the guard-bit budget (mul ∈ `[0, 255]`, div ∈ `[-128, 0]` in
+//! `F = 7` units — the generated tables sit far inside at ≤ 31). Tables
+//! built from arbitrary grids that exceed it get `None` and callers fall
+//! back to the lane-wise loops, keeping bit-exactness unconditional.
+
+use super::simd::LaneMode;
+use super::table::CorrectionTables;
+
+#[cfg(feature = "portable-simd")]
+pub mod portable;
+
+/// One bit set at the bottom of each 16-bit field.
+const ONE: u64 = 0x0001_0001_0001_0001;
+/// The top bit of each 16-bit field.
+const H16: u64 = 0x8000_8000_8000_8000;
+/// One bit set at the bottom of each 32-bit field.
+const ONE32: u64 = 0x0000_0001_0000_0001;
+/// The low 16 bits of each 32-bit field.
+const LOW32: u64 = 0x0000_FFFF_0000_FFFF;
+
+/// Largest mul correction (in `F = 7` units) the guard bits absorb: keeps
+/// the corrected fraction sum ≤ 509 < 2^9, so carry detection via bits
+/// 7–8 stays exact.
+const MAX_MUL_CORR: i64 = 255;
+/// Largest div correction magnitude: keeps the borrow-sentinel arithmetic
+/// (`f1 + 256 − f2 − |c|`) non-negative per field, so no borrow can cross
+/// a lane boundary.
+const MAX_DIV_CORR: i64 = 128;
+
+/// Splat a 16-bit constant into all four fields.
+#[inline(always)]
+const fn splat16(c: u16) -> u64 {
+    (c as u64) * ONE
+}
+
+/// Splat a 32-bit constant into both 32-bit fields.
+#[inline(always)]
+const fn splat32(c: u32) -> u64 {
+    (c as u64) * ONE32
+}
+
+/// Spread the four bytes of a packed [`Four8`](super::simd::LaneCfg::Four8)
+/// operand word into the four 16-bit SWAR fields (byte `i` → bits
+/// `[16i, 16i + 8)`), guard bits all zero.
+#[inline(always)]
+pub fn spread_bytes(x: u32) -> u64 {
+    let x = x as u64;
+    let x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    (x | (x << 8)) & 0x00FF_00FF_00FF_00FF
+}
+
+/// Pack four 8-bit operands (one per slice element) into a SWAR word.
+#[inline(always)]
+pub fn pack4(vals: &[u64]) -> u64 {
+    debug_assert_eq!(vals.len(), 4);
+    debug_assert!(vals.iter().all(|&v| v <= 0xFF), "SWAR lanes are 8-bit");
+    vals[0] | (vals[1] << 16) | (vals[2] << 32) | (vals[3] << 48)
+}
+
+/// Unpack the four 16-bit result fields of a SWAR word into a slice.
+#[inline(always)]
+pub fn unpack4(word: u64, out: &mut [u64]) {
+    debug_assert_eq!(out.len(), 4);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (word >> (16 * i)) & 0xFFFF;
+    }
+}
+
+/// Full-field mask of the lanes whose mode is [`LaneMode::Mul`]: `0xFFFF`
+/// in field `i` iff lane `i` multiplies. `u64::MAX` ⇔ all-mul,
+/// `0` ⇔ all-div.
+#[inline]
+pub fn mul_lane_mask(modes: &[LaneMode; 4]) -> u64 {
+    let mut m = 0u64;
+    for (i, mode) in modes.iter().enumerate() {
+        if matches!(mode, LaneMode::Mul) {
+            m |= 0xFFFFu64 << (16 * i);
+        }
+    }
+    m
+}
+
+/// Per-field non-zero mask: `0xFFFF` where the field is non-zero, `0`
+/// where it is zero. Exact for field values < `0x8000` (ours are ≤ 255):
+/// adding `0x7FFF` sets the field's top bit iff the field was non-zero,
+/// and cannot carry across fields.
+#[inline(always)]
+fn nz_mask16(v: u64) -> u64 {
+    (((v + splat16(0x7FFF)) & H16) >> 15) * 0xFFFF
+}
+
+/// All-lane leading-one alignment: the SWAR counterpart of
+/// [`frac_aligned`](super::mitchell::frac_aligned). Fields must hold
+/// non-zero 8-bit values (the decode stage substitutes 1 into dead lanes
+/// first — the structural analogue of `lod`'s `NonZeroU64` contract).
+///
+/// Three barrel stages shift each field left until its bit 7 is set;
+/// a field's value never exceeds 0xFF at any stage (we only shift when the
+/// top nibble/pair/bit is absent), so nothing leaks into the guard bits.
+/// Returns `(nv, s)` with `nv = a << (7 − k)` (bit 7 set, fraction in bits
+/// 0–6) and `s = 7 − lod(a)` per field.
+#[inline(always)]
+fn normalize(mut v: u64) -> (u64, u64) {
+    let mut s = 0u64;
+    for &(sh, top) in &[(4u32, 0xF0u16), (2, 0xC0), (1, 0x80)] {
+        let t = v & splat16(top);
+        let present = ((t + splat16(0x7FFF)) & H16) >> 15;
+        let m = (present ^ ONE) * 0xFFFF;
+        v ^= (v ^ (v << sh)) & m;
+        s += m & splat16(sh as u16);
+    }
+    (v, s)
+}
+
+/// Correction-table index per field: `(region(f1) << 3) | region(f2)`,
+/// regions being the 3 MSBs of each aligned fraction (bits 4–6 of `nv`).
+#[inline(always)]
+fn pair_idx(nv1: u64, nv2: u64) -> u64 {
+    ((nv1 >> 1) & splat16(0x38)) | ((nv2 >> 4) & splat16(0x07))
+}
+
+/// Gather four table entries, one per field. The four scalar loads are the
+/// one step software cannot vectorize without `vpgatherdd`; everything
+/// around them stays packed.
+#[inline(always)]
+fn gather4(tab: &[u16; 64], idx: u64) -> u64 {
+    let c0 = tab[(idx & 0x3F) as usize] as u64;
+    let c1 = tab[((idx >> 16) & 0x3F) as usize] as u64;
+    let c2 = tab[((idx >> 32) & 0x3F) as usize] as u64;
+    let c3 = tab[((idx >> 48) & 0x3F) as usize] as u64;
+    c0 | (c1 << 16) | (c2 << 32) | (c3 << 48)
+}
+
+/// Variable left shift per 32-bit field, shift counts 0..=15 in `e`.
+/// Values stay ≤ 24 bits (9-bit mantissa · 2^15), so no field leak.
+#[inline(always)]
+fn shl_var32(mut v: u64, e: u64) -> u64 {
+    for &(sh, bit) in &[(8u32, 3u32), (4, 2), (2, 1), (1, 0)] {
+        let m = ((e >> bit) & ONE32) * 0xFFFF_FFFF;
+        v ^= (v ^ (v << sh)) & m;
+    }
+    v
+}
+
+/// Variable right shift per 16-bit field, shift counts 0..=15 in `r`,
+/// field values ≤ 0xFF. Masking each partial shift to the low 8 bits of
+/// its field discards the neighbour bits a whole-word `>>` drags in.
+#[inline(always)]
+fn shr_var16(mut v: u64, r: u64) -> u64 {
+    for &(sh, bit) in &[(8u32, 3u32), (4, 2), (2, 1), (1, 0)] {
+        let m = ((r >> bit) & ONE) * 0xFFFF;
+        let shifted = (v >> sh) & splat16(0xFF);
+        v ^= (v ^ shifted) & m;
+    }
+    v
+}
+
+/// Saturate two 17-bit values (one per 32-bit field) to 16 bits: bit 16
+/// set ⇒ the field becomes `0xFFFF` — the `2N`-bit cap of
+/// [`mul_decode`](super::mitchell::mul_decode) at `N = 8`.
+#[inline(always)]
+fn sat16x2(q: u64) -> u64 {
+    let hi = (q >> 16) & ONE32;
+    (q | (hi * 0xFFFF)) & splat32(0xFFFF)
+}
+
+/// Decode-stage output: zero-lane masks plus all four lanes aligned into
+/// the log domain.
+#[derive(Clone, Copy, Debug)]
+pub struct Decoded {
+    /// `0xFFFF` per field where operand A is non-zero.
+    pub anz: u64,
+    /// `0xFFFF` per field where operand B is non-zero.
+    pub bnz: u64,
+    /// Normalized A lanes: bit 7 set, fraction in bits 0–6 (dead lanes
+    /// hold the substituted value 1, normalized to 0x80).
+    pub nv1: u64,
+    /// Normalized B lanes.
+    pub nv2: u64,
+    /// Per-field normalization distance `7 − lod(a)`.
+    pub sa: u64,
+    /// Per-field normalization distance `7 − lod(b)`.
+    pub sb: u64,
+}
+
+/// Approx-stage output: the uncorrected Mitchell log-domain sums and the
+/// correction-table index, carried alongside the decode state.
+#[derive(Clone, Copy, Debug)]
+pub struct Approxed {
+    pub dec: Decoded,
+    /// Region-pair table index per field (6 bits).
+    pub idx: u64,
+    /// Uncorrected mul fraction sum `f1 + f2` per field (≤ 254).
+    pub msum: u64,
+    /// Borrow-sentinel div base `f1 + 256 − f2` per field (∈ [129, 383]).
+    pub dbase: u64,
+}
+
+/// Correct-stage output: fraction sums with the table corrections folded
+/// in, ready for antilog assembly.
+#[derive(Clone, Copy, Debug)]
+pub struct Corrected {
+    pub dec: Decoded,
+    /// Corrected mul sum `f1 + f2 + c` per field (≤ 509).
+    pub mul_t: u64,
+    /// Corrected div sentinel `f1 + 256 − f2 − |c|` per field (≥ 1);
+    /// bit 8 is the no-borrow flag (`t ≥ 0` in scalar terms).
+    pub div_t: u64,
+}
+
+/// The packed 4×8-bit SIMDive kernel: one correction-table pair rescaled
+/// to `F = 7` units at construction, safe for guard-bit arithmetic by
+/// [`Swar8::try_new`]'s range check.
+#[derive(Clone, Debug)]
+pub struct Swar8 {
+    /// Mul corrections, `0..=MAX_MUL_CORR`.
+    mul: [u16; 64],
+    /// Div correction magnitudes (the table entries are ≤ 0),
+    /// `0..=MAX_DIV_CORR`.
+    div: [u16; 64],
+}
+
+impl Swar8 {
+    /// Rescale `t` to `F = 7` units and admit it iff every coefficient
+    /// fits the guard-bit budget (see module docs). Generated tables
+    /// always fit (entries ≤ 31); hand-built grids may not, and get the
+    /// lane-wise fallback instead.
+    pub fn try_new(t: &CorrectionTables) -> Option<Swar8> {
+        let mut mul = [0u16; 64];
+        let mut div = [0u16; 64];
+        for k in 0..64 {
+            let m = CorrectionTables::scale_to_f(t.mul_flat[k], 8);
+            let d = CorrectionTables::scale_to_f(t.div_flat[k], 8);
+            if !(0..=MAX_MUL_CORR).contains(&m) || !(-MAX_DIV_CORR..=0).contains(&d) {
+                return None;
+            }
+            mul[k] = m as u16;
+            div[k] = (-d) as u16;
+        }
+        Some(Swar8 { mul, div })
+    }
+
+    /// Stage 1 — decode: compute the zero-lane masks, substitute 1 into
+    /// dead lanes (zero can never reach the aligner — the packed analogue
+    /// of [`lod`](super::mitchell::lod)'s `NonZeroU64` guard), and align
+    /// all four lanes to the log domain.
+    #[inline]
+    pub fn decode4(a4: u64, b4: u64) -> Decoded {
+        let anz = nz_mask16(a4);
+        let bnz = nz_mask16(b4);
+        let (nv1, sa) = normalize(a4 | (ONE & !anz));
+        let (nv2, sb) = normalize(b4 | (ONE & !bnz));
+        Decoded { anz, bnz, nv1, nv2, sa, sb }
+    }
+
+    /// Stage 2 — approx: Mitchell's log-domain approximation, uncorrected.
+    /// `msum` is the mul fraction sum; `dbase` biases the div difference
+    /// by +256 so the later subtraction cannot borrow across lanes and
+    /// bit 8 doubles as the sign sentinel.
+    #[inline]
+    pub fn approx4(dec: Decoded) -> Approxed {
+        let f1 = dec.nv1 & splat16(0x7F);
+        let f2 = dec.nv2 & splat16(0x7F);
+        let idx = pair_idx(dec.nv1, dec.nv2);
+        Approxed { dec, idx, msum: f1 + f2, dbase: f1 + splat16(0x100) - f2 }
+    }
+
+    /// Stage 3 — correct: gather both tables at the region-pair index and
+    /// fold the coefficients into the log-domain sums.
+    #[inline]
+    pub fn correct4(&self, ap: Approxed) -> Corrected {
+        Corrected {
+            dec: ap.dec,
+            mul_t: ap.msum + gather4(&self.mul, ap.idx),
+            div_t: ap.dbase - gather4(&self.div, ap.idx),
+        }
+    }
+
+    /// Stage 4 — assemble: antilog decode, saturation and zero-convention
+    /// masking, selecting mul or div per lane by `mul_lanes` (a
+    /// [`mul_lane_mask`]). Uniform words skip the unused datapath.
+    #[inline]
+    pub fn assemble4(c: Corrected, mul_lanes: u64) -> u64 {
+        if mul_lanes == u64::MAX {
+            assemble_mul(&c.dec, c.mul_t)
+        } else if mul_lanes == 0 {
+            assemble_div(&c.dec, c.div_t)
+        } else {
+            (assemble_mul(&c.dec, c.mul_t) & mul_lanes)
+                | (assemble_div(&c.dec, c.div_t) & !mul_lanes)
+        }
+    }
+
+    /// Execute one packed word with per-lane modes: the composition of the
+    /// four stages. Bit-identical to four scalar
+    /// [`simdive`](super::simdive) calls on the unpacked lanes.
+    #[inline]
+    pub fn exec4(&self, mul_lanes: u64, a4: u64, b4: u64) -> u64 {
+        Self::assemble4(self.correct4(Self::approx4(Self::decode4(a4, b4))), mul_lanes)
+    }
+
+    /// All-mul word: skips the div gather and datapath entirely.
+    #[inline]
+    pub fn mul4(&self, a4: u64, b4: u64) -> u64 {
+        let ap = Self::approx4(Self::decode4(a4, b4));
+        assemble_mul(&ap.dec, ap.msum + gather4(&self.mul, ap.idx))
+    }
+
+    /// All-div word: skips the mul gather and datapath entirely.
+    #[inline]
+    pub fn div4(&self, a4: u64, b4: u64) -> u64 {
+        let ap = Self::approx4(Self::decode4(a4, b4));
+        assemble_div(&ap.dec, ap.dbase - gather4(&self.div, ap.idx))
+    }
+}
+
+/// Mul antilog assembly. Carry detection (`ts ≥ 128` ⇒ the fraction adder
+/// carried out) reads bits 7–8 — exact because `ts ≤ 509`. The implicit
+/// leading one is added only on the no-carry side, the exponent is
+/// `e = k1 + k2 + carry ∈ [0, 15]`, and the product is
+/// `(mant << e) >> 7` — identical to `mant · 2^(e − 7)` under floor — run
+/// in 32-bit fields with even/odd lane interleave, then saturated to the
+/// 16-bit result field.
+#[inline(always)]
+fn assemble_mul(d: &Decoded, ts: u64) -> u64 {
+    let cb = ((ts >> 7) | (ts >> 8)) & ONE;
+    let mant = ts + ((cb ^ ONE) << 7);
+    let e = splat16(14) - d.sa - d.sb + cb;
+    let d0 = mant & LOW32;
+    let d1 = (mant >> 16) & LOW32;
+    let e0 = e & LOW32;
+    let e1 = (e >> 16) & LOW32;
+    let q0 = sat16x2((shl_var32(d0, e0) >> 7) & splat32(0x1_FFFF));
+    let q1 = sat16x2((shl_var32(d1, e1) >> 7) & splat32(0x1_FFFF));
+    (q0 | (q1 << 16)) & d.anz & d.bnz
+}
+
+/// Div antilog assembly. Bit 8 of the sentinel sum is the no-borrow flag
+/// (`nb = 1 ⇔ t ≥ 0`); the mantissa drops the sentinel's excess
+/// (`2^8 + t` with `nb` folding the two scalar cases into one), the shift
+/// is `r = 8 − (k1 − k2) − nb ∈ [0, 15]`, and quotients are ≤ 255 so the
+/// divider needs no cap. Dead divisor lanes saturate to 255, dead dividend
+/// lanes zero — `b == 0` wins over `a == 0`, matching the scalar order.
+#[inline(always)]
+fn assemble_div(d: &Decoded, tb: u64) -> u64 {
+    let nb = (tb >> 8) & ONE;
+    let mant = tb - (nb << 7);
+    let r = (splat16(8) + d.sa) - d.sb - nb;
+    let q = shr_var16(mant, r);
+    (q & d.anz & d.bnz) | (splat16(0xFF) & !d.bnz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::simdive::{simdive_div_with, simdive_mul_with};
+    use crate::arith::table::tables_for;
+
+    #[test]
+    fn spread_bytes_layout() {
+        assert_eq!(spread_bytes(0x4433_2211), 0x0044_0033_0022_0011);
+        assert_eq!(spread_bytes(0), 0);
+        assert_eq!(spread_bytes(u32::MAX), 0x00FF_00FF_00FF_00FF);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let vals = [0u64, 255, 43, 128];
+        let w = pack4(&vals);
+        let mut back = [0u64; 4];
+        unpack4(w, &mut back);
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn normalize_matches_scalar_lod() {
+        use std::num::NonZeroU64;
+        for v in 1..=255u64 {
+            let (nv, s) = normalize(pack4(&[v, v, v, v]));
+            let k = crate::arith::lod(NonZeroU64::new(v).unwrap());
+            let want_nv = v << (7 - k);
+            let want_s = (7 - k) as u64;
+            for lane in 0..4 {
+                assert_eq!((nv >> (16 * lane)) & 0xFFFF, want_nv, "nv for {v}");
+                assert_eq!((s >> (16 * lane)) & 0xFFFF, want_s, "s for {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn nz_mask_is_per_field_exact() {
+        assert_eq!(nz_mask16(0), 0);
+        assert_eq!(nz_mask16(pack4(&[1, 0, 255, 0])), 0x0000_FFFF_0000_FFFF);
+        assert_eq!(nz_mask16(pack4(&[255, 255, 255, 255])), u64::MAX);
+    }
+
+    #[test]
+    fn generated_tables_always_admit() {
+        for w in 0..=crate::arith::W_MAX {
+            let k = Swar8::try_new(tables_for(w));
+            assert!(k.is_some(), "generated tables at w={w} must fit the SWAR budget");
+        }
+    }
+
+    #[test]
+    fn out_of_budget_tables_are_rejected() {
+        // 32768 at 12 fractional bits rescales to 1024 in F = 7 units:
+        // past both budgets.
+        let big = CorrectionTables::from_grids(8, [[32_768; 8]; 8], [[-32_768; 8]; 8]);
+        assert!(Swar8::try_new(&big).is_none());
+        // Just inside: mul 255 ⇔ 255 << 5, div −128 ⇔ −128 << 5.
+        let edge = CorrectionTables::from_grids(8, [[255 << 5; 8]; 8], [[-(128 << 5); 8]; 8]);
+        assert!(Swar8::try_new(&edge).is_some());
+        // Just outside on each side.
+        let m = CorrectionTables::from_grids(8, [[256 << 5; 8]; 8], [[0; 8]; 8]);
+        assert!(Swar8::try_new(&m).is_none());
+        let d = CorrectionTables::from_grids(8, [[0; 8]; 8], [[-(129 << 5); 8]; 8]);
+        assert!(Swar8::try_new(&d).is_none());
+        let pos_div = CorrectionTables::from_grids(8, [[0; 8]; 8], [[32; 8]; 8]);
+        assert!(Swar8::try_new(&pos_div).is_none(), "positive div corrections are off-model");
+    }
+
+    #[test]
+    fn paper_example_all_lanes() {
+        let k = Swar8::try_new(tables_for(8)).unwrap();
+        let a4 = pack4(&[43, 43, 43, 43]);
+        let b4 = pack4(&[10, 10, 10, 10]);
+        let want_m = simdive_mul_with(tables_for(8), 8, 43, 10);
+        let want_d = simdive_div_with(tables_for(8), 8, 43, 10);
+        let mut m = [0u64; 4];
+        let mut d = [0u64; 4];
+        unpack4(k.mul4(a4, b4), &mut m);
+        unpack4(k.div4(a4, b4), &mut d);
+        assert_eq!(m, [want_m; 4]);
+        assert_eq!(d, [want_d; 4]);
+    }
+
+    #[test]
+    fn uniform_entry_points_equal_staged_composition() {
+        let k = Swar8::try_new(tables_for(5)).unwrap();
+        let mut rng = crate::util::Rng::new(0x5A5A);
+        for _ in 0..2_000 {
+            let a: Vec<u64> = (0..4).map(|_| rng.below(256)).collect();
+            let b: Vec<u64> = (0..4).map(|_| rng.below(256)).collect();
+            let (a4, b4) = (pack4(&a), pack4(&b));
+            assert_eq!(k.mul4(a4, b4), k.exec4(u64::MAX, a4, b4));
+            assert_eq!(k.div4(a4, b4), k.exec4(0, a4, b4));
+        }
+    }
+
+    #[test]
+    fn zero_lanes_follow_scalar_conventions() {
+        let t = tables_for(8);
+        let k = Swar8::try_new(t).unwrap();
+        let a4 = pack4(&[0, 99, 0, 255]);
+        let b4 = pack4(&[99, 0, 0, 0]);
+        let mut m = [0u64; 4];
+        let mut d = [0u64; 4];
+        unpack4(k.mul4(a4, b4), &mut m);
+        unpack4(k.div4(a4, b4), &mut d);
+        assert_eq!(m, [0, 0, 0, 0]);
+        assert_eq!(d, [0, 255, 255, 255], "x/0 saturates, 0/x is 0, 0/0 follows b==0 first");
+    }
+}

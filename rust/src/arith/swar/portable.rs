@@ -1,0 +1,113 @@
+//! Optional `std::simd` variant of the 4×8-bit kernel.
+//!
+//! Compiled only with `--features portable-simd` on a nightly toolchain
+//! (`std::simd` is unstable); the `u64` SWAR path in the parent module is
+//! the portable default and the bit-exactness reference. Where the SWAR
+//! path emulates per-lane data flow with guard bits and barrel-stage
+//! masks, this one lets the vector ISA do it: each lane is a `u16` element
+//! of a [`Simd<u16, 4>`], so lane isolation is structural and the variable
+//! shifts are single vector ops.
+//!
+//! The two paths share the correction tables through [`Swar8`] and must
+//! produce identical words; `lanes_match_swar` below pins that whenever
+//! this module is built.
+
+use std::simd::cmp::{SimdOrd, SimdPartialEq, SimdPartialOrd};
+use std::simd::num::SimdUint;
+use std::simd::Simd;
+
+use super::{pack4, unpack4, Swar8};
+
+type V = Simd<u16, 4>;
+
+/// Per-element leading-one distance `7 - lod(v)` for non-zero 8-bit lanes,
+/// as a three-stage conditional-shift ladder (the vector twin of the SWAR
+/// `normalize`). Returns `(nv, s)` with bit 7 of every `nv` lane set.
+#[inline]
+fn normalize(mut v: V) -> (V, V) {
+    let mut s = V::splat(0);
+    for (sh, top) in [(4u16, 0xF0u16), (2, 0xC0), (1, 0x80)] {
+        let absent = (v & V::splat(top)).simd_eq(V::splat(0));
+        v = absent.select(v << V::splat(sh), v);
+        s += absent.select(V::splat(sh), V::splat(0));
+    }
+    (v, s)
+}
+
+/// Execute one packed word with per-lane modes via `std::simd`.
+/// Bit-identical to [`Swar8::exec4`] on the same operands.
+pub fn exec4(k: &Swar8, mul_lanes: u64, a4: u64, b4: u64) -> u64 {
+    let mut a = [0u64; 4];
+    let mut b = [0u64; 4];
+    unpack4(a4, &mut a);
+    unpack4(b4, &mut b);
+    let av = V::from_array(a.map(|v| v as u16));
+    let bv = V::from_array(b.map(|v| v as u16));
+
+    let anz = av.simd_ne(V::splat(0));
+    let bnz = bv.simd_ne(V::splat(0));
+    let (nv1, sa) = normalize(anz.select(av, V::splat(1)));
+    let (nv2, sb) = normalize(bnz.select(bv, V::splat(1)));
+
+    let f1 = nv1 & V::splat(0x7F);
+    let f2 = nv2 & V::splat(0x7F);
+    let idx = ((nv1 >> V::splat(1)) & V::splat(0x38)) | ((nv2 >> V::splat(4)) & V::splat(0x07));
+    let (mc, dc) = k.gather_pair(idx.to_array());
+
+    // Mul datapath: 32-bit lanes give the antilog shift its headroom.
+    let ts = f1 + f2 + mc;
+    let cb = ((ts >> V::splat(7)) | (ts >> V::splat(8))) & V::splat(1);
+    let mant = (ts + ((cb ^ V::splat(1)) << V::splat(7))).cast::<u32>();
+    let e = (V::splat(14) - sa - sb + cb).cast::<u32>();
+    let q = (mant << e) >> Simd::<u32, 4>::splat(7);
+    let mul_q = q.simd_min(Simd::<u32, 4>::splat(0xFFFF)).cast::<u16>();
+    let mul_r = (anz & bnz).select(mul_q, V::splat(0));
+
+    // Div datapath: the +256 bias keeps the difference non-negative and
+    // makes bit 8 the no-borrow flag, exactly as in the SWAR path.
+    let tb = f1 + V::splat(0x100) - f2 - dc;
+    let nb = (tb >> V::splat(8)) & V::splat(1);
+    let dmant = tb - (nb << V::splat(7));
+    let r = V::splat(8) + sa - sb - nb;
+    let div_q = (dmant >> r) & V::splat(0xFF);
+    let div_r = bnz.select(anz.select(div_q, V::splat(0)), V::splat(0xFF));
+
+    let mm = V::from_array(std::array::from_fn(|i| ((mul_lanes >> (16 * i)) & 0xFFFF) as u16));
+    let out = mm.simd_gt(V::splat(0)).select(mul_r, div_r);
+    pack4(&out.to_array().map(u64::from))
+}
+
+impl Swar8 {
+    /// Gather both correction vectors for four table indices.
+    #[inline]
+    fn gather_pair(&self, idx: [u16; 4]) -> (V, V) {
+        let m = V::from_array(idx.map(|i| self.mul[(i & 0x3F) as usize]));
+        let d = V::from_array(idx.map(|i| self.div[(i & 0x3F) as usize]));
+        (m, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{mul_lane_mask, pack4, Swar8};
+    use crate::arith::simd::LaneMode;
+    use crate::arith::table::tables_for;
+
+    #[test]
+    fn lanes_match_swar() {
+        let mut rng = crate::util::Rng::new(0xBEEF);
+        for w in 0..=crate::arith::W_MAX {
+            let k = Swar8::try_new(tables_for(w)).unwrap();
+            for case in 0..4_000u32 {
+                let a: Vec<u64> = (0..4).map(|_| rng.below(256)).collect();
+                let b: Vec<u64> = (0..4).map(|_| rng.below(256)).collect();
+                let modes = std::array::from_fn(|i| {
+                    if (case >> i) & 1 == 0 { LaneMode::Mul } else { LaneMode::Div }
+                });
+                let mask = mul_lane_mask(&modes);
+                let (a4, b4) = (pack4(&a), pack4(&b));
+                assert_eq!(super::exec4(&k, mask, a4, b4), k.exec4(mask, a4, b4));
+            }
+        }
+    }
+}

@@ -419,7 +419,8 @@ mod tests {
         let vals: Vec<u64> = (1..65536u64).step_by(17).collect();
         let outs = sim.run_batch(&[("a", &vals)]);
         for (i, &v) in vals.iter().enumerate() {
-            let (_, want) = crate::arith::frac_aligned(16, v);
+            let (_, want) =
+                crate::arith::frac_aligned(16, std::num::NonZeroU64::new(v).expect("v >= 1"));
             assert_eq!(outs[0].1[i], want, "v={v}");
         }
     }

@@ -25,6 +25,16 @@
 //! * **Drain-on-shutdown.** Dropping the pool disconnects the shard
 //!   queues; each shard finishes every buffered message, flushes its
 //!   residues, and delivers every response before its thread is joined.
+//! * **Staged execution (DESIGN.md §13).** A round's `Four8` words run
+//!   through the SWAR kernel's decode → approx → correct → assemble
+//!   stages *fissioned across the whole round*: each stage is one dense
+//!   loop over every staged word, so the shard overlaps stages across
+//!   consecutive words instead of running each word start-to-finish.
+//!   Per-stage latency rides the `pipe.{decode,approx,correct,assemble}`
+//!   histogram instances; words that can't stage (non-`Four8` configs, or
+//!   tables outside the SWAR budget) fall back to the lane-wise kernel in
+//!   the same round. Either path is bit-identical to
+//!   [`batch::MultiKernel::execute`].
 //! * **Supervision (DESIGN.md §11).** A panic during a shard's emission
 //!   round — injected by the chaos harness or genuine — is caught at the
 //!   round boundary; the emitted-but-unrouted words are re-executed
@@ -36,7 +46,8 @@
 //!   never deliver a response twice.
 
 use crate::arith::batch;
-use crate::arith::simd::LaneMode;
+use crate::arith::simd::{LaneCfg, LaneMode};
+use crate::arith::swar::{self, Swar8};
 use crate::coordinator::packer::{lane_value, Assembled, Assembler, ReqOp, Request};
 use crate::faults::FaultInjector;
 use crate::obs::{self, Counter, Gauge, Hist, Registry, Span, Tiers};
@@ -129,9 +140,18 @@ impl Stats {
 struct ShardObs {
     queue_depth: Arc<Gauge>,
     residue_flushes: Arc<Counter>,
+    /// Packed `Four8` words the staged SWAR pipeline executed.
+    swar_words: Arc<Counter>,
     stage_queue: Arc<Hist>,
     stage_assemble: Arc<Hist>,
     stage_execute: Arc<Hist>,
+    /// Per-stage latency of the staged SWAR pipeline inside the execute
+    /// stage (one `record_ns_n` per round and stage, weighted by the
+    /// round's staged word count).
+    pipe_decode: Arc<Hist>,
+    pipe_approx: Arc<Hist>,
+    pipe_correct: Arc<Hist>,
+    pipe_assemble: Arc<Hist>,
 }
 
 impl ShardObs {
@@ -139,9 +159,14 @@ impl ShardObs {
         ShardObs {
             queue_depth: Arc::new(Gauge::new()),
             residue_flushes: Arc::new(Counter::new()),
+            swar_words: Arc::new(Counter::new()),
             stage_queue: Arc::new(Hist::new()),
             stage_assemble: Arc::new(Hist::new()),
             stage_execute: Arc::new(Hist::new()),
+            pipe_decode: Arc::new(Hist::new()),
+            pipe_approx: Arc::new(Hist::new()),
+            pipe_correct: Arc::new(Hist::new()),
+            pipe_assemble: Arc::new(Hist::new()),
         }
     }
 
@@ -149,9 +174,14 @@ impl ShardObs {
         ShardObs {
             queue_depth: reg.gauge(&format!("shard.{shard}.queue_depth")),
             residue_flushes: reg.counter(&format!("shard.{shard}.residue_flushes")),
+            swar_words: reg.counter(&format!("shard.{shard}.swar_words")),
             stage_queue: reg.hist_instance("stage.queue"),
             stage_assemble: reg.hist_instance("stage.assemble"),
             stage_execute: reg.hist_instance("stage.execute"),
+            pipe_decode: reg.hist_instance("pipe.decode"),
+            pipe_approx: reg.hist_instance("pipe.approx"),
+            pipe_correct: reg.hist_instance("pipe.correct"),
+            pipe_assemble: reg.hist_instance("pipe.assemble"),
         }
     }
 }
@@ -300,9 +330,14 @@ struct ShardCtx {
     kernel: batch::MultiKernel,
     asm: Assembler<(Route, Span)>,
     words: Vec<Assembled<(Route, Span)>>,
-    ws: Vec<u32>,
-    ops: Vec<crate::arith::SimdOp>,
-    operands: Vec<crate::arith::SimdWord>,
+    /// Staged-pipeline scratch: `(word index, mul-lane mask)` of every
+    /// word in this round taking the SWAR path, plus the per-stage state
+    /// vectors the fissioned loops read and write (`staged[si]` ↔
+    /// `dec/appr/corr[si]`).
+    staged: Vec<(usize, u64)>,
+    dec: Vec<swar::Decoded>,
+    appr: Vec<swar::Approxed>,
+    corr: Vec<swar::Corrected>,
     results: Vec<u64>,
     held_rounds: u32,
     shared: Arc<Shared>,
@@ -331,9 +366,10 @@ impl ShardCtx {
             kernel: batch::MultiKernel::new(),
             asm: Assembler::new(),
             words: Vec::new(),
-            ws: Vec::new(),
-            ops: Vec::new(),
-            operands: Vec::new(),
+            staged: Vec::new(),
+            dec: Vec::new(),
+            appr: Vec::new(),
+            corr: Vec::new(),
             results: Vec::new(),
             held_rounds: 0,
             shared,
@@ -401,15 +437,7 @@ impl ShardCtx {
             }
         }
 
-        self.ws.clear();
-        self.ws.extend(self.words.iter().map(|j| j.pw.w));
-        self.ops.clear();
-        self.ops.extend(self.words.iter().map(|j| j.pw.op));
-        self.operands.clear();
-        self.operands.extend(self.words.iter().map(|j| j.pw.word));
-        self.results.clear();
-        self.results.resize(self.words.len(), 0);
-        self.kernel.execute_mixed_into(&self.ws, &self.ops, &self.operands, &mut self.results);
+        self.execute_round();
 
         if let Some(inj) = &self.faults {
             if inj.delay_completion() {
@@ -418,6 +446,88 @@ impl ShardCtx {
         }
 
         self.route_words(t_emit);
+    }
+
+    /// Execute the round's emitted words into `results`.
+    ///
+    /// `Four8` words whose `w`-tier table admits the packed kernel run
+    /// through the staged SWAR pipeline with each stage *fissioned across
+    /// the whole round*: decode over every staged word, then approx over
+    /// every staged word, and so on — four dense, branch-free loops whose
+    /// iterations are independent, so the shard overlaps a stage across
+    /// consecutive words (and LLVM can pipeline the loop bodies) instead
+    /// of dragging each word through all four stages back-to-back.
+    /// Per-stage wall time lands in the `pipe.*` histogram instances,
+    /// weighted by the round's staged word count; the decode stamp also
+    /// covers the eligibility partition.
+    ///
+    /// Words that cannot stage — non-`Four8` lane configs, or a table
+    /// outside the SWAR guard-bit budget — execute lane-wise through
+    /// [`batch::MultiKernel::execute`] in the same round. Both paths are
+    /// bit-identical to the lane-wise kernel (`tests/engine_props.rs`
+    /// pins Sharded ≡ Reference over mixed streams).
+    fn execute_round(&mut self) {
+        self.results.clear();
+        self.results.resize(self.words.len(), 0);
+        self.staged.clear();
+        self.dec.clear();
+        self.appr.clear();
+        self.corr.clear();
+
+        // Stage 1 — decode: partition the round, spread each eligible
+        // word's operand bytes into SWAR fields, mask zero lanes, align
+        // all four lanes into the log domain.
+        let t0 = if self.enabled { obs::now_ns() } else { 0 };
+        for (i, job) in self.words.iter().enumerate() {
+            let pw = &job.pw;
+            if pw.op.cfg == LaneCfg::Four8 && self.kernel.swar8(pw.w).is_some() {
+                self.staged.push((i, swar::mul_lane_mask(&pw.op.modes)));
+                self.dec.push(Swar8::decode4(
+                    swar::spread_bytes(pw.word.a),
+                    swar::spread_bytes(pw.word.b),
+                ));
+            }
+        }
+        let t1 = if self.enabled { obs::now_ns() } else { 0 };
+
+        // Stage 2 — approx: Mitchell's log-domain sums + table indices.
+        self.appr.extend(self.dec.iter().map(|&d| Swar8::approx4(d)));
+        let t2 = if self.enabled { obs::now_ns() } else { 0 };
+
+        // Stage 3 — correct: per-word `w` selects the table bank.
+        for (si, &(wi, _)) in self.staged.iter().enumerate() {
+            let k =
+                self.kernel.swar8(self.words[wi].pw.w).expect("staged words have SWAR tables");
+            self.corr.push(k.correct4(self.appr[si]));
+        }
+        let t3 = if self.enabled { obs::now_ns() } else { 0 };
+
+        // Stage 4 — assemble: antilog, saturate, zero-mask, mode-select.
+        for (si, &(wi, mask)) in self.staged.iter().enumerate() {
+            self.results[wi] = Swar8::assemble4(self.corr[si], mask);
+        }
+        let t4 = if self.enabled { obs::now_ns() } else { 0 };
+
+        // Fallback pass: everything the partition skipped, lane-wise.
+        // `staged` is sorted by word index, so one forward cursor
+        // identifies the staged words without a lookup structure.
+        let mut staged_it = self.staged.iter().peekable();
+        for (i, job) in self.words.iter().enumerate() {
+            if staged_it.peek().is_some_and(|&&(wi, _)| wi == i) {
+                staged_it.next();
+                continue;
+            }
+            self.results[i] = self.kernel.execute(job.pw.w, job.pw.op, job.pw.word);
+        }
+
+        if self.enabled && !self.staged.is_empty() {
+            let n = self.staged.len() as u64;
+            self.obs.swar_words.add(n);
+            self.obs.pipe_decode.record_ns_n(t1.saturating_sub(t0), n);
+            self.obs.pipe_approx.record_ns_n(t2.saturating_sub(t1), n);
+            self.obs.pipe_correct.record_ns_n(t3.saturating_sub(t2), n);
+            self.obs.pipe_assemble.record_ns_n(t4.saturating_sub(t3), n);
+        }
     }
 
     /// Stamp `t_emit` on every routed lane of the emitted words, record
@@ -868,6 +978,15 @@ mod tests {
         assert_eq!(snap.hist("stage.execute").unwrap().count(), 40);
         assert_eq!(snap.gauge("shard.0.queue_depth"), Some(0), "drained after shutdown");
         assert_eq!(snap.gauge("shard.1.queue_depth"), Some(0));
+        // 40 mul8 requests pack into 10 Four8 words, all of which take the
+        // staged SWAR pipeline: the per-shard counter and every pipe stage
+        // histogram must account for exactly those words.
+        let swar_total = snap.counter("shard.0.swar_words").unwrap_or(0)
+            + snap.counter("shard.1.swar_words").unwrap_or(0);
+        assert_eq!(swar_total, 10, "every Four8 word staged through the SWAR pipeline");
+        for stage in ["pipe.decode", "pipe.approx", "pipe.correct", "pipe.assemble"] {
+            assert_eq!(snap.hist(stage).unwrap().count(), 10, "{stage}");
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //!   artifacts (Python never runs on the request path).
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index.
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
 
 pub mod arith;
 pub mod ann;

@@ -45,8 +45,10 @@ pub fn fig1() -> anyhow::Result<String> {
         let mut counts = [[0u64; 8]; 8];
         for a in 1..256u64 {
             for b in 1..256u64 {
-                let (_, fa) = crate::arith::frac_aligned(8, a);
-                let (_, fb) = crate::arith::frac_aligned(8, b);
+                let (_, fa) =
+                    crate::arith::frac_aligned(8, std::num::NonZeroU64::new(a).expect("a >= 1"));
+                let (_, fb) =
+                    crate::arith::frac_aligned(8, std::num::NonZeroU64::new(b).expect("b >= 1"));
                 let (i, j) = ((fa >> 4) as usize, (fb >> 4) as usize);
                 let e = if is_div {
                     (a as f64 / b as f64 - mitchell::div_real(8, a, b)).abs()

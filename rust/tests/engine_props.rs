@@ -80,6 +80,44 @@ fn sharded_stream_bit_identical_across_shard_counts() {
 }
 
 #[test]
+fn sharded_swar_stream_bit_identical_across_shard_counts() {
+    // The SWAR tentpole invariant (DESIGN.md §13): an 8-bit-only mixed
+    // mul/div stream packs entirely into `Four8` words, so every word a
+    // shard executes goes through the staged SWAR pipeline — and the
+    // results must still be exactly the reference's, at any shard count,
+    // with zero operands and adversarial extremes in the mix.
+    let mut rng = Rng::new(SEED_STREAM ^ 0x513A);
+    let extremes = [0u64, 1, 127, 128, 255];
+    let reqs: Vec<Request> = (0..6_000u64)
+        .map(|i| {
+            let (a, b) = if rng.below(5) == 0 {
+                (extremes[rng.below(5) as usize], extremes[rng.below(5) as usize])
+            } else {
+                (rng.below(256), rng.below(256))
+            };
+            Request {
+                id: i,
+                op: if rng.below(2) == 0 { ReqOp::Mul } else { ReqOp::Div },
+                bits: 8,
+                w: rng.below(W_MAX as u64 + 1) as u32,
+                a,
+                b,
+            }
+        })
+        .collect();
+    let oracle = Engine::reference(MulDesign::Accurate, DivDesign::Accurate);
+    let want = oracle.execute_stream(&reqs);
+    for shards in [1usize, 2, 4, 8] {
+        let eng = Engine::sharded(
+            MulDesign::Accurate,
+            DivDesign::Accurate,
+            ShardedConfig { shards, queue_depth: 256, batch: 64 },
+        );
+        assert_eq!(eng.execute_stream(&reqs), want, "SWAR-heavy stream at shards={shards}");
+    }
+}
+
+#[test]
 fn non_simdive_designs_fall_back_bit_exactly_on_sharded() {
     // Designs without a word form (MBM, Mitchell, truncated…) route to
     // the batched slice path inside the sharded backend — same numbers.

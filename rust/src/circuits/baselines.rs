@@ -143,6 +143,8 @@ fn array_mul_core(bits: u32, am: u64, bm: u64, kill_low: usize) -> Netlist {
         }
     }
     nl.output("p", &p);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "array_mul");
     nl
 }
 
@@ -240,6 +242,8 @@ pub fn restoring_div(bits: u32, divisor_bits: u32) -> Netlist {
     let b = nl.input("b", divisor_bits);
     let q = restoring_core(&mut nl, &a, &b);
     nl.output("q", &q);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "restoring_div");
     nl
 }
 
@@ -264,6 +268,8 @@ pub fn mbm_mul(bits: u32) -> Netlist {
     let zero = nl.lut(&[nz1, nz2], |m| m != 3);
     let p = mul_backend(&mut nl, bits, &k1, &k2, &t, zero);
     nl.output("p", &p);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "mbm_mul");
     nl
 }
 
@@ -299,6 +305,8 @@ pub fn inzed_div(bits: u32, divisor_bits: u32) -> Netlist {
     let zero_b = nl.not(nz2);
     let q = div_backend(&mut nl, bits, divisor_bits, &k1, &k2, &r, zero_a, zero_b);
     nl.output("q", &q);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "inzed_div");
     nl
 }
 
@@ -364,6 +372,8 @@ pub fn aaxd_div(bits: u32, divisor_bits: u32, m: u32, n: u32) -> Netlist {
         })
         .collect();
     nl.output("q", &out);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "aaxd_div");
     nl
 }
 
@@ -456,6 +466,8 @@ pub fn simd_accurate_mul() -> Netlist {
         }
     }
     nl.output("p", &p);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "simd_accurate_mul");
     nl
 }
 

@@ -151,6 +151,8 @@ pub fn mul(bits: u32) -> Netlist {
     let zero = nl.lut(&[nz1, nz2], |m| m != 3);
     let p = mul_backend(&mut nl, bits, &k1, &k2, &t, zero);
     nl.output("p", &p);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "mitchell_mul");
     nl
 }
 
@@ -180,6 +182,8 @@ pub fn div(bits: u32, divisor_bits: u32) -> Netlist {
     let zero_b = nl.not(nz2);
     let q = div_backend(&mut nl, bits, divisor_bits, &k1, &k2, &r, zero_a, zero_b);
     nl.output("q", &q);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "mitchell_div");
     nl
 }
 

@@ -74,6 +74,8 @@ pub fn mul(bits: u32, w: u32) -> Netlist {
     let zero = nl.lut(&[nz1, nz2], |m| m != 3);
     let p = mul_backend(&mut nl, bits, &k1, &k2, &t, zero);
     nl.output("p", &p);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "simdive_mul");
     nl
 }
 
@@ -96,6 +98,8 @@ pub fn div(bits: u32, divisor_bits: u32, w: u32) -> Netlist {
     let zero_b = nl.not(nz2);
     let q = div_backend(&mut nl, bits, divisor_bits, &k1, &k2, &r, zero_a, zero_b);
     nl.output("q", &q);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "simdive_div");
     nl
 }
 
@@ -145,6 +149,8 @@ pub fn hybrid(bits: u32, w: u32) -> Netlist {
         })
         .collect();
     nl.output("p", &out);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "simdive_hybrid");
     nl
 }
 
@@ -245,6 +251,8 @@ pub fn simd32_with(table: &CorrectionTables) -> Netlist {
     lane(&mut nl, &mut out64, 24, 8, p3, mode[3]);
 
     nl.output("p", &out64);
+    #[cfg(debug_assertions)]
+    crate::fabric::analyze::debug_validate(&nl, "simdive_simd32");
     nl
 }
 

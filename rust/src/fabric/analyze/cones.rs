@@ -1,0 +1,227 @@
+//! Analysis passes: per-output-bit logic depth and transitive-fanin cone
+//! size, fanout statistics, and critical-path extraction (DESIGN.md §14).
+//!
+//! These passes assume a structurally sound netlist (no out-of-range net
+//! references) — run [`super::lint`] first on untrusted input. Depth and
+//! arrival numbers come from [`crate::fabric::timing::arrivals`], so the
+//! extracted critical path reproduces `timing::analyze` exactly (pinned
+//! by `tests/netlist_lint.rs`).
+
+use crate::fabric::netlist::{Cell, Net, Netlist};
+use crate::fabric::timing::{self, Calibration};
+use std::collections::BTreeMap;
+
+/// Depth and transitive-fanin cone of one primary-output bit.
+#[derive(Clone, Debug)]
+pub struct OutputCone {
+    /// Output bus name.
+    pub bus: String,
+    /// Bit index within the bus (LSB = 0).
+    pub bit: usize,
+    /// The net driving this output bit.
+    pub net: Net,
+    /// Logic depth in LUT levels (carry-chain hops do not add levels,
+    /// matching `timing::analyze`).
+    pub depth: u32,
+    /// LUT6/LUT6_2 cells in the transitive fanin cone.
+    pub cone_luts: u32,
+    /// CARRY4 cells in the transitive fanin cone.
+    pub cone_carry4: u32,
+}
+
+/// Cone/depth analysis over every primary-output bit.
+#[derive(Clone, Debug, Default)]
+pub struct ConeReport {
+    pub per_bit: Vec<OutputCone>,
+    pub max_depth: u32,
+    pub max_cone_luts: u32,
+    pub max_cone_carry4: u32,
+}
+
+/// Compute logic depth and transitive-fanin cone per output bit.
+pub fn cones(nl: &Netlist) -> ConeReport {
+    let n = nl.net_count();
+    let lvl = timing::arrivals(nl, &Calibration::default()).lvl;
+    let mut driver_of: Vec<Option<usize>> = vec![None; n];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for net in cell.drives() {
+            driver_of[net as usize] = Some(ci);
+        }
+    }
+    // Stamped visited sets so the per-bit walks share one allocation.
+    let mut net_stamp = vec![u32::MAX; n];
+    let mut cell_stamp = vec![u32::MAX; nl.cells.len()];
+    let mut report = ConeReport::default();
+    let mut stamp = 0u32;
+    let mut stack: Vec<Net> = Vec::new();
+    for bus in &nl.outputs {
+        for (bit, &net) in bus.nets.iter().enumerate() {
+            let (mut luts, mut carry4) = (0u32, 0u32);
+            stack.clear();
+            stack.push(net);
+            while let Some(cur) = stack.pop() {
+                if net_stamp[cur as usize] == stamp {
+                    continue;
+                }
+                net_stamp[cur as usize] = stamp;
+                let Some(ci) = driver_of[cur as usize] else { continue };
+                if cell_stamp[ci] != stamp {
+                    cell_stamp[ci] = stamp;
+                    match &nl.cells[ci] {
+                        Cell::Lut { .. } | Cell::Lut52 { .. } => luts += 1,
+                        Cell::Carry4 { .. } => carry4 += 1,
+                    }
+                    stack.extend(nl.cells[ci].reads());
+                }
+            }
+            let cone = OutputCone {
+                bus: bus.name.clone(),
+                bit,
+                net,
+                depth: lvl[net as usize],
+                cone_luts: luts,
+                cone_carry4: carry4,
+            };
+            report.max_depth = report.max_depth.max(cone.depth);
+            report.max_cone_luts = report.max_cone_luts.max(cone.cone_luts);
+            report.max_cone_carry4 = report.max_cone_carry4.max(cone.cone_carry4);
+            report.per_bit.push(cone);
+            stamp += 1;
+        }
+    }
+    report
+}
+
+/// Fanout statistics over every driven net (constants excluded — their
+/// fanout is unbounded by construction and says nothing about routing).
+#[derive(Clone, Debug, Default)]
+pub struct FanoutStats {
+    /// Highest fanout observed.
+    pub max: u32,
+    /// A net achieving `max`.
+    pub max_net: Net,
+    /// Mean fanout over all counted nets.
+    pub mean: f64,
+    /// `(fanout, number of nets with that fanout)`, ascending.
+    pub histogram: Vec<(u32, u32)>,
+}
+
+/// Count readers (cell input pins + primary-output bus positions) per
+/// input/cell-driven net and summarize the distribution.
+pub fn fanout(nl: &Netlist) -> FanoutStats {
+    let n = nl.net_count();
+    let mut readers = vec![0u32; n];
+    for cell in &nl.cells {
+        for net in cell.reads() {
+            readers[net as usize] += 1;
+        }
+    }
+    for bus in &nl.outputs {
+        for &net in &bus.nets {
+            readers[net as usize] += 1;
+        }
+    }
+    let mut counted = vec![false; n];
+    for bus in &nl.inputs {
+        for &net in &bus.nets {
+            counted[net as usize] = true;
+        }
+    }
+    for cell in &nl.cells {
+        for net in cell.drives() {
+            counted[net as usize] = true;
+        }
+    }
+    let mut stats = FanoutStats::default();
+    let mut hist: BTreeMap<u32, u32> = BTreeMap::new();
+    let (mut total, mut nets) = (0u64, 0u64);
+    for net in 0..n as u32 {
+        if !counted[net as usize] {
+            continue;
+        }
+        let f = readers[net as usize];
+        *hist.entry(f).or_insert(0) += 1;
+        total += u64::from(f);
+        nets += 1;
+        if f > stats.max {
+            stats.max = f;
+            stats.max_net = net;
+        }
+    }
+    stats.mean = if nets == 0 { 0.0 } else { total as f64 / nets as f64 };
+    stats.histogram = hist.into_iter().collect();
+    stats
+}
+
+/// One cell on the extracted critical path.
+#[derive(Clone, Debug)]
+pub struct PathStep {
+    /// Index into `Netlist::cells`.
+    pub cell: usize,
+    /// Primitive kind ("LUT6" / "LUT6_2" / "CARRY4").
+    pub kind: &'static str,
+    /// The cell output net the path leaves through.
+    pub via: Net,
+    /// Arrival time at `via` (ns).
+    pub arrival_ns: f64,
+}
+
+/// The actual worst cell chain, not just its delay.
+#[derive(Clone, Debug, Default)]
+pub struct CriticalPath {
+    /// Worst arrival over the primary outputs — identical to
+    /// `timing::analyze(..).critical_ns`.
+    pub critical_ns: f64,
+    /// LUT levels on the path — identical to `timing::analyze(..).levels`.
+    pub levels: u32,
+    /// Output bus / bit the path ends on.
+    pub endpoint_bus: String,
+    pub endpoint_bit: usize,
+    /// The input or constant net the path starts from.
+    pub start_net: Net,
+    /// Cells from startpoint to endpoint; consecutive hops inside one
+    /// CARRY4 block are collapsed into a single step.
+    pub steps: Vec<PathStep>,
+}
+
+/// Extract the critical path by walking the per-net predecessor links
+/// recorded by [`timing::arrivals`] back from the worst output bit.
+pub fn critical_path(nl: &Netlist, cal: &Calibration) -> CriticalPath {
+    let ar = timing::arrivals(nl, cal);
+    let mut endpoint: Option<(usize, usize, Net)> = None;
+    let mut best = 0.0f64;
+    for (bi, bus) in nl.outputs.iter().enumerate() {
+        for (bit, &net) in bus.nets.iter().enumerate() {
+            if ar.t[net as usize] > best || endpoint.is_none() {
+                best = ar.t[net as usize];
+                endpoint = Some((bi, bit, net));
+            }
+        }
+    }
+    let Some((bi, bit, net)) = endpoint else {
+        return CriticalPath::default();
+    };
+    let mut path = CriticalPath {
+        critical_ns: ar.t[net as usize],
+        levels: ar.lvl[net as usize],
+        endpoint_bus: nl.outputs[bi].name.clone(),
+        endpoint_bit: bit,
+        start_net: net,
+        steps: Vec::new(),
+    };
+    let mut cur = net;
+    while let Some((pnet, ci)) = ar.pred[cur as usize] {
+        if path.steps.last().map(|s| s.cell) != Some(ci) {
+            path.steps.push(PathStep {
+                cell: ci,
+                kind: nl.cells[ci].kind(),
+                via: cur,
+                arrival_ns: ar.t[cur as usize],
+            });
+        }
+        cur = pnet;
+    }
+    path.steps.reverse();
+    path.start_net = cur;
+    path
+}

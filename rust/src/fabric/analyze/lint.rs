@@ -1,0 +1,495 @@
+//! Structural lint passes over a [`Netlist`] (DESIGN.md §14).
+//!
+//! Every pass returns structured [`Diagnostic`]s instead of panicking, so
+//! the same code serves three callers: the `netlist-check` CLI (reports
+//! and gates on errors), the debug-build validation hooks inside the
+//! circuit generators, and the deliberately-broken netlists in
+//! `tests/netlist_lint.rs`. All passes are bounds-safe — a netlist that
+//! references net ids beyond [`Netlist::net_count`] produces
+//! [`Defect::OutOfRangeNet`] diagnostics and the wild ids are skipped by
+//! the later passes rather than indexing out of bounds.
+//!
+//! Severity split: *errors* are soundness violations no generator may
+//! produce (the builder API upholds them by construction — the sweep in
+//! `tests/netlist_lint.rs` proves it for every design at every width);
+//! *warnings* are mapper-sweepable inefficiencies that do occur in real
+//! designs (dead barrel-mux bits in AAXD's scale-back, the LOD's
+//! fractured position LUT carrying a structurally unused input) and are
+//! reported as counts without failing any gate.
+
+use crate::fabric::netlist::{Cell, Net, Netlist, NET0, NET1};
+use std::fmt;
+
+/// Diagnostic severity. Errors gate `netlist-check` and panic the
+/// debug-build validation hooks; warnings are informational.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// The defect classes the lint passes detect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Defect {
+    /// A cell or IO bus references a net id `>= net_count()`.
+    OutOfRangeNet,
+    /// A used net has no driver: not a constant, not a primary input,
+    /// not any cell's output.
+    UndrivenNet,
+    /// A net with more than one driver (constants and primary inputs
+    /// count as drivers).
+    MultiplyDrivenNet,
+    /// A cell reads a net whose driving cell appears later in the cell
+    /// list — the builder's "topological order" guarantee, checked.
+    TopoViolation,
+    /// LUT arity outside 1..=6, or truth-table bits set beyond `2^arity`.
+    BadTruthTable,
+    /// A CARRY4 cascades from another block's CO[k] with k < 3 —
+    /// mid-block taps have no dedicated CO→CIN route on the fabric.
+    CarryChainBreak,
+    /// Dead logic: a cell outside every primary output's cone of
+    /// influence (a technology mapper would sweep it).
+    UnreachableCell,
+    /// A LUT a mapper could fold: constant truth table, an input the
+    /// truth table does not depend on, or a constant-net input.
+    ConstFoldable,
+}
+
+impl Defect {
+    /// Severity class of this defect (see module docs for the split).
+    pub fn severity(self) -> Severity {
+        match self {
+            Defect::UnreachableCell | Defect::ConstFoldable => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+
+    /// Stable kebab-case slug used in rendered diagnostics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Defect::OutOfRangeNet => "out-of-range-net",
+            Defect::UndrivenNet => "undriven-net",
+            Defect::MultiplyDrivenNet => "multiply-driven-net",
+            Defect::TopoViolation => "topo-violation",
+            Defect::BadTruthTable => "bad-truth-table",
+            Defect::CarryChainBreak => "carry-chain-break",
+            Defect::UnreachableCell => "unreachable-cell",
+            Defect::ConstFoldable => "const-foldable",
+        }
+    }
+}
+
+/// One structured lint finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub defect: Defect,
+    /// Index into `Netlist::cells`, when the finding is about a cell.
+    pub cell: Option<usize>,
+    /// The net involved, when the finding is about a net.
+    pub net: Option<Net>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn severity(&self) -> Severity {
+        self.defect.severity()
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity() {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{sev}[{}]: {}", self.defect.name(), self.message)
+    }
+}
+
+/// The result of running every lint pass.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity() == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// No errors (warnings allowed) — the gate `netlist-check` applies.
+    pub fn is_sound(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    pub fn count_of(&self, defect: Defect) -> usize {
+        self.diagnostics.iter().filter(|d| d.defect == defect).count()
+    }
+
+    /// Render every error, one per line (empty string when sound).
+    pub fn render_errors(&self) -> String {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity() == Severity::Error)
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Run every lint pass over the netlist.
+pub fn lint(nl: &Netlist) -> LintReport {
+    let n = nl.net_count();
+    let in_range = |net: Net| (net as usize) < n;
+    let mut diags = Vec::new();
+
+    // Pass 1 — out-of-range references. Later passes skip wild ids, so a
+    // corrupt netlist yields diagnostics instead of a panic.
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for net in cell.reads().into_iter().chain(cell.drives()) {
+            if !in_range(net) {
+                diags.push(Diagnostic {
+                    defect: Defect::OutOfRangeNet,
+                    cell: Some(ci),
+                    net: Some(net),
+                    message: format!(
+                        "{} cell {ci} references net {net}, but only {n} nets exist",
+                        cell.kind()
+                    ),
+                });
+            }
+        }
+    }
+    for bus in nl.inputs.iter().chain(nl.outputs.iter()) {
+        for &net in &bus.nets {
+            if !in_range(net) {
+                diags.push(Diagnostic {
+                    defect: Defect::OutOfRangeNet,
+                    cell: None,
+                    net: Some(net),
+                    message: format!(
+                        "IO bus '{}' references net {net}, but only {n} nets exist",
+                        bus.name
+                    ),
+                });
+            }
+        }
+    }
+
+    // Driver census: constants and primary inputs are drivers, then every
+    // cell output. `cell_driven` distinguishes topo violations (driven,
+    // but later) from genuinely undriven nets.
+    let mut driver_count = vec![0u32; n];
+    let mut cell_driven = vec![false; n];
+    if n > 0 {
+        driver_count[NET0 as usize] = 1;
+    }
+    if n > 1 {
+        driver_count[NET1 as usize] = 1;
+    }
+    for bus in &nl.inputs {
+        for &net in &bus.nets {
+            if in_range(net) {
+                driver_count[net as usize] += 1;
+            }
+        }
+    }
+    for cell in &nl.cells {
+        for net in cell.drives() {
+            if in_range(net) {
+                driver_count[net as usize] += 1;
+                cell_driven[net as usize] = true;
+            }
+        }
+    }
+
+    // Pass 2 — multiply-driven nets.
+    for net in 0..n as u32 {
+        if driver_count[net as usize] > 1 {
+            diags.push(Diagnostic {
+                defect: Defect::MultiplyDrivenNet,
+                cell: None,
+                net: Some(net),
+                message: format!(
+                    "net {net} has {} drivers (constants and primary inputs count as one)",
+                    driver_count[net as usize]
+                ),
+            });
+        }
+    }
+
+    // Pass 3 — undriven-net use, reported once per net at its first use.
+    let mut undriven_seen = vec![false; n];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for net in cell.reads() {
+            if in_range(net) && driver_count[net as usize] == 0 && !undriven_seen[net as usize] {
+                undriven_seen[net as usize] = true;
+                diags.push(Diagnostic {
+                    defect: Defect::UndrivenNet,
+                    cell: Some(ci),
+                    net: Some(net),
+                    message: format!(
+                        "net {net}, read by {} cell {ci}, has no driver",
+                        cell.kind()
+                    ),
+                });
+            }
+        }
+    }
+    for bus in &nl.outputs {
+        for &net in &bus.nets {
+            if in_range(net) && driver_count[net as usize] == 0 && !undriven_seen[net as usize] {
+                undriven_seen[net as usize] = true;
+                diags.push(Diagnostic {
+                    defect: Defect::UndrivenNet,
+                    cell: None,
+                    net: Some(net),
+                    message: format!("net {net}, on output bus '{}', has no driver", bus.name),
+                });
+            }
+        }
+    }
+
+    // Pass 4 — topological order: a cell may only read nets defined by
+    // constants, inputs, or *earlier* cells (the invariant `Simulator`'s
+    // single linear pass relies on).
+    let mut defined = vec![false; n];
+    if n > 0 {
+        defined[NET0 as usize] = true;
+    }
+    if n > 1 {
+        defined[NET1 as usize] = true;
+    }
+    for bus in &nl.inputs {
+        for &net in &bus.nets {
+            if in_range(net) {
+                defined[net as usize] = true;
+            }
+        }
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        for net in cell.reads() {
+            if in_range(net) && !defined[net as usize] && cell_driven[net as usize] {
+                diags.push(Diagnostic {
+                    defect: Defect::TopoViolation,
+                    cell: Some(ci),
+                    net: Some(net),
+                    message: format!(
+                        "{} cell {ci} reads net {net} before its driving cell runs",
+                        cell.kind()
+                    ),
+                });
+            }
+        }
+        for net in cell.drives() {
+            if in_range(net) {
+                defined[net as usize] = true;
+            }
+        }
+    }
+
+    // Pass 5 — truth-table/arity consistency. Cells flagged here are
+    // excluded from the const-foldable pass to avoid cascading noise.
+    let mut bad_truth = vec![false; nl.cells.len()];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        let mut bad = |msg: String| {
+            bad_truth[ci] = true;
+            diags.push(Diagnostic {
+                defect: Defect::BadTruthTable,
+                cell: Some(ci),
+                net: None,
+                message: msg,
+            });
+        };
+        match cell {
+            Cell::Lut { inputs, truth, .. } => {
+                let k = inputs.len();
+                if k == 0 || k > 6 {
+                    bad(format!("LUT6 cell {ci} has arity {k} (must be 1..=6)"));
+                } else if k < 6 && (truth >> (1u64 << k)) != 0 {
+                    bad(format!(
+                        "LUT6 cell {ci} (arity {k}) has truth bits set beyond entry 2^{k}"
+                    ));
+                }
+            }
+            Cell::Lut52 { inputs, truth5, truth6, .. } => {
+                let k = inputs.len();
+                if k == 0 || k > 6 {
+                    bad(format!("LUT6_2 cell {ci} has arity {k} (must be 1..=6)"));
+                } else {
+                    let k5 = k.min(5);
+                    if k5 < 5 && (truth5 >> (1u32 << k5)) != 0 {
+                        bad(format!(
+                            "LUT6_2 cell {ci}: O5 truth has bits set beyond entry 2^{k5}"
+                        ));
+                    }
+                    if k < 6 && (truth6 >> (1u64 << k)) != 0 {
+                        bad(format!(
+                            "LUT6_2 cell {ci}: O6 truth has bits set beyond entry 2^{k}"
+                        ));
+                    }
+                }
+            }
+            Cell::Carry4 { .. } => {}
+        }
+    }
+
+    // Pass 6 — CARRY4 chain continuity: a cascaded block must take its
+    // CIN from a CO[3] (or a LUT/constant/input net); CO[0..3] taps have
+    // no dedicated route to a CIN pin on the 7-series fabric.
+    let mut co_pos: Vec<Option<(usize, usize)>> = vec![None; n];
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if let Cell::Carry4 { co, .. } = cell {
+            for (k, &net) in co.iter().enumerate() {
+                if in_range(net) {
+                    co_pos[net as usize] = Some((ci, k));
+                }
+            }
+        }
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if let Cell::Carry4 { cin, .. } = cell {
+            if in_range(*cin) {
+                if let Some((src, k)) = co_pos[*cin as usize] {
+                    if k < 3 {
+                        diags.push(Diagnostic {
+                            defect: Defect::CarryChainBreak,
+                            cell: Some(ci),
+                            net: Some(*cin),
+                            message: format!(
+                                "CARRY4 cell {ci} cascades from CO[{k}] of cell {src}; \
+                                 blocks must chain from CO[3]"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Pass 7 — cone of influence from the primary outputs, walked in
+    // reverse topological order: a cell is live iff one of its outputs is
+    // needed, and a live cell makes every net it reads needed.
+    let mut needed = vec![false; n];
+    for bus in &nl.outputs {
+        for &net in &bus.nets {
+            if in_range(net) {
+                needed[net as usize] = true;
+            }
+        }
+    }
+    let mut live = vec![false; nl.cells.len()];
+    for (ci, cell) in nl.cells.iter().enumerate().rev() {
+        if cell.drives().into_iter().any(|net| in_range(net) && needed[net as usize]) {
+            live[ci] = true;
+            for net in cell.reads() {
+                if in_range(net) {
+                    needed[net as usize] = true;
+                }
+            }
+        }
+    }
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if !live[ci] {
+            diags.push(Diagnostic {
+                defect: Defect::UnreachableCell,
+                cell: Some(ci),
+                net: None,
+                message: format!(
+                    "{} cell {ci} is outside every primary output's cone (dead logic)",
+                    cell.kind()
+                ),
+            });
+        }
+    }
+
+    // Pass 8 — const-foldable LUTs. One diagnostic per cell, first reason
+    // found. LUT6_2 cells legitimately keep constant-net inputs (ternary
+    // adders over constant buses) and half-unused inputs (O5-only pins),
+    // so only inputs unused by *both* halves and all-constant pairs are
+    // flagged there.
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        if bad_truth[ci] {
+            continue;
+        }
+        match cell {
+            Cell::Lut { inputs, truth, .. } => {
+                let k = inputs.len();
+                let reason = if *truth == 0 || *truth == full_mask(k) {
+                    Some(format!("LUT6 cell {ci} computes a constant"))
+                } else if let Some(i) = (0..k).find(|&i| truth_independent(*truth, k, i)) {
+                    Some(format!(
+                        "LUT6 cell {ci}: truth table is independent of input {i}"
+                    ))
+                } else {
+                    inputs.iter().position(|&x| x == NET0 || x == NET1).map(|i| {
+                        format!("LUT6 cell {ci}: input {i} is a constant net")
+                    })
+                };
+                if let Some(message) = reason {
+                    diags.push(Diagnostic {
+                        defect: Defect::ConstFoldable,
+                        cell: Some(ci),
+                        net: None,
+                        message,
+                    });
+                }
+            }
+            Cell::Lut52 { inputs, truth5, truth6, .. } => {
+                let k = inputs.len();
+                let k5 = k.min(5);
+                let const5 = *truth5 == 0 || u64::from(*truth5) == full_mask(k5);
+                let const6 = *truth6 == 0 || *truth6 == full_mask(k);
+                let reason = if const5 && const6 {
+                    Some(format!("LUT6_2 cell {ci} computes two constants"))
+                } else {
+                    (0..k)
+                        .find(|&i| {
+                            let unused6 = truth_independent(*truth6, k, i);
+                            let unused5 =
+                                i >= k5 || truth_independent(u64::from(*truth5), k5, i);
+                            unused6 && unused5
+                        })
+                        .map(|i| {
+                            format!("LUT6_2 cell {ci}: input {i} is unused by both O5 and O6")
+                        })
+                };
+                if let Some(message) = reason {
+                    diags.push(Diagnostic {
+                        defect: Defect::ConstFoldable,
+                        cell: Some(ci),
+                        net: None,
+                        message,
+                    });
+                }
+            }
+            Cell::Carry4 { .. } => {}
+        }
+    }
+
+    LintReport { diagnostics: diags }
+}
+
+/// All-ones truth table over `2^arity` entries.
+fn full_mask(arity: usize) -> u64 {
+    if arity >= 6 {
+        u64::MAX
+    } else {
+        (1u64 << (1usize << arity)) - 1
+    }
+}
+
+/// True when the truth table over `arity` inputs does not depend on
+/// input `i`.
+fn truth_independent(truth: u64, arity: usize, i: usize) -> bool {
+    for m in 0..(1u64 << arity) {
+        if (truth >> m) & 1 != (truth >> (m ^ (1 << i))) & 1 {
+            return false;
+        }
+    }
+    true
+}

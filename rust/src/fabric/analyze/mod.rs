@@ -1,0 +1,45 @@
+//! Multi-pass static analysis over [`crate::fabric::Netlist`]
+//! (DESIGN.md §14) — the soundness gate under every area/timing/power
+//! number the fabric reports, and the substrate for the ROADMAP-4
+//! transformation passes (which will rerun these passes as their
+//! no-regression gate).
+//!
+//! * [`lint`] — structural lint: undriven/multiply-driven nets,
+//!   topological-order violations, truth-table/arity mismatches, CARRY4
+//!   chain breaks, dead cells, const-foldable LUTs. Structured
+//!   [`Diagnostic`]s with an error/warning severity split.
+//! * [`cones`] — per-output-bit logic depth + transitive-fanin cone
+//!   size, fanout histogram.
+//! * [`critical_path`] — the worst cell chain itself, reproducing
+//!   `timing::analyze` delay/levels exactly.
+//!
+//! Entry points: `simdive netlist-check` (CLI, via [`crate::report::fabric`]),
+//! [`debug_validate`] (debug-build hooks in every circuit generator), and
+//! `tests/netlist_lint.rs` (per-defect-class proof netlists).
+
+pub mod cones;
+pub mod lint;
+
+pub use cones::{
+    cones, critical_path, fanout, ConeReport, CriticalPath, FanoutStats, OutputCone, PathStep,
+};
+pub use lint::{lint, Defect, Diagnostic, LintReport, Severity};
+
+use crate::fabric::Netlist;
+
+/// Debug-build validation hook for the circuit generators: panic with the
+/// rendered diagnostics if the netlist has any lint *error*. Warnings
+/// (dead cells, foldable LUTs) are expected on some real designs and do
+/// not fire this. Called under `#[cfg(debug_assertions)]` from every
+/// `circuits::{simdive, mitchell, baselines}` constructor, so each test
+/// that builds a design lints it for free.
+pub fn debug_validate(nl: &Netlist, name: &str) {
+    let report = lint(nl);
+    if !report.is_sound() {
+        panic!(
+            "netlist '{name}' failed structural lint ({} errors):\n{}",
+            report.error_count(),
+            report.render_errors()
+        );
+    }
+}

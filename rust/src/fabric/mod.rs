@@ -14,12 +14,16 @@
 //! * [`timing`] — static timing analysis with calibrated primitive delays
 //!   (the "Delay (ns)" column);
 //! * [`power`] — toggle-based dynamic power + per-LUT static leakage
-//!   (the "Power (mW)" column), with energy = power × delay per op.
+//!   (the "Power (mW)" column), with energy = power × delay per op;
+//! * [`analyze`] — multi-pass static analysis: structural lint
+//!   (structured diagnostics), cone/depth/fanout analysis, and
+//!   critical-path extraction (DESIGN.md §14).
 //!
 //! Calibration: the four timing/power constants are fitted once against
 //! the paper's two accurate-IP baselines (Table 2); all approximate-design
 //! rows are then *predictions* of this model. See `timing::Calibration`.
 
+pub mod analyze;
 pub mod area;
 pub mod calibrate;
 pub mod netlist;

@@ -32,6 +32,45 @@ pub enum Cell {
     Carry4 { s: [Net; 4], di: [Net; 4], cin: Net, o: [Net; 4], co: [Net; 4] },
 }
 
+impl Cell {
+    /// Primitive name as it would appear in an EDIF/UNISIM netlist.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Cell::Lut { .. } => "LUT6",
+            Cell::Lut52 { .. } => "LUT6_2",
+            Cell::Carry4 { .. } => "CARRY4",
+        }
+    }
+
+    /// Every net this cell reads (input pins, in pin order).
+    pub fn reads(&self) -> Vec<Net> {
+        match self {
+            Cell::Lut { inputs, .. } | Cell::Lut52 { inputs, .. } => inputs.clone(),
+            Cell::Carry4 { s, di, cin, .. } => {
+                let mut r = Vec::with_capacity(9);
+                r.extend_from_slice(s);
+                r.extend_from_slice(di);
+                r.push(*cin);
+                r
+            }
+        }
+    }
+
+    /// Every net this cell drives (output pins).
+    pub fn drives(&self) -> Vec<Net> {
+        match self {
+            Cell::Lut { out, .. } => vec![*out],
+            Cell::Lut52 { out5, out6, .. } => vec![*out5, *out6],
+            Cell::Carry4 { o, co, .. } => {
+                let mut d = Vec::with_capacity(8);
+                d.extend_from_slice(o);
+                d.extend_from_slice(co);
+                d
+            }
+        }
+    }
+}
+
 /// A named bus of nets (LSB first).
 #[derive(Clone, Debug)]
 pub struct Bus {
@@ -64,6 +103,25 @@ impl Netlist {
         n
     }
 
+    /// Allocate a net with no driver. Only the analysis tests need this —
+    /// the builder methods drive every net they hand out, and a fresh net
+    /// left undriven is exactly what `analyze::lint` exists to flag.
+    pub fn fresh_net(&mut self) -> Net {
+        self.fresh()
+    }
+
+    /// Debug check: every referenced net must have been allocated already.
+    /// Malformed netlists fail at the build site instead of deep inside
+    /// `Simulator`/`timing` (release builds rely on `analyze::lint`).
+    fn check_declared(&self, nets: &[Net], ctx: &str) {
+        debug_assert!(
+            nets.iter().all(|&n| n < self.next_net),
+            "{ctx} references undeclared net {:?} (next_net = {})",
+            nets.iter().find(|&&n| n >= self.next_net),
+            self.next_net
+        );
+    }
+
     /// Declare a primary input bus of `width` nets (LSB first).
     pub fn input(&mut self, name: &str, width: u32) -> Vec<Net> {
         let nets: Vec<Net> = (0..width).map(|_| self.fresh()).collect();
@@ -73,6 +131,7 @@ impl Netlist {
 
     /// Declare a primary output bus.
     pub fn output(&mut self, name: &str, nets: &[Net]) {
+        self.check_declared(nets, "output()");
         self.outputs.push(Bus { name: name.into(), nets: nets.to_vec() });
     }
 
@@ -93,6 +152,7 @@ impl Netlist {
 
     /// LUT from a raw truth table (constant inputs folded).
     pub fn lut_raw(&mut self, inputs: &[Net], truth: u64) -> Net {
+        self.check_declared(inputs, "lut()");
         let (inputs, truth) = fold_constants(inputs, truth);
         if inputs.is_empty() {
             return if truth & 1 == 1 { NET1 } else { NET0 };
@@ -123,6 +183,7 @@ impl Netlist {
         F6: Fn(u32) -> bool,
     {
         assert!(!inputs.is_empty() && inputs.len() <= 6, "LUT6_2 arity {}", inputs.len());
+        self.check_declared(inputs, "lut52()");
         let arity5 = inputs.len().min(5);
         let mut t5 = 0u32;
         for m in 0..(1u32 << arity5) {
@@ -162,6 +223,9 @@ impl Netlist {
     /// One CARRY4 block. `s`/`di` are the per-bit select/data inputs.
     /// Returns `(o, co)`.
     pub fn carry4(&mut self, s: [Net; 4], di: [Net; 4], cin: Net) -> ([Net; 4], [Net; 4]) {
+        self.check_declared(&s, "carry4() S");
+        self.check_declared(&di, "carry4() DI");
+        self.check_declared(&[cin], "carry4() CIN");
         let o = [self.fresh(), self.fresh(), self.fresh(), self.fresh()];
         let co = [self.fresh(), self.fresh(), self.fresh(), self.fresh()];
         self.cells.push(Cell::Carry4 { s, di, cin, o, co });

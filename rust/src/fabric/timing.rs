@@ -17,7 +17,7 @@
 //! model produces is a prediction. Defaults below are standard Virtex-7
 //! data-sheet magnitudes (LUT ≈ 0.12 ns, net ≈ 0.6 ns, carry ≈ 30 ps/bit).
 
-use super::netlist::{Cell, Netlist};
+use super::netlist::{Cell, Net, Netlist};
 
 /// Calibrated primitive delays (ns) and power coefficients.
 #[derive(Clone, Copy, Debug)]
@@ -58,57 +58,106 @@ pub struct TimingReport {
     pub levels: u32,
 }
 
-/// Propagate arrival times and return the critical path.
-pub fn analyze(nl: &Netlist, cal: &Calibration) -> TimingReport {
-    let mut t = vec![0.0f64; nl.net_count()];
-    let mut lvl = vec![0u32; nl.net_count()];
-    for cell in &nl.cells {
+/// Per-net arrival times, logic levels, and critical-predecessor links —
+/// the full propagation state behind [`analyze`], shared with the
+/// critical-path extraction in [`crate::fabric::analyze::cones`].
+#[derive(Clone, Debug)]
+pub struct Arrivals {
+    /// Arrival time per net (ns); inputs and constants arrive at 0.
+    pub t: Vec<f64>,
+    /// Logic level (LUT hops) per net.
+    pub lvl: Vec<u32>,
+    /// For each cell-driven net: the input net whose arrival set its
+    /// time, and the driving cell's index. `None` for inputs/constants.
+    pub pred: Vec<Option<(Net, usize)>>,
+}
+
+/// Propagate arrival times through the netlist in one topological pass,
+/// recording per-net predecessors. The arithmetic is identical to what
+/// [`analyze`] reports (which is now a thin wrapper over this).
+pub fn arrivals(nl: &Netlist, cal: &Calibration) -> Arrivals {
+    let n = nl.net_count();
+    let mut t = vec![0.0f64; n];
+    let mut lvl = vec![0u32; n];
+    let mut pred: Vec<Option<(Net, usize)>> = vec![None; n];
+    for (ci, cell) in nl.cells.iter().enumerate() {
         match cell {
             Cell::Lut { inputs, out, .. } => {
-                let (mut a, mut l) = (0.0f64, 0u32);
-                for &i in inputs {
-                    a = a.max(t[i as usize]);
-                    l = l.max(lvl[i as usize]);
-                }
+                let (a, l, p) = worst_input(&t, &lvl, inputs);
                 t[*out as usize] = a + cal.t_lut + cal.t_net;
                 lvl[*out as usize] = l + 1;
+                pred[*out as usize] = p.map(|p| (p, ci));
             }
             Cell::Lut52 { inputs, out5, out6, .. } => {
-                let (mut a, mut l) = (0.0f64, 0u32);
-                for &i in inputs {
-                    a = a.max(t[i as usize]);
-                    l = l.max(lvl[i as usize]);
-                }
+                let (a, l, p) = worst_input(&t, &lvl, inputs);
                 for o in [*out5, *out6] {
                     t[o as usize] = a + cal.t_lut + cal.t_net;
                     lvl[o as usize] = l + 1;
+                    pred[o as usize] = p.map(|p| (p, ci));
                 }
             }
             Cell::Carry4 { s, di, cin, o, co } => {
                 let mut carry_t = t[*cin as usize];
                 let mut carry_l = lvl[*cin as usize];
+                // The net the chain's current worst arrival came through.
+                let mut carry_p = *cin;
                 for k in 0..4 {
-                    let sd = t[s[k] as usize].max(t[di[k] as usize]);
+                    let (sd, sdp) = if t[s[k] as usize] >= t[di[k] as usize] {
+                        (t[s[k] as usize], s[k])
+                    } else {
+                        (t[di[k] as usize], di[k])
+                    };
                     let sl = lvl[s[k] as usize].max(lvl[di[k] as usize]);
                     // CO_k: worst of incoming carry and this bit's S/DI.
-                    carry_t = carry_t.max(sd) + cal.t_carry_bit;
+                    if sd > carry_t {
+                        carry_t = sd;
+                        carry_p = sdp;
+                    }
+                    carry_t += cal.t_carry_bit;
                     carry_l = carry_l.max(sl);
                     t[co[k] as usize] = carry_t;
                     lvl[co[k] as usize] = carry_l;
+                    pred[co[k] as usize] = Some((carry_p, ci));
                     // O_k = S_k ⊕ C_k through the XOR mux.
-                    t[o[k] as usize] =
-                        t[s[k] as usize].max(carry_t - cal.t_carry_bit) + cal.t_carry_out;
+                    let entry = carry_t - cal.t_carry_bit;
+                    if t[s[k] as usize] >= entry {
+                        t[o[k] as usize] = t[s[k] as usize] + cal.t_carry_out;
+                        pred[o[k] as usize] = Some((s[k], ci));
+                    } else {
+                        t[o[k] as usize] = entry + cal.t_carry_out;
+                        pred[o[k] as usize] = Some((carry_p, ci));
+                    }
                     lvl[o[k] as usize] = carry_l;
+                    carry_p = co[k];
                 }
             }
         }
     }
+    Arrivals { t, lvl, pred }
+}
+
+/// Worst (arrival, level) over a LUT's inputs plus the argmax net.
+fn worst_input(t: &[f64], lvl: &[u32], inputs: &[Net]) -> (f64, u32, Option<Net>) {
+    let (mut a, mut l, mut p) = (0.0f64, 0u32, None);
+    for &i in inputs {
+        if p.is_none() || t[i as usize] > a {
+            a = t[i as usize];
+            p = Some(i);
+        }
+        l = l.max(lvl[i as usize]);
+    }
+    (a, l, p)
+}
+
+/// Propagate arrival times and return the critical path.
+pub fn analyze(nl: &Netlist, cal: &Calibration) -> TimingReport {
+    let ar = arrivals(nl, cal);
     let mut rep = TimingReport::default();
     for bus in &nl.outputs {
         for &n in &bus.nets {
-            if t[n as usize] > rep.critical_ns {
-                rep.critical_ns = t[n as usize];
-                rep.levels = lvl[n as usize];
+            if ar.t[n as usize] > rep.critical_ns {
+                rep.critical_ns = ar.t[n as usize];
+                rep.levels = ar.lvl[n as usize];
             }
         }
     }

@@ -39,6 +39,11 @@ fn usage() -> ! {
          \ttrace --addr ADDR [--chrome] [--out PATH]\n\
          \t                       drain the sampled trace ring as JSONL\n\
          \t                       (or chrome://tracing JSON with --chrome)\n\
+         \tnetlist-check [--design mul|div|all] [--bits 8|16|32|all]\n\
+         \t              [--report [--out PATH]]\n\
+         \t                       structural lint + cone/critical-path sweep\n\
+         \t                       over the generated designs; --report writes\n\
+         \t                       BENCH_fabric.json; exits non-zero on lint errors\n\
          \tall                    every table + figure in sequence"
     );
     std::process::exit(2)
@@ -109,6 +114,7 @@ fn main() -> anyhow::Result<()> {
         "loadgen" => loadgen(&args)?,
         "stats" => stats_cmd(&args)?,
         "trace" => trace_cmd(&args)?,
+        "netlist-check" => netlist_check(&args)?,
         "all" => {
             let samples = arg_u64(&args, "--samples", report::table2::ERROR_SAMPLES);
             println!("{}", report::table2::render(samples));
@@ -406,6 +412,48 @@ fn trace_cmd(args: &[String]) -> anyhow::Result<()> {
             eprintln!("trace: {} sampled events -> {p}", events.len());
         }
     }
+    Ok(())
+}
+
+/// `netlist-check`: run the static-analysis sweep (DESIGN.md §14) over
+/// the generated designs and gate on lint *errors* (warnings — dead cells
+/// a mapper would sweep, foldable LUTs — are reported as counts). With
+/// `--report`, write the `BENCH_fabric.json` artifact CI commits.
+fn netlist_check(args: &[String]) -> anyhow::Result<()> {
+    let design = arg_str(args, "--design", "all");
+    anyhow::ensure!(
+        matches!(design, "mul" | "div" | "all"),
+        "--design must be mul, div or all (got '{design}')"
+    );
+    let bits_list: Vec<u32> = match arg_str(args, "--bits", "all") {
+        "all" => vec![8, 16, 32],
+        "8" => vec![8],
+        "16" => vec![16],
+        "32" => vec![32],
+        other => anyhow::bail!("--bits must be 8, 16, 32 or all (got '{other}')"),
+    };
+    let cal = simdive::fabric::calibrate::fitted();
+    let rows = report::fabric::sweep(&bits_list, design, cal);
+    print!("{}", report::fabric::render(&rows));
+    let errors: usize = rows.iter().map(|r| r.lint_errors).sum();
+    let warnings: usize = rows.iter().map(|r| r.lint_warnings).sum();
+    println!(
+        "netlist-check: {} designs, {} lint errors, {} warnings",
+        rows.len(),
+        errors,
+        warnings
+    );
+    if args.iter().any(|a| a == "--report") {
+        let out_path = match arg_str(args, "--out", "") {
+            "" => simdive::util::repo_root().join("BENCH_fabric.json"),
+            p => std::path::PathBuf::from(p),
+        };
+        let json = report::fabric::to_json(&rows);
+        std::fs::write(&out_path, &json)
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", out_path.display()))?;
+        println!("wrote {}", out_path.display());
+    }
+    anyhow::ensure!(errors == 0, "netlist-check: {errors} lint errors");
     Ok(())
 }
 

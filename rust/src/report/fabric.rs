@@ -1,0 +1,247 @@
+//! `netlist-check` sweep: static-analysis cost report over every
+//! generated design (DESIGN.md §14).
+//!
+//! Each design is linted ([`crate::fabric::analyze::lint`]) and
+//! characterized with the same area/timing/power models Tables 2–3 use,
+//! plus the cone/depth and critical-path passes. `to_json` renders the
+//! append-only `BENCH_fabric.json` artifact (schema `simdive-fabric-v1`)
+//! CI commits alongside `BENCH_hotpath.json` / `BENCH_serve.json`, so
+//! every future netlist rewrite (ROADMAP item 4) diffs against a pinned
+//! baseline.
+
+use crate::circuits::{baselines, BuiltCircuit, CircuitKind};
+use crate::fabric::{analyze, area, power, timing::Calibration};
+
+/// Paper-reported figure for designs the paper's Table 2 characterizes at
+/// the 16-bit operating point (LUTs only where the paper gives an area).
+#[derive(Clone, Copy, Debug)]
+pub struct PaperRef {
+    pub luts: Option<f64>,
+    pub delay_ns: f64,
+    pub power_mw: f64,
+}
+
+/// Table-2 reference row for a design name, where one exists.
+pub fn paper_ref(name: &str) -> Option<PaperRef> {
+    match name {
+        "accurate_mul_16" => Some(PaperRef { luts: Some(287.0), delay_ns: 6.4, power_mw: 47.8 }),
+        "accurate_div_16_8" => Some(PaperRef { luts: Some(168.0), delay_ns: 21.4, power_mw: 24.6 }),
+        "mitchell_mul_16" => Some(PaperRef { luts: None, delay_ns: 4.7, power_mw: 35.5 }),
+        "mitchell_div_16_8" => Some(PaperRef { luts: None, delay_ns: 5.3, power_mw: 20.3 }),
+        _ => None,
+    }
+}
+
+/// One design's static-analysis + model figures.
+#[derive(Clone, Debug)]
+pub struct DesignRow {
+    pub name: String,
+    pub bits: u32,
+    pub luts: u32,
+    pub carry4: u32,
+    pub slices: u32,
+    pub max_depth: u32,
+    pub max_cone_luts: u32,
+    pub max_cone_carry4: u32,
+    pub critical_ns: f64,
+    /// Cells on the extracted critical path (CARRY4 blocks collapsed).
+    pub critical_path_cells: usize,
+    pub power_mw: f64,
+    pub energy_pj: f64,
+    pub lint_errors: usize,
+    pub lint_warnings: usize,
+    pub paper: Option<PaperRef>,
+}
+
+/// Every generated design at one operand width — the Tables 2–3 catalog
+/// plus the 32-bit SIMD units where the width admits them.
+pub fn all_designs(bits: u32) -> Vec<BuiltCircuit> {
+    let db = bits / 2;
+    let mut kinds = vec![
+        CircuitKind::AccurateMul,
+        CircuitKind::AccurateDiv { divisor_bits: db },
+        CircuitKind::MitchellMul,
+        CircuitKind::MitchellDiv { divisor_bits: db },
+        CircuitKind::MbmMul,
+        CircuitKind::InzedDiv { divisor_bits: db },
+        CircuitKind::CaMul,
+        CircuitKind::TruncMul { seven_a: true, seven_b: true },
+        CircuitKind::TruncMul { seven_a: false, seven_b: true },
+        CircuitKind::SimdiveMul { w: 8 },
+        CircuitKind::SimdiveDiv { divisor_bits: db, w: 8 },
+        CircuitKind::SimdiveHybrid { w: 8 },
+    ];
+    // AAXD keep-widths follow the paper's configurations per operand size.
+    match bits {
+        8 => kinds.push(CircuitKind::AaxdDiv { divisor_bits: db, m: 6, n: 3 }),
+        16 => {
+            kinds.push(CircuitKind::AaxdDiv { divisor_bits: db, m: 12, n: 6 });
+            kinds.push(CircuitKind::AaxdDiv { divisor_bits: db, m: 8, n: 4 });
+        }
+        _ => kinds.push(CircuitKind::AaxdDiv { divisor_bits: db, m: 24, n: 12 }),
+    }
+    let mut designs: Vec<BuiltCircuit> = kinds.iter().map(|k| k.build(bits)).collect();
+    if bits == 32 {
+        designs.push(CircuitKind::SimdiveSimd32 { w: 8 }.build(bits));
+        designs.push(BuiltCircuit {
+            name: "simd_accurate_mul_32".into(),
+            netlist: baselines::simd_accurate_mul(),
+        });
+    }
+    designs
+}
+
+/// True when `name` matches the CLI `--design` filter ("mul" / "div" /
+/// "all"); the hybrid and SIMD units contain both datapaths and match
+/// either filter.
+fn matches_filter(name: &str, filter: &str) -> bool {
+    match filter {
+        "all" => true,
+        // Anchor on the "_mul"/"_div" name segment — "simdive" itself
+        // contains "div", so a bare substring match would be wrong.
+        f => {
+            name.contains(&format!("_{f}")) || name.contains("hybrid") || name.contains("simd32")
+        }
+    }
+}
+
+/// Lint + characterize every design at each width, filtered by
+/// `--design`.
+pub fn sweep(bits_list: &[u32], filter: &str, cal: &Calibration) -> Vec<DesignRow> {
+    let mut rows = Vec::new();
+    for &bits in bits_list {
+        for bc in all_designs(bits) {
+            if !matches_filter(&bc.name, filter) {
+                continue;
+            }
+            let nl = &bc.netlist;
+            let lint = analyze::lint(nl);
+            let a = area::report(nl);
+            let cones = analyze::cones(nl);
+            let path = analyze::critical_path(nl, cal);
+            let p = power::estimate_at(nl, cal, 0xF00D, power::DEFAULT_VECTORS, path.critical_ns);
+            rows.push(DesignRow {
+                name: bc.name.clone(),
+                bits,
+                luts: a.luts,
+                carry4: a.carry4,
+                slices: a.slices,
+                max_depth: cones.max_depth,
+                max_cone_luts: cones.max_cone_luts,
+                max_cone_carry4: cones.max_cone_carry4,
+                critical_ns: path.critical_ns,
+                critical_path_cells: path.steps.len(),
+                power_mw: p.total_mw,
+                energy_pj: p.total_mw * path.critical_ns,
+                lint_errors: lint.error_count(),
+                lint_warnings: lint.warning_count(),
+                paper: paper_ref(&bc.name),
+            });
+        }
+    }
+    rows
+}
+
+/// Aligned text table over the sweep rows.
+pub fn render(rows: &[DesignRow]) -> String {
+    let headers = [
+        "design", "bits", "LUTs", "CARRY4", "depth", "cone", "crit(ns)", "cells", "P(mW)",
+        "E(pJ)", "err", "warn", "paper(ns)",
+    ];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.bits.to_string(),
+                r.luts.to_string(),
+                r.carry4.to_string(),
+                r.max_depth.to_string(),
+                r.max_cone_luts.to_string(),
+                format!("{:.2}", r.critical_ns),
+                r.critical_path_cells.to_string(),
+                format!("{:.1}", r.power_mw),
+                format!("{:.1}", r.energy_pj),
+                r.lint_errors.to_string(),
+                r.lint_warnings.to_string(),
+                r.paper.map_or_else(|| "-".into(), |p| format!("{:.1}", p.delay_ns)),
+            ]
+        })
+        .collect();
+    super::render_table(&headers, &body)
+}
+
+/// `BENCH_fabric.json` (schema `simdive-fabric-v1`). Append-only: fields
+/// may be added in later schema revisions, never renamed or removed.
+pub fn to_json(rows: &[DesignRow]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"simdive-fabric-v1\",\n  \"designs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"name\": \"{}\", \"bits\": {}, \"luts\": {}, \"carry4\": {}, \
+             \"slices\": {}, \"max_depth\": {}, \"max_cone_luts\": {}, \
+             \"max_cone_carry4\": {}, \"critical_ns\": {:.4}, \
+             \"critical_path_cells\": {}, \"power_mw\": {:.3}, \"energy_pj\": {:.3}, \
+             \"lint_errors\": {}, \"lint_warnings\": {}",
+            r.name,
+            r.bits,
+            r.luts,
+            r.carry4,
+            r.slices,
+            r.max_depth,
+            r.max_cone_luts,
+            r.max_cone_carry4,
+            r.critical_ns,
+            r.critical_path_cells,
+            r.power_mw,
+            r.energy_pj,
+            r.lint_errors,
+            r.lint_warnings,
+        );
+        if let Some(p) = r.paper {
+            s.push_str(", \"paper\": {");
+            if let Some(l) = p.luts {
+                let _ = write!(s, "\"luts\": {l:.1}, ");
+            }
+            let _ = write!(s, "\"delay_ns\": {:.1}, \"power_mw\": {:.1}}}", p.delay_ns, p.power_mw);
+        }
+        s.push('}');
+        if i + 1 < rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_8bit_is_clean_and_filtered() {
+        let cal = Calibration::default();
+        let all = sweep(&[8], "all", &cal);
+        assert!(all.len() >= 13, "8-bit catalog has {} designs", all.len());
+        for r in &all {
+            assert_eq!(r.lint_errors, 0, "{} has lint errors", r.name);
+            assert!(r.luts > 0 && r.critical_ns > 0.0, "{} not characterized", r.name);
+        }
+        let muls = sweep(&[8], "mul", &cal);
+        assert!(muls.len() < all.len());
+        assert!(muls.iter().all(|r| r.name.contains("mul") || r.name.contains("hybrid")));
+    }
+
+    #[test]
+    fn json_has_schema_and_paper_refs() {
+        let cal = Calibration::default();
+        let rows = sweep(&[16], "div", &cal);
+        let json = to_json(&rows);
+        assert!(json.contains("\"schema\": \"simdive-fabric-v1\""));
+        assert!(json.contains("accurate_div_16_8"));
+        assert!(json.contains("\"delay_ns\": 21.4"));
+    }
+}

@@ -2,6 +2,7 @@
 //! the same rows the paper reports. Shared by the CLI (`repro <exp>`) and
 //! the benches (`cargo bench`). See DESIGN.md §5 for the experiment index.
 
+pub mod fabric;
 pub mod figs;
 pub mod golden;
 pub mod table2;

@@ -2,11 +2,13 @@
 //! in-crate load generator, reported next to the in-process coordinator
 //! batched figure so the cost of the network boundary is visible, plus a
 //! degraded-mode sweep — the chaos scenario at fault rates
-//! {0, 0.1%, 1%} — appended as the `"chaos"` section (DESIGN.md §11).
+//! {0, 0.1%, 1%} — appended as the `"chaos"` section (DESIGN.md §11),
+//! and the reactor-vs-threaded connection-count ladder appended as the
+//! `"connections_sweep"` section (DESIGN.md §15).
 //!
 //! Results go to stdout and to `BENCH_serve.json` at the repository root
 //! (schema `simdive-serve-v1`, documented in CHANGES.md alongside the
-//! hotpath schema; the chaos section is append-only).
+//! hotpath schema; the chaos and sweep sections are append-only).
 
 use simdive::faults::{silence_injected_panics, FaultConfig};
 use simdive::serve::chaos::{self, ChaosConfig};
@@ -92,7 +94,27 @@ fn main() {
         sweep.push((ppm, c));
     }
 
-    let json = loadgen::to_json_with_chaos(&report, COORD_REQUESTS, coord_rps, &sweep);
+    // Connection-count ladder, both backends, fresh server per rung
+    // (DESIGN.md §15): this is where the reactor's O(1) thread pool and
+    // the baseline's O(connections) threads separate.
+    let conn_sweep = loadgen::run_connections_sweep();
+    for p in &conn_sweep {
+        if p.ok {
+            println!(
+                "[bench] sweep {} @{} conns: {:.1} kreq/s (p50 {} µs, p99 {} µs, {} threads)",
+                p.mode,
+                p.connections,
+                p.rps / 1e3,
+                p.p50_us,
+                p.p99_us,
+                p.threads
+            );
+        } else {
+            println!("[bench] sweep {} @{} conns: failed/skipped", p.mode, p.connections);
+        }
+    }
+
+    let json = loadgen::to_json_full(&report, COORD_REQUESTS, coord_rps, &sweep, &conn_sweep);
     let path = simdive::util::repo_root().join("BENCH_serve.json");
     match std::fs::write(&path, &json) {
         Ok(()) => println!("[bench] wrote {}", path.display()),

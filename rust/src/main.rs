@@ -22,12 +22,18 @@ fn usage() -> ! {
          \tprofile                error-profile table driving the budget router (§9)\n\
          \tserve --listen ADDR [--workers N] [--window K] [--batch B]\n\
          \t      [--deadline-ms D] [--io-timeout-ms T]\n\
+         \t      [--loops N | --threaded]\n\
          \t      [--fault-ppm P --fault-seed S]\n\
          \t                       SIMD-wire TCP server over the shared coordinator\n\
-         \t                       (--fault-ppm enables the chaos injector, §11)\n\
+         \t                       (reactor backend with N event loops by default,\n\
+         \t                       --threaded for thread-per-connection;\n\
+         \t                       --fault-ppm enables the chaos injector, §11)\n\
          \tloadgen --addr ADDR [--connections C] [--requests N] [--chunk B]\n\
          \t        [--mix 8,8,16,32] [--w N | --budget-ppm E] [--out PATH]\n\
+         \t        [--sweep]\n\
          \t                       drive a server; writes BENCH_serve.json\n\
+         \t                       (--sweep appends a reactor-vs-threaded\n\
+         \t                       connections_sweep over fresh loopback servers)\n\
          \tloadgen --chaos --addr ADDR [--connections C] [--requests N]\n\
          \t        [--chunk B] [--seed S]\n\
          \t                       chaos scenario: verified traffic + saboteur;\n\
@@ -211,9 +217,15 @@ fn profile() {
 /// coordinator until the process is killed (DESIGN.md §8). Replaces the
 /// old in-process serving demo — drive it with `simdive loadgen`.
 fn serve(args: &[String]) -> anyhow::Result<()> {
-    use simdive::serve::{ServeConfig, Server};
+    use simdive::serve::{ReactorOptions, ServeConfig, Server};
     let listen = arg_str(args, "--listen", "127.0.0.1:7171");
     let defaults = ServeConfig::default();
+    let threaded = args.iter().any(|a| a == "--threaded");
+    let loops = arg_u64_strict(args, "--loops", 0)? as usize;
+    anyhow::ensure!(
+        !(threaded && loops > 0),
+        "--threaded and --loops are mutually exclusive"
+    );
     let fault_ppm = arg_u64_strict(args, "--fault-ppm", 0)?;
     anyhow::ensure!(fault_ppm <= 1_000_000, "--fault-ppm must be 0..=1000000");
     let fault_seed = arg_u64_strict(args, "--fault-seed", 0xC4A05)?;
@@ -237,12 +249,21 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     // budget-routed request doesn't stall its connection on the one-time
     // ~2M-evaluation measurement (DESIGN.md §9).
     simdive::coordinator::ErrorProfile::get();
-    let server = Server::start(listen, cfg)
-        .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
+    let server = if threaded {
+        Server::start_threaded(listen, cfg)
+    } else {
+        Server::start_reactor(listen, cfg, ReactorOptions { loops, ..ReactorOptions::default() })
+    }
+    .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?;
     println!(
-        "simdive serve: listening on {} (workers/w {}, window {}, batch {}, \
+        "simdive serve: listening on {} ({}, workers/w {}, window {}, batch {}, \
          deadline {} ms, io timeout {} ms, fault {} ppm)",
         server.local_addr(),
+        if threaded {
+            "thread-per-connection".to_string()
+        } else {
+            format!("reactor, {} threads", server.thread_count())
+        },
         cfg.workers,
         cfg.window,
         cfg.batch,
@@ -324,11 +345,35 @@ fn loadgen(args: &[String]) -> anyhow::Result<()> {
         "coordinator (in-process, batched): {:.1} kreq/s over {coord_n} requests",
         coord_rps / 1e3
     );
+    // --sweep: reactor-vs-threaded connection ladder over fresh loopback
+    // servers, appended to the document as `connections_sweep`.
+    let sweep = if args.iter().any(|a| a == "--sweep") {
+        let points = loadgen::run_connections_sweep();
+        println!("connections sweep (fresh loopback servers):");
+        for p in &points {
+            if p.ok {
+                println!(
+                    "  {:>8} @{:>5} conns: {:>9.1} kreq/s, p50 {} µs, p99 {} µs, {} threads",
+                    p.mode,
+                    p.connections,
+                    p.rps / 1e3,
+                    p.p50_us,
+                    p.p99_us,
+                    p.threads
+                );
+            } else {
+                println!("  {:>8} @{:>5} conns: failed/skipped", p.mode, p.connections);
+            }
+        }
+        points
+    } else {
+        Vec::new()
+    };
     let out_path = match arg_str(args, "--out", "") {
         "" => simdive::util::repo_root().join("BENCH_serve.json"),
         p => std::path::PathBuf::from(p),
     };
-    let json = loadgen::to_json(&report, coord_n, coord_rps);
+    let json = loadgen::to_json_full(&report, coord_n, coord_rps, &[], &sweep);
     std::fs::write(&out_path, &json)
         .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", out_path.display()))?;
     println!("wrote {}", out_path.display());

@@ -16,12 +16,16 @@
 //! layers idempotent retry on top: transport errors reconnect, retriable
 //! per-request failures resubmit, both under capped exponential backoff
 //! and a hard deadline — safe because every SIMD-wire computation is pure.
+//! Each sleep is equal-jittered (uniform in `[b/2, b]`) from a per-client
+//! seeded RNG, so clients that fail together do not retry in lockstep.
 
 use super::wire::{self, ServerFrame, WireRequest, WireResponse, WireStats};
 use crate::obs::{Snapshot, TraceEvent};
+use crate::util::Rng;
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Default pipeline chunk (requests per `BATCH` frame).
@@ -76,6 +80,28 @@ impl RetryPolicy {
     }
 }
 
+/// Equal-jitter a backoff: uniform in `[base/2, base]`. Keeps at least
+/// half the deterministic backoff (so retry pressure still decays
+/// exponentially) while decorrelating clients whose failures — and hence
+/// retry clocks — were synchronized by the same server event.
+fn jittered(base: Duration, rng: &mut Rng) -> Duration {
+    let ns = base.as_nanos() as u64;
+    if ns == 0 {
+        return base;
+    }
+    let half = ns / 2;
+    Duration::from_nanos(half + rng.below(ns - half + 1))
+}
+
+/// Per-process seed sequence for client backoff RNGs: each new
+/// connection takes a distinct seed, so two clients built in the same
+/// instant still jitter independently.
+static NEXT_BACKOFF_SEED: AtomicU64 = AtomicU64::new(0x0B5E_ED0F);
+
+fn next_backoff_seed() -> u64 {
+    NEXT_BACKOFF_SEED.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
+}
+
 /// Is a per-request failure worth retrying? Overload and shard
 /// unavailability are transient by design; protocol errors are not.
 pub fn retriable(err: u8) -> bool {
@@ -93,6 +119,9 @@ pub struct Client {
     /// Reconnects performed by `exchange_with_retry` over this client's
     /// lifetime (chaos-report observability).
     reconnects: u64,
+    /// Jitter source for retry backoff; survives reconnects so the
+    /// jitter stream never resets in lockstep with the failure.
+    backoff_rng: Rng,
 }
 
 impl Client {
@@ -123,7 +152,15 @@ impl Client {
                 format!("server speaks SIMD-wire v{version}, client v{}", wire::VERSION),
             ));
         }
-        Ok(Client { reader, writer, chunk, addr, io_timeout, reconnects: 0 })
+        Ok(Client {
+            reader,
+            writer,
+            chunk,
+            addr,
+            io_timeout,
+            reconnects: 0,
+            backoff_rng: Rng::new(next_backoff_seed()),
+        })
     }
 
     /// Connect, retrying while the server is still coming up (used by the
@@ -149,6 +186,13 @@ impl Client {
     /// Set the pipeline chunk size (clamped to `1..=MAX_CHUNK`).
     pub fn with_chunk(mut self, chunk: usize) -> Client {
         self.chunk = chunk.clamp(1, MAX_CHUNK);
+        self
+    }
+
+    /// Re-seed the retry-backoff jitter source (deterministic tests; the
+    /// default seed is a per-process sequence, distinct per connection).
+    pub fn with_retry_seed(mut self, seed: u64) -> Client {
+        self.backoff_rng = Rng::new(seed);
         self
     }
 
@@ -295,7 +339,7 @@ impl Client {
                     if attempt >= policy.max_attempts || t0.elapsed() >= policy.deadline {
                         break; // deliver the recorded failures
                     }
-                    std::thread::sleep(policy.backoff(attempt));
+                    std::thread::sleep(jittered(policy.backoff(attempt), &mut self.backoff_rng));
                 }
                 Err(e) => {
                     // Transport fault: the connection state is unknown, so
@@ -311,13 +355,16 @@ impl Client {
                             ),
                         ));
                     }
-                    std::thread::sleep(policy.backoff(attempt));
+                    std::thread::sleep(jittered(policy.backoff(attempt), &mut self.backoff_rng));
                     while let Err(re) = self.reconnect() {
                         attempt += 1;
                         if attempt >= policy.max_attempts || t0.elapsed() >= policy.deadline {
                             return Err(re);
                         }
-                        std::thread::sleep(policy.backoff(attempt));
+                        std::thread::sleep(jittered(
+                            policy.backoff(attempt),
+                            &mut self.backoff_rng,
+                        ));
                     }
                 }
             }
@@ -443,5 +490,40 @@ mod tests {
     fn unknown_err_codes_do_not_panic() {
         let e = server_err(250);
         assert!(e.to_string().contains("unknown error"), "{e}");
+    }
+
+    #[test]
+    fn jitter_stays_within_equal_jitter_bounds() {
+        let mut rng = Rng::new(7);
+        let base = Duration::from_millis(100);
+        for _ in 0..1000 {
+            let j = jittered(base, &mut rng);
+            assert!(j >= base / 2, "jitter below half base: {j:?}");
+            assert!(j <= base, "jitter above base: {j:?}");
+        }
+    }
+
+    #[test]
+    fn jitter_leaves_zero_backoff_alone() {
+        let mut rng = Rng::new(7);
+        assert_eq!(jittered(Duration::ZERO, &mut rng), Duration::ZERO);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed_and_spreads_across_seeds() {
+        let base = Duration::from_millis(64);
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..8).map(|_| jittered(base, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42), "same seed must replay the same jitter");
+        assert_ne!(draw(42), draw(43), "distinct seeds must decorrelate");
+    }
+
+    #[test]
+    fn backoff_seeds_are_distinct_per_client() {
+        let a = next_backoff_seed();
+        let b = next_backoff_seed();
+        assert_ne!(a, b);
     }
 }

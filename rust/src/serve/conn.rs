@@ -1,0 +1,524 @@
+//! Connection state machine for the poll-based reactor (DESIGN.md §15).
+//!
+//! One [`Conn`] owns everything the old reader/writer thread pair held,
+//! reshaped for non-blocking sockets: an incremental frame decoder over a
+//! read buffer, a FIFO of decoded-but-unadmitted requests, a
+//! per-connection in-flight slot table (the admission window), and a
+//! write buffer that response frames append to and the event loop flushes
+//! opportunistically. All methods run on the owning event-loop thread —
+//! nothing here is shared or locked.
+//!
+//! Life cycle: `Handshake` (buffer 8 bytes, answer the hello, reject a
+//! version mismatch) → `Open` (decode frames, admit under the fair
+//! quota, shed the head of the queue when its admission deadline lapses)
+//! → close, when the peer is done (`eof`), the protocol closed the
+//! connection with a final `ERR` frame (`closed`), or the socket died
+//! (`dead`), and every admitted request has drained back out.
+
+use super::reactor::interest;
+use super::server::{resolve_w, Inner};
+use super::stats::ServeCounters;
+use super::wire::{self, ClientFrame};
+use crate::coordinator::{ReqOp, Request, Response};
+use crate::obs::{self, Span, TraceEvent};
+use std::collections::VecDeque;
+use std::io::{self, Cursor, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// Stop reading a connection whose write buffer the peer is not draining:
+/// past this backlog, backpressure moves to the socket.
+const MAX_WBUF_BACKLOG: usize = 1 << 20;
+/// Stop reading when this much undecoded input is buffered (a complete
+/// maximal BATCH frame is ~2 MiB; this bounds a peer that streams faster
+/// than it can be admitted).
+const MAX_RBUF_BUFFERED: usize = 4 << 20;
+
+/// Byte length of the frame starting at `buf[0]`, or `None` if not even
+/// the length-determining prefix has arrived yet. Unknown kinds report 1:
+/// [`wire::read_client_frame`] answers `Bad` from the kind byte alone.
+pub(crate) fn frame_len(buf: &[u8]) -> Option<usize> {
+    let kind = *buf.first()?;
+    match kind {
+        wire::FRAME_REQ => Some(1 + wire::REQ_BODY_LEN),
+        wire::FRAME_BATCH => {
+            if buf.len() < 3 {
+                return None;
+            }
+            let count = u16::from_le_bytes([buf[1], buf[2]]) as usize;
+            Some(3 + count * wire::REQ_BODY_LEN)
+        }
+        _ => Some(1),
+    }
+}
+
+/// Per-event-loop submission context: the shared server state plus the
+/// loop's streaming-submission buffer and its completion route.
+pub(crate) struct LoopCtx<'a> {
+    pub inner: &'a Inner,
+    pub submit: &'a mut Vec<(Request, Span)>,
+    pub resp_tx: &'a Sender<(u32, Response)>,
+}
+
+impl LoopCtx<'_> {
+    /// Stream the buffered admissions into the shared coordinator. Blocks
+    /// only when the shard queues are full — the engine-side backpressure
+    /// path, same as the threaded backend.
+    pub fn flush_submit(&mut self) {
+        if !self.submit.is_empty() {
+            self.inner.coordinator.submit_batch_streaming_spanned(
+                std::mem::take(self.submit),
+                0,
+                self.resp_tx,
+            );
+        }
+    }
+}
+
+enum State {
+    Handshake,
+    Open,
+}
+
+pub(crate) struct Conn {
+    stream: TcpStream,
+    state: State,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Decoded requests not yet admitted to the in-flight window.
+    pending: VecDeque<wire::WireRequest>,
+    /// When the current head of `pending` started waiting for admission;
+    /// the overload-shedding clock (reset whenever the head changes).
+    head_since: Option<Instant>,
+    /// `slots[s]` = `(wire id, admission time)` of the in-flight request
+    /// whose engine id carries slot `s`.
+    slots: Vec<Option<(u64, Instant)>>,
+    free: Vec<u32>,
+    in_flight: usize,
+    pub(crate) stats: ServeCounters,
+    /// `(slab token) << 32`, OR-ed with the slot to form engine ids.
+    id_base: u64,
+    /// No more reads: peer EOF, protocol close, or server shutdown.
+    pub(crate) eof: bool,
+    /// An `ERR` frame was queued — the protocol promises it is the last
+    /// frame, so response writes are suppressed from here on.
+    pub(crate) closed: bool,
+    /// Hard socket error: drop without flushing.
+    pub(crate) dead: bool,
+    /// Event-loop bookkeeping flags (owned by the loop, stored here so a
+    /// token is never queued twice in one round).
+    pub(crate) in_backlog: bool,
+    pub(crate) queued_service: bool,
+    /// Interest bits currently registered with the poller.
+    pub(crate) registered: u8,
+    last_read: Instant,
+    last_write_progress: Instant,
+}
+
+impl Conn {
+    pub(crate) fn new(stream: TcpStream, window: usize) -> io::Result<Conn> {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true)?;
+        let window = window.max(1);
+        let now = Instant::now();
+        Ok(Conn {
+            stream,
+            state: State::Handshake,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            head_since: None,
+            slots: vec![None; window],
+            free: (0..window as u32).rev().collect(),
+            in_flight: 0,
+            stats: ServeCounters::new(),
+            id_base: 0,
+            eof: false,
+            closed: false,
+            dead: false,
+            in_backlog: false,
+            queued_service: false,
+            registered: 0,
+            last_read: now,
+            last_write_progress: now,
+        })
+    }
+
+    pub(crate) fn set_token(&mut self, token: u32) {
+        self.id_base = (token as u64) << 32;
+    }
+
+    pub(crate) fn fd(&self) -> RawFd {
+        self.stream.as_raw_fd()
+    }
+
+    /// One full turn of the state machine: read what the socket has,
+    /// decode complete frames, admit under `quota`, shed an expired head,
+    /// and flush the write buffer.
+    pub(crate) fn pump(
+        &mut self,
+        readable: bool,
+        writable: bool,
+        ctx: &mut LoopCtx<'_>,
+        quota: usize,
+        deadline: Option<Duration>,
+    ) {
+        if self.dead {
+            return;
+        }
+        if readable && !self.eof && !self.read_paused() {
+            self.fill_rbuf();
+        }
+        self.parse_frames(ctx, quota);
+        if !self.dead {
+            self.try_admit(ctx, quota);
+            self.shed_expired(ctx, deadline);
+        }
+        if writable || self.wpos < self.wbuf.len() {
+            self.flush_wbuf();
+        }
+        self.compact_rbuf();
+    }
+
+    /// Route one engine completion back onto the wire (out of order, as
+    /// lanes complete). Frees the window slot, records latency and the
+    /// serve-side stage stamps, and queues the response frame — unless
+    /// the connection already closed, in which case the slot still frees
+    /// but nothing is written.
+    pub(crate) fn on_completion(&mut self, resp: Response, inner: &Inner) {
+        let slot = (resp.id & 0xFFFF_FFFF) as usize;
+        let Some(entry) = self.slots.get_mut(slot) else { return };
+        let Some((wire_id, t0)) = entry.take() else { return };
+        self.free.push(slot as u32);
+        self.in_flight -= 1;
+        let latency_ns = t0.elapsed().as_nanos() as u64;
+        self.stats.record(latency_ns);
+        inner.global.record(latency_ns);
+        // Serve-side stage stamps, mirrored from the threaded writer:
+        // `admit` covers admission→shard submission, `write` covers
+        // response-routed→write-queued. Sampled spans become trace events
+        // here — the request's last stop in the pipeline.
+        let span = resp.span;
+        if span.t_admit_ns > 0 {
+            let t_write = obs::now_ns();
+            inner.stage_admit.record_ns(span.t_submit_ns.saturating_sub(span.t_admit_ns));
+            inner.stage_write.record_ns(t_write.saturating_sub(span.t_done_ns));
+            if span.sampled {
+                inner.ring.push(TraceEvent::from_span(wire_id, &span, t_write));
+            }
+        }
+        if resp.err != 0 {
+            inner.unavailable.fetch_add(1, Ordering::Relaxed);
+            if !self.closed && !self.dead {
+                let _ = wire::write_response_err(&mut self.wbuf, wire_id, wire::ERR_UNAVAILABLE);
+            }
+        } else if !self.closed && !self.dead {
+            let _ = wire::write_response(&mut self.wbuf, wire_id, resp.value);
+        }
+    }
+
+    /// Server shutdown: stop reading and drop unadmitted requests so the
+    /// connection converges to close once in-flight work drains.
+    pub(crate) fn begin_shutdown(&mut self) {
+        self.eof = true;
+        self.pending.clear();
+        self.head_since = None;
+    }
+
+    pub(crate) fn should_close(&self) -> bool {
+        if self.dead {
+            return true;
+        }
+        (self.eof || self.closed)
+            && self.pending.is_empty()
+            && self.in_flight == 0
+            && self.wpos >= self.wbuf.len()
+    }
+
+    /// The non-blocking analogue of the threaded backend's socket
+    /// timeouts, checked on the slow sweep: a peer that neither talks nor
+    /// drains its responses for `timeout` gets closed. A connection that
+    /// is merely waiting on the engine (requests pending or in flight) is
+    /// never idle.
+    pub(crate) fn idle_expired(&self, now: Instant, timeout: Duration) -> bool {
+        if self.wpos < self.wbuf.len() && now.duration_since(self.last_write_progress) > timeout {
+            return true;
+        }
+        !self.eof
+            && self.pending.is_empty()
+            && self.in_flight == 0
+            && now.duration_since(self.last_read) > timeout
+    }
+
+    /// Reads pause while unadmitted backlog exists or the peer is not
+    /// draining its responses: backpressure propagates over TCP instead
+    /// of buffering unboundedly (same policy as the threaded reader
+    /// blocking on admission).
+    pub(crate) fn read_paused(&self) -> bool {
+        !self.pending.is_empty() || self.wbuf.len() - self.wpos > MAX_WBUF_BACKLOG
+    }
+
+    pub(crate) fn has_backlog(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    pub(crate) fn desired_interest(&self) -> u8 {
+        let mut want = 0u8;
+        if !self.eof && !self.read_paused() {
+            want |= interest::READ;
+        }
+        if self.wpos < self.wbuf.len() {
+            want |= interest::WRITE;
+        }
+        want
+    }
+
+    fn fill_rbuf(&mut self) {
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            if self.rbuf.len() - self.rpos >= MAX_RBUF_BUFFERED {
+                return;
+            }
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.eof = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    self.last_read = Instant::now();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn parse_frames(&mut self, ctx: &mut LoopCtx<'_>, quota: usize) {
+        loop {
+            if self.dead {
+                return;
+            }
+            match self.state {
+                State::Handshake => {
+                    if self.rbuf.len() - self.rpos < 8 {
+                        if self.eof {
+                            // Peer went away mid-hello: nothing to answer.
+                            self.dead = true;
+                        }
+                        return;
+                    }
+                    let hello = {
+                        let avail = &self.rbuf[self.rpos..self.rpos + 8];
+                        wire::read_hello(&mut Cursor::new(avail))
+                    };
+                    self.rpos += 8;
+                    match hello {
+                        // Bad magic: close without a reply (mirrors the
+                        // threaded backend, where the failed hello read
+                        // errors the connection out before any write).
+                        Err(_) => {
+                            self.dead = true;
+                            return;
+                        }
+                        Ok(version) => {
+                            // Always answer with our own hello so a
+                            // cross-version client can report the skew.
+                            let _ = wire::write_hello(&mut self.wbuf);
+                            if version != wire::VERSION {
+                                let _ = wire::write_err(&mut self.wbuf, wire::ERR_BAD_VERSION);
+                                self.closed = true;
+                                self.eof = true;
+                                return;
+                            }
+                            self.state = State::Open;
+                        }
+                    }
+                }
+                State::Open => {
+                    if self.closed {
+                        return;
+                    }
+                    let (frame, len) = {
+                        let avail = &self.rbuf[self.rpos..];
+                        let Some(len) = frame_len(avail) else { return };
+                        if avail.len() < len {
+                            return;
+                        }
+                        (wire::read_client_frame(&mut Cursor::new(&avail[..len])), len)
+                    };
+                    self.rpos += len;
+                    match frame {
+                        // Unreachable with a complete frame slice; defensive.
+                        Err(_) | Ok(ClientFrame::Eof) => {
+                            self.dead = true;
+                            return;
+                        }
+                        Ok(ClientFrame::Bad(code)) => {
+                            // `ERR` is the last frame on the wire: queue it,
+                            // drop unadmitted work, and converge to close
+                            // once in-flight responses drain (suppressed).
+                            let _ = wire::write_err(&mut self.wbuf, code);
+                            self.closed = true;
+                            self.eof = true;
+                            self.pending.clear();
+                            self.head_since = None;
+                            return;
+                        }
+                        Ok(ClientFrame::Stats) => {
+                            // Submit buffered admissions first so the
+                            // snapshot reflects them (threaded parity).
+                            self.try_admit(ctx, quota);
+                            ctx.flush_submit();
+                            let snap = ctx.inner.snapshot(&self.stats);
+                            let _ = wire::write_stats_resp(&mut self.wbuf, &snap);
+                        }
+                        Ok(ClientFrame::Stats2) => {
+                            self.try_admit(ctx, quota);
+                            ctx.flush_submit();
+                            let snap = ctx.inner.snapshot2();
+                            let _ = wire::write_stats2_resp(&mut self.wbuf, &snap);
+                        }
+                        Ok(ClientFrame::Trace) => {
+                            let events = ctx.inner.ring.events();
+                            let _ = wire::write_trace_resp(&mut self.wbuf, &events);
+                        }
+                        Ok(ClientFrame::Requests(reqs)) => {
+                            let was_empty = self.pending.is_empty();
+                            self.pending.extend(reqs);
+                            if was_empty && !self.pending.is_empty() {
+                                self.head_since = Some(Instant::now());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Admission control: move pending requests into free window slots up
+    /// to the fair per-connection `quota`, resolving the accuracy knob and
+    /// stamping spans exactly as the threaded reader did.
+    fn try_admit(&mut self, ctx: &mut LoopCtx<'_>, quota: usize) {
+        if self.closed || self.dead {
+            return;
+        }
+        let cap = quota.min(self.slots.len());
+        while self.in_flight < cap && !self.pending.is_empty() {
+            let r = self.pending.pop_front().expect("pending is nonempty");
+            let slot = self.free.pop().expect("in_flight below cap implies a free slot");
+            self.slots[slot as usize] = Some((r.id, Instant::now()));
+            self.in_flight += 1;
+            // The next head (if any) starts its own admission clock.
+            self.head_since =
+                if self.pending.is_empty() { None } else { Some(Instant::now()) };
+            let w = resolve_w(ctx.inner, &r);
+            let op_byte = match r.op {
+                ReqOp::Mul => 0u8,
+                ReqOp::Div => 1u8,
+            };
+            let span = Span::admitted(ctx.inner.ring.sample(), op_byte, r.bits as u8, w as u8);
+            ctx.submit.push((
+                Request { id: self.id_base | slot as u64, op: r.op, bits: r.bits, w, a: r.a, b: r.b },
+                span,
+            ));
+            if ctx.submit.len() >= ctx.inner.cfg.batch {
+                ctx.flush_submit();
+            }
+        }
+    }
+
+    /// Overload shedding: if the head of the unadmitted queue has waited
+    /// out the admission deadline, shed *it* (and only it) with
+    /// `ERR_OVERLOAD`; the connection stays open and the next head gets a
+    /// fresh clock — the same per-request semantics as the threaded
+    /// reader's `acquire_deadline`.
+    fn shed_expired(&mut self, ctx: &mut LoopCtx<'_>, deadline: Option<Duration>) {
+        let Some(d) = deadline else { return };
+        if self.closed || self.dead {
+            return;
+        }
+        let Some(t0) = self.head_since else { return };
+        if t0.elapsed() < d {
+            return;
+        }
+        if let Some(r) = self.pending.pop_front() {
+            ctx.inner.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = wire::write_response_err(&mut self.wbuf, r.id, wire::ERR_OVERLOAD);
+        }
+        self.head_since = if self.pending.is_empty() { None } else { Some(Instant::now()) };
+    }
+
+    fn flush_wbuf(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_write_progress = Instant::now();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos >= self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 64 * 1024 {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+
+    fn compact_rbuf(&mut self) {
+        if self.rpos >= self.rbuf.len() {
+            self.rbuf.clear();
+            self.rpos = 0;
+        } else if self.rpos > 4096 {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_len_computes_wire_frame_sizes() {
+        assert_eq!(frame_len(&[]), None);
+        assert_eq!(frame_len(&[wire::FRAME_REQ]), Some(1 + wire::REQ_BODY_LEN));
+        // BATCH needs its 2-byte count before the length is known.
+        assert_eq!(frame_len(&[wire::FRAME_BATCH]), None);
+        assert_eq!(frame_len(&[wire::FRAME_BATCH, 2]), None);
+        assert_eq!(frame_len(&[wire::FRAME_BATCH, 2, 0]), Some(3 + 2 * wire::REQ_BODY_LEN));
+        // A maximal BATCH is ~2 MiB — bounded, and far below the rbuf cap.
+        let max = frame_len(&[wire::FRAME_BATCH, 0xFF, 0xFF]).unwrap();
+        assert_eq!(max, 3 + wire::MAX_BATCH * wire::REQ_BODY_LEN);
+        assert!(max < MAX_RBUF_BUFFERED);
+        assert_eq!(frame_len(&[wire::FRAME_STATS]), Some(1));
+        assert_eq!(frame_len(&[wire::FRAME_STATS2]), Some(1));
+        assert_eq!(frame_len(&[wire::FRAME_TRACE]), Some(1));
+        // Unknown kinds are answered (ERR_BAD_FRAME) from the kind alone.
+        assert_eq!(frame_len(&[0x7F]), Some(1));
+    }
+}

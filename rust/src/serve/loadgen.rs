@@ -5,6 +5,13 @@
 //! `simdive-serve-v1`, documented in CHANGES.md alongside the hotpath
 //! schema). Used by the `simdive loadgen` subcommand, `benches/serve.rs`
 //! and the CI loopback smoke.
+//!
+//! [`run_connections_sweep`] drives both server backends (reactor and
+//! thread-per-connection) across a 1→10k connection-count ladder against
+//! fresh loopback servers, producing the `connections_sweep` section of
+//! `BENCH_serve.json` (append-only; schema name unchanged). Before
+//! opening sockets, runs fail fast with an `ulimit -n`-naming error when
+//! the process fd limit cannot cover the requested connection count.
 
 use super::client::Client;
 use super::wire::{WireRequest, WireStats};
@@ -100,9 +107,15 @@ fn make_request(cfg: &LoadgenConfig, rng: &mut Rng, id: u64) -> WireRequest {
 /// server start-up.
 pub fn run(addr: &str, cfg: &LoadgenConfig) -> io::Result<LoadgenReport> {
     let connections = cfg.connections.max(1);
+    // Fail fast — before any socket opens — when the fd limit cannot
+    // cover the sweep point, with an error that names `ulimit -n`.
+    super::reactor::ensure_fd_capacity(connections as u64 + 64).map_err(io::Error::other)?;
     let chunk = cfg.chunk.clamp(1, super::client::MAX_CHUNK);
     let per = cfg.requests / connections as u64;
     let remainder = cfg.requests % connections as u64;
+    // At high connection counts the accept backlog drains one handshake
+    // at a time; scale the connect-retry budget with the ladder.
+    let connect_timeout = Duration::from_secs(5) + Duration::from_millis(2 * connections as u64);
     // All parties (worker threads + this one) rendezvous after connecting.
     let barrier = Arc::new(Barrier::new(connections + 1));
     let mut handles = Vec::with_capacity(connections);
@@ -111,11 +124,16 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> io::Result<LoadgenReport> {
         let cfg = cfg.clone();
         let barrier = Arc::clone(&barrier);
         let quota = per + if (c as u64) < remainder { 1 } else { 0 };
-        handles.push(std::thread::spawn(move || -> io::Result<u64> {
+        // Named small-stack threads: 10k default-stack (8 MB) spawns
+        // would reserve ~80 GB of address space.
+        let builder = std::thread::Builder::new()
+            .name(format!("loadgen-{c}"))
+            .stack_size(256 * 1024);
+        let handle = builder.spawn(move || -> io::Result<u64> {
             let client = if quota == 0 {
                 None
             } else {
-                Some(Client::connect_retry(addr.as_str(), Duration::from_secs(5)))
+                Some(Client::connect_retry(addr.as_str(), connect_timeout))
             };
             barrier.wait();
             let Some(client) = client else { return Ok(0) };
@@ -133,7 +151,8 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> io::Result<LoadgenReport> {
                 done += n;
             }
             Ok(done)
-        }));
+        })?;
+        handles.push(handle);
     }
     barrier.wait();
     let t0 = Instant::now();
@@ -192,9 +211,110 @@ pub fn coordinator_batched_rps(n: u64) -> f64 {
     rps
 }
 
+/// Connection-count ladder swept on the reactor backend. The top rung is
+/// the 10k-connection point the reactor exists for.
+pub const SWEEP_REACTOR_POINTS: [usize; 5] = [1, 64, 512, 4096, 10_000];
+
+/// Ladder for the thread-per-connection baseline. Capped below 10k: two
+/// OS threads per connection exhausts spawn capacity well before the
+/// reactor's ceiling, and the sweep stops at the first rung that fails
+/// rather than burying the machine.
+pub const SWEEP_THREADED_POINTS: [usize; 4] = [1, 64, 512, 4096];
+
+/// One measured rung of the `connections_sweep`: a fresh loopback server
+/// on `mode` driven at `connections`. `ok == false` records a rung that
+/// was skipped (fd limit) or failed (spawn/connect exhaustion) — kept in
+/// the report so the baseline's collapse point is data, not absence.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub connections: usize,
+    pub mode: &'static str,
+    pub ok: bool,
+    pub rps: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Server-side thread count at the end of the rung
+    /// ([`super::server::Server::thread_count`]): constant for the
+    /// reactor, `O(connections)` for the threaded baseline.
+    pub threads: usize,
+}
+
+fn failed_point(connections: usize, mode: &'static str) -> SweepPoint {
+    SweepPoint { connections, mode, ok: false, rps: 0.0, p50_us: 0, p99_us: 0, threads: 0 }
+}
+
+/// Requests per rung: enough work that the measurement dominates setup,
+/// without making the 10k rung take minutes.
+fn sweep_requests(connections: usize) -> u64 {
+    (connections as u64 * 16).clamp(20_000, 120_000)
+}
+
+/// Run one rung: fresh loopback server, loadgen at `connections`, tear
+/// down. A long per-connection quota with many idle gaps needs a long
+/// server io-timeout, so the rung server relaxes it to 60 s.
+fn sweep_point(mode: &'static str, connections: usize) -> io::Result<SweepPoint> {
+    use super::server::{ServeConfig, Server};
+    let cfg = ServeConfig { io_timeout_ms: 60_000, ..ServeConfig::default() };
+    let server = match mode {
+        "threaded" => Server::start_threaded("127.0.0.1:0", cfg)?,
+        _ => Server::start("127.0.0.1:0", cfg)?,
+    };
+    let addr = server.local_addr().to_string();
+    let requests = sweep_requests(connections);
+    // Small chunks at high fan-in: keep per-connection pipelines shallow
+    // so the rung measures concurrency, not one connection's pipeline.
+    let chunk = ((requests / connections as u64) / 8).clamp(1, 64) as usize;
+    let lg = LoadgenConfig { connections, requests, chunk, ..LoadgenConfig::default() };
+    let result = run(&addr, &lg);
+    let threads = server.thread_count();
+    server.shutdown();
+    let rep = result?;
+    Ok(SweepPoint {
+        connections,
+        mode,
+        ok: true,
+        rps: rep.rps,
+        p50_us: rep.server.p50_us,
+        p99_us: rep.server.p99_us,
+        threads,
+    })
+}
+
+/// Sweep both backends across their connection ladders against fresh
+/// loopback servers. Rungs whose fd requirement (two ends per connection
+/// plus headroom) exceeds the raisable limit are recorded as `ok: false`
+/// and skipped; a threaded rung that fails outright ends that backend's
+/// ladder (each rung needs `2 × connections` threads — past its collapse
+/// point, higher rungs only fail more slowly).
+pub fn run_connections_sweep() -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    let ladders: [(&'static str, &[usize]); 2] =
+        [("reactor", &SWEEP_REACTOR_POINTS), ("threaded", &SWEEP_THREADED_POINTS)];
+    for (mode, ladder) in ladders {
+        for &n in ladder {
+            if let Err(e) = super::reactor::ensure_fd_capacity(2 * n as u64 + 256) {
+                eprintln!("[sweep] skipping {mode} @{n} connections: {e}");
+                out.push(failed_point(n, mode));
+                continue;
+            }
+            match sweep_point(mode, n) {
+                Ok(p) => out.push(p),
+                Err(e) => {
+                    eprintln!("[sweep] {mode} @{n} connections failed: {e}");
+                    out.push(failed_point(n, mode));
+                    if mode == "threaded" {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Render the `simdive-serve-v1` JSON document.
 pub fn to_json(report: &LoadgenReport, coord_requests: u64, coord_batched_rps: f64) -> String {
-    to_json_with_chaos(report, coord_requests, coord_batched_rps, &[])
+    to_json_full(report, coord_requests, coord_batched_rps, &[], &[])
 }
 
 /// [`to_json`] plus a `"chaos"` array: degraded-mode throughput at each
@@ -205,6 +325,19 @@ pub fn to_json_with_chaos(
     coord_requests: u64,
     coord_batched_rps: f64,
     chaos: &[(u64, super::chaos::ChaosReport)],
+) -> String {
+    to_json_full(report, coord_requests, coord_batched_rps, chaos, &[])
+}
+
+/// [`to_json_with_chaos`] plus a `"connections_sweep"` array: one object
+/// per [`SweepPoint`]. Both extra sections are append-only and omitted
+/// when empty — the schema name stays `simdive-serve-v1`.
+pub fn to_json_full(
+    report: &LoadgenReport,
+    coord_requests: u64,
+    coord_batched_rps: f64,
+    chaos: &[(u64, super::chaos::ChaosReport)],
+    sweep: &[SweepPoint],
 ) -> String {
     let mut widths = String::from("[");
     for (i, w) in report.widths.iter().enumerate() {
@@ -240,6 +373,23 @@ pub fn to_json_with_chaos(
             .unwrap();
         }
         chaos_section.push_str("\n  ]");
+    }
+    let mut sweep_section = String::new();
+    if !sweep.is_empty() {
+        sweep_section.push_str(",\n  \"connections_sweep\": [");
+        for (i, p) in sweep.iter().enumerate() {
+            if i > 0 {
+                sweep_section.push(',');
+            }
+            write!(
+                sweep_section,
+                "\n    {{\"connections\": {}, \"mode\": \"{}\", \"ok\": {}, \"rps\": {:.1}, \
+                 \"p50_us\": {}, \"p99_us\": {}, \"threads\": {}}}",
+                p.connections, p.mode, p.ok, p.rps, p.p50_us, p.p99_us, p.threads,
+            )
+            .unwrap();
+        }
+        sweep_section.push_str("\n  ]");
     }
     // Observability sections (append-only additions to the v1 schema):
     // per-stage latency breakdown and per-shard state from the server's
@@ -289,7 +439,7 @@ pub fn to_json_with_chaos(
          \"chunk\": {},\n  \"widths\": {widths},\n  \"wall_s\": {:.4},\n  \"rps\": {:.1},\n  \
          \"server\": {{\"requests\": {}, \"words\": {}, \"lane_utilization\": {:.4}, \
          \"energy_pj\": {:.1}, \"p50_us\": {}, \"p99_us\": {}}},\n  \
-         \"coordinator\": {{\"requests\": {coord_requests}, \"batched_rps\": {:.1}}}{obs_section}{chaos_section}\n}}\n",
+         \"coordinator\": {{\"requests\": {coord_requests}, \"batched_rps\": {:.1}}}{obs_section}{chaos_section}{sweep_section}\n}}\n",
         report.connections,
         report.requests,
         report.chunk,
@@ -429,7 +579,53 @@ mod tests {
         assert!(j.contains("\"chaos\": ["));
         assert!(j.contains("\"fault_ppm\": 10000"));
         assert!(j.contains("\"shed_overload\": 3"));
+        assert!(!j.contains("\"connections_sweep\""), "no sweep section without a sweep");
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn connections_sweep_section_is_appended_and_balanced() {
+        let report = LoadgenReport {
+            connections: 1,
+            requests: 10,
+            chunk: 4,
+            widths: vec![8],
+            wall_s: 0.1,
+            rps: 100.0,
+            server: WireStats::default(),
+            stats2: Snapshot::default(),
+        };
+        let sweep = vec![
+            SweepPoint {
+                connections: 64,
+                mode: "reactor",
+                ok: true,
+                rps: 123_456.7,
+                p50_us: 90,
+                p99_us: 800,
+                threads: 5,
+            },
+            failed_point(10_000, "threaded"),
+        ];
+        let j = to_json_full(&report, 10, 99.9, &[], &sweep);
+        assert!(j.contains("\"schema\": \"simdive-serve-v1\""), "schema name must not change");
+        assert!(j.contains("\"connections_sweep\": ["));
+        assert!(j.contains(
+            "{\"connections\": 64, \"mode\": \"reactor\", \"ok\": true, \"rps\": 123456.7, \
+             \"p50_us\": 90, \"p99_us\": 800, \"threads\": 5}"
+        ));
+        assert!(j.contains("\"mode\": \"threaded\", \"ok\": false"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn sweep_rungs_scale_requests_and_stay_bounded() {
+        assert_eq!(sweep_requests(1), 20_000, "floor binds at the bottom rung");
+        assert_eq!(sweep_requests(4096), 65_536);
+        assert_eq!(sweep_requests(10_000), 120_000, "ceiling binds at the top rung");
+        assert_eq!(SWEEP_REACTOR_POINTS.last(), Some(&10_000));
+        assert!(SWEEP_THREADED_POINTS.iter().all(|&n| n < 10_000));
     }
 }

@@ -12,31 +12,42 @@
 //!   per-operand accuracy knob `w` (§3.3) — or, since wire v2, a maximum
 //!   relative-error budget routed server-side — travels on the wire per
 //!   request, plus batch framing and a `STATS` op.
-//! * [`server`] — TCP listener; per-connection reader/writer threads, a
-//!   bounded in-flight admission window (backpressure over TCP instead of
-//!   OOM), one shared mixed-`{bits, w}` coordinator with an error-budget
-//!   router at admission (DESIGN.md §9), and out-of-order response writes
-//!   as SIMD lanes complete.
+//! * [`server`] — TCP listener over two backends sharing one admission,
+//!   routing and observability core: the default poll-based *reactor*
+//!   (DESIGN.md §15) — a fixed pool of event-loop threads multiplexing
+//!   non-blocking sockets with per-connection fair-admission quotas —
+//!   and the legacy thread-per-connection backend, kept as the sweep
+//!   baseline. Both feed one shared mixed-`{bits, w}` coordinator with
+//!   an error-budget router at admission (DESIGN.md §9) and write
+//!   responses out of order as SIMD lanes complete.
+//! * [`reactor`] — the dependency-free epoll/`poll(2)` shim, event-loop
+//!   pool, and the fd-capacity helper ([`ensure_fd_capacity`]).
 //! * [`client`] — pipelined client used by the examples, tests and load
-//!   generator.
+//!   generator; reconnect backoff carries seeded jitter so synchronized
+//!   reconnect storms decorrelate.
 //! * [`stats`] — per-connection and server-wide counters with log2
 //!   latency histograms, exposed via the `STATS` wire op.
 //!   Since wire v4 the server also carries a full metrics registry and a
 //!   sampled trace ring ([`crate::obs`], DESIGN.md §12), exported over
 //!   the `STATS2`/`TRACE` ops behind `simdive stats` / `simdive trace`.
 //! * [`loadgen`] — multi-connection load generator writing
-//!   `BENCH_serve.json` (schema `simdive-serve-v1`).
+//!   `BENCH_serve.json` (schema `simdive-serve-v1`), including the
+//!   reactor-vs-threaded `connections_sweep` (`loadgen --sweep`).
 //! * [`chaos`] — the fault-injection load scenario (`loadgen --chaos`,
 //!   DESIGN.md §11): verified traffic plus a saboteur connection, with
 //!   no-hang / no-wrong-answer / no-leak invariant checks.
 
 pub mod chaos;
 pub mod client;
+mod conn;
 pub mod loadgen;
+pub mod reactor;
 pub mod server;
 pub mod stats;
+mod threaded;
 pub mod wire;
 
 pub use client::Client;
+pub use reactor::{ensure_fd_capacity, ReactorOptions};
 pub use server::{ServeConfig, Server};
 pub use wire::{WireRequest, WireResponse, WireStats};

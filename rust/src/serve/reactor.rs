@@ -1,0 +1,937 @@
+//! Poll-based serve reactor (DESIGN.md §15): a fixed pool of event-loop
+//! threads multiplexing every connection over non-blocking sockets, so
+//! server thread count is bounded by the pool size instead of growing
+//! two-threads-per-connection.
+//!
+//! Dependency-free by construction (no `libc`, no `mio`): the kernel
+//! interface is a pair of raw `extern "C"` syscall shims —
+//! `epoll(7)` on Linux, with a portable `poll(2)` fallback selectable at
+//! runtime ([`ReactorOptions::force_poll_fallback`]) and used by default
+//! on non-Linux unix targets. The fallback rebuilds its `pollfd` array on
+//! every wait (O(registered fds)), which is exactly the cost epoll
+//! amortizes away; both backends expose the same level-triggered
+//! [`Event`] surface so the event loop above them is identical.
+//!
+//! Thread layout per reactor: `L` event loops (each owning a slab of
+//! connection state machines, see [`super::conn`]) plus `L` completion
+//! pump threads that move engine completions from the per-loop mpsc
+//! channel into the loop's completion queue and wake its poller. The
+//! pumps are deliberately detached: they exit on their own when the
+//! coordinator drops the response routes at server teardown.
+
+use super::conn::{Conn, LoopCtx};
+use super::server::{fair_quota, Inner, DRAIN_DEADLINE};
+use crate::coordinator::{Request, Response};
+use crate::obs::Span;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::raw::{c_int, c_short, c_ulong};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Raw syscall surface. Declarations only — the symbols come from the platform
+// C library every Rust program already links.
+// ---------------------------------------------------------------------------
+
+extern "C" {
+    #[cfg(target_os = "linux")]
+    fn epoll_create1(flags: c_int) -> c_int;
+    #[cfg(target_os = "linux")]
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    #[cfg(target_os = "linux")]
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+        -> c_int;
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+}
+
+#[cfg(target_os = "linux")]
+const EPOLL_CLOEXEC: c_int = 0x80000;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_ADD: c_int = 1;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_DEL: c_int = 2;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_MOD: c_int = 3;
+#[cfg(target_os = "linux")]
+const EPOLLIN: u32 = 0x1;
+#[cfg(target_os = "linux")]
+const EPOLLOUT: u32 = 0x4;
+#[cfg(target_os = "linux")]
+const EPOLLERR: u32 = 0x8;
+#[cfg(target_os = "linux")]
+const EPOLLHUP: u32 = 0x10;
+
+const POLLIN: c_short = 0x1;
+const POLLOUT: c_short = 0x4;
+const POLLERR: c_short = 0x8;
+const POLLHUP: c_short = 0x10;
+const POLLNVAL: c_short = 0x20;
+
+#[cfg(target_os = "linux")]
+const RLIMIT_NOFILE: c_int = 7;
+#[cfg(not(target_os = "linux"))]
+const RLIMIT_NOFILE: c_int = 8;
+
+/// Kernel `struct epoll_event`. On x86 the kernel ABI packs it to 12
+/// bytes (`__EPOLL_PACKED` in the C headers); other architectures use
+/// natural alignment.
+#[cfg(target_os = "linux")]
+#[derive(Clone, Copy)]
+#[repr(C)]
+#[cfg_attr(any(target_arch = "x86_64", target_arch = "x86"), repr(packed))]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+/// Kernel `struct pollfd`.
+#[derive(Clone, Copy)]
+#[repr(C)]
+struct PollFd {
+    fd: c_int,
+    events: c_short,
+    revents: c_short,
+}
+
+/// Kernel `struct rlimit` (64-bit `rlim_t` on every supported target).
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+/// Check that the process may hold `needed` file descriptors, raising the
+/// soft limit toward the hard limit if necessary. Returns the effective
+/// soft limit, or a human-actionable error naming `ulimit -n`.
+pub fn ensure_fd_capacity(needed: u64) -> Result<u64, String> {
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    // SAFETY: `lim` is a valid, writable `struct rlimit`-layout value and
+    // RLIMIT_NOFILE is a valid resource id; getrlimit writes at most
+    // `size_of::<Rlimit>()` bytes into it.
+    let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) };
+    if rc != 0 {
+        return Err(format!("getrlimit(RLIMIT_NOFILE) failed: {}", io::Error::last_os_error()));
+    }
+    if lim.cur >= needed {
+        return Ok(lim.cur);
+    }
+    if lim.max >= needed {
+        let want = Rlimit { cur: needed, max: lim.max };
+        // SAFETY: `want` is a valid `struct rlimit`-layout value that
+        // setrlimit only reads; the soft limit stays within the hard limit.
+        let rc = unsafe { setrlimit(RLIMIT_NOFILE, &want) };
+        if rc == 0 {
+            return Ok(needed);
+        }
+    }
+    Err(format!(
+        "need {needed} file descriptors but the soft limit is {} (hard limit {}); \
+         raise it with `ulimit -n {needed}` or lower the connection count",
+        lim.cur, lim.max
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Poller: one level-triggered readiness surface over both backends.
+// ---------------------------------------------------------------------------
+
+/// Readiness interest bits (see [`interest`]).
+pub(crate) mod interest {
+    pub const READ: u8 = 0b01;
+    pub const WRITE: u8 = 0b10;
+}
+
+/// Token reserved for the loop's [`Waker`] pipe.
+pub(crate) const WAKE_TOKEN: u64 = u64::MAX;
+
+/// One readiness event. Error/hangup conditions are folded into
+/// `readable` as well (a read attempt is how the state machine observes
+/// the close), with `error` carrying the distinction.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub error: bool,
+}
+
+pub(crate) enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(EpollPoller),
+    Poll(PollPoller),
+}
+
+impl Poller {
+    /// The platform-preferred backend: epoll on Linux, poll elsewhere.
+    pub fn new() -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            Ok(Poller::Epoll(EpollPoller::new()?))
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            Self::poll_fallback()
+        }
+    }
+
+    /// The portable `poll(2)` backend, regardless of platform.
+    pub fn poll_fallback() -> io::Result<Poller> {
+        Ok(Poller::Poll(PollPoller::new()))
+    }
+
+    pub fn is_fallback(&self) -> bool {
+        matches!(self, Poller::Poll(_))
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_ADD, fd, interest, token),
+            Poller::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_MOD, fd, interest, token),
+            Poller::Poll(p) => p.modify(fd, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_DEL, fd, 0, 0),
+            Poller::Poll(p) => p.deregister(fd),
+        }
+    }
+
+    /// Wait for readiness, filling `out` (cleared first). Retries `EINTR`
+    /// internally.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<usize> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(out, timeout),
+            Poller::Poll(p) => p.wait(out, timeout),
+        }
+    }
+}
+
+fn timeout_ms(timeout: Duration) -> c_int {
+    // Round up so a 100µs request does not busy-spin at timeout 0.
+    timeout.as_millis().clamp(1, 60_000) as c_int
+}
+
+#[cfg(target_os = "linux")]
+pub(crate) struct EpollPoller {
+    epfd: RawFd,
+    buf: Vec<EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    fn new() -> io::Result<EpollPoller> {
+        // SAFETY: epoll_create1 takes a flags word and returns a new fd or
+        // -1; no memory is passed.
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EpollPoller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+    }
+
+    fn ctl(&mut self, op: c_int, fd: RawFd, interest: u8, token: u64) -> io::Result<()> {
+        let mut events = 0u32;
+        if interest & interest::READ != 0 {
+            events |= EPOLLIN;
+        }
+        if interest & interest::WRITE != 0 {
+            events |= EPOLLOUT;
+        }
+        let mut ev = EpollEvent { events, data: token };
+        // SAFETY: `self.epfd` is a live epoll fd owned by this struct and
+        // `ev` is a valid epoll_event the kernel only reads (ignored for
+        // EPOLL_CTL_DEL).
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<usize> {
+        out.clear();
+        let ms = timeout_ms(timeout);
+        loop {
+            // SAFETY: `self.buf` is a live allocation of `buf.len()`
+            // epoll_event slots; the kernel writes at most `maxevents` of
+            // them and we only read the first `n`.
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(e);
+            }
+            for raw in self.buf.iter().take(n as usize) {
+                // Field copies, not references: the struct may be packed.
+                let bits = raw.events;
+                let token = raw.data;
+                out.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    error: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            return Ok(n as usize);
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        // SAFETY: `self.epfd` is a live fd owned exclusively by this
+        // struct; closing it exactly once on drop cannot race another user.
+        unsafe { close(self.epfd) };
+    }
+}
+
+/// `poll(2)` backend: a flat registry of `(fd, token, interest)` rebuilt
+/// into a `pollfd` array on every wait. O(fds) per wait — the portable
+/// floor, not the fast path.
+pub(crate) struct PollPoller {
+    reg: Vec<(RawFd, u64, u8)>,
+    fds: Vec<PollFd>,
+}
+
+impl PollPoller {
+    fn new() -> PollPoller {
+        PollPoller { reg: Vec::new(), fds: Vec::new() }
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        if self.reg.iter().any(|&(f, _, _)| f == fd) {
+            return Err(io::Error::other("fd already registered"));
+        }
+        self.reg.push((fd, token, interest));
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, interest: u8) -> io::Result<()> {
+        match self.reg.iter_mut().find(|(f, _, _)| *f == fd) {
+            Some(entry) => {
+                entry.2 = interest;
+                Ok(())
+            }
+            None => Err(io::Error::other("fd not registered")),
+        }
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self.reg.iter().position(|&(f, _, _)| f == fd) {
+            Some(i) => {
+                self.reg.swap_remove(i);
+                Ok(())
+            }
+            None => Err(io::Error::other("fd not registered")),
+        }
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<usize> {
+        out.clear();
+        self.fds.clear();
+        for &(fd, _, interest) in &self.reg {
+            let mut events = 0 as c_short;
+            if interest & interest::READ != 0 {
+                events |= POLLIN;
+            }
+            if interest & interest::WRITE != 0 {
+                events |= POLLOUT;
+            }
+            self.fds.push(PollFd { fd, events, revents: 0 });
+        }
+        let ms = timeout_ms(timeout);
+        loop {
+            // SAFETY: `self.fds` is a live allocation of `fds.len()` pollfd
+            // slots; the kernel reads `events` and writes `revents` in place.
+            let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as c_ulong, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(e);
+            }
+            for (pfd, &(_, token, _)) in self.fds.iter().zip(&self.reg) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: r & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0,
+                    writable: r & POLLOUT != 0,
+                    error: r & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                });
+            }
+            return Ok(out.len());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Waker: cross-thread poller wakeup over a socketpair.
+// ---------------------------------------------------------------------------
+
+/// Wakes a sleeping event loop from another thread by writing one byte to
+/// the loop's wake pipe (a non-blocking `UnixStream` pair). A full pipe
+/// means a wakeup is already pending, so `EWOULDBLOCK` is success.
+pub(crate) struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reactor: the event-loop pool.
+// ---------------------------------------------------------------------------
+
+/// Reactor tuning. Deliberately *not* part of [`super::ServeConfig`]
+/// (whose field set is frozen by exhaustive struct literals in the fault
+/// suite): backend choice is a constructor concern, not a serve policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReactorOptions {
+    /// Event-loop threads. `0` = auto (available parallelism, capped at 4).
+    pub loops: usize,
+    /// Use the portable `poll(2)` backend even where epoll is available
+    /// (exercised by tests; the default picks the platform backend).
+    pub force_poll_fallback: bool,
+}
+
+/// How often each loop sweeps for idle/stalled connections.
+const SWEEP_EVERY: Duration = Duration::from_millis(500);
+/// Poll timeout while any connection has unadmitted backlog: bounds the
+/// admission retry and overload-shed latency.
+const ADMIT_TICK: Duration = Duration::from_millis(5);
+/// Completion-pump batch cap per channel drain.
+const PUMP_BATCH: usize = 4096;
+/// Slab capacity per loop (tokens carry a 16-bit slot index).
+const MAX_CONNS_PER_LOOP: usize = 65_536;
+
+fn effective_loops(requested: usize) -> usize {
+    if requested > 0 {
+        return requested.min(64);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 4)
+}
+
+/// State shared between a loop thread and the outside world (accept
+/// thread, completion pump, shutdown).
+pub(crate) struct LoopShared {
+    /// Connections handed over by the accept thread.
+    incoming: Mutex<Vec<TcpStream>>,
+    /// Engine completions staged by this loop's pump thread.
+    completions: Mutex<Vec<Response>>,
+    waker: Waker,
+    /// Connections currently owned by this loop (dispatch balance key).
+    conns: AtomicUsize,
+}
+
+pub(crate) struct Reactor {
+    loops: Vec<Arc<LoopShared>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// The accept thread's handle into the pool: routes a fresh connection to
+/// the least-loaded loop and wakes it.
+pub(crate) struct Dispatcher {
+    loops: Vec<Arc<LoopShared>>,
+}
+
+impl Dispatcher {
+    pub fn dispatch(&self, inner: &Inner, stream: TcpStream) {
+        let target = self
+            .loops
+            .iter()
+            .min_by_key(|l| l.conns.load(Ordering::Relaxed))
+            .expect("reactor has at least one loop");
+        // Counted at dispatch (not at hello) so `connections` tracks every
+        // socket the server holds; every loop-side drop path decrements.
+        let open = inner.connections.fetch_add(1, Ordering::Relaxed) + 1;
+        inner.peak_connections.fetch_max(open, Ordering::Relaxed);
+        target.conns.fetch_add(1, Ordering::Relaxed);
+        target.incoming.lock().unwrap().push(stream);
+        target.waker.wake();
+    }
+}
+
+impl Reactor {
+    pub fn start(inner: &Arc<Inner>, opts: ReactorOptions) -> io::Result<Reactor> {
+        let n = effective_loops(opts.loops);
+        let mut loops = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let poller =
+                if opts.force_poll_fallback { Poller::poll_fallback()? } else { Poller::new()? };
+            let (wake_tx, wake_rx) = UnixStream::pair()?;
+            wake_tx.set_nonblocking(true)?;
+            wake_rx.set_nonblocking(true)?;
+            let shared = Arc::new(LoopShared {
+                incoming: Mutex::new(Vec::new()),
+                completions: Mutex::new(Vec::new()),
+                waker: Waker { tx: wake_tx },
+                conns: AtomicUsize::new(0),
+            });
+            let (resp_tx, resp_rx) = std::sync::mpsc::channel::<(u32, Response)>();
+            {
+                // Detached on purpose: the pump blocks in `recv` and exits
+                // when the coordinator's response routes (the only senders)
+                // drop at teardown — after `Coordinator::shutdown` has
+                // consumed the coordinator, which is too late to join from.
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("serve-pump-{i}"))
+                    .spawn(move || pump_loop(resp_rx, shared))?;
+            }
+            let handle = {
+                let inner = Arc::clone(inner);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("serve-loop-{i}"))
+                    .spawn(move || event_loop(inner, shared, wake_rx, poller, resp_tx))?
+            };
+            loops.push(shared);
+            handles.push(handle);
+        }
+        Ok(Reactor { loops, handles })
+    }
+
+    pub fn event_loops(&self) -> usize {
+        self.loops.len()
+    }
+
+    pub fn dispatcher(&self) -> Dispatcher {
+        Dispatcher { loops: self.loops.clone() }
+    }
+
+    pub fn wake_all(&self) {
+        for l in &self.loops {
+            l.waker.wake();
+        }
+    }
+
+    /// Join the loop threads (they self-drain once `Inner::stop` is set).
+    pub fn join(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Completion pump: block for one engine completion, drain greedily, stage
+/// the batch for the owning loop and wake it.
+fn pump_loop(rx: Receiver<(u32, Response)>, shared: Arc<LoopShared>) {
+    while let Ok((_, first)) = rx.recv() {
+        let mut batch = vec![first];
+        while batch.len() < PUMP_BATCH {
+            match rx.try_recv() {
+                Ok((_, resp)) => batch.push(resp),
+                Err(_) => break,
+            }
+        }
+        shared.completions.lock().unwrap().extend(batch);
+        shared.waker.wake();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event loop: slab of connection state machines + round structure.
+// ---------------------------------------------------------------------------
+
+struct SlabSlot {
+    gen: u16,
+    conn: Option<Conn>,
+}
+
+/// Generation-tagged connection slab. Tokens are `(gen << 16) | index`;
+/// a completion for a closed-and-reused slot fails the generation check
+/// and is dropped instead of reaching the wrong connection.
+#[derive(Default)]
+struct Slab {
+    slots: Vec<SlabSlot>,
+    free: Vec<u16>,
+    live: usize,
+}
+
+fn token_of(gen: u16, idx: usize) -> u32 {
+    ((gen as u32) << 16) | idx as u32
+}
+
+impl Slab {
+    fn insert(&mut self, conn: Conn) -> Option<u32> {
+        let idx = match self.free.pop() {
+            Some(i) => i as usize,
+            None => {
+                if self.slots.len() >= MAX_CONNS_PER_LOOP {
+                    return None;
+                }
+                self.slots.push(SlabSlot { gen: 0, conn: None });
+                self.slots.len() - 1
+            }
+        };
+        self.slots[idx].conn = Some(conn);
+        self.live += 1;
+        Some(token_of(self.slots[idx].gen, idx))
+    }
+
+    fn get_mut(&mut self, token: u32) -> Option<&mut Conn> {
+        let idx = (token & 0xFFFF) as usize;
+        let gen = (token >> 16) as u16;
+        let slot = self.slots.get_mut(idx)?;
+        if slot.gen != gen {
+            return None;
+        }
+        slot.conn.as_mut()
+    }
+
+    fn remove(&mut self, token: u32) -> Option<Conn> {
+        let idx = (token & 0xFFFF) as usize;
+        let gen = (token >> 16) as u16;
+        let slot = self.slots.get_mut(idx)?;
+        if slot.gen != gen {
+            return None;
+        }
+        let conn = slot.conn.take()?;
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(idx as u16);
+        self.live -= 1;
+        Some(conn)
+    }
+
+    fn tokens(&self) -> Vec<u32> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.conn.is_some())
+            .map(|(i, s)| token_of(s.gen, i))
+            .collect()
+    }
+}
+
+/// Decrement both open-connection counters for one dropped connection.
+fn conn_closed(inner: &Inner, shared: &LoopShared) {
+    inner.connections.fetch_sub(1, Ordering::Relaxed);
+    shared.conns.fetch_sub(1, Ordering::Relaxed);
+}
+
+fn event_loop(
+    inner: Arc<Inner>,
+    shared: Arc<LoopShared>,
+    mut wake_rx: UnixStream,
+    mut poller: Poller,
+    resp_tx: Sender<(u32, Response)>,
+) {
+    if poller.register(wake_rx.as_raw_fd(), WAKE_TOKEN, interest::READ).is_err() {
+        // Without a waker the loop cannot be driven; nothing has been
+        // accepted onto it yet, so exiting is safe.
+        return;
+    }
+    let mut slab = Slab::default();
+    let mut events: Vec<Event> = Vec::new();
+    let mut submit: Vec<(Request, Span)> = Vec::new();
+    // Tokens needing a service pass this round (deduplicated via the
+    // per-conn `queued_service` flag).
+    let mut service: Vec<u32> = Vec::new();
+    // Tokens with unadmitted backlog, re-serviced every ADMIT_TICK.
+    let mut backlog: Vec<u32> = Vec::new();
+    let mut next_sweep = Instant::now() + SWEEP_EVERY;
+    let mut drain_deadline: Option<Instant> = None;
+
+    loop {
+        let stopping = inner.stop.load(Ordering::SeqCst);
+        if stopping && drain_deadline.is_none() {
+            drain_deadline = Some(Instant::now() + DRAIN_DEADLINE);
+        }
+        let timeout = if stopping {
+            Duration::from_millis(10)
+        } else if !backlog.is_empty() {
+            ADMIT_TICK
+        } else {
+            next_sweep
+                .saturating_duration_since(Instant::now())
+                .clamp(Duration::from_millis(1), SWEEP_EVERY)
+        };
+        let _ = poller.wait(&mut events, timeout);
+
+        // Round-constant admission policy: every connection gets an equal
+        // share of the configured window, floored at one slot so a
+        // saturated sibling can never starve a low-rate tenant entirely.
+        let quota =
+            fair_quota(inner.cfg.window, inner.connections.load(Ordering::Relaxed) as usize);
+        let deadline =
+            (inner.cfg.deadline_ms > 0).then(|| Duration::from_millis(inner.cfg.deadline_ms));
+
+        // 1. Socket readiness.
+        for ev in events.iter().copied() {
+            if ev.token == WAKE_TOKEN {
+                drain_wake(&mut wake_rx);
+                continue;
+            }
+            let tok = ev.token as u32;
+            let mut ctx = LoopCtx { inner: &inner, submit: &mut submit, resp_tx: &resp_tx };
+            if let Some(conn) = slab.get_mut(tok) {
+                conn.pump(ev.readable || ev.error, ev.writable, &mut ctx, quota, deadline);
+                if !conn.queued_service {
+                    conn.queued_service = true;
+                    service.push(tok);
+                }
+            }
+        }
+
+        // 2. Adopt dispatched connections.
+        let fresh: Vec<TcpStream> = std::mem::take(&mut *shared.incoming.lock().unwrap());
+        for stream in fresh {
+            if stopping {
+                conn_closed(&inner, &shared);
+                continue;
+            }
+            let conn = match Conn::new(stream, inner.cfg.window) {
+                Ok(c) => c,
+                Err(_) => {
+                    conn_closed(&inner, &shared);
+                    continue;
+                }
+            };
+            match slab.insert(conn) {
+                Some(tok) => {
+                    let conn = slab.get_mut(tok).expect("freshly inserted conn");
+                    conn.set_token(tok);
+                    let fd = conn.fd();
+                    let want = conn.desired_interest();
+                    if poller.register(fd, tok as u64, want).is_err() {
+                        slab.remove(tok);
+                        conn_closed(&inner, &shared);
+                        continue;
+                    }
+                    let conn = slab.get_mut(tok).expect("conn still present");
+                    conn.registered = want;
+                    conn.queued_service = true;
+                    service.push(tok);
+                }
+                None => conn_closed(&inner, &shared), // slab full: shed the socket
+            }
+        }
+
+        // 3. Engine completions staged by the pump.
+        let comps: Vec<Response> = std::mem::take(&mut *shared.completions.lock().unwrap());
+        for resp in comps {
+            let tok = (resp.id >> 32) as u32;
+            if let Some(conn) = slab.get_mut(tok) {
+                conn.on_completion(resp, &inner);
+                if !conn.queued_service {
+                    conn.queued_service = true;
+                    service.push(tok);
+                }
+            }
+            // Stale token (connection already closed): completion dropped.
+        }
+
+        // 4. Backlog tick: re-service everyone with unadmitted requests so
+        // admission retries and overload shedding stay on the 5ms clock.
+        for tok in backlog.drain(..) {
+            if let Some(conn) = slab.get_mut(tok) {
+                conn.in_backlog = false;
+                if !conn.queued_service {
+                    conn.queued_service = true;
+                    service.push(tok);
+                }
+            }
+        }
+
+        // 5. Idle sweep schedule: visit every connection on the slow tick.
+        let now = Instant::now();
+        let sweep_due = now >= next_sweep;
+        if sweep_due {
+            next_sweep = now + SWEEP_EVERY;
+            for tok in slab.tokens() {
+                if let Some(conn) = slab.get_mut(tok) {
+                    if !conn.queued_service {
+                        conn.queued_service = true;
+                        service.push(tok);
+                    }
+                }
+            }
+        }
+
+        // 6. Service pass: admission, shedding, write flush, then interest
+        // reconciliation and close bookkeeping.
+        let io_timeout =
+            (inner.cfg.io_timeout_ms > 0).then(|| Duration::from_millis(inner.cfg.io_timeout_ms));
+        for tok in std::mem::take(&mut service) {
+            {
+                let mut ctx = LoopCtx { inner: &inner, submit: &mut submit, resp_tx: &resp_tx };
+                let Some(conn) = slab.get_mut(tok) else { continue };
+                conn.queued_service = false;
+                if stopping {
+                    conn.begin_shutdown();
+                }
+                conn.pump(false, false, &mut ctx, quota, deadline);
+            }
+            let Some(conn) = slab.get_mut(tok) else { continue };
+            let idle = match io_timeout {
+                Some(t) if sweep_due => conn.idle_expired(now, t),
+                _ => false,
+            };
+            if conn.should_close() || idle {
+                let fd = conn.fd();
+                let _ = poller.deregister(fd);
+                drop(slab.remove(tok));
+                conn_closed(&inner, &shared);
+                continue;
+            }
+            let want = conn.desired_interest();
+            if want != conn.registered {
+                conn.registered = want;
+                let fd = conn.fd();
+                let _ = poller.modify(fd, tok as u64, want);
+            }
+            if conn.has_backlog() && !conn.in_backlog {
+                conn.in_backlog = true;
+                backlog.push(tok);
+            }
+        }
+
+        // 7. One streaming submission per round: admissions from every
+        // connection share the coordinator batch. Blocks only when the
+        // shard queues are full — which *is* the backpressure path.
+        {
+            let mut ctx = LoopCtx { inner: &inner, submit: &mut submit, resp_tx: &resp_tx };
+            ctx.flush_submit();
+        }
+
+        if stopping {
+            if slab.live == 0 {
+                break;
+            }
+            if drain_deadline.is_some_and(|d| Instant::now() >= d) {
+                // Drain deadline expired: force-close the stragglers.
+                for tok in slab.tokens() {
+                    if let Some(conn) = slab.get_mut(tok) {
+                        let fd = conn.fd();
+                        let _ = poller.deregister(fd);
+                    }
+                    drop(slab.remove(tok));
+                    conn_closed(&inner, &shared);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn drain_wake(rx: &mut UnixStream) {
+    let mut buf = [0u8; 256];
+    loop {
+        match rx.read(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break, // WouldBlock: fully drained
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wakeable_pair() -> (UnixStream, UnixStream) {
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        (a, b)
+    }
+
+    fn poller_sees_readability(mut poller: Poller) {
+        let (tx, rx) = wakeable_pair();
+        poller.register(rx.as_raw_fd(), 7, interest::READ).unwrap();
+        let mut out = Vec::new();
+
+        // Nothing written yet: a short wait returns no events.
+        poller.wait(&mut out, Duration::from_millis(5)).unwrap();
+        assert!(out.iter().all(|e| e.token != 7), "spurious readiness: {out:?}");
+
+        (&tx).write_all(&[1u8]).unwrap();
+        poller.wait(&mut out, Duration::from_millis(1000)).unwrap();
+        let ev = out.iter().find(|e| e.token == 7).expect("readable event");
+        assert!(ev.readable);
+
+        // Interest can be narrowed to write-only and the fd deregistered.
+        poller.modify(rx.as_raw_fd(), 7, interest::WRITE).unwrap();
+        poller.wait(&mut out, Duration::from_millis(100)).unwrap();
+        let ev = out.iter().find(|e| e.token == 7).expect("writable event");
+        assert!(ev.writable);
+        poller.deregister(rx.as_raw_fd()).unwrap();
+        poller.wait(&mut out, Duration::from_millis(5)).unwrap();
+        assert!(out.iter().all(|e| e.token != 7), "event after deregister: {out:?}");
+    }
+
+    #[test]
+    fn poll_fallback_backend_reports_readiness() {
+        let poller = Poller::poll_fallback().unwrap();
+        assert!(poller.is_fallback());
+        poller_sees_readability(poller);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_backend_reports_readiness() {
+        let poller = Poller::new().unwrap();
+        assert!(!poller.is_fallback(), "Linux default must be epoll");
+        poller_sees_readability(poller);
+    }
+
+    #[test]
+    fn fair_quota_splits_window_beyond_sixteen_conns() {
+        // Up to 16 connections every tenant keeps the full window (the
+        // pre-reactor per-connection semantics).
+        assert_eq!(fair_quota(1024, 0), 1024);
+        assert_eq!(fair_quota(1024, 1), 1024);
+        assert_eq!(fair_quota(1024, 16), 1024);
+        // Beyond that the window is shared fairly, floored at one slot.
+        assert_eq!(fair_quota(1024, 64), 256);
+        assert_eq!(fair_quota(1024, 16_384), 1);
+        assert_eq!(fair_quota(1024, 1_000_000), 1);
+        // Tiny windows still admit.
+        assert_eq!(fair_quota(1, 10_000), 1);
+        assert_eq!(fair_quota(0, 3), 1);
+    }
+
+    #[test]
+    fn fd_capacity_check_names_ulimit_in_errors() {
+        // The current limit always covers a trivial ask.
+        assert!(ensure_fd_capacity(8).is_ok());
+        // An impossible ask fails with actionable advice.
+        let err = ensure_fd_capacity(u64::MAX - 1).unwrap_err();
+        assert!(err.contains("ulimit -n"), "unhelpful fd error: {err}");
+    }
+}

@@ -1,18 +1,26 @@
-//! SIMD-wire TCP server over coordinator v2 (DESIGN.md §8–§9).
+//! SIMD-wire TCP server over coordinator v2 (DESIGN.md §8–§9, §15).
 //!
-//! Thread layout: one accept thread; per connection, the spawned
-//! connection thread becomes the *reader* and starts one *writer* thread.
-//! The reader decodes frames, admits requests under a bounded in-flight
-//! window (admission control: when the window is full the reader stops
-//! draining the socket, so backpressure propagates over TCP instead of
-//! buffering unboundedly), and funnels them into **one shared
-//! coordinator** via [`Coordinator::submit_batch_streaming`] — requests
-//! carry their accuracy knob `w` per request, and the coordinator's own
-//! mixed-`{bits, w}` word assembler keeps different-`w` requests out of
-//! each other's words (their correction tables differ — §3.3) while the
-//! whole accuracy spectrum shares one worker pool. The writer drains
-//! completions and writes response frames **out of order, as SIMD lanes
-//! complete**, freeing window slots and recording latency as it goes.
+//! Two backends share everything above the socket layer:
+//!
+//! * **Reactor** (the default, [`Server::start`] /
+//!   [`Server::start_reactor`]): a fixed pool of event-loop threads
+//!   multiplexing non-blocking sockets through a poll/epoll shim
+//!   ([`super::reactor`]), with per-connection state machines
+//!   ([`super::conn`]) and *fair admission* — each connection's in-flight
+//!   quota is an equal share of the configured window, floored at one
+//!   slot, so a saturating tenant cannot starve a low-rate one. Thread
+//!   count is bounded by the pool size, not the connection count.
+//! * **Threaded** ([`Server::start_threaded`]): the original
+//!   reader/writer thread pair per connection ([`super::threaded`]),
+//!   retained as the A/B baseline for the connection-count sweep.
+//!
+//! Both funnel admitted requests into **one shared coordinator** via
+//! [`Coordinator::submit_batch_streaming_spanned`] — requests carry their
+//! accuracy knob `w` per request, and the coordinator's mixed-`{bits, w}`
+//! word assembler keeps different-`w` requests out of each other's words
+//! (their correction tables differ — §3.3) while the whole accuracy
+//! spectrum shares one worker pool. Responses flow back out of order, as
+//! SIMD lanes complete.
 //!
 //! Requests flagged with an error budget instead of a fixed `w` are
 //! resolved at admission through the error-budget router
@@ -21,35 +29,41 @@
 //!
 //! Fault tolerance (DESIGN.md §11): admission carries a deadline — a
 //! request that cannot get a window slot within `deadline_ms` is shed
-//! per-request with `ERR_OVERLOAD` (the connection stays open); sockets
-//! carry read/write timeouts so a stalled peer errors out instead of
-//! wedging its threads; and a request that shard supervision gave up on
+//! per-request with `ERR_OVERLOAD` (the connection stays open); stalled
+//! peers are timed out (socket timeouts on the threaded backend, the idle
+//! sweep on the reactor); and a request that shard supervision gave up on
 //! fails per-request with `ERR_UNAVAILABLE`. With `cfg.faults` set, the
 //! deterministic chaos injector drops accepted connections and is
 //! threaded into the shard pool (injected panics / slow shards / delayed
 //! completions).
+//!
+//! Shutdown ([`Server::shutdown`] or drop) stops the accept loop, wakes
+//! every live connection, and drains them with a bounded deadline
+//! ([`DRAIN_DEADLINE`]) — `simdive serve` exits promptly under Ctrl-C
+//! instead of leaving connection threads parked in blocking reads.
 
+use super::reactor::{self, ReactorOptions};
 use super::stats::ServeCounters;
-use super::wire::{self, ClientFrame, WireStats};
-use crate::coordinator::{
-    Coordinator, CoordinatorConfig, ErrorProfile, Request, Response, Stats,
-};
+use super::threaded;
+use super::wire::{self, WireStats};
+use crate::coordinator::{Coordinator, CoordinatorConfig, ErrorProfile, Stats};
 use crate::faults::{FaultConfig, FaultInjector, SITE_NAMES};
-use crate::obs::{
-    self, Counter, Hist, Registry, Snapshot, Span, Tiers, TraceEvent, TraceRing, Value,
-};
-use std::io::{self, BufReader, BufWriter, Write};
+use crate::obs::{Counter, Hist, Registry, Snapshot, Tiers, TraceEvent, TraceRing, Value};
+use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Fixed seed of the server's trace-sampling ring: the 1-in-N sampling
 /// decision is a pure function of `(seed, arrival index)`, so a given
 /// arrival order traces the same requests run-to-run.
 const TRACE_SEED: u64 = 0x51D1_7E0B_5EED;
+
+/// How long shutdown waits for live connections to drain before
+/// force-closing the stragglers.
+pub(crate) const DRAIN_DEADLINE: Duration = Duration::from_secs(3);
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
@@ -61,8 +75,11 @@ pub struct ServeConfig {
     pub batch: usize,
     /// Coordinator bounded-queue depth.
     pub queue_depth: usize,
-    /// Per-connection admission window: maximum in-flight requests before
-    /// the reader stops draining the socket.
+    /// Admission window. On the threaded backend this is per connection:
+    /// maximum in-flight requests before the reader stops draining the
+    /// socket. On the reactor it is the *shared* budget that fair
+    /// admission splits into per-connection quotas (full window up to 16
+    /// connections, an equal share — floored at one slot — beyond that).
     pub window: usize,
     /// Admission deadline (ms): how long a request may wait for a window
     /// slot before it is shed with `ERR_OVERLOAD` instead of blocking the
@@ -71,8 +88,7 @@ pub struct ServeConfig {
     pub deadline_ms: u64,
     /// Per-connection socket read/write timeout (ms). A peer that stalls
     /// mid-frame — or a socket whose send buffer a dead peer never drains —
-    /// errors out instead of wedging the reader/writer thread. `0` =
-    /// disabled.
+    /// errors out instead of wedging its connection. `0` = disabled.
     pub io_timeout_ms: u64,
     /// Chaos-harness fault plan. `None` (the default) injects nothing and
     /// adds nothing to the hot path beyond an `Option` check.
@@ -93,41 +109,54 @@ impl Default for ServeConfig {
     }
 }
 
-/// Shared server state.
-struct Inner {
-    cfg: ServeConfig,
-    stop: AtomicBool,
+/// Fair admission quota (DESIGN.md §15): each connection's share of the
+/// window. Up to 16 connections every tenant keeps the full window (the
+/// historical per-connection semantics); beyond that the window is split
+/// equally, floored at one slot so every connection always makes
+/// progress.
+pub(crate) fn fair_quota(window: usize, active_conns: usize) -> usize {
+    let window = window.max(1);
+    (window * 16 / active_conns.max(1)).clamp(1, window)
+}
+
+/// Shared server state (both backends).
+pub(crate) struct Inner {
+    pub(crate) cfg: ServeConfig,
+    pub(crate) stop: AtomicBool,
     /// The one shared coordinator serving every `{bits, w}` mix
     /// (coordinator v2 — DESIGN.md §9).
-    coordinator: Coordinator,
+    pub(crate) coordinator: Coordinator,
     /// Server-wide completed requests + latency.
-    global: ServeCounters,
-    connections: AtomicU64,
+    pub(crate) global: ServeCounters,
+    pub(crate) connections: AtomicU64,
+    /// High-water mark of `connections` (thread-count accounting for the
+    /// threaded backend).
+    pub(crate) peak_connections: AtomicU64,
     /// Requests shed with `ERR_OVERLOAD` (admission deadline expired).
-    shed: AtomicU64,
+    pub(crate) shed: AtomicU64,
     /// Requests failed with `ERR_UNAVAILABLE` (shard supervision gave up).
-    unavailable: AtomicU64,
+    pub(crate) unavailable: AtomicU64,
     /// Chaos-harness injector shared with the coordinator's shard pool;
     /// `None` in production.
-    injector: Option<Arc<FaultInjector>>,
+    pub(crate) injector: Option<Arc<FaultInjector>>,
     /// The metrics registry behind `STATS2` (DESIGN.md §12). The shard
     /// pool records its stage/tier/shard metrics into it directly.
-    registry: Arc<Registry>,
+    pub(crate) registry: Arc<Registry>,
     /// Seeded-sampled bounded ring of completed request traces.
-    ring: Arc<TraceRing>,
+    pub(crate) ring: Arc<TraceRing>,
     /// Serve-side stage histograms (`admit` = admission→shard-submit,
     /// `write` = response-routed→socket-write); the engine records the
     /// `queue`/`assemble`/`execute` stages.
-    stage_admit: Arc<Hist>,
-    stage_write: Arc<Hist>,
+    pub(crate) stage_admit: Arc<Hist>,
+    pub(crate) stage_write: Arc<Hist>,
     /// Budget-routing decision counters.
-    route_budget: Arc<Counter>,
-    route_fixed: Arc<Counter>,
+    pub(crate) route_budget: Arc<Counter>,
+    pub(crate) route_fixed: Arc<Counter>,
     /// `route.budget_w{w}`: which knob the budget router resolved to.
-    route_budget_w: Vec<Arc<Counter>>,
+    pub(crate) route_budget_w: Vec<Arc<Counter>>,
     /// Per-`{op, bits, w}` tier counters — the same handles the shard
     /// pool increments (get-or-create registration shares them).
-    tiers: Tiers,
+    pub(crate) tiers: Tiers,
 }
 
 impl Inner {
@@ -136,7 +165,7 @@ impl Inner {
     }
 
     /// Build the `STATS_RESP` payload for one connection's view.
-    fn snapshot(&self, conn: &ServeCounters) -> WireStats {
+    pub(crate) fn snapshot(&self, conn: &ServeCounters) -> WireStats {
         let cs = self.coordinator_stats();
         WireStats {
             requests: self.global.requests(),
@@ -159,7 +188,7 @@ impl Inner {
     /// serve-level counters that live outside the registry (legacy
     /// atomics kept for `STATS` bit-compatibility), fault-injection
     /// observation counters, and the delivered-MRED estimate.
-    fn snapshot2(&self) -> Snapshot {
+    pub(crate) fn snapshot2(&self) -> Snapshot {
         let mut snap = self.registry.snapshot();
         snap.push("conn.open", Value::Gauge(self.connections.load(Ordering::Relaxed) as i64));
         snap.push("serve.requests", Value::Counter(self.global.requests()));
@@ -192,18 +221,60 @@ impl Inner {
     }
 }
 
-/// The serving front end. Dropping (or [`Server::shutdown`]) stops the
-/// accept loop; established connections drain on their own threads.
+/// Which backend owns the established connections.
+enum Backend {
+    Reactor(reactor::Reactor),
+    Threaded(Arc<threaded::ConnRegistry>),
+}
+
+/// Where the accept loop hands fresh connections.
+enum AcceptSink {
+    Reactor(reactor::Dispatcher),
+    Threaded(Arc<threaded::ConnRegistry>),
+}
+
+/// The serving front end. [`Server::shutdown`] (or drop) stops the accept
+/// loop and drains live connections with a bounded deadline.
 pub struct Server {
     addr: SocketAddr,
     inner: Arc<Inner>,
     accept: Option<JoinHandle<()>>,
+    backend: Backend,
 }
 
 impl Server {
     /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start accepting connections.
+    /// start accepting connections on the default backend (the reactor).
     pub fn start<A: ToSocketAddrs>(listen: A, cfg: ServeConfig) -> io::Result<Server> {
+        Self::start_reactor(listen, cfg, ReactorOptions::default())
+    }
+
+    /// Start on the poll-based reactor backend with explicit tuning.
+    pub fn start_reactor<A: ToSocketAddrs>(
+        listen: A,
+        cfg: ServeConfig,
+        opts: ReactorOptions,
+    ) -> io::Result<Server> {
+        let (listener, addr, inner) = Self::bind(listen, cfg)?;
+        let pool = reactor::Reactor::start(&inner, opts)?;
+        let sink = AcceptSink::Reactor(pool.dispatcher());
+        let accept = Self::spawn_accept(listener, &inner, sink)?;
+        Ok(Server { addr, inner, accept: Some(accept), backend: Backend::Reactor(pool) })
+    }
+
+    /// Start on the legacy thread-per-connection backend.
+    pub fn start_threaded<A: ToSocketAddrs>(listen: A, cfg: ServeConfig) -> io::Result<Server> {
+        let (listener, addr, inner) = Self::bind(listen, cfg)?;
+        let registry = threaded::ConnRegistry::new();
+        let sink = AcceptSink::Threaded(Arc::clone(&registry));
+        let accept = Self::spawn_accept(listener, &inner, sink)?;
+        Ok(Server { addr, inner, accept: Some(accept), backend: Backend::Threaded(registry) })
+    }
+
+    fn bind<A: ToSocketAddrs>(
+        listen: A,
+        cfg: ServeConfig,
+    ) -> io::Result<(TcpListener, SocketAddr, Arc<Inner>)> {
         let listener = TcpListener::bind(listen)?;
         let addr = listener.local_addr()?;
         let injector = cfg.faults.filter(|f| f.is_active()).map(FaultInjector::new);
@@ -222,6 +293,7 @@ impl Server {
             ),
             global: ServeCounters::new(),
             connections: AtomicU64::new(0),
+            peak_connections: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             unavailable: AtomicU64::new(0),
             injector,
@@ -236,11 +308,18 @@ impl Server {
             tiers: Tiers::register(&registry),
             registry,
         });
-        let accept = {
-            let inner = Arc::clone(&inner);
-            std::thread::spawn(move || accept_loop(listener, inner))
-        };
-        Ok(Server { addr, inner, accept: Some(accept) })
+        Ok((listener, addr, inner))
+    }
+
+    fn spawn_accept(
+        listener: TcpListener,
+        inner: &Arc<Inner>,
+        sink: AcceptSink,
+    ) -> io::Result<JoinHandle<()>> {
+        let inner = Arc::clone(inner);
+        std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, inner, sink))
     }
 
     /// The bound address (resolves `:0` to the ephemeral port).
@@ -268,28 +347,54 @@ impl Server {
         self.inner.connections.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting new connections and join the accept thread.
-    pub fn shutdown(mut self) {
-        self.stop_accept();
+    /// Serving-side thread count implied by the current backend: accept +
+    /// event loops + completion pumps for the reactor (a constant), accept
+    /// + a reader/writer pair per *peak* connection for the threaded
+    /// backend (O(connections) — the number the reactor exists to bound).
+    /// Coordinator shard workers are excluded: both backends share them.
+    pub fn thread_count(&self) -> usize {
+        match &self.backend {
+            Backend::Reactor(pool) => 1 + 2 * pool.event_loops(),
+            Backend::Threaded(_) => {
+                1 + 2 * self.inner.peak_connections.load(Ordering::Relaxed) as usize
+            }
+        }
     }
 
-    fn stop_accept(&mut self) {
+    /// Stop accepting, wake every live connection, and drain them with a
+    /// bounded deadline ([`DRAIN_DEADLINE`]).
+    pub fn shutdown(mut self) {
+        self.stop_all();
+    }
+
+    /// Idempotent teardown (also runs on drop, including after
+    /// `shutdown` consumed the value).
+    fn stop_all(&mut self) {
         self.inner.stop.store(true, Ordering::SeqCst);
         // Wake the blocking accept with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        match &mut self.backend {
+            Backend::Reactor(pool) => {
+                // Loops observe `stop`, switch their connections to drain
+                // mode, and exit once empty or at the drain deadline.
+                pool.wake_all();
+                pool.join();
+            }
+            Backend::Threaded(registry) => registry.drain(),
+        }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop_accept();
+        self.stop_all();
     }
 }
 
-fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>, sink: AcceptSink) {
     for conn in listener.incoming() {
         if inner.stop.load(Ordering::SeqCst) {
             break;
@@ -303,160 +408,22 @@ fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
                     drop(stream);
                     continue;
                 }
-                let inner = Arc::clone(&inner);
-                std::thread::spawn(move || {
-                    let _ = handle_conn(stream, inner);
-                });
+                match &sink {
+                    AcceptSink::Reactor(dispatcher) => dispatcher.dispatch(&inner, stream),
+                    AcceptSink::Threaded(registry) => {
+                        threaded::spawn_conn(stream, Arc::clone(&inner), Arc::clone(registry))
+                    }
+                }
             }
             Err(_) => continue, // transient accept error
         }
     }
 }
 
-/// Per-connection in-flight window: a fixed slot table guarded by a
-/// mutex + condvar. `acquire` is the admission-control point — it blocks
-/// the reader when every slot is taken, which stops socket draining and
-/// pushes backpressure to the client over TCP.
-struct Inflight {
-    slots: Mutex<SlotTable>,
-    freed: Condvar,
-}
-
-struct SlotTable {
-    free: Vec<u32>,
-    /// `entries[slot]` = (wire id, admission time) of the occupying request.
-    entries: Vec<(u64, Instant)>,
-}
-
-impl Inflight {
-    fn new(window: usize) -> Self {
-        let window = window.max(1);
-        Inflight {
-            slots: Mutex::new(SlotTable {
-                free: (0..window as u32).rev().collect(),
-                entries: vec![(0, Instant::now()); window],
-            }),
-            freed: Condvar::new(),
-        }
-    }
-
-    /// Take a slot if one is free (never blocks).
-    fn try_acquire(&self, wire_id: u64) -> Option<u32> {
-        let mut t = self.slots.lock().unwrap();
-        let slot = t.free.pop()?;
-        t.entries[slot as usize] = (wire_id, Instant::now());
-        Some(slot)
-    }
-
-    /// Block until a slot frees, then take it.
-    fn acquire(&self, wire_id: u64) -> u32 {
-        self.acquire_deadline(wire_id, None).expect("unbounded acquire cannot time out")
-    }
-
-    /// Block until a slot frees or `deadline` elapses. `None` deadline =
-    /// wait indefinitely (always returns `Some`). A `None` return is the
-    /// shedding signal: the request waited its whole admission budget and
-    /// never got a slot.
-    fn acquire_deadline(&self, wire_id: u64, deadline: Option<Duration>) -> Option<u32> {
-        let start = Instant::now();
-        let mut t = self.slots.lock().unwrap();
-        loop {
-            if let Some(slot) = t.free.pop() {
-                t.entries[slot as usize] = (wire_id, Instant::now());
-                return Some(slot);
-            }
-            match deadline {
-                None => t = self.freed.wait(t).unwrap(),
-                Some(d) => {
-                    let left = d.checked_sub(start.elapsed())?;
-                    let (guard, timeout) = self.freed.wait_timeout(t, left).unwrap();
-                    t = guard;
-                    if timeout.timed_out() && t.free.is_empty() {
-                        return None;
-                    }
-                }
-            }
-        }
-    }
-
-    /// Free a slot; returns the wire id and the admission→now latency.
-    fn release(&self, slot: u32) -> (u64, u64) {
-        let mut t = self.slots.lock().unwrap();
-        let (id, t0) = t.entries[slot as usize];
-        t.free.push(slot);
-        drop(t);
-        self.freed.notify_one();
-        (id, t0.elapsed().as_nanos() as u64)
-    }
-}
-
-/// Shared buffered write half. The writer thread owns the response
-/// stream; the reader grabs the lock only for the rare `STATS_RESP`/`ERR`
-/// frames, so frames never interleave mid-frame.
-type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
-
-fn handle_conn(stream: TcpStream, inner: Arc<Inner>) -> io::Result<()> {
-    stream.set_nodelay(true).ok();
-    // Socket timeouts: a peer that stalls mid-frame (or never drains its
-    // receive buffer) errors this connection out instead of wedging its
-    // reader/writer threads forever.
-    if inner.cfg.io_timeout_ms > 0 {
-        let t = Some(Duration::from_millis(inner.cfg.io_timeout_ms));
-        stream.set_read_timeout(t)?;
-        stream.set_write_timeout(t)?;
-    }
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
-
-    // Hello exchange. The server always answers with its *own* hello (so
-    // a cross-version client can read the server's version and report it),
-    // then closes a mismatched connection with ERR_BAD_VERSION.
-    let peer_version = wire::read_hello(&mut reader)?;
-    {
-        let mut w = writer.lock().unwrap();
-        wire::write_hello(&mut *w)?;
-        if peer_version != wire::VERSION {
-            wire::write_err(&mut *w, wire::ERR_BAD_VERSION)?;
-            w.flush()?;
-            return Ok(());
-        }
-        w.flush()?;
-    }
-
-    inner.connections.fetch_add(1, Ordering::Relaxed);
-    let conn_stats = Arc::new(ServeCounters::new());
-    let inflight = Arc::new(Inflight::new(inner.cfg.window));
-    // Set once the reader has queued an `ERR` frame: the protocol promises
-    // `ERR` is the last frame, so the writer stops emitting `RESP`s.
-    let closed = Arc::new(AtomicBool::new(false));
-    let (resp_tx, resp_rx) = std::sync::mpsc::channel::<(u32, Response)>();
-
-    let writer_handle = {
-        let writer = Arc::clone(&writer);
-        let inflight = Arc::clone(&inflight);
-        let conn_stats = Arc::clone(&conn_stats);
-        let inner = Arc::clone(&inner);
-        let closed = Arc::clone(&closed);
-        std::thread::spawn(move || {
-            writer_loop(writer, resp_rx, inflight, conn_stats, inner, closed)
-        })
-    };
-
-    let result =
-        reader_loop(&mut reader, &writer, &inner, &inflight, &conn_stats, &resp_tx, &closed);
-
-    // Dropping our sender lets the writer exit once every in-flight
-    // response (whose routes hold clones) has been delivered.
-    drop(resp_tx);
-    let _ = writer_handle.join();
-    inner.connections.fetch_sub(1, Ordering::Relaxed);
-    result
-}
-
 /// Resolve a wire request's effective accuracy knob: the stated `w`, or —
 /// with an error budget on the wire — the cheapest `w` whose profiled
 /// MRED fits the budget (DESIGN.md §9). Counts the routing decision.
-fn resolve_w(inner: &Inner, r: &wire::WireRequest) -> u32 {
+pub(crate) fn resolve_w(inner: &Inner, r: &wire::WireRequest) -> u32 {
     if r.budget_ppm > 0 {
         let w = ErrorProfile::get().pick_w(r.op, r.bits, r.budget_ppm);
         inner.route_budget.inc();
@@ -470,197 +437,9 @@ fn resolve_w(inner: &Inner, r: &wire::WireRequest) -> u32 {
     }
 }
 
-fn reader_loop(
-    reader: &mut BufReader<TcpStream>,
-    writer: &SharedWriter,
-    inner: &Arc<Inner>,
-    inflight: &Arc<Inflight>,
-    conn_stats: &Arc<ServeCounters>,
-    resp_tx: &Sender<(u32, Response)>,
-    closed: &Arc<AtomicBool>,
-) -> io::Result<()> {
-    // Admitted requests buffered for one streaming submission; the shared
-    // coordinator's assembler does the per-{bits, w} sub-queueing.
-    let mut pending: Vec<(Request, Span)> = Vec::new();
-    loop {
-        match wire::read_client_frame(reader)? {
-            ClientFrame::Eof => return Ok(()),
-            ClientFrame::Bad(code) => {
-                // `ERR` must be the last frame on the wire: mark the
-                // connection closed *before* taking the lock, so once the
-                // writer's current drain (which holds the lock) finishes,
-                // it emits no further `RESP` frames.
-                closed.store(true, Ordering::SeqCst);
-                let mut w = writer.lock().unwrap();
-                wire::write_err(&mut *w, code)?;
-                w.flush()?;
-                return Ok(());
-            }
-            ClientFrame::Stats => {
-                // Submit buffered work first so the snapshot reflects it.
-                submit_pending(inner, &mut pending, resp_tx);
-                let snap = inner.snapshot(conn_stats);
-                let mut w = writer.lock().unwrap();
-                wire::write_stats_resp(&mut *w, &snap)?;
-                w.flush()?;
-            }
-            ClientFrame::Stats2 => {
-                submit_pending(inner, &mut pending, resp_tx);
-                let snap = inner.snapshot2();
-                let mut w = writer.lock().unwrap();
-                wire::write_stats2_resp(&mut *w, &snap)?;
-                w.flush()?;
-            }
-            ClientFrame::Trace => {
-                let events = inner.ring.events();
-                let mut w = writer.lock().unwrap();
-                wire::write_trace_resp(&mut *w, &events)?;
-                w.flush()?;
-            }
-            ClientFrame::Requests(reqs) => {
-                let deadline =
-                    (inner.cfg.deadline_ms > 0).then(|| Duration::from_millis(inner.cfg.deadline_ms));
-                for r in &reqs {
-                    // Admission control: take a window slot, submitting
-                    // buffered work before blocking so slots can free.
-                    let slot = match inflight.try_acquire(r.id) {
-                        Some(s) => s,
-                        None => {
-                            submit_pending(inner, &mut pending, resp_tx);
-                            match inflight.acquire_deadline(r.id, deadline) {
-                                Some(s) => s,
-                                None => {
-                                    // Admission deadline expired: shed this
-                                    // request per-request (`RESP_ERR`, the
-                                    // connection stays open) rather than
-                                    // stalling every request behind it.
-                                    inner.shed.fetch_add(1, Ordering::Relaxed);
-                                    let mut w = writer.lock().unwrap();
-                                    wire::write_response_err(&mut *w, r.id, wire::ERR_OVERLOAD)?;
-                                    w.flush()?;
-                                    continue;
-                                }
-                            }
-                        }
-                    };
-                    // The coordinator-side id is the window slot; the wire
-                    // id is recovered from the slot table on completion.
-                    let w = resolve_w(inner, r);
-                    let op_byte = match r.op {
-                        crate::coordinator::ReqOp::Mul => 0u8,
-                        crate::coordinator::ReqOp::Div => 1u8,
-                    };
-                    let span = Span::admitted(inner.ring.sample(), op_byte, r.bits as u8, w as u8);
-                    pending.push((
-                        Request { id: slot as u64, op: r.op, bits: r.bits, w, a: r.a, b: r.b },
-                        span,
-                    ));
-                    if pending.len() >= inner.cfg.batch {
-                        submit_pending(inner, &mut pending, resp_tx);
-                    }
-                }
-                submit_pending(inner, &mut pending, resp_tx);
-            }
-        }
-    }
-}
-
-/// Stream the buffered admissions into the shared coordinator.
-fn submit_pending(
-    inner: &Arc<Inner>,
-    pending: &mut Vec<(Request, Span)>,
-    resp_tx: &Sender<(u32, Response)>,
-) {
-    if !pending.is_empty() {
-        inner.coordinator.submit_batch_streaming_spanned(std::mem::take(pending), 0, resp_tx);
-    }
-}
-
-/// Writer thread: drain completions, free window slots, record latency,
-/// and write `RESP` frames out-of-order as lanes complete. Write failures
-/// (client went away) switch to drain-only mode so slots keep freeing and
-/// the reader can run to its own error/EOF.
-fn writer_loop(
-    writer: SharedWriter,
-    rx: Receiver<(u32, Response)>,
-    inflight: Arc<Inflight>,
-    conn_stats: Arc<ServeCounters>,
-    inner: Arc<Inner>,
-    closed: Arc<AtomicBool>,
-) {
-    let mut dead = false;
-    loop {
-        // Block for one completion, then drain greedily before flushing.
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => break,
-        };
-        let mut w = writer.lock().unwrap();
-        let mut msg = Some(first);
-        while let Some((_, resp)) = msg.take() {
-            let (wire_id, latency_ns) = inflight.release(resp.id as u32);
-            conn_stats.record(latency_ns);
-            inner.global.record(latency_ns);
-            // Serve-side stage stamps: `admit` covers admission→shard
-            // submission, `write` covers response-routed→socket-write.
-            // Sampled spans become full trace events at this point — the
-            // request's last stop in the pipeline.
-            let span = resp.span;
-            if span.t_admit_ns > 0 {
-                let t_write = obs::now_ns();
-                inner.stage_admit.record_ns(span.t_submit_ns.saturating_sub(span.t_admit_ns));
-                inner.stage_write.record_ns(t_write.saturating_sub(span.t_done_ns));
-                if span.sampled {
-                    inner.ring.push(TraceEvent::from_span(wire_id, &span, t_write));
-                }
-            }
-            dead = dead || closed.load(Ordering::SeqCst);
-            if resp.err != 0 {
-                // Shard supervision gave this request up (double fault):
-                // fail it per-request; the connection survives.
-                inner.unavailable.fetch_add(1, Ordering::Relaxed);
-                if !dead && wire::write_response_err(&mut *w, wire_id, wire::ERR_UNAVAILABLE).is_err()
-                {
-                    dead = true;
-                }
-            } else if !dead && wire::write_response(&mut *w, wire_id, resp.value).is_err() {
-                dead = true;
-            }
-            if let Ok(m) = rx.try_recv() {
-                msg = Some(m);
-            }
-        }
-        if !dead && w.flush().is_err() {
-            dead = true;
-        }
-    }
-    if !dead {
-        let _ = writer.lock().unwrap().flush();
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn inflight_window_blocks_and_frees() {
-        let inflight = Arc::new(Inflight::new(2));
-        let s0 = inflight.acquire(10);
-        let s1 = inflight.acquire(11);
-        assert_ne!(s0, s1);
-        assert!(inflight.try_acquire(12).is_none(), "window must be full");
-        let inflight2 = Arc::clone(&inflight);
-        let t = std::thread::spawn(move || inflight2.acquire(12));
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        let (id, _lat) = inflight.release(s0);
-        assert_eq!(id, 10);
-        let s2 = t.join().unwrap();
-        assert_eq!(s2, s0, "freed slot is reused");
-        inflight.release(s1);
-        inflight.release(s2);
-        assert!(inflight.try_acquire(13).is_some());
-    }
 
     #[test]
     fn server_binds_ephemeral_port_and_shuts_down() {
@@ -668,6 +447,26 @@ mod tests {
         let addr = server.local_addr();
         assert_ne!(addr.port(), 0);
         assert_eq!(server.connections(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn threaded_backend_binds_and_shuts_down() {
+        let server = Server::start_threaded("127.0.0.1:0", ServeConfig::default()).unwrap();
+        assert_ne!(server.local_addr().port(), 0);
+        assert_eq!(server.thread_count(), 1, "no connections yet: accept thread only");
+        server.shutdown();
+    }
+
+    #[test]
+    fn reactor_thread_count_is_constant() {
+        let server = Server::start_reactor(
+            "127.0.0.1:0",
+            ServeConfig::default(),
+            ReactorOptions { loops: 2, force_poll_fallback: false },
+        )
+        .unwrap();
+        assert_eq!(server.thread_count(), 1 + 2 * 2);
         server.shutdown();
     }
 }

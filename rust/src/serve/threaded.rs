@@ -1,0 +1,443 @@
+//! Thread-per-connection serve backend (the pre-reactor architecture,
+//! retained behind [`super::Server::start_threaded`]).
+//!
+//! Per connection: the spawned connection thread becomes the *reader* and
+//! starts one *writer* thread. The reader decodes frames, admits requests
+//! under a bounded in-flight window ([`Inflight`] — when the window is
+//! full the reader stops draining the socket, so backpressure propagates
+//! over TCP), and funnels them into the shared coordinator. The writer
+//! drains completions and writes response frames out of order as SIMD
+//! lanes complete.
+//!
+//! This backend is kept for A/B comparison in the connection-count sweep
+//! (`loadgen --sweep`): it is the baseline whose thread-pair-per-socket
+//! scheduler thrash the reactor (DESIGN.md §15) exists to remove. It
+//! shares `Inner` — config, coordinator, counters, registry, trace ring —
+//! with the reactor backend, so every observability surface reads the
+//! same either way.
+
+use super::server::{resolve_w, Inner, DRAIN_DEADLINE};
+use super::stats::ServeCounters;
+use super::wire::{self, ClientFrame};
+use crate::coordinator::{Request, Response};
+use crate::obs::{self, Span, TraceEvent};
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Connection threads carry shallow stacks; the default 8 MiB per thread
+/// is what makes thread-per-connection fall over first at high counts.
+const THREAD_STACK: usize = 512 * 1024;
+
+/// Live-connection registry: a duplicate handle of every established
+/// socket, so shutdown can `shutdown(2)` them all — which unblocks the
+/// reader/writer threads out of their blocking socket calls — and then
+/// wait (bounded) for the connection threads to deregister themselves.
+pub(crate) struct ConnRegistry {
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    next_id: AtomicU64,
+}
+
+impl ConnRegistry {
+    pub fn new() -> Arc<ConnRegistry> {
+        Arc::new(ConnRegistry { streams: Mutex::new(HashMap::new()), next_id: AtomicU64::new(0) })
+    }
+
+    fn register(&self, stream: TcpStream) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.streams.lock().unwrap().insert(id, stream);
+        id
+    }
+
+    fn unregister(&self, id: u64) {
+        self.streams.lock().unwrap().remove(&id);
+    }
+
+    /// Wake every live connection out of its blocking reads/writes and
+    /// wait up to [`DRAIN_DEADLINE`] for the connection threads to exit.
+    /// Re-issues the socket shutdown each poll so a connection that
+    /// registered mid-drain is caught too.
+    pub fn drain(&self) {
+        let t0 = Instant::now();
+        loop {
+            {
+                let streams = self.streams.lock().unwrap();
+                if streams.is_empty() {
+                    return;
+                }
+                for stream in streams.values() {
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            }
+            if t0.elapsed() >= DRAIN_DEADLINE {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}
+
+/// Spawn the reader thread for a freshly accepted connection. A failed
+/// spawn (thread exhaustion — the failure mode this backend is benched
+/// for) drops the stream: the client sees a clean close, not a panic.
+pub(crate) fn spawn_conn(stream: TcpStream, inner: Arc<Inner>, registry: Arc<ConnRegistry>) {
+    let spawned = std::thread::Builder::new()
+        .name("serve-conn".into())
+        .stack_size(THREAD_STACK)
+        .spawn(move || {
+            let reg_id = stream.try_clone().ok().map(|dup| registry.register(dup));
+            let _ = handle_conn(stream, inner);
+            if let Some(id) = reg_id {
+                registry.unregister(id);
+            }
+        });
+    let _ = spawned;
+}
+
+/// Per-connection in-flight window: a fixed slot table guarded by a
+/// mutex + condvar. `acquire` is the admission-control point — it blocks
+/// the reader when every slot is taken, which stops socket draining and
+/// pushes backpressure to the client over TCP.
+struct Inflight {
+    slots: Mutex<SlotTable>,
+    freed: Condvar,
+}
+
+struct SlotTable {
+    free: Vec<u32>,
+    /// `entries[slot]` = (wire id, admission time) of the occupying request.
+    entries: Vec<(u64, Instant)>,
+}
+
+impl Inflight {
+    fn new(window: usize) -> Self {
+        let window = window.max(1);
+        Inflight {
+            slots: Mutex::new(SlotTable {
+                free: (0..window as u32).rev().collect(),
+                entries: vec![(0, Instant::now()); window],
+            }),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Take a slot if one is free (never blocks).
+    fn try_acquire(&self, wire_id: u64) -> Option<u32> {
+        let mut t = self.slots.lock().unwrap();
+        let slot = t.free.pop()?;
+        t.entries[slot as usize] = (wire_id, Instant::now());
+        Some(slot)
+    }
+
+    /// Block until a slot frees, then take it.
+    #[cfg(test)]
+    fn acquire(&self, wire_id: u64) -> u32 {
+        self.acquire_deadline(wire_id, None).expect("unbounded acquire cannot time out")
+    }
+
+    /// Block until a slot frees or `deadline` elapses. `None` deadline =
+    /// wait indefinitely (always returns `Some`). A `None` return is the
+    /// shedding signal: the request waited its whole admission budget and
+    /// never got a slot.
+    fn acquire_deadline(&self, wire_id: u64, deadline: Option<Duration>) -> Option<u32> {
+        let start = Instant::now();
+        let mut t = self.slots.lock().unwrap();
+        loop {
+            if let Some(slot) = t.free.pop() {
+                t.entries[slot as usize] = (wire_id, Instant::now());
+                return Some(slot);
+            }
+            match deadline {
+                None => t = self.freed.wait(t).unwrap(),
+                Some(d) => {
+                    let left = d.checked_sub(start.elapsed())?;
+                    let (guard, timeout) = self.freed.wait_timeout(t, left).unwrap();
+                    t = guard;
+                    if timeout.timed_out() && t.free.is_empty() {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Free a slot; returns the wire id and the admission→now latency.
+    fn release(&self, slot: u32) -> (u64, u64) {
+        let mut t = self.slots.lock().unwrap();
+        let (id, t0) = t.entries[slot as usize];
+        t.free.push(slot);
+        drop(t);
+        self.freed.notify_one();
+        (id, t0.elapsed().as_nanos() as u64)
+    }
+}
+
+/// Shared buffered write half. The writer thread owns the response
+/// stream; the reader grabs the lock only for the rare `STATS_RESP`/`ERR`
+/// frames, so frames never interleave mid-frame.
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+fn handle_conn(stream: TcpStream, inner: Arc<Inner>) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    // Socket timeouts: a peer that stalls mid-frame (or never drains its
+    // receive buffer) errors this connection out instead of wedging its
+    // reader/writer threads forever.
+    if inner.cfg.io_timeout_ms > 0 {
+        let t = Some(Duration::from_millis(inner.cfg.io_timeout_ms));
+        stream.set_read_timeout(t)?;
+        stream.set_write_timeout(t)?;
+    }
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
+
+    // Hello exchange. The server always answers with its *own* hello (so
+    // a cross-version client can read the server's version and report it),
+    // then closes a mismatched connection with ERR_BAD_VERSION.
+    let peer_version = wire::read_hello(&mut reader)?;
+    {
+        let mut w = writer.lock().unwrap();
+        wire::write_hello(&mut *w)?;
+        if peer_version != wire::VERSION {
+            wire::write_err(&mut *w, wire::ERR_BAD_VERSION)?;
+            w.flush()?;
+            return Ok(());
+        }
+        w.flush()?;
+    }
+
+    let open = inner.connections.fetch_add(1, Ordering::Relaxed) + 1;
+    inner.peak_connections.fetch_max(open, Ordering::Relaxed);
+    let conn_stats = Arc::new(ServeCounters::new());
+    let inflight = Arc::new(Inflight::new(inner.cfg.window));
+    // Set once the reader has queued an `ERR` frame: the protocol promises
+    // `ERR` is the last frame, so the writer stops emitting `RESP`s.
+    let closed = Arc::new(AtomicBool::new(false));
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel::<(u32, Response)>();
+
+    let writer_spawn = {
+        let writer = Arc::clone(&writer);
+        let inflight = Arc::clone(&inflight);
+        let conn_stats = Arc::clone(&conn_stats);
+        let inner = Arc::clone(&inner);
+        let closed = Arc::clone(&closed);
+        std::thread::Builder::new()
+            .name("serve-writer".into())
+            .stack_size(THREAD_STACK)
+            .spawn(move || writer_loop(writer, resp_rx, inflight, conn_stats, inner, closed))
+    };
+    let writer_handle = match writer_spawn {
+        Ok(h) => h,
+        Err(e) => {
+            inner.connections.fetch_sub(1, Ordering::Relaxed);
+            return Err(e);
+        }
+    };
+
+    let result =
+        reader_loop(&mut reader, &writer, &inner, &inflight, &conn_stats, &resp_tx, &closed);
+
+    // Dropping our sender lets the writer exit once every in-flight
+    // response (whose routes hold clones) has been delivered.
+    drop(resp_tx);
+    let _ = writer_handle.join();
+    inner.connections.fetch_sub(1, Ordering::Relaxed);
+    result
+}
+
+fn reader_loop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &SharedWriter,
+    inner: &Arc<Inner>,
+    inflight: &Arc<Inflight>,
+    conn_stats: &Arc<ServeCounters>,
+    resp_tx: &Sender<(u32, Response)>,
+    closed: &Arc<AtomicBool>,
+) -> io::Result<()> {
+    // Admitted requests buffered for one streaming submission; the shared
+    // coordinator's assembler does the per-{bits, w} sub-queueing.
+    let mut pending: Vec<(Request, Span)> = Vec::new();
+    loop {
+        match wire::read_client_frame(reader)? {
+            ClientFrame::Eof => return Ok(()),
+            ClientFrame::Bad(code) => {
+                // `ERR` must be the last frame on the wire: mark the
+                // connection closed *before* taking the lock, so once the
+                // writer's current drain (which holds the lock) finishes,
+                // it emits no further `RESP` frames.
+                closed.store(true, Ordering::SeqCst);
+                let mut w = writer.lock().unwrap();
+                wire::write_err(&mut *w, code)?;
+                w.flush()?;
+                return Ok(());
+            }
+            ClientFrame::Stats => {
+                // Submit buffered work first so the snapshot reflects it.
+                submit_pending(inner, &mut pending, resp_tx);
+                let snap = inner.snapshot(conn_stats);
+                let mut w = writer.lock().unwrap();
+                wire::write_stats_resp(&mut *w, &snap)?;
+                w.flush()?;
+            }
+            ClientFrame::Stats2 => {
+                submit_pending(inner, &mut pending, resp_tx);
+                let snap = inner.snapshot2();
+                let mut w = writer.lock().unwrap();
+                wire::write_stats2_resp(&mut *w, &snap)?;
+                w.flush()?;
+            }
+            ClientFrame::Trace => {
+                let events = inner.ring.events();
+                let mut w = writer.lock().unwrap();
+                wire::write_trace_resp(&mut *w, &events)?;
+                w.flush()?;
+            }
+            ClientFrame::Requests(reqs) => {
+                let deadline = (inner.cfg.deadline_ms > 0)
+                    .then(|| Duration::from_millis(inner.cfg.deadline_ms));
+                for r in &reqs {
+                    // Admission control: take a window slot, submitting
+                    // buffered work before blocking so slots can free.
+                    let slot = match inflight.try_acquire(r.id) {
+                        Some(s) => s,
+                        None => {
+                            submit_pending(inner, &mut pending, resp_tx);
+                            match inflight.acquire_deadline(r.id, deadline) {
+                                Some(s) => s,
+                                None => {
+                                    // Admission deadline expired: shed this
+                                    // request per-request (`RESP_ERR`, the
+                                    // connection stays open) rather than
+                                    // stalling every request behind it.
+                                    inner.shed.fetch_add(1, Ordering::Relaxed);
+                                    let mut w = writer.lock().unwrap();
+                                    wire::write_response_err(&mut *w, r.id, wire::ERR_OVERLOAD)?;
+                                    w.flush()?;
+                                    continue;
+                                }
+                            }
+                        }
+                    };
+                    // The coordinator-side id is the window slot; the wire
+                    // id is recovered from the slot table on completion.
+                    let w = resolve_w(inner, r);
+                    let op_byte = match r.op {
+                        crate::coordinator::ReqOp::Mul => 0u8,
+                        crate::coordinator::ReqOp::Div => 1u8,
+                    };
+                    let span = Span::admitted(inner.ring.sample(), op_byte, r.bits as u8, w as u8);
+                    pending.push((
+                        Request { id: slot as u64, op: r.op, bits: r.bits, w, a: r.a, b: r.b },
+                        span,
+                    ));
+                    if pending.len() >= inner.cfg.batch {
+                        submit_pending(inner, &mut pending, resp_tx);
+                    }
+                }
+                submit_pending(inner, &mut pending, resp_tx);
+            }
+        }
+    }
+}
+
+/// Stream the buffered admissions into the shared coordinator.
+fn submit_pending(
+    inner: &Arc<Inner>,
+    pending: &mut Vec<(Request, Span)>,
+    resp_tx: &Sender<(u32, Response)>,
+) {
+    if !pending.is_empty() {
+        inner.coordinator.submit_batch_streaming_spanned(std::mem::take(pending), 0, resp_tx);
+    }
+}
+
+/// Writer thread: drain completions, free window slots, record latency,
+/// and write `RESP` frames out-of-order as lanes complete. Write failures
+/// (client went away) switch to drain-only mode so slots keep freeing and
+/// the reader can run to its own error/EOF.
+fn writer_loop(
+    writer: SharedWriter,
+    rx: Receiver<(u32, Response)>,
+    inflight: Arc<Inflight>,
+    conn_stats: Arc<ServeCounters>,
+    inner: Arc<Inner>,
+    closed: Arc<AtomicBool>,
+) {
+    let mut dead = false;
+    loop {
+        // Block for one completion, then drain greedily before flushing.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut w = writer.lock().unwrap();
+        let mut msg = Some(first);
+        while let Some((_, resp)) = msg.take() {
+            let (wire_id, latency_ns) = inflight.release(resp.id as u32);
+            conn_stats.record(latency_ns);
+            inner.global.record(latency_ns);
+            // Serve-side stage stamps: `admit` covers admission→shard
+            // submission, `write` covers response-routed→socket-write.
+            // Sampled spans become full trace events at this point — the
+            // request's last stop in the pipeline.
+            let span = resp.span;
+            if span.t_admit_ns > 0 {
+                let t_write = obs::now_ns();
+                inner.stage_admit.record_ns(span.t_submit_ns.saturating_sub(span.t_admit_ns));
+                inner.stage_write.record_ns(t_write.saturating_sub(span.t_done_ns));
+                if span.sampled {
+                    inner.ring.push(TraceEvent::from_span(wire_id, &span, t_write));
+                }
+            }
+            dead = dead || closed.load(Ordering::SeqCst);
+            if resp.err != 0 {
+                // Shard supervision gave this request up (double fault):
+                // fail it per-request; the connection survives.
+                inner.unavailable.fetch_add(1, Ordering::Relaxed);
+                if !dead
+                    && wire::write_response_err(&mut *w, wire_id, wire::ERR_UNAVAILABLE).is_err()
+                {
+                    dead = true;
+                }
+            } else if !dead && wire::write_response(&mut *w, wire_id, resp.value).is_err() {
+                dead = true;
+            }
+            if let Ok(m) = rx.try_recv() {
+                msg = Some(m);
+            }
+        }
+        if !dead && w.flush().is_err() {
+            dead = true;
+        }
+    }
+    if !dead {
+        let _ = writer.lock().unwrap().flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inflight_window_blocks_and_frees() {
+        let inflight = Arc::new(Inflight::new(2));
+        let s0 = inflight.acquire(10);
+        let s1 = inflight.acquire(11);
+        assert_ne!(s0, s1);
+        assert!(inflight.try_acquire(12).is_none(), "window must be full");
+        let inflight2 = Arc::clone(&inflight);
+        let t = std::thread::spawn(move || inflight2.acquire(12));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let (id, _lat) = inflight.release(s0);
+        assert_eq!(id, 10);
+        let s2 = t.join().unwrap();
+        assert_eq!(s2, s0, "freed slot is reused");
+        inflight.release(s1);
+        inflight.release(s2);
+        assert!(inflight.try_acquire(13).is_some());
+    }
+}

@@ -1,0 +1,288 @@
+//! Reactor-backend integration tests (DESIGN.md §15): correctness on the
+//! portable `poll(2)` fallback and multi-loop configurations, admission
+//! fairness under a greedy connection, bounded-drain shutdown on both
+//! backends, and the O(1)-threads property the reactor exists for.
+//!
+//! Bit-identity and protocol conformance of the default backend are
+//! covered by `serve_e2e.rs` (which now runs on the reactor); this file
+//! covers what is *different* about the reactor.
+
+use simdive::arith::{batch, table};
+use simdive::coordinator::ReqOp;
+use simdive::serve::{Client, ReactorOptions, ServeConfig, Server, WireRequest};
+use simdive::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Ground truth: the batched kernel result at the request's own `{bits, w}`.
+fn expect_one(r: &WireRequest) -> u64 {
+    let t = table::tables_for(r.w);
+    match r.op {
+        ReqOp::Mul => batch::mul_batch(t, r.bits, &[r.a], &[r.b])[0],
+        ReqOp::Div => batch::div_batch(t, r.bits, &[r.a], &[r.b])[0],
+    }
+}
+
+fn random_request(rng: &mut Rng, id: u64) -> WireRequest {
+    let bits = [8u32, 8, 8, 16, 16, 32][rng.below(6) as usize];
+    WireRequest {
+        id,
+        op: if rng.below(4) == 0 { ReqOp::Div } else { ReqOp::Mul },
+        bits,
+        w: rng.below(simdive::arith::W_MAX as u64 + 1) as u32,
+        budget_ppm: 0,
+        a: rng.operand(bits),
+        b: rng.operand(bits),
+    }
+}
+
+/// The portable fallback poller and a multi-loop pool must be
+/// bit-identical to the kernels — same acceptance bar as the epoll path.
+#[test]
+fn poll_fallback_multi_loop_is_bit_identical() {
+    let server = Server::start_reactor(
+        "127.0.0.1:0",
+        ServeConfig::default(),
+        ReactorOptions { loops: 2, force_poll_fallback: true },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut handles = Vec::new();
+    for conn in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap().with_chunk(64);
+            let mut rng = Rng::new(0xFA11_BACC + conn);
+            let reqs: Vec<WireRequest> =
+                (0..1_000).map(|i| random_request(&mut rng, i)).collect();
+            let resps = client.exchange(&reqs).unwrap();
+            for (req, resp) in reqs.iter().zip(&resps) {
+                assert_eq!(resp.id, req.id);
+                assert_eq!(resp.value, expect_one(req), "conn {conn} req {}", req.id);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.stats().requests, 3 * 1_000);
+    server.shutdown();
+}
+
+/// Admission fairness: a greedy connection pipelining deep windows must
+/// not starve a low-rate tenant. Per-connection quotas bound the
+/// tenant's per-call latency even while the greedy stream saturates the
+/// engine; the old global window serialized them behind each other.
+#[test]
+fn greedy_connection_does_not_starve_low_rate_tenant() {
+    let server = Server::start(
+        "127.0.0.1:0",
+        ServeConfig { window: 64, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let stop = Arc::new(AtomicBool::new(false));
+    let greedy = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap().with_chunk(256);
+            let mut rng = Rng::new(0x6EED);
+            let mut id = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let reqs: Vec<WireRequest> = (0..512)
+                    .map(|_| {
+                        id += 1;
+                        WireRequest {
+                            id,
+                            op: ReqOp::Div,
+                            bits: 32,
+                            w: 8,
+                            budget_ppm: 0,
+                            a: rng.operand(32),
+                            b: rng.operand(32),
+                        }
+                    })
+                    .collect();
+                client.exchange(&reqs).unwrap();
+            }
+        })
+    };
+    // Low-rate tenant: single synchronous calls, a pause between each —
+    // the workload shape most exposed to head-of-line blocking.
+    let mut tenant = Client::connect(addr).unwrap();
+    let mut worst = Duration::ZERO;
+    for i in 0..40u64 {
+        let req = WireRequest {
+            id: i,
+            op: ReqOp::Mul,
+            bits: 8,
+            w: 4,
+            budget_ppm: 0,
+            a: 43,
+            b: 10,
+        };
+        let t0 = Instant::now();
+        let resp = tenant.call(req).unwrap();
+        worst = worst.max(t0.elapsed());
+        assert_eq!(resp.value, expect_one(&req));
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(
+        worst < Duration::from_micros(1_500_000),
+        "low-rate tenant p99 blew the bound under a greedy neighbor: worst {worst:?}"
+    );
+    // The admit stage must be live on the reactor path (fair admission is
+    // what this test exercises, and its latency is the observable).
+    let snap = tenant.stats2().unwrap();
+    let admit = snap.hist("stage.admit").expect("stage.admit histogram missing");
+    assert!(admit.count() > 0, "no admissions recorded under load");
+    stop.store(true, Ordering::Relaxed);
+    greedy.join().unwrap();
+    server.shutdown();
+}
+
+/// `shutdown` must wake live reactor connections and return within the
+/// bounded drain deadline — not hang until clients go away.
+#[test]
+fn reactor_shutdown_drains_live_connections_within_deadline() {
+    let server = Server::start("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let mut clients = Vec::new();
+    for i in 0..4u64 {
+        let mut c = Client::connect(addr).unwrap();
+        let req = WireRequest {
+            id: i,
+            op: ReqOp::Mul,
+            bits: 8,
+            w: 8,
+            budget_ppm: 0,
+            a: 43,
+            b: 10,
+        };
+        c.call(req).unwrap();
+        clients.push(c); // held open and idle across shutdown
+    }
+    let t0 = Instant::now();
+    server.shutdown();
+    let took = t0.elapsed();
+    assert!(took < Duration::from_secs(5), "shutdown took {took:?} with live connections");
+    // The server really is gone: the held connections are dead.
+    let req =
+        WireRequest { id: 99, op: ReqOp::Mul, bits: 8, w: 8, budget_ppm: 0, a: 1, b: 1 };
+    assert!(clients[0].call(req).is_err(), "connection survived shutdown");
+}
+
+/// Regression for the threaded backend: its per-connection reader threads
+/// used to park in blocking reads until io-timeout, leaving `shutdown` to
+/// wait out the timeout. The connection registry must wake them.
+#[test]
+fn threaded_shutdown_drains_live_connections_within_deadline() {
+    let server = Server::start_threaded(
+        "127.0.0.1:0",
+        // Long io-timeout on purpose: a drain that waits for reads to
+        // time out would blow the assertion below.
+        ServeConfig { io_timeout_ms: 120_000, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut clients = Vec::new();
+    for i in 0..4u64 {
+        let mut c = Client::connect(addr).unwrap();
+        let req = WireRequest {
+            id: i,
+            op: ReqOp::Mul,
+            bits: 8,
+            w: 8,
+            budget_ppm: 0,
+            a: 43,
+            b: 10,
+        };
+        c.call(req).unwrap();
+        clients.push(c);
+    }
+    let t0 = Instant::now();
+    server.shutdown();
+    let took = t0.elapsed();
+    assert!(took < Duration::from_secs(5), "threaded shutdown took {took:?}");
+    let req =
+        WireRequest { id: 99, op: ReqOp::Mul, bits: 8, w: 8, budget_ppm: 0, a: 1, b: 1 };
+    assert!(clients[0].call(req).is_err(), "connection survived shutdown");
+}
+
+/// The acceptance criterion the tentpole is named for: reactor server
+/// threads are a function of the pool size, not the connection count.
+#[test]
+fn reactor_thread_count_is_independent_of_connections() {
+    let server = Server::start_reactor(
+        "127.0.0.1:0",
+        ServeConfig::default(),
+        ReactorOptions { loops: 2, ..ReactorOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let before = server.thread_count();
+    assert_eq!(before, 1 + 2 * 2, "accept + per-loop (event loop, pump)");
+    let mut clients = Vec::new();
+    for i in 0..32u64 {
+        let mut c = Client::connect(addr).unwrap();
+        let req = WireRequest {
+            id: i,
+            op: ReqOp::Mul,
+            bits: 8,
+            w: 8,
+            budget_ppm: 0,
+            a: 43,
+            b: 10,
+        };
+        c.call(req).unwrap();
+        clients.push(c);
+    }
+    assert_eq!(
+        server.thread_count(),
+        before,
+        "reactor thread count must not grow with connections"
+    );
+    assert!(server.thread_count() <= 1 + 2 * 16, "thread pool exceeded its cap");
+    drop(clients);
+    server.shutdown();
+}
+
+/// The baseline it replaces: thread-per-connection spends two OS threads
+/// per live connection (the `connections_sweep` contrast in
+/// `BENCH_serve.json`).
+#[test]
+fn threaded_thread_count_grows_with_connections() {
+    let server = Server::start_threaded("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let mut clients = Vec::new();
+    for i in 0..8u64 {
+        let mut c = Client::connect(addr).unwrap();
+        let req = WireRequest {
+            id: i,
+            op: ReqOp::Mul,
+            bits: 8,
+            w: 8,
+            budget_ppm: 0,
+            a: 43,
+            b: 10,
+        };
+        c.call(req).unwrap();
+        clients.push(c);
+    }
+    assert!(
+        server.thread_count() >= 1 + 2 * 8,
+        "threaded backend should cost two threads per connection, got {}",
+        server.thread_count()
+    );
+    drop(clients);
+    server.shutdown();
+}
+
+/// Loadgen's fd preflight must fail fast with an error that tells the
+/// operator exactly what to run.
+#[test]
+fn fd_capacity_preflight_names_ulimit() {
+    assert!(simdive::serve::ensure_fd_capacity(8).is_ok());
+    let err = simdive::serve::ensure_fd_capacity(u64::MAX - 1).unwrap_err();
+    assert!(err.contains("ulimit -n"), "error must name the fix: {err}");
+}
